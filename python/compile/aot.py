@@ -1,0 +1,152 @@
+"""AOT lowering: jax/pallas graphs -> HLO *text* artifacts + manifest.json.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``: jax
+>= 0.5 emits HloModuleProtos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/load_hlo).
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Every module is lowered with ``return_tuple=True``; the rust side unwraps
+with ``to_tupleN()``. ``manifest.json`` records, per artifact: the kernel
+name, operand dtypes/shapes, chunk geometry, and the error bound baked into
+quantizer modules — rust reads only the manifest, never this file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+# Point-wise relative error bounds baked into quantizer artifacts. 1e-3 is
+# the paper's default (§5.1); the others support the ablation sweeps.
+ERROR_BOUNDS = [1e-2, 1e-3, 1e-4]
+
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries():
+    """Yield (name, fn, arg_specs, meta) for every artifact to emit."""
+    for dname, dt in DTYPES.items():
+        for kind, fn, m, k in (
+            ("gate1q", model.gate1q, model.M_CHUNK_1Q, 2),
+            ("gate2q", model.gate2q, model.M_CHUNK_2Q, 4),
+        ):
+            yield (
+                f"{kind}_{dname}",
+                fn,
+                (
+                    spec((m, k), dt),
+                    spec((m, k), dt),
+                    spec((k, k), dt),
+                    spec((k, k), dt),
+                ),
+                {"kernel": kind, "dtype": dname, "m": m, "k": k},
+            )
+        for kind, fn, m, k in (
+            ("diag1q", model.diag1q, model.M_CHUNK_1Q, 2),
+            ("diag2q", model.diag2q, model.M_CHUNK_2Q, 4),
+        ):
+            yield (
+                f"{kind}_{dname}",
+                fn,
+                (
+                    spec((m, k), dt),
+                    spec((m, k), dt),
+                    spec((1, k), dt),
+                    spec((1, k), dt),
+                ),
+                {"kernel": kind, "dtype": dname, "m": m, "k": k},
+            )
+        n = model.N_CHUNK
+        for eb in ERROR_BOUNDS:
+            tag = f"{eb:.0e}".replace("-0", "-")
+            yield (
+                f"quantize_{dname}_{tag}",
+                model.make_quantize(eb),
+                (spec((n,), dt),),
+                {
+                    "kernel": "quantize",
+                    "dtype": dname,
+                    "n": n,
+                    "error_bound": eb,
+                },
+            )
+            yield (
+                f"dequantize_{dname}_{tag}",
+                model.make_dequantize(eb, dt),
+                (spec((n,), jnp.int32), spec((n,), jnp.int32)),
+                {
+                    "kernel": "dequantize",
+                    "dtype": dname,
+                    "n": n,
+                    "error_bound": eb,
+                },
+            )
+        yield (
+            f"normsq_{dname}",
+            model.norm_sq,
+            (spec((n,), dt), spec((n,), dt)),
+            {"kernel": "normsq", "dtype": dname, "n": n},
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "chunks": {
+            "m_1q": model.M_CHUNK_1Q,
+            "m_2q": model.M_CHUNK_2Q,
+            "n_quant": model.N_CHUNK,
+        },
+        "error_bounds": ERROR_BOUNDS,
+        "modules": {},
+    }
+    for name, fn, arg_specs, meta in build_entries():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        meta["file"] = fname
+        meta["outputs"] = len(lowered.out_info)
+        manifest["modules"][name] = meta
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['modules'])} modules -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel is checked
+against its oracle by pytest (with hypothesis shape/dtype sweeps) at build
+time, before AOT artifacts ship to the rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+CODE_MID = 1 << 19
+ZERO_CODE = 0
+
+
+def apply_gate_ref(xr, xi, ur, ui):
+    """out[m, :] = u @ x[m, :] over complex planes; reference einsum path."""
+    x = xr + 1j * xi
+    u = ur + 1j * ui
+    out = jnp.einsum("ij,mj->mi", u, x)
+    return jnp.real(out).astype(xr.dtype), jnp.imag(out).astype(xi.dtype)
+
+
+def apply_diag_gate_ref(xr, xi, dr, di):
+    """out[m, :] = diag(d) x[m, :] over complex planes."""
+    x = xr + 1j * xi
+    d = (dr + 1j * di).reshape(1, -1)
+    out = x * d
+    return jnp.real(out).astype(xr.dtype), jnp.imag(out).astype(xi.dtype)
+
+
+def quantize_ref(x, *, error_bound: float):
+    """Reference log2-domain point-wise relative quantizer."""
+    b_a = jnp.log2(1.0 + error_bound)
+    signs = (x < 0.0).astype(jnp.int32)
+    ax = jnp.abs(x)
+    is_zero = ax == 0.0
+    safe = jnp.where(is_zero, 1.0, ax)
+    code = jnp.round(jnp.log2(safe) / (2.0 * b_a)).astype(jnp.int32) + CODE_MID
+    codes = jnp.where(is_zero, ZERO_CODE, code)
+    return codes, signs
+
+
+def dequantize_ref(codes, signs, *, error_bound: float, dtype=jnp.float64):
+    """Reference reconstruction; |x_hat - x| / |x| <= error_bound."""
+    b_a = jnp.log2(1.0 + error_bound)
+    is_zero = codes == ZERO_CODE
+    mag = jnp.exp2((codes - CODE_MID).astype(dtype) * (2.0 * b_a))
+    mag = jnp.where(is_zero, jnp.zeros_like(mag), mag)
+    return jnp.where(signs != 0, -mag, mag)

@@ -1,0 +1,70 @@
+"""L2: JAX compute graphs wrapping the L1 Pallas kernels.
+
+Each entry point here is a pure jax function of fixed-shape operands that
+``aot.py`` lowers ONCE to HLO text. The rust runtime (L3) loads the HLO via
+PJRT and calls it on the request path — python never runs at simulation time.
+
+Shape strategy: artifacts are compiled for fixed power-of-two *chunk* sizes
+(``M_CHUNK_1Q`` pair rows, etc.). The rust side processes arbitrarily large
+SV-group buffers by looping whole chunks through the executable; buffers are
+always power-of-two sized, so a buffer either fills N whole chunks or is
+smaller than one chunk (then the dedicated small-shape variant from the
+manifest is used). This keeps the artifact set tiny (a dozen modules) while
+supporting every block/inner-size configuration.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import gate_kernel, quant_kernel
+
+# Chunk geometry shared with rust via artifacts/manifest.json.
+M_CHUNK_1Q = 1 << 14  # pair rows per executable call (k=2)
+M_CHUNK_2Q = 1 << 13  # quad rows per executable call (k=4)
+N_CHUNK = 1 << 15  # elements per quantizer call
+
+
+def gate1q(xr, xi, ur, ui):
+    """Apply a single-qubit (2x2) complex gate to pair-major planes."""
+    return gate_kernel.apply_gate(xr, xi, ur, ui, k=2)
+
+
+def gate2q(xr, xi, ur, ui):
+    """Apply a double-qubit (4x4) complex gate to quad-major planes."""
+    return gate_kernel.apply_gate(xr, xi, ur, ui, k=4)
+
+
+def diag1q(xr, xi, dr, di):
+    """Apply a diagonal single-qubit gate (Z/S/T/RZ/P family)."""
+    return gate_kernel.apply_diag_gate(xr, xi, dr, di, k=2)
+
+
+def diag2q(xr, xi, dr, di):
+    """Apply a diagonal double-qubit gate (CZ/CP/RZZ family)."""
+    return gate_kernel.apply_diag_gate(xr, xi, dr, di, k=4)
+
+
+def make_quantize(error_bound: float):
+    """Quantizer graph for a fixed point-wise relative bound."""
+
+    def quantize(x):
+        return quant_kernel.quantize(x, error_bound=error_bound)
+
+    return quantize
+
+
+def make_dequantize(error_bound: float, dtype):
+    """Dequantizer graph for a fixed bound and output dtype."""
+
+    def dequantize(codes, signs):
+        return quant_kernel.dequantize(
+            codes, signs, error_bound=error_bound, dtype=dtype
+        )
+
+    return dequantize
+
+
+def norm_sq(xr, xi):
+    """Total probability of a plane pair — used for normalization checks."""
+    return (jnp.sum(xr * xr) + jnp.sum(xi * xi),)

@@ -1,0 +1,170 @@
+"""Pallas gate kernels vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps batch sizes, dtypes, and gate matrices; fixed cases pin
+the physically meaningful gates (H, X, CX, RZ...) with exact expectations.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gate_kernel, ref
+
+ATOL = {jnp.float32: 1e-5, jnp.float64: 1e-12}
+
+
+def rand_planes(rng, m, k, dtype):
+    xr = rng.standard_normal((m, k)).astype(dtype)
+    xi = rng.standard_normal((m, k)).astype(dtype)
+    return jnp.asarray(xr), jnp.asarray(xi)
+
+
+def unitary_1q(theta, phi, lam, dtype):
+    """U3 gate planes."""
+    c, s = math.cos(theta / 2), math.sin(theta / 2)
+    u = np.array(
+        [
+            [c, -s * np.exp(1j * lam)],
+            [s * np.exp(1j * phi), c * np.exp(1j * (phi + lam))],
+        ]
+    )
+    return (
+        jnp.asarray(u.real.astype(dtype)),
+        jnp.asarray(u.imag.astype(dtype)),
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("k", [2, 4])
+@pytest.mark.parametrize("m", [1, 7, 256, 8192])
+def test_gate_matches_ref(dtype, k, m):
+    rng = np.random.default_rng(42 + m + k)
+    xr, xi = rand_planes(rng, m, k, dtype)
+    ur = jnp.asarray(rng.standard_normal((k, k)).astype(dtype))
+    ui = jnp.asarray(rng.standard_normal((k, k)).astype(dtype))
+    got_r, got_i = gate_kernel.apply_gate(xr, xi, ur, ui, k=k)
+    want_r, want_i = ref.apply_gate_ref(xr, xi, ur, ui)
+    np.testing.assert_allclose(got_r, want_r, atol=ATOL[dtype], rtol=1e-5)
+    np.testing.assert_allclose(got_i, want_i, atol=ATOL[dtype], rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("k", [2, 4])
+@pytest.mark.parametrize("m", [1, 5, 1024])
+def test_diag_matches_ref(dtype, k, m):
+    rng = np.random.default_rng(7 + m + k)
+    xr, xi = rand_planes(rng, m, k, dtype)
+    dr = jnp.asarray(rng.standard_normal((1, k)).astype(dtype))
+    di = jnp.asarray(rng.standard_normal((1, k)).astype(dtype))
+    got_r, got_i = gate_kernel.apply_diag_gate(xr, xi, dr, di, k=k)
+    want_r, want_i = ref.apply_diag_gate_ref(xr, xi, dr, di)
+    np.testing.assert_allclose(got_r, want_r, atol=ATOL[dtype], rtol=1e-5)
+    np.testing.assert_allclose(got_i, want_i, atol=ATOL[dtype], rtol=1e-5)
+
+
+def test_hadamard_on_zero_state():
+    """H|0> = (|0> + |1>)/sqrt(2) for every pair row."""
+    m = 64
+    xr = jnp.zeros((m, 2), jnp.float64).at[:, 0].set(1.0)
+    xi = jnp.zeros((m, 2), jnp.float64)
+    h = 1.0 / math.sqrt(2.0)
+    ur = jnp.asarray([[h, h], [h, -h]], jnp.float64)
+    ui = jnp.zeros((2, 2), jnp.float64)
+    got_r, got_i = gate_kernel.apply_gate(xr, xi, ur, ui, k=2)
+    np.testing.assert_allclose(got_r, jnp.full((m, 2), h), atol=1e-15)
+    np.testing.assert_allclose(got_i, 0.0, atol=1e-15)
+
+
+def test_pauli_x_swaps_pair():
+    m = 16
+    rng = np.random.default_rng(3)
+    xr, xi = rand_planes(rng, m, 2, np.float64)
+    ur = jnp.asarray([[0.0, 1.0], [1.0, 0.0]], jnp.float64)
+    ui = jnp.zeros((2, 2), jnp.float64)
+    got_r, got_i = gate_kernel.apply_gate(xr, xi, ur, ui, k=2)
+    np.testing.assert_allclose(got_r, xr[:, ::-1], atol=1e-15)
+    np.testing.assert_allclose(got_i, xi[:, ::-1], atol=1e-15)
+
+
+def test_cnot_permutes_quad():
+    """CX in quad layout (q=control, k=target) permutes cols 2<->3."""
+    m = 8
+    rng = np.random.default_rng(5)
+    xr, xi = rand_planes(rng, m, 4, np.float64)
+    u = np.eye(4)[[0, 1, 3, 2]]
+    ur, ui = jnp.asarray(u), jnp.zeros((4, 4), jnp.float64)
+    got_r, _ = gate_kernel.apply_gate(xr, xi, ur, ui, k=4)
+    np.testing.assert_allclose(got_r, xr[:, [0, 1, 3, 2]], atol=1e-15)
+
+
+def test_unitarity_preserves_norm():
+    """A unitary gate must preserve sum |a|^2 to fp accuracy."""
+    rng = np.random.default_rng(11)
+    m = 512
+    xr, xi = rand_planes(rng, m, 2, np.float64)
+    ur, ui = unitary_1q(0.7, 0.3, 1.1, np.float64)
+    got_r, got_i = gate_kernel.apply_gate(xr, xi, ur, ui, k=2)
+    before = float(jnp.sum(xr**2 + xi**2))
+    after = float(jnp.sum(got_r**2 + got_i**2))
+    assert abs(before - after) < 1e-9 * max(1.0, before)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=3000),
+    k=st.sampled_from([2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    use_f32=st.booleans(),
+)
+def test_gate_property_sweep(m, k, seed, use_f32):
+    """Hypothesis: arbitrary shapes/dtypes/matrices match the oracle."""
+    dtype = np.float32 if use_f32 else np.float64
+    rng = np.random.default_rng(seed)
+    xr, xi = rand_planes(rng, m, k, dtype)
+    ur = jnp.asarray(rng.standard_normal((k, k)).astype(dtype))
+    ui = jnp.asarray(rng.standard_normal((k, k)).astype(dtype))
+    got_r, got_i = gate_kernel.apply_gate(xr, xi, ur, ui, k=k)
+    want_r, want_i = ref.apply_gate_ref(xr, xi, ur, ui)
+    tol = 1e-4 if use_f32 else 1e-11
+    np.testing.assert_allclose(got_r, want_r, atol=tol, rtol=tol)
+    np.testing.assert_allclose(got_i, want_i, atol=tol, rtol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=2000),
+    k=st.sampled_from([2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_diag_property_sweep(m, k, seed):
+    rng = np.random.default_rng(seed)
+    xr, xi = rand_planes(rng, m, k, np.float64)
+    dr = jnp.asarray(rng.standard_normal((1, k)))
+    di = jnp.asarray(rng.standard_normal((1, k)))
+    got_r, got_i = gate_kernel.apply_diag_gate(xr, xi, dr, di, k=k)
+    want_r, want_i = ref.apply_diag_gate_ref(xr, xi, dr, di)
+    np.testing.assert_allclose(got_r, want_r, atol=1e-11, rtol=1e-11)
+    np.testing.assert_allclose(got_i, want_i, atol=1e-11, rtol=1e-11)
+
+
+def test_gate_composition_associativity():
+    """(u2 u1) x == u2 (u1 x): kernel respects matrix composition."""
+    rng = np.random.default_rng(23)
+    m = 128
+    xr, xi = rand_planes(rng, m, 2, np.float64)
+    u1r, u1i = unitary_1q(0.4, 0.2, 0.9, np.float64)
+    u2r, u2i = unitary_1q(1.3, -0.5, 0.1, np.float64)
+    s1r, s1i = gate_kernel.apply_gate(xr, xi, u1r, u1i, k=2)
+    s2r, s2i = gate_kernel.apply_gate(s1r, s1i, u2r, u2i, k=2)
+    u1 = np.asarray(u1r) + 1j * np.asarray(u1i)
+    u2 = np.asarray(u2r) + 1j * np.asarray(u2i)
+    u21 = u2 @ u1
+    cr, ci = gate_kernel.apply_gate(
+        xr, xi, jnp.asarray(u21.real), jnp.asarray(u21.imag), k=2
+    )
+    np.testing.assert_allclose(s2r, cr, atol=1e-12)
+    np.testing.assert_allclose(s2i, ci, atol=1e-12)

@@ -1,0 +1,106 @@
+"""Quantizer Pallas kernel vs oracle + the point-wise error-bound property.
+
+The bound is THE contract of Algorithm 2: for every nonzero x,
+|dequantize(quantize(x)) - x| / |x| <= b_r, and exact zeros survive exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant_kernel, ref
+
+
+def roundtrip(x, eb, dtype=jnp.float64):
+    codes, signs = quant_kernel.quantize(jnp.asarray(x, dtype), error_bound=eb)
+    return np.asarray(
+        quant_kernel.dequantize(codes, signs, error_bound=eb, dtype=dtype)
+    )
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-3, 1e-4])
+@pytest.mark.parametrize("n", [1, 64, 8192, 20000])
+def test_quantize_matches_ref(eb, n):
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal(n)
+    x[:: max(1, n // 7)] = 0.0  # salt exact zeros in
+    xj = jnp.asarray(x)
+    got_c, got_s = quant_kernel.quantize(xj, error_bound=eb)
+    want_c, want_s = ref.quantize_ref(xj, error_bound=eb)
+    np.testing.assert_array_equal(got_c, want_c)
+    np.testing.assert_array_equal(got_s, want_s)
+    got_x = quant_kernel.dequantize(got_c, got_s, error_bound=eb)
+    want_x = ref.dequantize_ref(want_c, want_s, error_bound=eb)
+    np.testing.assert_allclose(got_x, want_x, rtol=1e-14)
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-3, 1e-4])
+def test_pointwise_relative_error_bound(eb):
+    """The headline invariant: point-wise relative error <= b_r."""
+    rng = np.random.default_rng(17)
+    # span many magnitudes incl. denormal-ish and large values
+    x = rng.standard_normal(4096) * np.logspace(-30, 3, 4096)
+    rec = roundtrip(x, eb)
+    nz = x != 0
+    rel = np.abs(rec[nz] - x[nz]) / np.abs(x[nz])
+    assert rel.max() <= eb * (1 + 1e-9), f"max rel err {rel.max()} > {eb}"
+
+
+def test_exact_zero_roundtrip():
+    x = np.zeros(1000)
+    rec = roundtrip(x, 1e-3)
+    assert (rec == 0.0).all()
+
+
+def test_signs_preserved():
+    x = np.array([-1.5, 2.0, -1e-20, 3e10, 0.0, -0.25])
+    rec = roundtrip(x, 1e-3)
+    np.testing.assert_array_equal(np.sign(rec), np.sign(x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n=st.integers(min_value=1, max_value=30000),
+    eb=st.sampled_from([1e-2, 1e-3, 1e-4]),
+    scale_pow=st.integers(min_value=-200, max_value=100),
+)
+def test_roundtrip_bound_property(seed, n, eb, scale_pow):
+    """Hypothesis: bound holds for arbitrary sizes and magnitude regimes."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n) * (2.0**scale_pow)
+    zeros = rng.random(n) < 0.3
+    x[zeros] = 0.0
+    rec = roundtrip(x, eb)
+    nz = x != 0
+    if nz.any():
+        rel = np.abs(rec[nz] - x[nz]) / np.abs(x[nz])
+        assert rel.max() <= eb * (1 + 1e-9)
+    assert (rec[~nz] == 0.0).all()
+
+
+def test_f32_pipeline():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(5000).astype(np.float32)
+    codes, signs = quant_kernel.quantize(jnp.asarray(x), error_bound=1e-3)
+    rec = np.asarray(
+        quant_kernel.dequantize(codes, signs, error_bound=1e-3, dtype=jnp.float32)
+    )
+    nz = x != 0
+    rel = np.abs(rec[nz] - x[nz]) / np.abs(x[nz])
+    # f32 adds its own epsilon on top of the quantization bound
+    assert rel.max() <= 1e-3 + 1e-5
+
+
+def test_codes_are_stable():
+    """Quantizing a reconstructed value must yield the same code (idempotent
+    after one round-trip) — prevents drift across repeated stage cycles."""
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal(2048)
+    eb = 1e-3
+    c1, s1 = quant_kernel.quantize(jnp.asarray(x), error_bound=eb)
+    r1 = quant_kernel.dequantize(c1, s1, error_bound=eb)
+    c2, s2 = quant_kernel.quantize(r1, error_bound=eb)
+    r2 = quant_kernel.dequantize(c2, s2, error_bound=eb)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-12)

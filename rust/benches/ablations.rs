@@ -1,0 +1,15 @@
+//! Ablations A1-A3: bitmap pre-scan, error-control mode, and the staging
+//! mechanism itself (per-gate vs per-stage, via fig07's SC19 comparison).
+use bmqsim::bench_harness as bench;
+
+fn main() {
+    bench::print_experiment("Ablation A1: bitmap pre-scan on/off", || {
+        Ok(vec![bench::ablation_prescan(1 << 16)?])
+    });
+    bench::print_experiment("Ablation A2: pointwise-relative vs absolute bound", || {
+        Ok(vec![bench::ablation_error_mode("ising", 16)?])
+    });
+    bench::print_experiment("Ablation A3: staging (1 stage-decompress) vs per-gate", || {
+        Ok(vec![bench::fig07_sc19_compare(&["qft"], &[14])?])
+    });
+}

@@ -1,0 +1,12 @@
+//! Fig. 7 — simulation time: SC19-Sim (CPU/GPU analogue) vs BMQSIM.
+use bmqsim::bench_harness as bench;
+
+fn main() {
+    bench::print_experiment("Fig 7: SC19-Sim vs BMQSIM simulation time", || {
+        Ok(vec![bench::fig07_sc19_compare(
+            &["qft", "qaoa", "ising", "ghz_state"],
+            &[14, 16],
+        )?])
+    });
+    println!("paper shape: BMQSIM orders of magnitude faster (paper: 1385x/539x avg).");
+}

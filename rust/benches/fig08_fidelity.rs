@@ -1,0 +1,12 @@
+//! Fig. 8 — fidelity of SC19-Sim vs BMQSIM against the dense ideal state.
+use bmqsim::bench_harness as bench;
+
+fn main() {
+    bench::print_experiment("Fig 8: fidelity (|<ideal|sim>|)", || {
+        Ok(vec![bench::fig08_fidelity(
+            &["qft", "qaoa", "ising", "ghz_state", "qsvm"],
+            &[14, 16],
+        )?])
+    });
+    println!("paper shape: BMQSIM > 0.99 everywhere and >= SC19, especially on deep circuits (qft).");
+}

@@ -1,0 +1,12 @@
+//! Fig. 9 — memory consumption vs standard 2^(n+4) bytes, plus §5.4 spill
+//! fractions under a restricted budget.
+use bmqsim::bench_harness as bench;
+use bmqsim::circuit::generators;
+
+fn main() {
+    bench::print_experiment("Fig 9: memory consumption + §5.4 spill", || {
+        let (a, b) = bench::fig09_memory(&generators::ALL, &[16, 18, 20], 1 << 20)?;
+        Ok(vec![a, b])
+    });
+    println!("paper shape: cat/bv/ghz reduce 400-700x; cc ~15x; qft ~10x.");
+}

@@ -1,0 +1,10 @@
+//! Fig. 10 — simulation time across circuits/sizes vs the dense baseline.
+use bmqsim::bench_harness as bench;
+use bmqsim::circuit::generators;
+
+fn main() {
+    bench::print_experiment("Fig 10: simulation time vs dense baseline", || {
+        Ok(vec![bench::fig10_simtime(&generators::ALL, &[16, 18, 20])?])
+    });
+    println!("paper shape: BMQSIM within small factors of well-optimized dense simulators\n(paper: ~1x of Qiskit-Aer; cuQuantum/HyQuas 9-12x faster at much higher memory).");
+}

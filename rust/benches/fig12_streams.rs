@@ -1,0 +1,9 @@
+//! Fig. 12 — impact of pipeline stream count (1/2/4/8).
+use bmqsim::bench_harness as bench;
+
+fn main() {
+    bench::print_experiment("Fig 12: stream count sweep", || {
+        Ok(vec![bench::fig12_streams(&["qft", "qaoa", "ising", "qsvm"], 18)?])
+    });
+    println!("paper shape: best around 2 streams; 8 streams loses to context overhead.");
+}

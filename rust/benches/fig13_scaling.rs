@@ -1,0 +1,9 @@
+//! Fig. 13 — multi-device scaling (1/2/4 logical devices).
+use bmqsim::bench_harness as bench;
+
+fn main() {
+    bench::print_experiment("Fig 13: device scaling", || {
+        Ok(vec![bench::fig13_scaling(&["qft", "qaoa", "ising", "ghz_state"], 18)?])
+    });
+    println!("paper shape: sub-linear (1.7x @2, 2.3x @4 for qft) — transfer-link bound.");
+}

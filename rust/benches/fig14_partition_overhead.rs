@@ -1,0 +1,10 @@
+//! Fig. 14 — circuit partition time as % of end-to-end simulation.
+use bmqsim::bench_harness as bench;
+use bmqsim::circuit::generators;
+
+fn main() {
+    bench::print_experiment("Fig 14: partition overhead", || {
+        Ok(vec![bench::fig14_partition_overhead(&generators::ALL, 18)?])
+    });
+    println!("paper shape: negligible (well under 1%).");
+}

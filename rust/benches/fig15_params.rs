@@ -1,0 +1,10 @@
+//! Fig. 15 — inner size x SV block size: compression ratio + sim time.
+use bmqsim::bench_harness as bench;
+
+fn main() {
+    bench::print_experiment("Fig 15: parameter tuning (qaoa)", || {
+        let (ratio, time) = bench::fig15_params("qaoa", 18, &[2, 3, 4, 5], &[8, 10, 12, 14])?;
+        Ok(vec![ratio, time])
+    });
+    println!("paper shape: ratio roughly flat across settings; time improves with\nlarger inner/block sizes (fewer stages, fewer kernel launches).");
+}

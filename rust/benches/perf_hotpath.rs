@@ -1,0 +1,80 @@
+//! §Perf microbenchmarks: gate-kernel and codec throughput on the hot path.
+//! Self-timed (no criterion in the vendor set); prints GB/s and Mamps/s.
+use bmqsim::circuit::{Gate, GateKind};
+use bmqsim::compress::Codec;
+use bmqsim::gates::apply_gate;
+use bmqsim::types::SplitMix64;
+use std::time::Instant;
+
+fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let n = 22; // 4M amplitudes, 64 MiB state
+    let len = 1usize << n;
+    let mut rng = SplitMix64::new(7);
+    let mut re: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+    let mut im: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+    let bytes = (len * 16) as f64;
+
+    println!("== gate kernels (n={n}, {} amps, state {:.0} MiB) ==", len, bytes / (1 << 20) as f64);
+    for (label, gate) in [
+        ("h (dense 1q)", Gate::q1(GateKind::H, 10).unwrap()),
+        ("x (perm 1q)", Gate::q1(GateKind::X, 10).unwrap()),
+        ("rz (diag 1q)", Gate::q1(GateKind::Rz(0.3), 10).unwrap()),
+        ("t  (diag 1q)", Gate::q1(GateKind::T, 10).unwrap()),
+        ("cx (perm 2q)", Gate::q2(GateKind::Cx, 12, 3).unwrap()),
+        ("cp (diag 2q)", Gate::q2(GateKind::Cp(0.7), 12, 3).unwrap()),
+        ("rxx (dense 2q)", Gate::q2(GateKind::Rxx(0.4), 12, 3).unwrap()),
+    ] {
+        let secs = time_it(5, || apply_gate(&mut re, &mut im, &gate));
+        println!(
+            "  {label:<15} {:>8.2} ms   {:>7.2} GB/s   {:>8.1} Mamp/s",
+            secs * 1e3,
+            bytes / secs / 1e9,
+            len as f64 / secs / 1e6
+        );
+    }
+
+    // memcpy roofline reference
+    let mut dst = vec![0.0f64; len];
+    let secs = time_it(5, || {
+        dst.copy_from_slice(&re);
+        std::hint::black_box(&mut dst);
+    });
+    println!("  {:<15} {:>8.2} ms   {:>7.2} GB/s   (read+write of one plane)", "memcpy ref", secs * 1e3, (len * 16) as f64 / secs / 1e9);
+
+    println!("\n== codecs (plane = 2^20 doubles, 8 MiB) ==");
+    let plen = 1 << 20;
+    let dense: Vec<f64> = (0..plen).map(|_| rng.next_gaussian() * 1e-2).collect();
+    let mut sparse = vec![0.0f64; plen];
+    for i in 0..64 {
+        sparse[i * (plen / 64)] = 0.1;
+    }
+    let pbytes = (plen * 8) as f64;
+    for (label, data) in [("dense gaussian", &dense), ("sparse (64 nz)", &sparse)] {
+        for codec in [Codec::pointwise(1e-3), Codec::absolute(1e-3), Codec::raw()] {
+            let enc = codec.compress(data).unwrap();
+            let csecs = time_it(3, || {
+                let _ = codec.compress(data).unwrap();
+            });
+            let dsecs = time_it(3, || {
+                let _ = codec.decompress(&enc).unwrap();
+            });
+            println!(
+                "  {label:<15} {:<14} ratio {:>8.1}x   comp {:>7.2} GB/s   decomp {:>7.2} GB/s",
+                codec.name(),
+                pbytes / enc.len() as f64,
+                pbytes / csecs / 1e9,
+                pbytes / dsecs / 1e9
+            );
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Table 2 — maximum supported qubits per simulator under a fixed memory
+//! budget (scaled: 64 MiB here vs the paper's 128 GB Machine 1).
+use bmqsim::bench_harness as bench;
+
+fn main() {
+    bench::print_experiment("Table 2: max qubits under 16 MiB budget", || {
+        Ok(vec![bench::table2_max_qubits(16 << 20, 24)?])
+    });
+    println!("paper shape: BMQSIM reaches ~10 more qubits than dense simulators;\n+SSD adds a few more (paper: 42 / 47 vs ~26-33).");
+}

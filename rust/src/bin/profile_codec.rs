@@ -1,0 +1,13 @@
+use bmqsim::compress::{decompress_any, Codec};
+use bmqsim::types::SplitMix64;
+fn main() {
+    let mut rng = SplitMix64::new(7);
+    let plen = 1 << 20;
+    let dense: Vec<f64> = (0..plen).map(|_| rng.next_gaussian() * 1e-2).collect();
+    let codec = Codec::pointwise(1e-3);
+    let enc = codec.compress(&dense).unwrap();
+    for _ in 0..12 {
+        let _ = std::hint::black_box(codec.compress(&dense).unwrap());
+        let _ = std::hint::black_box(decompress_any(&enc).unwrap());
+    }
+}

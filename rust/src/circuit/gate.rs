@@ -1,0 +1,408 @@
+//! The quantum gate set: kinds, parameters, and unitary matrices.
+//!
+//! Covers the gates emitted by the NWQBench-style circuit generators and
+//! the OpenQASM-2 subset parser: 14 single-qubit and 10 double-qubit kinds.
+//! Matrices are produced on demand as row-major [`Complex`] arrays; the
+//! engines consume them via [`Gate::matrix1q`] / [`Gate::matrix2q`] or the
+//! diagonal fast path ([`Gate::diagonal`]).
+
+use crate::types::{Complex, Error, Result};
+
+/// Gate kinds. One- and two-qubit; measurement is handled separately by the
+/// engines (terminal sampling), as in the paper's simulators.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GateKind {
+    // --- single-qubit, parameter-free ---
+    X,
+    Y,
+    Z,
+    H,
+    S,
+    Sdg,
+    T,
+    Tdg,
+    Sx,
+    // --- single-qubit, parameterized ---
+    Rx(f64),
+    Ry(f64),
+    Rz(f64),
+    P(f64),
+    U3(f64, f64, f64),
+    // --- double-qubit ---
+    Cx,
+    Cy,
+    Cz,
+    Swap,
+    Cp(f64),
+    Crx(f64),
+    Cry(f64),
+    Crz(f64),
+    Rxx(f64),
+    Rzz(f64),
+}
+
+impl GateKind {
+    /// Number of qubits the gate acts on (1 or 2).
+    pub fn arity(self) -> usize {
+        use GateKind::*;
+        match self {
+            X | Y | Z | H | S | Sdg | T | Tdg | Sx | Rx(_) | Ry(_) | Rz(_) | P(_)
+            | U3(..) => 1,
+            Cx | Cy | Cz | Swap | Cp(_) | Crx(_) | Cry(_) | Crz(_) | Rxx(_) | Rzz(_) => 2,
+        }
+    }
+
+    /// True when the unitary is diagonal — these gates never mix
+    /// amplitudes, enabling the element-wise fast path (no pair gather).
+    pub fn is_diagonal(self) -> bool {
+        use GateKind::*;
+        matches!(self, Z | S | Sdg | T | Tdg | Rz(_) | P(_) | Cz | Cp(_) | Crz(_) | Rzz(_))
+    }
+
+    /// Canonical lowercase name (QASM style).
+    pub fn name(self) -> &'static str {
+        use GateKind::*;
+        match self {
+            X => "x",
+            Y => "y",
+            Z => "z",
+            H => "h",
+            S => "s",
+            Sdg => "sdg",
+            T => "t",
+            Tdg => "tdg",
+            Sx => "sx",
+            Rx(_) => "rx",
+            Ry(_) => "ry",
+            Rz(_) => "rz",
+            P(_) => "p",
+            U3(..) => "u3",
+            Cx => "cx",
+            Cy => "cy",
+            Cz => "cz",
+            Swap => "swap",
+            Cp(_) => "cp",
+            Crx(_) => "crx",
+            Cry(_) => "cry",
+            Crz(_) => "crz",
+            Rxx(_) => "rxx",
+            Rzz(_) => "rzz",
+        }
+    }
+}
+
+/// A gate applied to specific qubit indices.
+///
+/// For two-qubit gates, `qubits[0]` is the control (where meaningful) and
+/// `qubits[1]` the target; for symmetric gates (SWAP, RXX, RZZ, CZ) the
+/// order is irrelevant physically but preserved for layout purposes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Gate {
+    pub kind: GateKind,
+    pub qubits: [usize; 2],
+}
+
+impl Gate {
+    /// Single-qubit gate constructor.
+    pub fn q1(kind: GateKind, q: usize) -> Result<Self> {
+        if kind.arity() != 1 {
+            return Err(Error::Circuit(format!("{} is not single-qubit", kind.name())));
+        }
+        Ok(Gate { kind, qubits: [q, usize::MAX] })
+    }
+
+    /// Double-qubit gate constructor (`a` control / first, `b` target / second).
+    pub fn q2(kind: GateKind, a: usize, b: usize) -> Result<Self> {
+        if kind.arity() != 2 {
+            return Err(Error::Circuit(format!("{} is not double-qubit", kind.name())));
+        }
+        if a == b {
+            return Err(Error::Circuit(format!(
+                "{} control and target must differ (got {a})",
+                kind.name()
+            )));
+        }
+        Ok(Gate { kind, qubits: [a, b] })
+    }
+
+    pub fn arity(&self) -> usize {
+        self.kind.arity()
+    }
+
+    /// The qubits this gate touches, in declaration order.
+    pub fn targets(&self) -> &[usize] {
+        &self.qubits[..self.arity()]
+    }
+
+    /// 2x2 unitary (row-major) for single-qubit kinds.
+    pub fn matrix1q(&self) -> [Complex; 4] {
+        use GateKind::*;
+        let c = Complex::new;
+        let z = Complex::ZERO;
+        let one = Complex::ONE;
+        let i = Complex::I;
+        let frac = std::f64::consts::FRAC_1_SQRT_2;
+        match self.kind {
+            X => [z, one, one, z],
+            Y => [z, -i, i, z],
+            Z => [one, z, z, -one],
+            H => [c(frac, 0.0), c(frac, 0.0), c(frac, 0.0), c(-frac, 0.0)],
+            S => [one, z, z, i],
+            Sdg => [one, z, z, -i],
+            T => [one, z, z, Complex::cis(std::f64::consts::FRAC_PI_4)],
+            Tdg => [one, z, z, Complex::cis(-std::f64::consts::FRAC_PI_4)],
+            Sx => [
+                c(0.5, 0.5),
+                c(0.5, -0.5),
+                c(0.5, -0.5),
+                c(0.5, 0.5),
+            ],
+            Rx(t) => {
+                let (ch, sh) = ((t / 2.0).cos(), (t / 2.0).sin());
+                [c(ch, 0.0), c(0.0, -sh), c(0.0, -sh), c(ch, 0.0)]
+            }
+            Ry(t) => {
+                let (ch, sh) = ((t / 2.0).cos(), (t / 2.0).sin());
+                [c(ch, 0.0), c(-sh, 0.0), c(sh, 0.0), c(ch, 0.0)]
+            }
+            Rz(t) => [Complex::cis(-t / 2.0), z, z, Complex::cis(t / 2.0)],
+            P(t) => [one, z, z, Complex::cis(t)],
+            U3(theta, phi, lam) => {
+                let (ch, sh) = ((theta / 2.0).cos(), (theta / 2.0).sin());
+                [
+                    c(ch, 0.0),
+                    Complex::cis(lam).scale(-sh),
+                    Complex::cis(phi).scale(sh),
+                    Complex::cis(phi + lam).scale(ch),
+                ]
+            }
+            _ => unreachable!("matrix1q on two-qubit gate {:?}", self.kind),
+        }
+    }
+
+    /// 4x4 unitary (row-major) for double-qubit kinds, in the basis
+    /// `|q_a q_b>` = `|00>, |01>, |10>, |11>` with `q_a = qubits[0]` the
+    /// high bit.
+    pub fn matrix2q(&self) -> [Complex; 16] {
+        use GateKind::*;
+        let z = Complex::ZERO;
+        let one = Complex::ONE;
+        let i = Complex::I;
+        let mut m = [z; 16];
+        let set = |m: &mut [Complex; 16], r: usize, cidx: usize, v: Complex| {
+            m[r * 4 + cidx] = v;
+        };
+        match self.kind {
+            Cx => {
+                set(&mut m, 0, 0, one);
+                set(&mut m, 1, 1, one);
+                set(&mut m, 2, 3, one);
+                set(&mut m, 3, 2, one);
+            }
+            Cy => {
+                set(&mut m, 0, 0, one);
+                set(&mut m, 1, 1, one);
+                set(&mut m, 2, 3, -i);
+                set(&mut m, 3, 2, i);
+            }
+            Cz => {
+                set(&mut m, 0, 0, one);
+                set(&mut m, 1, 1, one);
+                set(&mut m, 2, 2, one);
+                set(&mut m, 3, 3, -one);
+            }
+            Swap => {
+                set(&mut m, 0, 0, one);
+                set(&mut m, 1, 2, one);
+                set(&mut m, 2, 1, one);
+                set(&mut m, 3, 3, one);
+            }
+            Cp(t) => {
+                set(&mut m, 0, 0, one);
+                set(&mut m, 1, 1, one);
+                set(&mut m, 2, 2, one);
+                set(&mut m, 3, 3, Complex::cis(t));
+            }
+            Crx(t) => {
+                let (ch, sh) = ((t / 2.0).cos(), (t / 2.0).sin());
+                set(&mut m, 0, 0, one);
+                set(&mut m, 1, 1, one);
+                set(&mut m, 2, 2, Complex::new(ch, 0.0));
+                set(&mut m, 2, 3, Complex::new(0.0, -sh));
+                set(&mut m, 3, 2, Complex::new(0.0, -sh));
+                set(&mut m, 3, 3, Complex::new(ch, 0.0));
+            }
+            Cry(t) => {
+                let (ch, sh) = ((t / 2.0).cos(), (t / 2.0).sin());
+                set(&mut m, 0, 0, one);
+                set(&mut m, 1, 1, one);
+                set(&mut m, 2, 2, Complex::new(ch, 0.0));
+                set(&mut m, 2, 3, Complex::new(-sh, 0.0));
+                set(&mut m, 3, 2, Complex::new(sh, 0.0));
+                set(&mut m, 3, 3, Complex::new(ch, 0.0));
+            }
+            Crz(t) => {
+                set(&mut m, 0, 0, one);
+                set(&mut m, 1, 1, one);
+                set(&mut m, 2, 2, Complex::cis(-t / 2.0));
+                set(&mut m, 3, 3, Complex::cis(t / 2.0));
+            }
+            Rxx(t) => {
+                let (ch, sh) = ((t / 2.0).cos(), (t / 2.0).sin());
+                let d = Complex::new(ch, 0.0);
+                let o = Complex::new(0.0, -sh);
+                set(&mut m, 0, 0, d);
+                set(&mut m, 0, 3, o);
+                set(&mut m, 1, 1, d);
+                set(&mut m, 1, 2, o);
+                set(&mut m, 2, 1, o);
+                set(&mut m, 2, 2, d);
+                set(&mut m, 3, 0, o);
+                set(&mut m, 3, 3, d);
+            }
+            Rzz(t) => {
+                let neg = Complex::cis(-t / 2.0);
+                let pos = Complex::cis(t / 2.0);
+                set(&mut m, 0, 0, neg);
+                set(&mut m, 1, 1, pos);
+                set(&mut m, 2, 2, pos);
+                set(&mut m, 3, 3, neg);
+            }
+            _ => unreachable!("matrix2q on single-qubit gate {:?}", self.kind),
+        }
+        m
+    }
+
+    /// Diagonal entries when [`GateKind::is_diagonal`]; length 2 or 4.
+    pub fn diagonal(&self) -> Vec<Complex> {
+        debug_assert!(self.kind.is_diagonal());
+        match self.arity() {
+            1 => {
+                let m = self.matrix1q();
+                vec![m[0], m[3]]
+            }
+            _ => {
+                let m = self.matrix2q();
+                vec![m[0], m[5], m[10], m[15]]
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Gate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        use GateKind::*;
+        match self.kind {
+            Rx(t) | Ry(t) | Rz(t) | P(t) | Cp(t) | Crx(t) | Cry(t) | Crz(t) | Rxx(t)
+            | Rzz(t) => write!(f, "{}({:.4})", self.kind.name(), t)?,
+            U3(a, b, c) => write!(f, "u3({a:.4},{b:.4},{c:.4})")?,
+            _ => write!(f, "{}", self.kind.name())?,
+        }
+        write!(f, " {:?}", self.targets())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_unitary1q(m: &[Complex; 4]) -> bool {
+        // m * m^dagger == I
+        let dot = |r1: [Complex; 2], r2: [Complex; 2]| r1[0] * r2[0].conj() + r1[1] * r2[1].conj();
+        let r0 = [m[0], m[1]];
+        let r1 = [m[2], m[3]];
+        dot(r0, r0).approx_eq(Complex::ONE, 1e-12)
+            && dot(r1, r1).approx_eq(Complex::ONE, 1e-12)
+            && dot(r0, r1).approx_eq(Complex::ZERO, 1e-12)
+    }
+
+    fn is_unitary2q(m: &[Complex; 16]) -> bool {
+        for r1 in 0..4 {
+            for r2 in 0..4 {
+                let mut acc = Complex::ZERO;
+                for k in 0..4 {
+                    acc += m[r1 * 4 + k] * m[r2 * 4 + k].conj();
+                }
+                let want = if r1 == r2 { Complex::ONE } else { Complex::ZERO };
+                if !acc.approx_eq(want, 1e-12) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn all_1q_matrices_unitary() {
+        use GateKind::*;
+        for kind in [
+            X, Y, Z, H, S, Sdg, T, Tdg, Sx, Rx(0.37), Ry(1.1), Rz(-2.2), P(0.9),
+            U3(0.5, 1.5, -0.4),
+        ] {
+            let g = Gate::q1(kind, 0).unwrap();
+            assert!(is_unitary1q(&g.matrix1q()), "{kind:?} not unitary");
+        }
+    }
+
+    #[test]
+    fn all_2q_matrices_unitary() {
+        use GateKind::*;
+        for kind in [
+            Cx, Cy, Cz, Swap, Cp(0.7), Crx(1.3), Cry(-0.2), Crz(2.5), Rxx(0.8), Rzz(-1.6),
+        ] {
+            let g = Gate::q2(kind, 0, 1).unwrap();
+            assert!(is_unitary2q(&g.matrix2q()), "{kind:?} not unitary");
+        }
+    }
+
+    #[test]
+    fn diagonal_flag_consistent_with_matrix() {
+        use GateKind::*;
+        for kind in [Z, S, Sdg, T, Tdg, Rz(0.3), P(1.2)] {
+            let g = Gate::q1(kind, 0).unwrap();
+            assert!(kind.is_diagonal());
+            let m = g.matrix1q();
+            assert!(m[1].approx_eq(Complex::ZERO, 0.0) && m[2].approx_eq(Complex::ZERO, 0.0));
+            let d = g.diagonal();
+            assert_eq!(d, vec![m[0], m[3]]);
+        }
+        for kind in [Cz, Cp(0.4), Crz(0.8), Rzz(1.0)] {
+            let g = Gate::q2(kind, 0, 1).unwrap();
+            assert!(kind.is_diagonal());
+            let m = g.matrix2q();
+            for r in 0..4 {
+                for c in 0..4 {
+                    if r != c {
+                        assert!(m[r * 4 + c].approx_eq(Complex::ZERO, 0.0));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sdg_is_s_inverse() {
+        let s = Gate::q1(GateKind::S, 0).unwrap().matrix1q();
+        let sdg = Gate::q1(GateKind::Sdg, 0).unwrap().matrix1q();
+        // (s * sdg) == identity on diagonal entries
+        assert!((s[3] * sdg[3]).approx_eq(Complex::ONE, 1e-15));
+    }
+
+    #[test]
+    fn arity_validation() {
+        assert!(Gate::q1(GateKind::Cx, 0).is_err());
+        assert!(Gate::q2(GateKind::H, 0, 1).is_err());
+        assert!(Gate::q2(GateKind::Cx, 3, 3).is_err());
+    }
+
+    #[test]
+    fn rz_equals_p_up_to_global_phase() {
+        let t = 0.83;
+        let rz = Gate::q1(GateKind::Rz(t), 0).unwrap().matrix1q();
+        let p = Gate::q1(GateKind::P(t), 0).unwrap().matrix1q();
+        // rz = e^{-i t/2} * p
+        let phase = Complex::cis(-t / 2.0);
+        assert!(rz[0].approx_eq(phase * p[0], 1e-12));
+        assert!(rz[3].approx_eq(phase * p[3], 1e-12));
+    }
+}

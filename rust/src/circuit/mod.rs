@@ -1,0 +1,184 @@
+//! Circuit IR: an ordered gate list over `n` qubits, with builder helpers,
+//! an OpenQASM-2 subset parser, the 8 NWQBench-style benchmark generators,
+//! and the paper's Algorithm-1 circuit partitioner.
+
+pub mod gate;
+pub mod generators;
+pub mod partition;
+pub mod qasm;
+
+pub use gate::{Gate, GateKind};
+pub use partition::{partition_circuit, PartitionPlan, Stage};
+
+use crate::types::{Error, Result};
+
+/// A quantum circuit: `n_qubits` and an ordered list of gates.
+#[derive(Debug, Clone)]
+pub struct Circuit {
+    pub n_qubits: usize,
+    pub gates: Vec<Gate>,
+    /// Human-readable tag (algorithm name), used in reports.
+    pub name: String,
+}
+
+impl Circuit {
+    pub fn new(n_qubits: usize, name: impl Into<String>) -> Self {
+        Circuit { n_qubits, gates: Vec::new(), name: name.into() }
+    }
+
+    /// Validate and append a gate.
+    pub fn push(&mut self, gate: Gate) -> Result<()> {
+        for &q in gate.targets() {
+            if q >= self.n_qubits {
+                return Err(Error::Circuit(format!(
+                    "gate {gate} targets qubit {q} but circuit has {} qubits",
+                    self.n_qubits
+                )));
+            }
+        }
+        self.gates.push(gate);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.gates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gates.is_empty()
+    }
+
+    /// Count of two-qubit gates (entangling depth proxy).
+    pub fn two_qubit_count(&self) -> usize {
+        self.gates.iter().filter(|g| g.arity() == 2).count()
+    }
+
+    // ----- builder sugar (panics on invalid indices; use push() to handle) -----
+
+    pub fn h(&mut self, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::H, q).unwrap()).unwrap();
+        self
+    }
+    pub fn x(&mut self, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::X, q).unwrap()).unwrap();
+        self
+    }
+    pub fn y(&mut self, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::Y, q).unwrap()).unwrap();
+        self
+    }
+    pub fn z(&mut self, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::Z, q).unwrap()).unwrap();
+        self
+    }
+    pub fn s(&mut self, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::S, q).unwrap()).unwrap();
+        self
+    }
+    pub fn t(&mut self, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::T, q).unwrap()).unwrap();
+        self
+    }
+    pub fn rx(&mut self, theta: f64, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::Rx(theta), q).unwrap()).unwrap();
+        self
+    }
+    pub fn ry(&mut self, theta: f64, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::Ry(theta), q).unwrap()).unwrap();
+        self
+    }
+    pub fn rz(&mut self, theta: f64, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::Rz(theta), q).unwrap()).unwrap();
+        self
+    }
+    pub fn p(&mut self, theta: f64, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::P(theta), q).unwrap()).unwrap();
+        self
+    }
+    pub fn u3(&mut self, theta: f64, phi: f64, lam: f64, q: usize) -> &mut Self {
+        self.push(Gate::q1(GateKind::U3(theta, phi, lam), q).unwrap()).unwrap();
+        self
+    }
+    pub fn cx(&mut self, c: usize, t: usize) -> &mut Self {
+        self.push(Gate::q2(GateKind::Cx, c, t).unwrap()).unwrap();
+        self
+    }
+    pub fn cz(&mut self, c: usize, t: usize) -> &mut Self {
+        self.push(Gate::q2(GateKind::Cz, c, t).unwrap()).unwrap();
+        self
+    }
+    pub fn cp(&mut self, theta: f64, c: usize, t: usize) -> &mut Self {
+        self.push(Gate::q2(GateKind::Cp(theta), c, t).unwrap()).unwrap();
+        self
+    }
+    pub fn swap(&mut self, a: usize, b: usize) -> &mut Self {
+        self.push(Gate::q2(GateKind::Swap, a, b).unwrap()).unwrap();
+        self
+    }
+    pub fn rzz(&mut self, theta: f64, a: usize, b: usize) -> &mut Self {
+        self.push(Gate::q2(GateKind::Rzz(theta), a, b).unwrap()).unwrap();
+        self
+    }
+    pub fn rxx(&mut self, theta: f64, a: usize, b: usize) -> &mut Self {
+        self.push(Gate::q2(GateKind::Rxx(theta), a, b).unwrap()).unwrap();
+        self
+    }
+
+    /// Gate-kind histogram, for circuit stats in reports.
+    pub fn kind_histogram(&self) -> Vec<(String, usize)> {
+        let mut counts: std::collections::BTreeMap<&'static str, usize> =
+            std::collections::BTreeMap::new();
+        for g in &self.gates {
+            *counts.entry(g.kind.name()).or_insert(0) += 1;
+        }
+        counts.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+    }
+}
+
+impl std::fmt::Display for Circuit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "circuit {} — {} qubits, {} gates ({} two-qubit)",
+            self.name,
+            self.n_qubits,
+            self.len(),
+            self.two_qubit_count()
+        )?;
+        for g in &self.gates {
+            writeln!(f, "  {g}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let mut c = Circuit::new(3, "test");
+        c.h(0).cx(0, 1).cx(1, 2).rz(0.5, 2);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.two_qubit_count(), 2);
+        assert_eq!(c.gates[0].kind, GateKind::H);
+    }
+
+    #[test]
+    fn push_rejects_out_of_range() {
+        let mut c = Circuit::new(2, "t");
+        assert!(c.push(Gate::q1(GateKind::X, 2).unwrap()).is_err());
+        assert!(c.push(Gate::q2(GateKind::Cx, 0, 5).unwrap()).is_err());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut c = Circuit::new(2, "t");
+        c.h(0).h(1).cx(0, 1);
+        let h = c.kind_histogram();
+        assert!(h.contains(&("h".to_string(), 2)));
+        assert!(h.contains(&("cx".to_string(), 1)));
+    }
+}

@@ -1,0 +1,262 @@
+//! The paper's Algorithm 1: optimal-compression circuit partitioning (§4.1).
+//!
+//! Given a block size of `2^b` amplitudes, qubit indices `< b` are *local*
+//! (pairs live inside one SV block) and indices `>= b` are *global* (pairs
+//! span blocks, Fig. 2). The partitioner walks the gate list greedily,
+//! accumulating gates into the current *stage* until the set of distinct
+//! global indices targeted by the stage would exceed `inner_size`; it then
+//! seals the stage and starts a new one.
+//!
+//! Within a stage, the targeted global indices are its **inner** indices.
+//! The SV blocks whose global-index bits agree on all *outer* (non-inner)
+//! positions form an **SV group** of `2^|inner|` blocks (Fig. 4/5): every
+//! amplitude pair any stage gate needs lies inside one group, so the whole
+//! stage costs ONE decompression + ONE compression per group — the
+//! mechanism behind the paper's 2673-gates -> 28-stages reduction on
+//! 33-qubit QFT.
+
+use super::{Circuit, Gate};
+use crate::types::{Error, Result};
+
+/// One stage of the partitioned circuit.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Gates of this stage, in original circuit order.
+    pub gates: Vec<Gate>,
+    /// Sorted distinct global qubit indices targeted by `gates`
+    /// (absolute qubit numbers, each `>= block_qubits`).
+    pub inner: Vec<usize>,
+}
+
+impl Stage {
+    /// Number of SV blocks per SV group for this stage: `2^|inner|`.
+    pub fn group_blocks(&self) -> usize {
+        1usize << self.inner.len()
+    }
+}
+
+/// The output of Algorithm 1 plus the geometry it was computed for.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub stages: Vec<Stage>,
+    /// `b`: qubits resolved inside one SV block (block = `2^b` amplitudes).
+    pub block_qubits: usize,
+    /// Configured cap on distinct global (inner) indices per stage.
+    pub inner_size: usize,
+    pub n_qubits: usize,
+}
+
+impl PartitionPlan {
+    /// `c = n - b`: number of global index bits.
+    pub fn global_qubits(&self) -> usize {
+        self.n_qubits.saturating_sub(self.block_qubits)
+    }
+
+    /// Total number of SV blocks: `2^c`.
+    pub fn total_blocks(&self) -> usize {
+        1usize << self.global_qubits()
+    }
+
+    /// (De)compression operations implied by the plan: one compress + one
+    /// decompress per stage (per group, but groups tile the state exactly
+    /// once). Compare against `gates.len()` for the per-gate baseline.
+    pub fn compression_rounds(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Number of SV groups in `stage` (groups partition the block set).
+    pub fn groups_in_stage(&self, stage: &Stage) -> usize {
+        1usize << (self.global_qubits() - stage.inner.len())
+    }
+}
+
+/// Algorithm 1 (paper §4.1). `inner_size` is clamped to `>= 2` (Line 3:
+/// a double-qubit gate may target two global indices at once) and to the
+/// number of global bits available.
+pub fn partition_circuit(
+    circuit: &Circuit,
+    block_qubits: usize,
+    inner_size: usize,
+) -> Result<PartitionPlan> {
+    if block_qubits > circuit.n_qubits {
+        return Err(Error::Config(format!(
+            "block_qubits {} exceeds circuit qubits {}",
+            block_qubits, circuit.n_qubits
+        )));
+    }
+    let global_bits = circuit.n_qubits - block_qubits;
+    // Line 3: threshold = max(inner_size, 2), further clamped to the number
+    // of global bits that actually exist (a stage can never target more).
+    let threshold = inner_size.max(2).min(global_bits.max(2));
+
+    let mut stages: Vec<Stage> = Vec::new();
+    let mut cur_gates: Vec<Gate> = Vec::new();
+    let mut cur_inner: Vec<usize> = Vec::new(); // sorted distinct globals
+
+    for gate in &circuit.gates {
+        // Query the global indices of [current stage + current gate].
+        let mut merged = cur_inner.clone();
+        for &q in gate.targets() {
+            if q >= block_qubits {
+                if let Err(pos) = merged.binary_search(&q) {
+                    merged.insert(pos, q);
+                }
+            }
+        }
+        if merged.len() > threshold && !cur_gates.is_empty() {
+            // Seal the current stage and start fresh with this gate.
+            stages.push(Stage { gates: std::mem::take(&mut cur_gates), inner: std::mem::take(&mut cur_inner) });
+            let mut fresh: Vec<usize> = Vec::new();
+            for &q in gate.targets() {
+                if q >= block_qubits {
+                    if let Err(pos) = fresh.binary_search(&q) {
+                        fresh.insert(pos, q);
+                    }
+                }
+            }
+            debug_assert!(fresh.len() <= threshold, "single gate exceeds threshold");
+            cur_inner = fresh;
+        } else {
+            cur_inner = merged;
+        }
+        cur_gates.push(*gate);
+    }
+    if !cur_gates.is_empty() {
+        stages.push(Stage { gates: cur_gates, inner: cur_inner });
+    }
+
+    Ok(PartitionPlan { stages, block_qubits, inner_size: threshold, n_qubits: circuit.n_qubits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators;
+
+    fn check_invariants(c: &Circuit, plan: &PartitionPlan) {
+        // 1. Every gate appears exactly once, in order.
+        let flat: Vec<Gate> = plan.stages.iter().flat_map(|s| s.gates.clone()).collect();
+        assert_eq!(flat.len(), c.gates.len());
+        for (a, b) in flat.iter().zip(c.gates.iter()) {
+            assert_eq!(a, b);
+        }
+        // 2. Per-stage inner sets are sorted, distinct, within threshold,
+        //    and exactly the globals the stage's gates target.
+        for s in &plan.stages {
+            assert!(s.inner.windows(2).all(|w| w[0] < w[1]), "inner not sorted/distinct");
+            assert!(
+                s.inner.len() <= plan.inner_size,
+                "stage inner {} > threshold {}",
+                s.inner.len(),
+                plan.inner_size
+            );
+            let mut want: Vec<usize> = s
+                .gates
+                .iter()
+                .flat_map(|g| g.targets().iter().copied())
+                .filter(|&q| q >= plan.block_qubits)
+                .collect();
+            want.sort_unstable();
+            want.dedup();
+            assert_eq!(s.inner, want);
+        }
+    }
+
+    #[test]
+    fn all_local_gates_make_one_stage() {
+        let mut c = Circuit::new(8, "local");
+        for q in 0..4 {
+            c.h(q).rz(0.1, q);
+        }
+        c.cx(0, 1).cx(2, 3);
+        let plan = partition_circuit(&c, 4, 2).unwrap();
+        assert_eq!(plan.stages.len(), 1);
+        assert!(plan.stages[0].inner.is_empty());
+        check_invariants(&c, &plan);
+    }
+
+    #[test]
+    fn global_gates_split_when_exceeding_threshold() {
+        let mut c = Circuit::new(8, "global");
+        // 4 global bits (4..8); threshold 2 → H on 4,5 in stage 1, 6,7 in stage 2.
+        c.h(4).h(5).h(6).h(7);
+        let plan = partition_circuit(&c, 4, 2).unwrap();
+        assert_eq!(plan.stages.len(), 2);
+        assert_eq!(plan.stages[0].inner, vec![4, 5]);
+        assert_eq!(plan.stages[1].inner, vec![6, 7]);
+        check_invariants(&c, &plan);
+    }
+
+    #[test]
+    fn threshold_minimum_is_two() {
+        // inner_size=0 must still admit a 2-global double-qubit gate.
+        let mut c = Circuit::new(6, "dq");
+        c.cx(4, 5);
+        let plan = partition_circuit(&c, 2, 0).unwrap();
+        assert_eq!(plan.stages.len(), 1);
+        assert_eq!(plan.stages[0].inner, vec![4, 5]);
+    }
+
+    #[test]
+    fn repeated_global_target_does_not_grow_inner() {
+        let mut c = Circuit::new(6, "rep");
+        c.h(5).rz(0.3, 5).h(5).h(4);
+        let plan = partition_circuit(&c, 2, 2).unwrap();
+        assert_eq!(plan.stages.len(), 1);
+        assert_eq!(plan.stages[0].inner, vec![4, 5]);
+        check_invariants(&c, &plan);
+    }
+
+    #[test]
+    fn qft_compression_round_reduction() {
+        // Paper: 33-qubit QFT drops 2673 gate-wise rounds to 28 stages. The
+        // reduction factor grows with block size (fewer global bits) and
+        // inner size; reproduce the shape at laptop scale.
+        let c = generators::qft(20);
+        // c = 6 global bits, inner 4: strong reduction.
+        let plan = partition_circuit(&c, 14, 4).unwrap();
+        assert!(
+            plan.compression_rounds() * 5 < c.len(),
+            "stages {} not << gates {}",
+            plan.compression_rounds(),
+            c.len()
+        );
+        check_invariants(&c, &plan);
+        // c = 4 global bits, inner 4: every global fits => exactly 1 stage.
+        let plan = partition_circuit(&c, 16, 4).unwrap();
+        assert_eq!(plan.compression_rounds(), 1);
+        // Monotonicity: larger inner size never yields more stages.
+        let s2 = partition_circuit(&c, 14, 2).unwrap().compression_rounds();
+        let s3 = partition_circuit(&c, 14, 3).unwrap().compression_rounds();
+        let s4 = partition_circuit(&c, 14, 4).unwrap().compression_rounds();
+        assert!(s2 >= s3 && s3 >= s4, "{s2} {s3} {s4}");
+    }
+
+    #[test]
+    fn group_geometry() {
+        let mut c = Circuit::new(8, "geom");
+        c.h(5).h(6);
+        let plan = partition_circuit(&c, 4, 2).unwrap();
+        let s = &plan.stages[0];
+        assert_eq!(s.group_blocks(), 4); // 2^2 blocks per group
+        assert_eq!(plan.total_blocks(), 16); // 2^4
+        assert_eq!(plan.groups_in_stage(s), 4); // 16 / 4
+    }
+
+    #[test]
+    fn block_qubits_larger_than_n_rejected() {
+        let c = Circuit::new(4, "bad");
+        assert!(partition_circuit(&c, 5, 2).is_err());
+    }
+
+    #[test]
+    fn all_benchmarks_partition_cleanly() {
+        for name in generators::ALL {
+            let c = generators::build(name, 12, 0xBEEF).unwrap();
+            for (b, inner) in [(6, 2), (8, 3), (10, 2), (12, 2)] {
+                let plan = partition_circuit(&c, b, inner).unwrap();
+                check_invariants(&c, &plan);
+            }
+        }
+    }
+}

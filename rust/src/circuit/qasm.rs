@@ -1,0 +1,434 @@
+//! OpenQASM 2.0 subset parser — enough to load NWQBench/QASMBench circuit
+//! files: a single quantum register, the standard gate vocabulary, constant
+//! arithmetic angle expressions (`pi/4`, `-3*pi/8`, `1.5707`), comments,
+//! `barrier` (ignored) and `measure` (recorded count, not simulated
+//! mid-circuit — the engines sample terminally, like the paper's
+//! simulators).
+
+use super::{Circuit, Gate, GateKind};
+use crate::types::{Error, Result};
+
+/// Parse OpenQASM-2 source text into a [`Circuit`].
+pub fn parse(src: &str, name: impl Into<String>) -> Result<Circuit> {
+    Parser::new(src).parse(name.into())
+}
+
+/// Parse a `.qasm` file from disk.
+pub fn parse_file(path: &std::path::Path) -> Result<Circuit> {
+    let src = std::fs::read_to_string(path)?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "qasm".to_string());
+    parse(&src, name)
+}
+
+struct Parser<'a> {
+    src: &'a str,
+}
+
+impl<'a> Parser<'a> {
+    fn new(src: &'a str) -> Self {
+        Parser { src }
+    }
+
+    fn parse(&self, name: String) -> Result<Circuit> {
+        let mut circuit: Option<Circuit> = None;
+        let mut qreg_name = String::new();
+        let mut measures = 0usize;
+
+        for (lineno, raw) in self.src.lines().enumerate() {
+            let line = lineno + 1;
+            // Strip comments and whitespace; statements end with ';'.
+            let code = raw.split("//").next().unwrap_or("").trim();
+            if code.is_empty() {
+                continue;
+            }
+            for stmt in code.split(';') {
+                let stmt = stmt.trim();
+                if stmt.is_empty() {
+                    continue;
+                }
+                self.parse_stmt(stmt, line, &mut circuit, &mut qreg_name, &mut measures, &name)?;
+            }
+        }
+        circuit.ok_or_else(|| Error::Qasm { line: 0, msg: "no qreg declaration found".into() })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn parse_stmt(
+        &self,
+        stmt: &str,
+        line: usize,
+        circuit: &mut Option<Circuit>,
+        qreg_name: &mut String,
+        measures: &mut usize,
+        name: &str,
+    ) -> Result<()> {
+        let err = |msg: String| Error::Qasm { line, msg };
+
+        // Header / declarations / ignorables.
+        if stmt.starts_with("OPENQASM") || stmt.starts_with("include") {
+            return Ok(());
+        }
+        if let Some(rest) = stmt.strip_prefix("qreg") {
+            let (rname, size) = parse_reg_decl(rest).map_err(|m| err(m))?;
+            if circuit.is_some() {
+                return Err(err("multiple qreg declarations unsupported".into()));
+            }
+            *qreg_name = rname;
+            *circuit = Some(Circuit::new(size, name.to_string()));
+            return Ok(());
+        }
+        if stmt.starts_with("creg") || stmt.starts_with("barrier") {
+            return Ok(());
+        }
+        if stmt.starts_with("measure") {
+            *measures += 1;
+            return Ok(());
+        }
+
+        // Gate application: `name(params)? q[i] (, q[j])?`
+        let c = circuit
+            .as_mut()
+            .ok_or_else(|| err("gate before qreg declaration".into()))?;
+        // The head is `name` or `name(exprs...)`; parameter expressions may
+        // contain spaces, so when a '(' opens before the first whitespace we
+        // split after its matching ')'.
+        let ws = stmt.find(char::is_whitespace).unwrap_or(stmt.len());
+        let (head, args_str) = match stmt.find('(') {
+            Some(open) if open < ws => {
+                let close = stmt
+                    .find(')')
+                    .ok_or_else(|| err(format!("missing ) in {stmt:?}")))?;
+                (&stmt[..=close], stmt[close + 1..].trim())
+            }
+            _ => {
+                if ws == stmt.len() {
+                    return Err(err(format!("malformed statement {stmt:?}")));
+                }
+                (&stmt[..ws], stmt[ws..].trim())
+            }
+        };
+        let (gname, params) = parse_head(head, line)?;
+        let qubits = parse_qubit_args(args_str, qreg_name, line)?;
+        let gate = build_gate(&gname, &params, &qubits, line)?;
+        c.push(gate)
+            .map_err(|e| err(e.to_string()))?;
+        Ok(())
+    }
+}
+
+fn parse_reg_decl(rest: &str) -> std::result::Result<(String, usize), String> {
+    // e.g. ` q[24]`
+    let rest = rest.trim();
+    let open = rest.find('[').ok_or("missing [ in qreg")?;
+    let close = rest.find(']').ok_or("missing ] in qreg")?;
+    let name = rest[..open].trim().to_string();
+    let size: usize = rest[open + 1..close]
+        .trim()
+        .parse()
+        .map_err(|_| "bad qreg size")?;
+    if name.is_empty() || size == 0 {
+        return Err("empty qreg name or zero size".into());
+    }
+    Ok((name, size))
+}
+
+/// Split `cp(pi/4)` into ("cp", [pi/4]).
+fn parse_head(head: &str, line: usize) -> Result<(String, Vec<f64>)> {
+    if let Some(open) = head.find('(') {
+        let close = head
+            .rfind(')')
+            .ok_or(Error::Qasm { line, msg: format!("missing ) in {head:?}") })?;
+        let gname = head[..open].to_string();
+        let mut params = Vec::new();
+        for expr in head[open + 1..close].split(',') {
+            params.push(eval_expr(expr).map_err(|m| Error::Qasm { line, msg: m })?);
+        }
+        Ok((gname, params))
+    } else {
+        Ok((head.to_string(), Vec::new()))
+    }
+}
+
+fn parse_qubit_args(args: &str, qreg: &str, line: usize) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in args.split(',') {
+        let part = part.trim();
+        let open = part
+            .find('[')
+            .ok_or(Error::Qasm { line, msg: format!("expected reg[idx], got {part:?}") })?;
+        let close = part
+            .find(']')
+            .ok_or(Error::Qasm { line, msg: format!("missing ] in {part:?}") })?;
+        let rname = part[..open].trim();
+        if rname != qreg {
+            return Err(Error::Qasm { line, msg: format!("unknown register {rname:?}") });
+        }
+        let idx: usize = part[open + 1..close]
+            .trim()
+            .parse()
+            .map_err(|_| Error::Qasm { line, msg: format!("bad index in {part:?}") })?;
+        out.push(idx);
+    }
+    Ok(out)
+}
+
+fn build_gate(gname: &str, params: &[f64], qubits: &[usize], line: usize) -> Result<Gate> {
+    use GateKind::*;
+    let err = |msg: String| Error::Qasm { line, msg };
+    let p = |i: usize| -> Result<f64> {
+        params
+            .get(i)
+            .copied()
+            .ok_or_else(|| err(format!("{gname} missing parameter {i}")))
+    };
+    let q = |i: usize| -> Result<usize> {
+        qubits
+            .get(i)
+            .copied()
+            .ok_or_else(|| err(format!("{gname} missing qubit operand {i}")))
+    };
+    let kind = match gname {
+        "x" => X,
+        "y" => Y,
+        "z" => Z,
+        "h" => H,
+        "s" => S,
+        "sdg" => Sdg,
+        "t" => T,
+        "tdg" => Tdg,
+        "sx" => Sx,
+        "id" | "u0" => return Ok(Gate::q1(Rz(0.0), q(0)?)?), // identity as rz(0)
+        "rx" => Rx(p(0)?),
+        "ry" => Ry(p(0)?),
+        "rz" => Rz(p(0)?),
+        "p" | "u1" => P(p(0)?),
+        "u2" => U3(std::f64::consts::FRAC_PI_2, p(0)?, p(1)?),
+        "u3" | "u" => U3(p(0)?, p(1)?, p(2)?),
+        "cx" | "CX" => Cx,
+        "cy" => Cy,
+        "cz" => Cz,
+        "swap" => Swap,
+        "cp" | "cu1" => Cp(p(0)?),
+        "crx" => Crx(p(0)?),
+        "cry" => Cry(p(0)?),
+        "crz" => Crz(p(0)?),
+        "rxx" => Rxx(p(0)?),
+        "rzz" => Rzz(p(0)?),
+        other => return Err(err(format!("unsupported gate {other:?}"))),
+    };
+    let g = match kind.arity() {
+        1 => Gate::q1(kind, q(0)?)?,
+        _ => Gate::q2(kind, q(0)?, q(1)?)?,
+    };
+    Ok(g)
+}
+
+/// Evaluate a constant angle expression: numbers, `pi`, unary minus, and
+/// the binary operators `* / + -` with usual precedence, plus parentheses.
+fn eval_expr(s: &str) -> std::result::Result<f64, String> {
+    let tokens = tokenize(s)?;
+    let (v, rest) = parse_add(&tokens)?;
+    if !rest.is_empty() {
+        return Err(format!("trailing tokens in expression {s:?}"));
+    }
+    Ok(v)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(f64),
+    Op(char),
+}
+
+fn tokenize(s: &str) -> std::result::Result<Vec<Tok>, String> {
+    let mut out = Vec::new();
+    let b = s.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i] as char;
+        if c.is_whitespace() {
+            i += 1;
+        } else if "+-*/()".contains(c) {
+            out.push(Tok::Op(c));
+            i += 1;
+        } else if c.is_ascii_digit() || c == '.' {
+            let start = i;
+            while i < b.len() && ((b[i] as char).is_ascii_digit() || b[i] == b'.' || b[i] == b'e' || b[i] == b'E' || (i > start && (b[i] == b'+' || b[i] == b'-') && (b[i-1] == b'e' || b[i-1] == b'E'))) {
+                i += 1;
+            }
+            let num: f64 = s[start..i].parse().map_err(|_| format!("bad number in {s:?}"))?;
+            out.push(Tok::Num(num));
+        } else if c.is_ascii_alphabetic() {
+            let start = i;
+            while i < b.len() && (b[i] as char).is_ascii_alphanumeric() {
+                i += 1;
+            }
+            match &s[start..i] {
+                "pi" | "PI" => out.push(Tok::Num(std::f64::consts::PI)),
+                other => return Err(format!("unknown identifier {other:?}")),
+            }
+        } else {
+            return Err(format!("unexpected char {c:?} in {s:?}"));
+        }
+    }
+    Ok(out)
+}
+
+fn parse_add(t: &[Tok]) -> std::result::Result<(f64, &[Tok]), String> {
+    let (mut v, mut rest) = parse_mul(t)?;
+    while let Some(Tok::Op(op @ ('+' | '-'))) = rest.first() {
+        let (rhs, r) = parse_mul(&rest[1..])?;
+        v = if *op == '+' { v + rhs } else { v - rhs };
+        rest = r;
+    }
+    Ok((v, rest))
+}
+
+fn parse_mul(t: &[Tok]) -> std::result::Result<(f64, &[Tok]), String> {
+    let (mut v, mut rest) = parse_atom(t)?;
+    while let Some(Tok::Op(op @ ('*' | '/'))) = rest.first() {
+        let (rhs, r) = parse_atom(&rest[1..])?;
+        v = if *op == '*' { v * rhs } else { v / rhs };
+        rest = r;
+    }
+    Ok((v, rest))
+}
+
+fn parse_atom(t: &[Tok]) -> std::result::Result<(f64, &[Tok]), String> {
+    match t.first() {
+        Some(Tok::Num(n)) => Ok((*n, &t[1..])),
+        Some(Tok::Op('-')) => {
+            let (v, rest) = parse_atom(&t[1..])?;
+            Ok((-v, rest))
+        }
+        Some(Tok::Op('+')) => parse_atom(&t[1..]),
+        Some(Tok::Op('(')) => {
+            let (v, rest) = parse_add(&t[1..])?;
+            match rest.first() {
+                Some(Tok::Op(')')) => Ok((v, &rest[1..])),
+                _ => Err("missing )".into()),
+            }
+        }
+        other => Err(format!("unexpected token {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn parses_minimal_program() {
+        let src = r#"
+            OPENQASM 2.0;
+            include "qelib1.inc";
+            qreg q[3];
+            creg c[3];
+            h q[0];
+            cx q[0], q[1];
+            cx q[1], q[2];
+            measure q[0] -> c[0];
+        "#;
+        let c = parse(src, "ghz").unwrap();
+        assert_eq!(c.n_qubits, 3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.gates[0].kind, GateKind::H);
+        assert_eq!(c.gates[1].kind, GateKind::Cx);
+    }
+
+    #[test]
+    fn parses_parameterized_gates_and_pi_exprs() {
+        let src = "qreg q[2]; rz(pi/4) q[0]; cp(-3*pi/8) q[1], q[0]; u3(0.1, pi, -pi/2) q[1];";
+        let c = parse(src, "t").unwrap();
+        match c.gates[0].kind {
+            GateKind::Rz(t) => assert!((t - PI / 4.0).abs() < 1e-15),
+            other => panic!("{other:?}"),
+        }
+        match c.gates[1].kind {
+            GateKind::Cp(t) => assert!((t + 3.0 * PI / 8.0).abs() < 1e-15),
+            other => panic!("{other:?}"),
+        }
+        match c.gates[2].kind {
+            GateKind::U3(a, b, g) => {
+                assert!((a - 0.1).abs() < 1e-15);
+                assert!((b - PI).abs() < 1e-15);
+                assert!((g + PI / 2.0).abs() < 1e-15);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_and_barriers_ignored() {
+        let src = "// header\nqreg q[1]; // reg\nbarrier q; h q[0]; // gate";
+        let c = parse(src, "t").unwrap();
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let src = "qreg q[2];\nfoo q[0];";
+        match parse(src, "t") {
+            Err(Error::Qasm { line, .. }) => assert_eq!(line, 2),
+            other => panic!("expected qasm error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_qubit() {
+        let src = "qreg q[2]; x q[5];";
+        assert!(parse(src, "t").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_register() {
+        let src = "qreg q[2]; x r[0];";
+        assert!(parse(src, "t").is_err());
+    }
+
+    #[test]
+    fn expr_evaluator_precedence() {
+        assert!((eval_expr("1+2*3").unwrap() - 7.0).abs() < 1e-15);
+        assert!((eval_expr("(1+2)*3").unwrap() - 9.0).absolute_diff_ok());
+        assert!((eval_expr("pi/2/2").unwrap() - PI / 4.0).abs() < 1e-15);
+        assert!((eval_expr("-pi").unwrap() + PI).abs() < 1e-15);
+        assert!((eval_expr("2e-3").unwrap() - 0.002).abs() < 1e-18);
+        assert!(eval_expr("foo").is_err());
+        assert!(eval_expr("(1+2").is_err());
+    }
+
+    trait AbsDiffOk {
+        fn absolute_diff_ok(&self) -> bool;
+    }
+    impl AbsDiffOk for f64 {
+        fn absolute_diff_ok(&self) -> bool {
+            self.abs() < 1e-15
+        }
+    }
+
+    #[test]
+    fn roundtrip_generated_circuit_via_qasm_text() {
+        // Emit a tiny qasm program for qft(4) by hand and compare counts.
+        let qft4 = crate::circuit::generators::qft(4);
+        let mut src = String::from("qreg q[4];\n");
+        for g in &qft4.gates {
+            use GateKind::*;
+            match g.kind {
+                H => src.push_str(&format!("h q[{}];\n", g.qubits[0])),
+                Cp(t) => src.push_str(&format!("cp({t}) q[{}], q[{}];\n", g.qubits[0], g.qubits[1])),
+                Swap => src.push_str(&format!("swap q[{}], q[{}];\n", g.qubits[0], g.qubits[1])),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let parsed = parse(&src, "qft4").unwrap();
+        assert_eq!(parsed.len(), qft4.len());
+        for (a, b) in parsed.gates.iter().zip(qft4.gates.iter()) {
+            assert_eq!(a.kind.name(), b.kind.name());
+            assert_eq!(a.targets(), b.targets());
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Bit-granular writer/reader over byte buffers (LSB-first within bytes).
+//! Foundation for the Huffman coder and the bitmap machinery.
+
+use crate::types::{Error, Result};
+
+/// Append-only bit sink.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits already used in the final byte (0..8; 0 means byte-aligned).
+    used: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `v` (n <= 64), LSB first.
+    pub fn write_bits(&mut self, mut v: u64, mut n: u32) {
+        debug_assert!(n <= 64);
+        if n < 64 {
+            v &= (1u64 << n) - 1;
+        }
+        while n > 0 {
+            if self.used == 0 {
+                self.buf.push(0);
+            }
+            let free = 8 - self.used;
+            let take = free.min(n);
+            let byte = self.buf.last_mut().unwrap();
+            *byte |= ((v & ((1u64 << take) - 1)) as u8) << self.used;
+            v >>= take;
+            n -= take;
+            self.used = (self.used + take) % 8;
+        }
+    }
+
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        if self.used == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.used as usize
+        }
+    }
+
+    /// Finish and return the byte buffer (final byte zero-padded).
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Sequential bit source.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit cursor
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `n` bits (n <= 64), LSB-first, matching [`BitWriter`].
+    pub fn read_bits(&mut self, n: u32) -> Result<u64> {
+        debug_assert!(n <= 64);
+        if self.pos + n as usize > self.buf.len() * 8 {
+            return Err(Error::Codec("bit stream exhausted".into()));
+        }
+        let mut v = 0u64;
+        let mut got = 0u32;
+        while got < n {
+            let byte = self.buf[self.pos / 8];
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(n - got);
+            let bits = ((byte >> off) as u64) & ((1u64 << take) - 1);
+            v |= bits << got;
+            got += take;
+            self.pos += take as usize;
+        }
+        Ok(v)
+    }
+
+    pub fn read_bit(&mut self) -> Result<bool> {
+        Ok(self.read_bits(1)? != 0)
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SplitMix64;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFF, 8);
+        w.write_bits(0, 1);
+        w.write_bits(u64::MAX, 64);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(8).unwrap(), 0xFF);
+        assert_eq!(r.read_bits(1).unwrap(), 0);
+        assert_eq!(r.read_bits(64).unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn roundtrip_random_widths() {
+        let mut rng = SplitMix64::new(3);
+        let items: Vec<(u64, u32)> = (0..2000)
+            .map(|_| {
+                let n = 1 + (rng.next_u64() % 64) as u32;
+                let v = rng.next_u64() & if n == 64 { u64::MAX } else { (1 << n) - 1 };
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write_bits(v, n);
+        }
+        let total = w.bit_len();
+        let bytes = w.into_bytes();
+        assert_eq!(total, items.iter().map(|&(_, n)| n as usize).sum::<usize>());
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read_bits(n).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let bytes = [0u8; 1];
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bits(8).is_ok());
+        assert!(r.read_bits(1).is_err());
+    }
+
+    #[test]
+    fn bit_len_tracks() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write_bit(true);
+        assert_eq!(w.bit_len(), 1);
+        w.write_bits(0, 10);
+        assert_eq!(w.bit_len(), 11);
+    }
+}

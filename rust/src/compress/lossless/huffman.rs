@@ -1,0 +1,311 @@
+//! Canonical Huffman coding over the byte alphabet — the final entropy
+//! stage for residual and bitmap streams (the `bitcomp` lossless analogue).
+//!
+//! Encoded layout: `[n_symbols:varint][(<symbol><len>)*][payload_bits:varint][bits...]`.
+//! Code lengths are canonical, so only lengths ship; codes are rebuilt on
+//! both sides with the same assignment rule.
+
+use super::bitio::BitWriter;
+use super::varint;
+use crate::types::{Error, Result};
+
+const MAX_CODE_LEN: u32 = 48;
+
+/// Compress `data` with a one-shot canonical Huffman code. Streams that are
+/// incompressible come out slightly larger (header overhead); callers that
+/// care (the codec framing) compare against raw and keep the smaller.
+pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut freq = [0u64; 256];
+    for &b in data {
+        freq[b as usize] += 1;
+    }
+    let lens = code_lengths(&freq);
+    let codes = canonical_codes(&lens);
+
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    // Symbol table: count + (symbol, len) pairs.
+    let used: Vec<u8> = (0..256u16).filter(|&s| lens[s as usize] > 0).map(|s| s as u8).collect();
+    varint::write_u64(&mut out, used.len() as u64);
+    for &s in &used {
+        out.push(s);
+        out.push(lens[s as usize] as u8);
+    }
+    varint::write_u64(&mut out, data.len() as u64);
+    // Dedicated bit accumulator (perf §Perf): codes are <= 48 bits, so an
+    // u64 window + whole-byte flushes beats the general BitWriter loop.
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    for &b in data {
+        let (code, len) = codes[b as usize];
+        // Invariant: nbits < 8 here, so nbits + len <= 7 + 48 < 64.
+        acc |= code << nbits;
+        nbits += len;
+        while nbits >= 8 {
+            out.push(acc as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push(acc as u8);
+    }
+    out
+}
+
+/// Inverse of [`encode`].
+pub fn decode(bytes: &[u8]) -> Result<Vec<u8>> {
+    let mut pos = 0usize;
+    let n_sym = varint::read_u64(bytes, &mut pos)? as usize;
+    if n_sym > 256 {
+        return Err(Error::Codec(format!("huffman: {n_sym} symbols")));
+    }
+    let mut lens = [0u32; 256];
+    for _ in 0..n_sym {
+        if pos + 2 > bytes.len() {
+            return Err(Error::Codec("huffman: truncated table".into()));
+        }
+        let s = bytes[pos] as usize;
+        let l = bytes[pos + 1] as u32;
+        if l == 0 || l > MAX_CODE_LEN {
+            return Err(Error::Codec(format!("huffman: bad code length {l}")));
+        }
+        lens[s] = l;
+        pos += 2;
+    }
+    let n_out = varint::read_u64(bytes, &mut pos)? as usize;
+    if n_out == 0 {
+        return Ok(Vec::new());
+    }
+    if n_sym == 0 {
+        return Err(Error::Codec("huffman: no symbols but nonzero output".into()));
+    }
+
+    // Canonical decode tables: for each length, first code + symbol range.
+    let mut by_len: Vec<Vec<u8>> = vec![Vec::new(); (MAX_CODE_LEN + 1) as usize];
+    let mut order: Vec<u16> = (0..256u16).filter(|&s| lens[s as usize] > 0).collect();
+    order.sort_by_key(|&s| (lens[s as usize], s));
+    for &s in &order {
+        by_len[lens[s as usize] as usize].push(s as u8);
+    }
+    // first_code[l]: canonical first code value at length l (MSB-first).
+    let mut first_code = vec![0u64; (MAX_CODE_LEN + 2) as usize];
+    {
+        let mut code = 0u64;
+        for l in 1..=MAX_CODE_LEN as usize {
+            first_code[l] = code;
+            code = (code + by_len[l].len() as u64) << 1;
+        }
+    }
+
+    // Fast path: a LUT_BITS-wide lookup table resolving any code of length
+    // <= LUT_BITS in one probe (perf: replaces the bit-by-bit walk, ~10x
+    // decode throughput; see EXPERIMENTS.md §Perf). Codes on the wire are
+    // MSB-first; the table is indexed by the next LUT_BITS bits LSB-first
+    // as read, i.e. by the *reversed* code padded with every suffix.
+    const LUT_BITS: u32 = 11;
+    let mut lut = vec![(0u8, 0u8); 1usize << LUT_BITS]; // (symbol, len); len 0 = slow path
+    {
+        let codes = canonical_codes(&lens);
+        for s in 0..256usize {
+            let l = lens[s];
+            if l == 0 || l > LUT_BITS {
+                continue;
+            }
+            // codes[s].0 is already bit-reversed into LSB-first wire order.
+            let base = codes[s].0;
+            let step = 1u64 << l;
+            let mut idx = base;
+            while idx < (1u64 << LUT_BITS) {
+                lut[idx as usize] = (s as u8, l as u8);
+                idx += step;
+            }
+        }
+    }
+
+    let payload = &bytes[pos..];
+    let total_bits = payload.len() * 8;
+    let mut out = Vec::with_capacity(n_out);
+    let mut bitpos = 0usize;
+
+    // Branch-light bit peek: one unaligned 8-byte load for the common case
+    // (perf §Perf: the per-byte loop here dominated decode time).
+    let peek = |bitpos: usize| -> u64 {
+        let byte = bitpos / 8;
+        let shift = (bitpos % 8) as u32;
+        if byte + 8 <= payload.len() {
+            let w = u64::from_le_bytes(payload[byte..byte + 8].try_into().unwrap());
+            // 64 - shift >= 56 valid bits: enough for LUT (11) + slow (48).
+            w >> shift
+        } else {
+            let mut buf = [0u8; 8];
+            let take = payload.len() - byte.min(payload.len());
+            buf[..take].copy_from_slice(&payload[byte..]);
+            u64::from_le_bytes(buf) >> shift
+        }
+    };
+
+    for _ in 0..n_out {
+        let window = peek(bitpos);
+        let (sym, l) = lut[(window & ((1 << LUT_BITS) - 1)) as usize];
+        if l != 0 && bitpos + l as usize <= total_bits {
+            out.push(sym);
+            bitpos += l as usize;
+            continue;
+        }
+        // Slow path: codes longer than LUT_BITS (rare, skewed tables only).
+        let mut code = 0u64;
+        let mut len = 0usize;
+        loop {
+            if bitpos + len >= total_bits + 64 {
+                return Err(Error::Codec("huffman: bit stream exhausted".into()));
+            }
+            if bitpos + len >= total_bits {
+                return Err(Error::Codec("huffman: bit stream exhausted".into()));
+            }
+            let bit = (window >> len) & 1;
+            code = (code << 1) | bit;
+            len += 1;
+            if len > MAX_CODE_LEN as usize {
+                return Err(Error::Codec("huffman: code overrun".into()));
+            }
+            let k = by_len[len].len() as u64;
+            if k > 0 && code >= first_code[len] && code < first_code[len] + k {
+                out.push(by_len[len][(code - first_code[len]) as usize]);
+                bitpos += len;
+                break;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Code lengths via a simple heap-free Huffman build (256-symbol alphabet,
+/// O(n log n) with sorting). Single-symbol inputs get length 1.
+fn code_lengths(freq: &[u64; 256]) -> [u32; 256] {
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        kids: Option<(usize, usize)>,
+        symbol: u16,
+    }
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut live: Vec<usize> = Vec::new();
+    for s in 0..256 {
+        if freq[s] > 0 {
+            nodes.push(Node { weight: freq[s], kids: None, symbol: s as u16 });
+            live.push(nodes.len() - 1);
+        }
+    }
+    let mut lens = [0u32; 256];
+    match live.len() {
+        0 => return lens,
+        1 => {
+            lens[nodes[live[0]].symbol as usize] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    while live.len() > 1 {
+        // Pick two smallest (selection over <=256 entries; fine at this scale).
+        live.sort_by_key(|&i| std::cmp::Reverse(nodes[i].weight));
+        let a = live.pop().unwrap();
+        let b = live.pop().unwrap();
+        nodes.push(Node { weight: nodes[a].weight + nodes[b].weight, kids: Some((a, b)), symbol: 0 });
+        live.push(nodes.len() - 1);
+    }
+    // Depth-first depth assignment.
+    let mut stack = vec![(live[0], 0u32)];
+    while let Some((i, d)) = stack.pop() {
+        match nodes[i].kids {
+            Some((a, b)) => {
+                stack.push((a, d + 1));
+                stack.push((b, d + 1));
+            }
+            None => lens[nodes[i].symbol as usize] = d.max(1).min(MAX_CODE_LEN),
+        }
+    }
+    lens
+}
+
+/// Canonical code assignment; returns per-symbol `(bits, len)` where `bits`
+/// holds the code MSB-first *reversed into LSB-first write order* so that
+/// `BitWriter::write_bits` emits the MSB first on the wire.
+fn canonical_codes(lens: &[u32; 256]) -> [(u64, u32); 256] {
+    let mut order: Vec<u16> = (0..256u16).filter(|&s| lens[s as usize] > 0).collect();
+    order.sort_by_key(|&s| (lens[s as usize], s));
+    let mut codes = [(0u64, 0u32); 256];
+    let mut code = 0u64;
+    let mut prev_len = 0u32;
+    for &s in &order {
+        let l = lens[s as usize];
+        code <<= l - prev_len;
+        prev_len = l;
+        // Reverse the l-bit code so LSB-first emission yields MSB-first wire order.
+        let mut rev = 0u64;
+        for b in 0..l {
+            if code & (1 << b) != 0 {
+                rev |= 1 << (l - 1 - b);
+            }
+        }
+        codes[s as usize] = (rev, l);
+        code += 1;
+    }
+    codes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SplitMix64;
+
+    #[test]
+    fn roundtrip_text() {
+        let data = b"the quick brown fox jumps over the lazy dog, repeatedly the the the";
+        let enc = encode(data);
+        assert_eq!(decode(&enc).unwrap(), data);
+        // Tiny inputs pay the symbol-table overhead; just bound the blowup.
+        assert!(enc.len() < data.len() * 2);
+    }
+
+    #[test]
+    fn roundtrip_empty_and_single() {
+        assert_eq!(decode(&encode(&[])).unwrap(), Vec::<u8>::new());
+        assert_eq!(decode(&encode(&[42])).unwrap(), vec![42]);
+        assert_eq!(decode(&encode(&[7; 1000])).unwrap(), vec![7; 1000]);
+    }
+
+    #[test]
+    fn skewed_distribution_compresses_well() {
+        let mut rng = SplitMix64::new(1);
+        let data: Vec<u8> = (0..100_000)
+            .map(|_| if rng.next_f64() < 0.95 { 0u8 } else { rng.next_u64() as u8 })
+            .collect();
+        let enc = encode(&data);
+        assert_eq!(decode(&enc).unwrap(), data);
+        // ~0.37 bits/symbol entropy => expect large reduction.
+        assert!(enc.len() * 2 < data.len(), "enc {} vs raw {}", enc.len(), data.len());
+    }
+
+    #[test]
+    fn uniform_random_roundtrips() {
+        let mut rng = SplitMix64::new(2);
+        let data: Vec<u8> = (0..50_000).map(|_| rng.next_u64() as u8).collect();
+        let enc = encode(&data);
+        assert_eq!(decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn all_bytes_roundtrip() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let enc = encode(b"hello world");
+        // Break the symbol count.
+        let mut bad = enc.clone();
+        bad[0] = 0xFF;
+        assert!(decode(&bad).is_err() || decode(&bad).unwrap() != b"hello world");
+    }
+}

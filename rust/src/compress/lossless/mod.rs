@@ -1,0 +1,8 @@
+//! Lossless building blocks: bit I/O, varints, canonical Huffman, and the
+//! sign-bitmap pre-scan coder. These compose into the lossy codecs'
+//! residual/entropy stages and ship the Algorithm-2 sign bitmap.
+
+pub mod bitio;
+pub mod bitmap;
+pub mod huffman;
+pub mod varint;

@@ -1,0 +1,159 @@
+//! Absolute-error-bounded lossy codec (`|x̂ - x| <= eb`).
+//!
+//! Linear-scaling quantization (`code = round(x / (2 eb))`, reconstruction
+//! `x̂ = code * 2 eb`) + the shared Lorenzo/zig-zag/Huffman residual coder.
+//! This is the mode existing GPU compressors ship (§2.2) and the core the
+//! SC19-Sim baseline prototype uses (SZ-style prediction + quantization).
+//!
+//! Values whose quantized magnitude would overflow the code range, and
+//! non-finite values, take the *outlier escape*: their exact bits ship in a
+//! side table and their slot holds code 0 — so the bound holds for every
+//! element, not just typical ones.
+
+use super::lossless::varint;
+use super::{residual, MODE_ABS};
+use crate::types::{Error, Result};
+
+/// Quantized codes above this magnitude go to the outlier table (guards
+/// both i64 overflow and precision loss in `code * 2eb`).
+const MAX_CODE: f64 = 4.0e15;
+
+pub fn compress(data: &[f64], eb: f64) -> Result<Vec<u8>> {
+    if !(eb > 0.0) || !eb.is_finite() {
+        return Err(Error::Codec(format!("absolute codec needs eb > 0, got {eb}")));
+    }
+    let twoeb = 2.0 * eb;
+    let mut codes = Vec::with_capacity(data.len());
+    let mut outliers: Vec<(usize, f64)> = Vec::new();
+    for (i, &x) in data.iter().enumerate() {
+        let q = x / twoeb;
+        if !x.is_finite() || q.abs() > MAX_CODE {
+            outliers.push((i, x));
+            codes.push(0);
+        } else {
+            // See pointwise.rs: round-half-away via signed-0.5 + as-cast.
+            codes.push((q + 0.5f64.copysign(q)) as i64);
+        }
+    }
+
+    let body = residual::encode(&codes);
+    let mut out = Vec::with_capacity(body.len() + outliers.len() * 10 + 16);
+    out.push(MODE_ABS);
+    out.extend_from_slice(&eb.to_le_bytes());
+    varint::write_u64(&mut out, outliers.len() as u64);
+    let mut prev = 0usize;
+    for &(idx, x) in &outliers {
+        varint::write_u64(&mut out, (idx - prev) as u64);
+        out.extend_from_slice(&x.to_le_bytes());
+        prev = idx;
+    }
+    out.extend_from_slice(&body);
+    Ok(out)
+}
+
+pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
+    if bytes.first() != Some(&MODE_ABS) {
+        return Err(Error::Codec("not an absolute-mode payload".into()));
+    }
+    let mut pos = 1usize;
+    if bytes.len() < pos + 8 {
+        return Err(Error::Codec("abs: truncated header".into()));
+    }
+    let eb = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+    pos += 8;
+    let n_out = varint::read_u64(bytes, &mut pos)? as usize;
+    let mut outliers = Vec::with_capacity(n_out);
+    let mut prev = 0usize;
+    for _ in 0..n_out {
+        let d = varint::read_u64(bytes, &mut pos)? as usize;
+        if bytes.len() < pos + 8 {
+            return Err(Error::Codec("abs: truncated outlier".into()));
+        }
+        let x = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        prev += d;
+        outliers.push((prev, x));
+    }
+    let codes = residual::decode(&bytes[pos..])?;
+    let twoeb = 2.0 * eb;
+    let mut data: Vec<f64> = codes.iter().map(|&c| c as f64 * twoeb).collect();
+    for (idx, x) in outliers {
+        *data
+            .get_mut(idx)
+            .ok_or_else(|| Error::Codec("abs: outlier index out of range".into()))? = x;
+    }
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SplitMix64;
+
+    fn max_abs_err(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn bound_holds_on_gaussian_data() {
+        let mut rng = SplitMix64::new(1);
+        let data: Vec<f64> = (0..50_000).map(|_| rng.next_gaussian()).collect();
+        for eb in [1e-1, 1e-3, 1e-6] {
+            let enc = compress(&data, eb).unwrap();
+            let dec = decompress(&enc).unwrap();
+            assert_eq!(dec.len(), data.len());
+            assert!(max_abs_err(&data, &dec) <= eb * (1.0 + 1e-12), "eb={eb}");
+        }
+    }
+
+    #[test]
+    fn zeros_reconstruct_exactly() {
+        let data = vec![0.0f64; 10_000];
+        let enc = compress(&data, 1e-3).unwrap();
+        assert!(enc.len() < 64, "all-zero plane took {} bytes", enc.len());
+        assert!(decompress(&enc).unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn outliers_roundtrip_exactly() {
+        let mut data = vec![1.0f64; 100];
+        data[3] = f64::INFINITY;
+        data[50] = f64::NEG_INFINITY;
+        data[70] = 1e300; // overflows code range at eb=1e-9
+        let enc = compress(&data, 1e-9).unwrap();
+        let dec = decompress(&enc).unwrap();
+        assert_eq!(dec[3], f64::INFINITY);
+        assert_eq!(dec[50], f64::NEG_INFINITY);
+        assert_eq!(dec[70], 1e300);
+        assert!((dec[0] - 1.0).abs() <= 1e-9);
+    }
+
+    #[test]
+    fn nan_roundtrips_via_outlier_table() {
+        let mut data = vec![0.5f64; 10];
+        data[7] = f64::NAN;
+        let dec = decompress(&compress(&data, 1e-3).unwrap()).unwrap();
+        assert!(dec[7].is_nan());
+    }
+
+    #[test]
+    fn smooth_data_compresses_hard() {
+        let data: Vec<f64> = (0..100_000).map(|i| (i as f64 * 1e-4).sin()).collect();
+        let enc = compress(&data, 1e-4).unwrap();
+        let ratio = (data.len() * 8) as f64 / enc.len() as f64;
+        assert!(ratio > 8.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn invalid_eb_rejected() {
+        assert!(compress(&[1.0], 0.0).is_err());
+        assert!(compress(&[1.0], -1.0).is_err());
+        assert!(compress(&[1.0], f64::NAN).is_err());
+    }
+
+    #[test]
+    fn empty_plane() {
+        let enc = compress(&[], 1e-3).unwrap();
+        assert_eq!(decompress(&enc).unwrap(), Vec::<f64>::new());
+    }
+}

@@ -1,0 +1,331 @@
+//! Algorithm 2 (paper §4.3): point-wise **relative** error-bounded
+//! compression — the first such mode for a GPU-era lossy codec, and the
+//! piece that makes compression safe for state-vector fidelity.
+//!
+//! Per element: sign bit → bitmap (pre-scanned, §4.3's `__ballot` analogue);
+//! magnitude → `log2` domain, where an absolute bound `b_a = log2(1 + b_r)`
+//! realizes the relative bound `b_r` (Liang et al. transformation, Eq. 1-2);
+//! log-domain values → linear-scaling quantization + shared residual coder.
+//!
+//! Deviation from the paper's literal pseudo-code, documented in DESIGN.md:
+//! exact zeros get their own (pre-scanned) bitmap instead of a reserved
+//! quantizer code. State vectors are typically zero-dominated, so this (a)
+//! reconstructs zeros exactly, (b) removes the giant sentinel jumps from
+//! the code stream, and (c) lets the all-zero-block case collapse to a few
+//! bytes — the mechanism behind cat/ghz/bv's 400-700x ratios (Fig. 9).
+//! Non-finite magnitudes use an exact-bits outlier table like the absolute
+//! codec.
+//!
+//! Guarantee (tested property): for every finite nonzero `x`,
+//! `|decompress(compress(x)) - x| / |x| <= b_r`; zeros and non-finite
+//! values round-trip exactly; signs are always preserved.
+
+use super::lossless::{bitmap, varint};
+use super::{residual, MODE_POINTWISE};
+use crate::types::{Error, Result};
+
+/// Guard for the quantized log-magnitude (|log2(x)| <= 1100 for f64, so
+/// codes stay well inside i64 for any sane `b_r`).
+const MAX_CODE: f64 = 4.0e15;
+
+pub fn compress(data: &[f64], b_r: f64, prescan: bool) -> Result<Vec<u8>> {
+    if !(b_r > 0.0) || !b_r.is_finite() {
+        return Err(Error::Codec(format!("pointwise codec needs b_r > 0, got {b_r}")));
+    }
+    // b_a = log2(1 + b_r): the absolute bound in log2 space (Eq. 2).
+    let b_a = (1.0 + b_r).log2();
+    let inv_twoba = 1.0 / (2.0 * b_a);
+
+    let n = data.len();
+    let (sign_words, _) = bitmap::pack_bits(data.iter().map(|&x| x.is_sign_negative() && x != 0.0));
+    let (zero_words, _) = bitmap::pack_bits(data.iter().map(|&x| x == 0.0));
+
+    // Quantize nonzero magnitudes in log2 space.
+    let mut codes = Vec::with_capacity(n);
+    let mut outliers: Vec<(usize, f64)> = Vec::new();
+    for (i, &x) in data.iter().enumerate() {
+        if x == 0.0 {
+            continue; // carried by the zero bitmap
+        }
+        if !x.is_finite() {
+            outliers.push((i, x));
+            codes.push(0);
+            continue;
+        }
+        let q = x.abs().log2() * inv_twoba;
+        if q.abs() > MAX_CODE {
+            outliers.push((i, x));
+            codes.push(0);
+        } else {
+            // round-half-away-from-zero without the libm round() call
+            // (perf §Perf): as-cast truncates toward zero, so adding a
+            // signed 0.5 first reproduces f64::round exactly for |q| within
+            // MAX_CODE.
+            codes.push((q + 0.5f64.copysign(q)) as i64);
+        }
+    }
+
+    let sign_bytes = bitmap::compress_bitmap(&sign_words, n, prescan);
+    let zero_bytes = bitmap::compress_bitmap(&zero_words, n, prescan);
+    let body = residual::encode(&codes);
+
+    let mut out =
+        Vec::with_capacity(body.len() + sign_bytes.len() + zero_bytes.len() + outliers.len() * 10 + 32);
+    out.push(MODE_POINTWISE);
+    out.extend_from_slice(&b_r.to_le_bytes());
+    varint::write_u64(&mut out, n as u64);
+    varint::write_u64(&mut out, sign_bytes.len() as u64);
+    out.extend_from_slice(&sign_bytes);
+    varint::write_u64(&mut out, zero_bytes.len() as u64);
+    out.extend_from_slice(&zero_bytes);
+    varint::write_u64(&mut out, outliers.len() as u64);
+    let mut prev = 0usize;
+    for &(idx, x) in &outliers {
+        varint::write_u64(&mut out, (idx - prev) as u64);
+        out.extend_from_slice(&x.to_le_bytes());
+        prev = idx;
+    }
+    out.extend_from_slice(&body);
+    Ok(out)
+}
+
+pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
+    if bytes.first() != Some(&MODE_POINTWISE) {
+        return Err(Error::Codec("not a pointwise-mode payload".into()));
+    }
+    let mut pos = 1usize;
+    if bytes.len() < pos + 8 {
+        return Err(Error::Codec("pointwise: truncated header".into()));
+    }
+    let b_r = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+    pos += 8;
+    let n = varint::read_u64(bytes, &mut pos)? as usize;
+
+    let sign_len = varint::read_u64(bytes, &mut pos)? as usize;
+    let (sign_words, sign_bits) = bitmap::decompress_bitmap(
+        bytes
+            .get(pos..pos + sign_len)
+            .ok_or_else(|| Error::Codec("pointwise: truncated sign bitmap".into()))?,
+    )?;
+    pos += sign_len;
+    let zero_len = varint::read_u64(bytes, &mut pos)? as usize;
+    let (zero_words, zero_bits) = bitmap::decompress_bitmap(
+        bytes
+            .get(pos..pos + zero_len)
+            .ok_or_else(|| Error::Codec("pointwise: truncated zero bitmap".into()))?,
+    )?;
+    pos += zero_len;
+    if sign_bits != n || zero_bits != n {
+        return Err(Error::Codec("pointwise: bitmap length mismatch".into()));
+    }
+
+    let n_out = varint::read_u64(bytes, &mut pos)? as usize;
+    let mut outliers = Vec::with_capacity(n_out);
+    let mut prev = 0usize;
+    for _ in 0..n_out {
+        let d = varint::read_u64(bytes, &mut pos)? as usize;
+        if bytes.len() < pos + 8 {
+            return Err(Error::Codec("pointwise: truncated outlier".into()));
+        }
+        let x = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        prev += d;
+        outliers.push((prev, x));
+    }
+
+    let codes = residual::decode(&bytes[pos..])?;
+    let b_a = (1.0 + b_r).log2();
+    let twoba = 2.0 * b_a;
+
+    let mut data = vec![0.0f64; n];
+    let mut ci = 0usize;
+    // Perf (§Perf): word-level bitmap walk + last-code memo. Quantum
+    // amplitudes repeat magnitudes heavily (uniform superpositions,
+    // symmetric states), so consecutive equal codes skip the exp2 call;
+    // all-zero bitmap words skip the per-bit test entirely.
+    let mut last_code = i64::MIN;
+    let mut last_mag = 0.0f64;
+    for (w, &zword) in zero_words.iter().enumerate() {
+        let sword = sign_words[w];
+        let base = w * 64;
+        let end = (base + 64).min(n);
+        if zword == 0 {
+            for (i, slot) in data[base..end].iter_mut().enumerate() {
+                let code = *codes
+                    .get(ci)
+                    .ok_or_else(|| Error::Codec("pointwise: code stream short".into()))?;
+                ci += 1;
+                if code != last_code {
+                    last_code = code;
+                    last_mag = (code as f64 * twoba).exp2();
+                }
+                *slot = if sword & (1 << i) != 0 { -last_mag } else { last_mag };
+            }
+        } else {
+            for (i, slot) in data[base..end].iter_mut().enumerate() {
+                if zword & (1 << i) != 0 {
+                    continue; // exact zero
+                }
+                let code = *codes
+                    .get(ci)
+                    .ok_or_else(|| Error::Codec("pointwise: code stream short".into()))?;
+                ci += 1;
+                if code != last_code {
+                    last_code = code;
+                    last_mag = (code as f64 * twoba).exp2();
+                }
+                *slot = if sword & (1 << i) != 0 { -last_mag } else { last_mag };
+            }
+        }
+    }
+    if ci != codes.len() {
+        return Err(Error::Codec("pointwise: code stream long".into()));
+    }
+    for (idx, x) in outliers {
+        // Outlier slots were quantized as code 0; restore exact bits (the
+        // sign bitmap already matches x's sign, but exact bits win).
+        *data
+            .get_mut(idx)
+            .ok_or_else(|| Error::Codec("pointwise: outlier index out of range".into()))? = x;
+    }
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SplitMix64;
+
+    fn check_bound(data: &[f64], b_r: f64, prescan: bool) -> usize {
+        let enc = compress(data, b_r, prescan).unwrap();
+        let dec = decompress(&enc).unwrap();
+        assert_eq!(dec.len(), data.len());
+        for (i, (&x, &y)) in data.iter().zip(&dec).enumerate() {
+            if x == 0.0 {
+                assert_eq!(y, 0.0, "zero at {i} not exact");
+            } else if !x.is_finite() {
+                assert!(x.to_bits() == y.to_bits(), "non-finite at {i}");
+            } else {
+                let rel = (y - x).abs() / x.abs();
+                assert!(rel <= b_r * (1.0 + 1e-9), "idx {i}: rel {rel} > {b_r}");
+                assert_eq!(x < 0.0, y < 0.0, "sign flip at {i}");
+            }
+        }
+        enc.len()
+    }
+
+    #[test]
+    fn bound_holds_across_magnitudes() {
+        let mut rng = SplitMix64::new(1);
+        // Amplitude-like data spanning 60 decades + salted zeros.
+        let data: Vec<f64> = (0..30_000)
+            .map(|i| {
+                if i % 11 == 0 {
+                    0.0
+                } else {
+                    let mag = 10f64.powf(rng.next_f64() * 60.0 - 45.0);
+                    if rng.next_f64() < 0.5 {
+                        -mag
+                    } else {
+                        mag
+                    }
+                }
+            })
+            .collect();
+        for b_r in [1e-2, 1e-3, 1e-4] {
+            check_bound(&data, b_r, true);
+            check_bound(&data, b_r, false);
+        }
+    }
+
+    #[test]
+    fn all_zero_plane_is_tiny() {
+        let data = vec![0.0f64; 1 << 16];
+        let len = check_bound(&data, 1e-3, true);
+        assert!(len < 64, "all-zero plane took {len} bytes");
+    }
+
+    #[test]
+    fn sparse_plane_compresses_like_paper_sparse_circuits() {
+        // cat/ghz/bv-like: two nonzeros in a sea of zeros -> huge ratio.
+        let mut data = vec![0.0f64; 1 << 16];
+        data[0] = std::f64::consts::FRAC_1_SQRT_2;
+        data[(1 << 16) - 1] = -std::f64::consts::FRAC_1_SQRT_2;
+        let len = check_bound(&data, 1e-3, true);
+        let ratio = (data.len() * 8) as f64 / len as f64;
+        assert!(ratio > 400.0, "sparse ratio {ratio}");
+    }
+
+    #[test]
+    fn uniform_superposition_plane() {
+        // qft-like: all amplitudes equal magnitude -> constant codes,
+        // should compress extremely well too.
+        let n = 1 << 14;
+        let v = (1.0 / n as f64).sqrt();
+        let data = vec![v; n];
+        let len = check_bound(&data, 1e-3, true);
+        assert!(len < 200, "uniform plane took {len} bytes");
+    }
+
+    #[test]
+    fn dense_random_plane_bound_and_ratio() {
+        let mut rng = SplitMix64::new(2);
+        let data: Vec<f64> = (0..1 << 14).map(|_| rng.next_gaussian() * 1e-2).collect();
+        let len = check_bound(&data, 1e-3, true);
+        let ratio = (data.len() * 8) as f64 / len as f64;
+        // Random data in log domain still beats raw f64 (≈2.4-4x typical).
+        assert!(ratio > 1.8, "dense ratio {ratio}");
+    }
+
+    #[test]
+    fn negative_zero_treated_as_zero() {
+        let data = vec![-0.0f64, 0.0, 1.0];
+        let dec = decompress(&compress(&data, 1e-3, true).unwrap()).unwrap();
+        assert_eq!(dec[0], 0.0);
+        assert_eq!(dec[1], 0.0);
+    }
+
+    #[test]
+    fn subnormals_respect_bound() {
+        let data = vec![f64::MIN_POSITIVE / 8.0, -f64::MIN_POSITIVE / 1024.0, 1e-300];
+        check_bound(&data, 1e-3, true);
+    }
+
+    #[test]
+    fn nonfinite_values_roundtrip() {
+        let data = vec![1.0, f64::INFINITY, -1.0, f64::NEG_INFINITY, 0.5];
+        check_bound(&data, 1e-3, true);
+    }
+
+    #[test]
+    fn invalid_bound_rejected() {
+        assert!(compress(&[1.0], 0.0, true).is_err());
+        assert!(compress(&[1.0], -0.5, true).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let data: Vec<f64> = (0..100).map(|i| i as f64 - 50.0).collect();
+        let enc = compress(&data, 1e-3, true).unwrap();
+        for cut in [1usize, 5, 20] {
+            if cut < enc.len() {
+                assert!(decompress(&enc[..enc.len() - cut]).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent_after_first_roundtrip() {
+        // Re-compressing a reconstruction must be lossless from then on —
+        // the property that stops stage-to-stage error accumulation once a
+        // block stops being updated.
+        let mut rng = SplitMix64::new(3);
+        let data: Vec<f64> = (0..5000).map(|_| rng.next_gaussian()).collect();
+        let r1 = decompress(&compress(&data, 1e-3, true).unwrap()).unwrap();
+        let r2 = decompress(&compress(&r1, 1e-3, true).unwrap()).unwrap();
+        for (a, b) in r1.iter().zip(&r2) {
+            let rel = ((a - b) / a.max(1e-300)).abs();
+            assert!(rel < 1e-12, "{a} vs {b}");
+        }
+    }
+}

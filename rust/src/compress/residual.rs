@@ -1,0 +1,151 @@
+//! Shared residual coder for quantized integer code streams.
+//!
+//! Pipeline: 1-D Lorenzo prediction (`delta_i = code_i - code_{i-1}`) →
+//! zig-zag → LEB128 varints with a zero-run escape (token 0 + run length;
+//! long constant stretches — e.g. the all-zero tails of sparse state
+//! vectors — collapse to a few bytes) → optional canonical-Huffman pass,
+//! kept only when it shrinks the stream.
+
+use super::lossless::{huffman, varint};
+use crate::types::{Error, Result};
+
+const FLAG_HUFFMAN: u8 = 1;
+
+/// Encode a code stream. Deterministic; `decode` is its exact inverse.
+pub fn encode(codes: &[i64]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(codes.len());
+    let mut prev = 0i64;
+    let mut i = 0usize;
+    while i < codes.len() {
+        let delta = codes[i].wrapping_sub(prev);
+        prev = codes[i];
+        if delta == 0 {
+            // Count the zero-delta run (constant stretch).
+            let mut run = 1usize;
+            while i + run < codes.len() && codes[i + run] == prev {
+                run += 1;
+            }
+            varint::write_u64(&mut body, 0);
+            varint::write_u64(&mut body, run as u64);
+            i += run;
+        } else {
+            // zigzag(delta) == 0 iff delta == 0, which the run branch owns,
+            // so nonzero deltas never collide with the run marker 0.
+            varint::write_u64(&mut body, varint::zigzag(delta));
+            i += 1;
+        }
+    }
+
+    let huffed = huffman::encode(&body);
+    let mut out = Vec::with_capacity(body.len().min(huffed.len()) + 10);
+    varint::write_u64(&mut out, codes.len() as u64);
+    if huffed.len() < body.len() {
+        out.push(FLAG_HUFFMAN);
+        out.extend_from_slice(&huffed);
+    } else {
+        out.push(0);
+        out.extend_from_slice(&body);
+    }
+    out
+}
+
+/// Decode a stream produced by [`encode`].
+pub fn decode(bytes: &[u8]) -> Result<Vec<i64>> {
+    let mut pos = 0usize;
+    let n = varint::read_u64(bytes, &mut pos)? as usize;
+    let flags = *bytes
+        .get(pos)
+        .ok_or_else(|| Error::Codec("residual: missing flags".into()))?;
+    pos += 1;
+    let owned;
+    let body: &[u8] = if flags & FLAG_HUFFMAN != 0 {
+        owned = huffman::decode(&bytes[pos..])?;
+        &owned
+    } else {
+        &bytes[pos..]
+    };
+
+    let mut codes = Vec::with_capacity(n);
+    let mut prev = 0i64;
+    let mut bpos = 0usize;
+    while codes.len() < n {
+        let tok = varint::read_u64(body, &mut bpos)?;
+        if tok == 0 {
+            let run = varint::read_u64(body, &mut bpos)? as usize;
+            if run == 0 || codes.len() + run > n {
+                return Err(Error::Codec("residual: bad zero run".into()));
+            }
+            codes.extend(std::iter::repeat(prev).take(run));
+        } else {
+            prev = prev.wrapping_add(varint::unzigzag(tok));
+            codes.push(prev);
+        }
+    }
+    Ok(codes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SplitMix64;
+
+    fn roundtrip(codes: &[i64]) -> usize {
+        let enc = encode(codes);
+        assert_eq!(decode(&enc).unwrap(), codes);
+        enc.len()
+    }
+
+    #[test]
+    fn roundtrip_edges() {
+        roundtrip(&[]);
+        roundtrip(&[0]);
+        roundtrip(&[i64::MAX, i64::MIN, 0, -1, 1]);
+        roundtrip(&vec![42; 10_000]);
+    }
+
+    #[test]
+    fn constant_stream_is_tiny() {
+        let len = roundtrip(&vec![7i64; 100_000]);
+        assert!(len < 32, "constant stream took {len} bytes");
+    }
+
+    #[test]
+    fn smooth_stream_compresses() {
+        // Slowly varying codes (what Lorenzo is for).
+        let mut rng = SplitMix64::new(1);
+        let mut codes = Vec::with_capacity(50_000);
+        let mut v = 1000i64;
+        for _ in 0..50_000 {
+            v += (rng.next_u64() % 5) as i64 - 2;
+            codes.push(v);
+        }
+        let len = roundtrip(&codes);
+        assert!(len < 50_000, "smooth stream {len} bytes for 400KB raw");
+    }
+
+    #[test]
+    fn random_stream_roundtrips() {
+        let mut rng = SplitMix64::new(2);
+        let codes: Vec<i64> = (0..20_000).map(|_| rng.next_u64() as i64).collect();
+        roundtrip(&codes);
+    }
+
+    #[test]
+    fn alternating_runs() {
+        let mut codes = Vec::new();
+        for block in 0..100 {
+            codes.extend(std::iter::repeat(block as i64 * 3).take(97));
+        }
+        let len = roundtrip(&codes);
+        assert!(len < 1200, "run-structured stream {len} bytes");
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let enc = encode(&[1, 2, 3, 4, 5]);
+        for cut in 1..enc.len().min(4) {
+            let r = decode(&enc[..enc.len() - cut]);
+            assert!(r.is_err() || r.unwrap() != vec![1, 2, 3, 4, 5]);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Terminal measurement: basis-state sampling and marginal statistics.
+//!
+//! Like the paper's simulators (SV-Sim et al.), measurement is performed
+//! once at the end of the circuit from the final state vector (or its
+//! decompressed blocks), not mid-circuit.
+
+use crate::state::StateVector;
+use crate::types::SplitMix64;
+use std::collections::BTreeMap;
+
+/// Draw `shots` basis-state samples from the state's probability
+/// distribution; returns a `basis index -> count` histogram.
+pub fn sample_counts(state: &StateVector, shots: usize, rng: &mut SplitMix64) -> BTreeMap<usize, usize> {
+    // Inverse-CDF sampling over sorted uniform draws: one O(N + shots) pass
+    // instead of shots binary searches.
+    let mut draws: Vec<f64> = (0..shots).map(|_| rng.next_f64()).collect();
+    draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut counts = BTreeMap::new();
+    let mut acc = 0.0f64;
+    let mut d = 0usize;
+    for i in 0..state.len() {
+        acc += state.probability(i);
+        while d < draws.len() && draws[d] < acc {
+            *counts.entry(i).or_insert(0) += 1;
+            d += 1;
+        }
+        if d == draws.len() {
+            break;
+        }
+    }
+    // Numerical tail: any residual draws (norm slightly < 1) hit the last state.
+    if d < draws.len() {
+        *counts.entry(state.len() - 1).or_insert(0) += draws.len() - d;
+    }
+    counts
+}
+
+/// Per-qubit marginal P(q = 1) vector.
+pub fn marginals(state: &StateVector) -> Vec<f64> {
+    let n = state.n_qubits;
+    let mut p = vec![0.0f64; n];
+    for i in 0..state.len() {
+        let prob = state.probability(i);
+        if prob == 0.0 {
+            continue;
+        }
+        let mut bits = i;
+        while bits != 0 {
+            let q = bits.trailing_zeros() as usize;
+            p[q] += prob;
+            bits &= bits - 1;
+        }
+    }
+    p
+}
+
+/// Expectation of Z on qubit `q`: `P(0) - P(1)`.
+pub fn expect_z(state: &StateVector, q: usize) -> f64 {
+    1.0 - 2.0 * state.prob_qubit_one(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::{Gate, GateKind};
+    use crate::gates::apply_gate;
+
+    #[test]
+    fn sampling_zero_state_always_zero() {
+        let s = StateVector::zero_state(4).unwrap();
+        let mut rng = SplitMix64::new(1);
+        let counts = sample_counts(&s, 1000, &mut rng);
+        assert_eq!(counts.len(), 1);
+        assert_eq!(counts[&0], 1000);
+    }
+
+    #[test]
+    fn sampling_uniform_superposition_is_roughly_flat() {
+        let mut s = StateVector::zero_state(3).unwrap();
+        for q in 0..3 {
+            apply_gate(&mut s.re, &mut s.im, &Gate::q1(GateKind::H, q).unwrap());
+        }
+        let mut rng = SplitMix64::new(2);
+        let shots = 80_000;
+        let counts = sample_counts(&s, shots, &mut rng);
+        assert_eq!(counts.len(), 8);
+        for (_, &c) in &counts {
+            let f = c as f64 / shots as f64;
+            assert!((f - 0.125).abs() < 0.01, "freq {f}");
+        }
+    }
+
+    #[test]
+    fn sample_total_equals_shots() {
+        let mut s = StateVector::zero_state(5).unwrap();
+        apply_gate(&mut s.re, &mut s.im, &Gate::q1(GateKind::H, 2).unwrap());
+        let mut rng = SplitMix64::new(3);
+        let counts = sample_counts(&s, 12345, &mut rng);
+        let total: usize = counts.values().sum();
+        assert_eq!(total, 12345);
+    }
+
+    #[test]
+    fn marginals_of_bell_state() {
+        let mut s = StateVector::zero_state(2).unwrap();
+        apply_gate(&mut s.re, &mut s.im, &Gate::q1(GateKind::H, 0).unwrap());
+        apply_gate(&mut s.re, &mut s.im, &Gate::q2(GateKind::Cx, 0, 1).unwrap());
+        let m = marginals(&s);
+        assert!((m[0] - 0.5).abs() < 1e-12);
+        assert!((m[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expect_z_signs() {
+        let s = StateVector::zero_state(2).unwrap();
+        assert!((expect_z(&s, 0) - 1.0).abs() < 1e-15);
+        let mut s1 = s.clone();
+        apply_gate(&mut s1.re, &mut s1.im, &Gate::q1(GateKind::X, 1).unwrap());
+        assert!((expect_z(&s1, 1) + 1.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,109 @@
+//! Native gate-application kernels over split re/im amplitude planes.
+//!
+//! These operate on any power-of-two buffer: the full dense state (dense
+//! engine) or a gathered SV-group buffer (compressed engines), with target
+//! qubits already remapped to buffer bit positions.
+//!
+//! Layout conventions match §2.1 of the paper: applying a 1q gate on qubit
+//! `t` multiplies the 2x2 unitary into every amplitude pair whose indices
+//! differ only in bit `t`; a 2q gate on `(q, t)` multiplies the 4x4 unitary
+//! into quads in basis order `|q t> = 00,01,10,11` (q the high bit).
+//!
+//! Diagonal gates use an element-wise fast path (no pair addressing), the
+//! same specialization the L1 Pallas kernel set exposes (`diag1q/diag2q`).
+
+pub mod apply;
+pub mod measure;
+
+pub use apply::{apply_gate, apply_gate_remapped};
+
+use crate::types::Complex;
+
+/// Iterate amplitude-pair base indices for target bit `t` in a buffer of
+/// `len` amplitudes: yields `i0` with bit `t` clear; the partner is
+/// `i0 | (1 << t)`.
+#[inline]
+pub fn pair_indices(len: usize, t: usize) -> impl Iterator<Item = usize> {
+    let bit = 1usize << t;
+    let low_mask = bit - 1;
+    (0..len / 2).map(move |k| {
+        let lo = k & low_mask;
+        let hi = (k & !low_mask) << 1;
+        hi | lo
+    })
+}
+
+/// Iterate quad base indices for target bits `q > t` (as buffer positions):
+/// yields `i00` with both bits clear.
+#[inline]
+pub fn quad_indices(len: usize, hi_bit: usize, lo_bit: usize) -> impl Iterator<Item = usize> {
+    debug_assert!(hi_bit > lo_bit);
+    let b_lo = 1usize << lo_bit;
+    let b_hi = 1usize << hi_bit;
+    let m_lo = b_lo - 1;
+    // mask of bits strictly between lo_bit and hi_bit (after low removal)
+    let m_mid = (b_hi >> 1) - b_lo;
+    (0..len / 4).map(move |k| {
+        let lo = k & m_lo;
+        let mid = (k & m_mid) << 1;
+        let hi = (k & !(m_lo | m_mid)) << 2;
+        hi | mid | lo
+    })
+}
+
+/// 2x2 complex mat-vec on a single amplitude pair, written to fuse well.
+#[inline(always)]
+pub fn mul_1q(
+    m: &[Complex; 4],
+    re: &mut [f64],
+    im: &mut [f64],
+    i0: usize,
+    i1: usize,
+) {
+    let (r0, i0v) = (re[i0], im[i0]);
+    let (r1, i1v) = (re[i1], im[i1]);
+    re[i0] = m[0].re * r0 - m[0].im * i0v + m[1].re * r1 - m[1].im * i1v;
+    im[i0] = m[0].re * i0v + m[0].im * r0 + m[1].re * i1v + m[1].im * r1;
+    re[i1] = m[2].re * r0 - m[2].im * i0v + m[3].re * r1 - m[3].im * i1v;
+    im[i1] = m[2].re * i0v + m[2].im * r0 + m[3].re * i1v + m[3].im * r1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_indices_cover_all_pairs() {
+        for t in 0..4 {
+            let len = 16;
+            let bit = 1usize << t;
+            let mut seen = vec![false; len];
+            for i0 in pair_indices(len, t) {
+                assert_eq!(i0 & bit, 0);
+                assert!(!seen[i0] && !seen[i0 | bit]);
+                seen[i0] = true;
+                seen[i0 | bit] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "t={t}");
+        }
+    }
+
+    #[test]
+    fn quad_indices_cover_all_quads() {
+        let len = 32;
+        for hi in 1..5 {
+            for lo in 0..hi {
+                let (bh, bl) = (1usize << hi, 1usize << lo);
+                let mut seen = vec![false; len];
+                for i in quad_indices(len, hi, lo) {
+                    assert_eq!(i & (bh | bl), 0);
+                    for idx in [i, i | bl, i | bh, i | bh | bl] {
+                        assert!(!seen[idx], "hi={hi} lo={lo} idx={idx}");
+                        seen[idx] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "hi={hi} lo={lo}");
+            }
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! # BMQSIM-RS
+//!
+//! A full-state (state-vector) quantum circuit simulation framework that
+//! breaks the memory wall with error-bounded lossy compression — a rust +
+//! JAX/Pallas (AOT via PJRT) reproduction of *"Overcoming Memory
+//! Constraints in Quantum Circuit Simulation with a High-Fidelity
+//! Compression Framework"* (BMQSIM, 2024).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured reproduction log.
+
+pub mod bench_harness;
+pub mod circuit;
+pub mod compress;
+pub mod gates;
+pub mod memory;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod sim;
+pub mod state;
+pub mod types;

@@ -1,0 +1,355 @@
+//! BMQSIM command-line interface (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   run        simulate a benchmark circuit or a .qasm file
+//!   partition  show the Algorithm-1 stage decomposition of a circuit
+//!   compare    run an engine against the dense ideal and report fidelity
+//!   sample     draw measurement shots from the final state
+//!   report     regenerate the paper's tables/figures (same harness as
+//!              `cargo bench`, at CLI-chosen scale)
+//!
+//! Args are parsed by hand (the build environment vendors no clap; see
+//! DESIGN.md substitutions). `bmqsim help` prints the full usage.
+
+use bmqsim::bench_harness as bench;
+use bmqsim::circuit::{generators, partition_circuit, qasm, Circuit};
+use bmqsim::compress::Codec;
+use bmqsim::gates::measure;
+use bmqsim::pipeline::PipelineConfig;
+use bmqsim::runtime::XlaApplier;
+use bmqsim::sim::{Backend, BmqSim, DenseSim, Sc19Sim, SimConfig, SimResult};
+use bmqsim::types::{fmt_bytes, standard_memory_bytes, Precision, SplitMix64};
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+const USAGE: &str = r#"bmqsim — memory-constrained state-vector quantum simulation
+
+USAGE:
+  bmqsim run       --algo <name>|--qasm <file> --qubits <n> [options]
+  bmqsim partition --algo <name>|--qasm <file> --qubits <n> [--block-qubits B] [--inner-size I]
+  bmqsim compare   --algo <name> --qubits <n> [options]
+  bmqsim sample    --algo <name> --qubits <n> --shots <k> [options]
+  bmqsim report    [--scale small|full]
+  bmqsim help
+
+OPTIONS (run/compare/sample):
+  --engine <bmqsim|dense|sc19-cpu|sc19-gpu>   engine to run        [bmqsim]
+  --backend <native|xla>                      gate kernels         [native]
+  --block-qubits <B>    log2 SV block length                       [14]
+  --inner-size <I>      Algorithm-1 inner threshold                [2]
+  --error-bound <e>     point-wise relative bound                  [1e-3]
+  --no-compress         disable compression (raw blocks)
+  --no-prescan          disable the sign-bitmap pre-scan
+  --streams <S>         pipeline streams per device                [2]
+  --devices <D>         logical devices                            [1]
+  --memory-budget <MB>  primary-tier budget in MiB (enables probing)
+  --spill-dir <path>    secondary-tier directory (enables spilling)
+  --artifacts <dir>     AOT artifact directory                     [artifacts]
+  --seed <s>            circuit/sampling seed                      [42]
+
+BENCHMARK ALGORITHMS: cat_state cc ising qft bv qsvm ghz_state qaoa
+"#;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run_cli(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run_cli(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let opts = Opts::parse(&args[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&opts),
+        "partition" => cmd_partition(&opts),
+        "compare" => cmd_compare(&opts),
+        "sample" => cmd_sample(&opts),
+        "report" => cmd_report(&opts),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}; try `bmqsim help`")),
+    }
+}
+
+/// Hand-rolled `--key value` / `--flag` option bag.
+struct Opts {
+    map: HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<Self, String> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if !a.starts_with("--") {
+                return Err(format!("unexpected argument {a:?}"));
+            }
+            let key = a.trim_start_matches("--").to_string();
+            let flag = matches!(key.as_str(), "no-compress" | "no-prescan");
+            if flag {
+                map.insert(key, "true".into());
+                i += 1;
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| format!("missing value for --{key}"))?;
+                map.insert(key, v.clone());
+                i += 2;
+            }
+        }
+        Ok(Opts { map })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("bad value for --{key}: {v:?}")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+fn load_circuit(opts: &Opts) -> Result<Circuit, String> {
+    let seed: u64 = opts.parse_num("seed", 42u64)?;
+    if let Some(path) = opts.get("qasm") {
+        return qasm::parse_file(std::path::Path::new(path)).map_err(|e| e.to_string());
+    }
+    let algo = opts.get("algo").ok_or("need --algo <name> or --qasm <file>")?;
+    let n: usize = opts.parse_num("qubits", 0usize)?;
+    if n == 0 {
+        return Err("need --qubits <n>".into());
+    }
+    generators::build(algo, n, seed).map_err(|e| e.to_string())
+}
+
+fn build_config(opts: &Opts) -> Result<SimConfig, String> {
+    let mut cfg = SimConfig {
+        block_qubits: opts.parse_num("block-qubits", 14usize)?,
+        inner_size: opts.parse_num("inner-size", 2usize)?,
+        ..SimConfig::default()
+    };
+    let eb: f64 = opts.parse_num("error-bound", 1e-3f64)?;
+    cfg.codec = if opts.flag("no-compress") {
+        Codec::raw()
+    } else {
+        let mut c = Codec::pointwise(eb);
+        c.prescan = !opts.flag("no-prescan");
+        c
+    };
+    cfg.pipeline = PipelineConfig::new(
+        opts.parse_num("devices", 1usize)?,
+        opts.parse_num("streams", 2usize)?,
+    );
+    if let Some(mb) = opts.get("memory-budget") {
+        let mb: usize = mb.parse().map_err(|_| "bad --memory-budget")?;
+        cfg.memory_budget = Some(mb * (1 << 20));
+    }
+    if let Some(dir) = opts.get("spill-dir") {
+        cfg.spill_dir = Some(dir.into());
+    }
+    if let Some(dir) = opts.get("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    }
+    cfg.backend = opts
+        .get("backend")
+        .unwrap_or("native")
+        .parse::<Backend>()
+        .map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+/// Run the chosen engine, routing through the XLA applier when requested.
+fn run_engine(
+    opts: &Opts,
+    circuit: &Circuit,
+    cfg: &SimConfig,
+    materialize: bool,
+) -> Result<SimResult, String> {
+    let engine = opts.get("engine").unwrap_or("bmqsim");
+    let xla = match cfg.backend {
+        Backend::Xla => {
+            Some(XlaApplier::new(cfg.artifacts_dir.clone()).map_err(|e| e.to_string())?)
+        }
+        Backend::Native => None,
+    };
+    let r = match (engine, &xla) {
+        ("bmqsim", None) => BmqSim::new(cfg.clone()).run(circuit, materialize),
+        ("bmqsim", Some(x)) => BmqSim::with_applier(cfg.clone(), x).run(circuit, materialize),
+        ("dense", None) => DenseSim::new(cfg.clone()).run(circuit),
+        ("dense", Some(x)) => DenseSim::with_applier(cfg.clone(), x).run(circuit),
+        ("sc19-cpu", None) => Sc19Sim::new(cfg.clone(), 1).run(circuit, materialize),
+        ("sc19-gpu", None) => Sc19Sim::new(cfg.clone(), 4).run(circuit, materialize),
+        (e, Some(_)) => return Err(format!("engine {e:?} has no xla backend")),
+        (e, None) => return Err(format!("unknown engine {e:?}")),
+    };
+    r.map_err(|e| e.to_string())
+}
+
+fn cmd_run(opts: &Opts) -> Result<(), String> {
+    let circuit = load_circuit(opts)?;
+    let cfg = build_config(opts)?;
+    println!(
+        "running {} ({} qubits, {} gates) on engine={} backend={:?}",
+        circuit.name,
+        circuit.n_qubits,
+        circuit.len(),
+        opts.get("engine").unwrap_or("bmqsim"),
+        cfg.backend,
+    );
+    let r = run_engine(opts, &circuit, &cfg, false)?;
+    println!("\n{}", r.metrics);
+    println!("stages           : {:>10}", r.stages);
+    println!(
+        "standard memory  : {:>10}",
+        fmt_bytes(standard_memory_bytes(circuit.n_qubits, Precision::F64))
+    );
+    println!("peak compressed  : {:>10}", fmt_bytes(r.peak_bytes as u128));
+    if r.mem.spill_events > 0 {
+        println!(
+            "spill events     : {:>10}  ({:.0}% of blocks on secondary tier)",
+            r.mem.spill_events,
+            100.0 * r.mem.secondary_fraction()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_partition(opts: &Opts) -> Result<(), String> {
+    let circuit = load_circuit(opts)?;
+    let b: usize = opts.parse_num("block-qubits", 14usize)?;
+    let inner: usize = opts.parse_num("inner-size", 2usize)?;
+    let b = b.min(circuit.n_qubits);
+    let plan = partition_circuit(&circuit, b, inner).map_err(|e| e.to_string())?;
+    println!(
+        "{}: {} gates -> {} stages (block_qubits={b}, inner_size={}, {} blocks)",
+        circuit.name,
+        circuit.len(),
+        plan.stages.len(),
+        plan.inner_size,
+        plan.total_blocks(),
+    );
+    for (i, s) in plan.stages.iter().enumerate() {
+        println!(
+            "  stage {i:>3}: {:>4} gates, inner globals {:?} -> {} groups x {} blocks",
+            s.gates.len(),
+            s.inner,
+            plan.groups_in_stage(s),
+            s.group_blocks(),
+        );
+    }
+    println!(
+        "\ncompression rounds: {} (vs {} per-gate)",
+        plan.compression_rounds(),
+        circuit.len()
+    );
+    Ok(())
+}
+
+fn cmd_compare(opts: &Opts) -> Result<(), String> {
+    let circuit = load_circuit(opts)?;
+    let cfg = build_config(opts)?;
+    let ideal = DenseSim::new(SimConfig::default())
+        .run(&circuit)
+        .map_err(|e| e.to_string())?
+        .state
+        .unwrap();
+    let r = run_engine(opts, &circuit, &cfg, true)?;
+    let st = r.state.as_ref().ok_or("engine did not materialize state")?;
+    println!("engine           : {}", r.engine);
+    println!("fidelity         : {:.9} (paper metric |<ideal|sim>|)", st.fidelity(&ideal));
+    println!("fidelity (norm.) : {:.9}", st.fidelity_normalized(&ideal));
+    println!("wall time        : {:.3} s", r.wall_secs);
+    println!("compression ratio: {:.2}x", r.metrics.compression_ratio());
+    Ok(())
+}
+
+fn cmd_sample(opts: &Opts) -> Result<(), String> {
+    let circuit = load_circuit(opts)?;
+    let cfg = build_config(opts)?;
+    let shots: usize = opts.parse_num("shots", 1024usize)?;
+    let seed: u64 = opts.parse_num("seed", 42u64)?;
+    let r = run_engine(opts, &circuit, &cfg, true)?;
+    let st = r.state.as_ref().ok_or("engine did not materialize state")?;
+    let mut rng = SplitMix64::new(seed ^ 0x5A11);
+    let counts = measure::sample_counts(st, shots, &mut rng);
+    println!("top outcomes of {shots} shots:");
+    let mut rows: Vec<(usize, usize)> = counts.into_iter().collect();
+    rows.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+    for (idx, count) in rows.into_iter().take(16) {
+        println!(
+            "  |{idx:0w$b}> : {count:>7}  ({:.2}%)",
+            100.0 * count as f64 / shots as f64,
+            w = circuit.n_qubits
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(opts: &Opts) -> Result<(), String> {
+    let scale = opts.get("scale").unwrap_or("small");
+    let (ns, n_mid, budget) = match scale {
+        "small" => (vec![12usize, 14], 14usize, 1usize << 22),
+        "full" => (vec![16usize, 18, 20], 20usize, 1usize << 26),
+        other => return Err(format!("unknown --scale {other:?}")),
+    };
+    let algos: Vec<&str> = generators::ALL.to_vec();
+    let short: Vec<&str> = vec!["qft", "qaoa", "ising", "ghz_state"];
+
+    bench::print_experiment("Table 2: max qubits under memory budget", || {
+        Ok(vec![bench::table2_max_qubits(budget, n_mid + 6)?])
+    });
+    bench::print_experiment("Fig 7: SC19-Sim vs BMQSIM time", || {
+        Ok(vec![bench::fig07_sc19_compare(&short, &ns[..1])?])
+    });
+    bench::print_experiment("Fig 8: fidelity", || {
+        Ok(vec![bench::fig08_fidelity(&short, &ns[..1])?])
+    });
+    bench::print_experiment("Fig 9: memory consumption (+ §5.4 spill)", || {
+        let (a, b) = bench::fig09_memory(&algos, &ns, budget / 64)?;
+        Ok(vec![a, b])
+    });
+    bench::print_experiment("Fig 10: simulation time vs dense", || {
+        Ok(vec![bench::fig10_simtime(&algos, &ns)?])
+    });
+    bench::print_experiment("Fig 11: compression overhead", || {
+        Ok(vec![bench::fig11_comp_overhead(&algos, &ns)?])
+    });
+    bench::print_experiment("Fig 12: stream count", || {
+        Ok(vec![bench::fig12_streams(&short, n_mid)?])
+    });
+    bench::print_experiment("Fig 13: device scaling", || {
+        Ok(vec![bench::fig13_scaling(&short, n_mid)?])
+    });
+    bench::print_experiment("Fig 14: partition overhead", || {
+        Ok(vec![bench::fig14_partition_overhead(&algos, n_mid)?])
+    });
+    bench::print_experiment("Fig 15: parameter tuning", || {
+        let (a, b) = bench::fig15_params("qaoa", n_mid, &[2, 3, 4], &[8, 10, 12])?;
+        Ok(vec![a, b])
+    });
+    bench::print_experiment("Ablation A1: bitmap pre-scan", || {
+        Ok(vec![bench::ablation_prescan(1 << 14)?])
+    });
+    bench::print_experiment("Ablation A2: error-control mode", || {
+        Ok(vec![bench::ablation_error_mode("ising", n_mid)?])
+    });
+    Ok(())
+}

@@ -1,0 +1,262 @@
+//! Metrics: thread-safe per-phase timers and counters, and the report
+//! tables the CLI / bench harness print.
+//!
+//! The phases mirror the paper's pipeline stages (Fig. 6): H2D transfer,
+//! decompression, state-vector update, compression, D2H transfer — plus
+//! partitioning (Fig. 14) and end-to-end wall time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Pipeline phases instrumented across all engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Circuit partitioning (offline, Algorithm 1).
+    Partition,
+    /// Fetch compressed block bytes from the store (H2D analogue).
+    Fetch,
+    Decompress,
+    /// Gate application / state-vector update.
+    Apply,
+    Compress,
+    /// Store compressed bytes back (D2H analogue).
+    Store,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] =
+        [Phase::Partition, Phase::Fetch, Phase::Decompress, Phase::Apply, Phase::Compress, Phase::Store];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Partition => "partition",
+            Phase::Fetch => "fetch",
+            Phase::Decompress => "decompress",
+            Phase::Apply => "apply",
+            Phase::Compress => "compress",
+            Phase::Store => "store",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Phase::Partition => 0,
+            Phase::Fetch => 1,
+            Phase::Decompress => 2,
+            Phase::Apply => 3,
+            Phase::Compress => 4,
+            Phase::Store => 5,
+        }
+    }
+}
+
+/// Accumulating, thread-safe metrics sink. Phase times are *CPU-side busy
+/// times summed across workers*; wall time is tracked separately.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    phase_nanos: [AtomicU64; 6],
+    pub compressions: AtomicU64,
+    pub decompressions: AtomicU64,
+    pub bytes_compressed_in: AtomicU64,
+    pub bytes_compressed_out: AtomicU64,
+    pub gates_applied: AtomicU64,
+    pub groups_processed: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, attributing its duration to `phase`.
+    pub fn time<T>(&self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add_nanos(phase, t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    pub fn add_nanos(&self, phase: Phase, nanos: u64) {
+        self.phase_nanos[phase.index()].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn phase_secs(&self, phase: Phase) -> f64 {
+        self.phase_nanos[phase.index()].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn count(&self, c: &AtomicU64) -> u64 {
+        c.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot into a plain, printable report.
+    pub fn snapshot(&self, wall_secs: f64) -> MetricsReport {
+        MetricsReport {
+            wall_secs,
+            phase_secs: Phase::ALL.map(|p| (p.name(), self.phase_secs(p))),
+            compressions: self.compressions.load(Ordering::Relaxed),
+            decompressions: self.decompressions.load(Ordering::Relaxed),
+            bytes_in: self.bytes_compressed_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_compressed_out.load(Ordering::Relaxed),
+            gates_applied: self.gates_applied.load(Ordering::Relaxed),
+            groups_processed: self.groups_processed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable metrics snapshot attached to every `SimResult`.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub wall_secs: f64,
+    pub phase_secs: [(&'static str, f64); 6],
+    pub compressions: u64,
+    pub decompressions: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub gates_applied: u64,
+    pub groups_processed: u64,
+}
+
+impl MetricsReport {
+    pub fn phase(&self, name: &str) -> f64 {
+        self.phase_secs
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    /// Achieved compression ratio over everything that passed through the
+    /// compressor (1.0 when compression was off).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.bytes_out == 0 {
+            1.0
+        } else {
+            self.bytes_in as f64 / self.bytes_out as f64
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "wall time        : {:>10.3} s", self.wall_secs)?;
+        for (name, secs) in &self.phase_secs {
+            writeln!(f, "{name:<17}: {secs:>10.3} s (busy, summed over workers)")?;
+        }
+        writeln!(f, "gates applied    : {:>10}", self.gates_applied)?;
+        writeln!(f, "groups processed : {:>10}", self.groups_processed)?;
+        writeln!(
+            f,
+            "(de)compressions : {:>10} / {}",
+            self.compressions, self.decompressions
+        )?;
+        writeln!(f, "compression ratio: {:>10.2}x", self.compression_ratio())
+    }
+}
+
+/// Fixed-width ASCII table builder for the report/bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |f: &mut std::fmt::Formatter<'_>| -> std::fmt::Result {
+            for (i, w) in widths.iter().enumerate() {
+                write!(f, "+{}", "-".repeat(w + 2))?;
+                if i + 1 == ncol {
+                    writeln!(f, "+")?;
+                }
+            }
+            Ok(())
+        };
+        line(f)?;
+        for (i, h) in self.headers.iter().enumerate() {
+            write!(f, "| {:<w$} ", h, w = widths[i])?;
+        }
+        writeln!(f, "|")?;
+        line(f)?;
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                write!(f, "| {:>w$} ", c, w = widths[i])?;
+            }
+            writeln!(f, "|")?;
+        }
+        line(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_accumulates() {
+        let m = Metrics::new();
+        m.time(Phase::Apply, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        m.time(Phase::Apply, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(m.phase_secs(Phase::Apply) >= 0.009);
+        assert_eq!(m.phase_secs(Phase::Compress), 0.0);
+    }
+
+    #[test]
+    fn snapshot_and_ratio() {
+        let m = Metrics::new();
+        m.bytes_compressed_in.fetch_add(1000, Ordering::Relaxed);
+        m.bytes_compressed_out.fetch_add(100, Ordering::Relaxed);
+        let r = m.snapshot(1.5);
+        assert_eq!(r.wall_secs, 1.5);
+        assert!((r.compression_ratio() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_without_compression_is_one() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot(0.0).compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["algo", "qubits", "time"]);
+        t.row(&["qft".into(), "20".into(), "1.23".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| algo"));
+        assert!(s.contains("qft"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn concurrent_timing_is_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        m.time(Phase::Compress, || {});
+                        m.compressions.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.compressions.load(Ordering::Relaxed), 800);
+    }
+}

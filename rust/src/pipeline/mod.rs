@@ -1,0 +1,246 @@
+//! Transfer-concealed workflow pipeline (paper §4.2), CPU incarnation.
+//!
+//! The paper schedules each SV group's H2D → decompress → update →
+//! compress → D2H chain onto a CUDA stream and overlaps chains across
+//! streams; multiple GPUs process disjoint groups, all contending on one
+//! PCIe link. Here (hardware substitution; see DESIGN.md):
+//!
+//! * a *device* is a set of worker threads,
+//! * a device runs `streams` chains concurrently (`workers = devices *
+//!   streams`) — stream count is the Fig. 12 knob,
+//! * the shared PCIe link is a global [`Semaphore`] that fetch/store
+//!   (memory-movement) sections must hold, so transfer contention behaves
+//!   like the paper's multi-GPU starvation effect (§5.8) while
+//!   (de)compression and gate application overlap freely.
+//!
+//! The environment vendors no tokio/rayon, so this is a dependency-free
+//! scoped thread pool + work queue + condvar semaphore.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Counting semaphore (Mutex + Condvar; no external deps).
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Self {
+        Semaphore { permits: Mutex::new(permits), cv: Condvar::new() }
+    }
+
+    pub fn acquire(&self) -> SemaphoreGuard<'_> {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+        SemaphoreGuard { sem: self }
+    }
+
+    fn release(&self) {
+        let mut p = self.permits.lock().unwrap();
+        *p += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// RAII permit.
+pub struct SemaphoreGuard<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Drop for SemaphoreGuard<'_> {
+    fn drop(&mut self) {
+        self.sem.release();
+    }
+}
+
+/// Pipeline concurrency shape.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Logical devices (paper: GPUs). Fig. 13 knob.
+    pub devices: usize,
+    /// Concurrent group chains per device (paper: CUDA streams). Fig. 12 knob.
+    pub streams: usize,
+    /// Permits on the shared transfer link (paper: PCIe). One permit per
+    /// device models independent DMA engines contending on the link
+    /// arbiter; the default is `devices`.
+    pub transfer_slots: usize,
+}
+
+impl PipelineConfig {
+    pub fn new(devices: usize, streams: usize) -> Self {
+        PipelineConfig { devices: devices.max(1), streams: streams.max(1), transfer_slots: devices.max(1) }
+    }
+
+    /// Fully sequential (streams = devices = 1).
+    pub fn sequential() -> Self {
+        Self::new(1, 1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.devices * self.streams
+    }
+}
+
+/// Run `task` over items `0..n` on the pipeline's worker pool. Tasks pull
+/// from a shared queue (dynamic load balance, like the paper's round-robin
+/// stream assignment). The first error aborts remaining work and is
+/// returned; panics propagate.
+pub fn run_items<E, F>(cfg: PipelineConfig, n: usize, task: F) -> Result<(), E>
+where
+    E: Send,
+    F: Fn(WorkerCtx<'_>, usize) -> Result<(), E> + Sync,
+    E: std::fmt::Debug,
+{
+    let transfer = Semaphore::new(cfg.transfer_slots);
+    let queue: Mutex<VecDeque<usize>> = Mutex::new((0..n).collect());
+    let failed: Mutex<Option<E>> = Mutex::new(None);
+    let workers = cfg.workers().min(n.max(1));
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let queue = &queue;
+            let failed = &failed;
+            let transfer = &transfer;
+            let task = &task;
+            scope.spawn(move || loop {
+                if failed.lock().unwrap().is_some() {
+                    return;
+                }
+                let item = { queue.lock().unwrap().pop_front() };
+                let Some(item) = item else { return };
+                let ctx = WorkerCtx { worker: w, device: w % cfg.devices.max(1), transfer };
+                if let Err(e) = task(ctx, item) {
+                    let mut f = failed.lock().unwrap();
+                    if f.is_none() {
+                        *f = Some(e);
+                    }
+                    return;
+                }
+            });
+        }
+    });
+
+    match failed.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Per-task context: which worker/device is running, and the shared
+/// transfer link for fetch/store sections.
+pub struct WorkerCtx<'a> {
+    pub worker: usize,
+    pub device: usize,
+    transfer: &'a Semaphore,
+}
+
+impl WorkerCtx<'_> {
+    /// Execute `f` while holding a transfer permit (the PCIe section).
+    pub fn transfer<T>(&self, f: impl FnOnce() -> T) -> T {
+        let _g = self.transfer.acquire();
+        f()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn processes_every_item_exactly_once() {
+        let hits = Vec::from_iter((0..500).map(|_| AtomicUsize::new(0)));
+        run_items::<(), _>(PipelineConfig::new(2, 4), 500, |_ctx, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn sequential_config_uses_one_worker() {
+        let max_live = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        run_items::<(), _>(PipelineConfig::sequential(), 50, |_ctx, _i| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            max_live.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            live.fetch_sub(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(max_live.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallelism_is_bounded_by_workers() {
+        let cfg = PipelineConfig::new(2, 2);
+        let max_live = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        run_items::<(), _>(cfg, 64, |_ctx, _i| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            max_live.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(300));
+            live.fetch_sub(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert!(max_live.load(Ordering::SeqCst) <= 4);
+    }
+
+    #[test]
+    fn transfer_section_respects_slots() {
+        let cfg = PipelineConfig { devices: 1, streams: 8, transfer_slots: 1 };
+        let max_live = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        run_items::<(), _>(cfg, 32, |ctx, _i| {
+            ctx.transfer(|| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                max_live.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(100));
+                live.fetch_sub(1, Ordering::SeqCst);
+            });
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(max_live.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn first_error_aborts_and_propagates() {
+        let done = AtomicUsize::new(0);
+        let r = run_items::<String, _>(PipelineConfig::new(1, 2), 1000, |_ctx, i| {
+            if i == 3 {
+                return Err("boom".to_string());
+            }
+            done.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(std::time::Duration::from_micros(50));
+            Ok(())
+        });
+        assert_eq!(r.unwrap_err(), "boom");
+        assert!(done.load(Ordering::Relaxed) < 1000);
+    }
+
+    #[test]
+    fn devices_assign_round_robin() {
+        let cfg = PipelineConfig::new(4, 1);
+        let seen = Mutex::new(std::collections::BTreeSet::new());
+        run_items::<(), _>(cfg, 64, |ctx, _i| {
+            seen.lock().unwrap().insert(ctx.device);
+            std::thread::sleep(std::time::Duration::from_micros(100));
+            Ok(())
+        })
+        .unwrap();
+        assert!(seen.into_inner().unwrap().len() > 1);
+    }
+
+    #[test]
+    fn zero_items_is_fine() {
+        run_items::<(), _>(PipelineConfig::new(2, 2), 0, |_ctx, _i| Ok(())).unwrap();
+    }
+}

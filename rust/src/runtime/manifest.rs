@@ -1,0 +1,146 @@
+//! `artifacts/manifest.json` loading: which AOT modules exist, their chunk
+//! geometry, dtypes, and baked error bounds.
+
+use super::json::Json;
+use crate::types::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT module entry.
+#[derive(Debug, Clone)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub kernel: String,
+    pub dtype: String,
+    pub file: PathBuf,
+    /// Pair/quad rows per call (gate kernels).
+    pub m: Option<usize>,
+    /// Gate dimension (2 or 4) for gate kernels.
+    pub k: Option<usize>,
+    /// Elements per call (quantizer kernels).
+    pub n: Option<usize>,
+    /// Baked-in point-wise relative bound (quantizer kernels).
+    pub error_bound: Option<f64>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub modules: BTreeMap<String, ModuleInfo>,
+    pub m_1q: usize,
+    pub m_2q: usize,
+    pub n_quant: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&src)?;
+        if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(Error::Artifact("manifest: unexpected format".into()));
+        }
+        let chunks = j
+            .get("chunks")
+            .ok_or_else(|| Error::Artifact("manifest: missing chunks".into()))?;
+        let need = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Artifact(format!("manifest: missing chunks.{k}")))
+        };
+        let m_1q = need(chunks, "m_1q")?;
+        let m_2q = need(chunks, "m_2q")?;
+        let n_quant = need(chunks, "n_quant")?;
+
+        let mut modules = BTreeMap::new();
+        let mods = j
+            .get("modules")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Artifact("manifest: missing modules".into()))?;
+        for (name, meta) in mods {
+            let kernel = meta
+                .get("kernel")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Artifact(format!("manifest: {name} missing kernel")))?
+                .to_string();
+            let dtype = meta
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f64")
+                .to_string();
+            let file = dir.join(
+                meta.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Artifact(format!("manifest: {name} missing file")))?,
+            );
+            modules.insert(
+                name.clone(),
+                ModuleInfo {
+                    name: name.clone(),
+                    kernel,
+                    dtype,
+                    file,
+                    m: meta.get("m").and_then(Json::as_usize),
+                    k: meta.get("k").and_then(Json::as_usize),
+                    n: meta.get("n").and_then(Json::as_usize),
+                    error_bound: meta.get("error_bound").and_then(Json::as_f64),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), modules, m_1q, m_2q, n_quant })
+    }
+
+    /// Gate module name for arity/diagonality/dtype.
+    pub fn gate_module(&self, arity: usize, diagonal: bool, dtype: &str) -> Result<&ModuleInfo> {
+        let kind = match (arity, diagonal) {
+            (1, false) => "gate1q",
+            (1, true) => "diag1q",
+            (2, false) => "gate2q",
+            (2, true) => "diag2q",
+            _ => return Err(Error::Artifact(format!("no gate module for arity {arity}"))),
+        };
+        let name = format!("{kind}_{dtype}");
+        self.modules
+            .get(&name)
+            .ok_or_else(|| Error::Artifact(format!("manifest: missing module {name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_generated_manifest_when_present() {
+        let dir = repo_artifacts();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.m_1q.is_power_of_two());
+        assert!(m.modules.len() >= 10);
+        let g = m.gate_module(1, false, "f64").unwrap();
+        assert_eq!(g.kernel, "gate1q");
+        assert!(g.file.exists());
+        assert_eq!(g.k, Some(2));
+        let d = m.gate_module(2, true, "f32").unwrap();
+        assert_eq!(d.kernel, "diag2q");
+    }
+
+    #[test]
+    fn missing_dir_gives_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Simulation configuration shared by all engines.
+
+use crate::compress::Codec;
+use crate::pipeline::PipelineConfig;
+use crate::types::{Error, Precision, Result};
+use std::path::PathBuf;
+
+/// Which gate-application backend executes state-vector updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Tuned rust kernels (production hot path).
+    Native,
+    /// AOT-compiled JAX/Pallas HLO artifacts via PJRT (the three-layer
+    /// architecture's L1/L2 product; requires `make artifacts`).
+    Xla,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            other => Err(Error::Config(format!("unknown backend {other:?}"))),
+        }
+    }
+}
+
+/// Full engine configuration. `Default` reproduces the paper's settings
+/// (point-wise relative 1e-3, pre-scan on, pipelined).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// `b`: log2 of SV block length (paper's "SV block size" knob, Fig. 15).
+    pub block_qubits: usize,
+    /// Algorithm-1 inner-size threshold (paper's "inner size" knob, Fig. 15).
+    pub inner_size: usize,
+    /// Plane codec (kind + bound + prescan).
+    pub codec: Codec,
+    /// Gate-application backend.
+    pub backend: Backend,
+    /// Pipeline shape (devices x streams, Fig. 12/13 knobs).
+    pub pipeline: PipelineConfig,
+    /// Primary-tier budget in bytes; `None` = unlimited.
+    pub memory_budget: Option<usize>,
+    /// Secondary-tier directory; enables spilling when the budget is set.
+    pub spill_dir: Option<PathBuf>,
+    /// State-vector precision.
+    pub precision: Precision,
+    /// Directory holding `manifest.json` + HLO artifacts (Xla backend).
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            block_qubits: 14,
+            inner_size: 2,
+            codec: Codec::paper_default(),
+            backend: Backend::Native,
+            pipeline: PipelineConfig::new(1, 2),
+            memory_budget: None,
+            spill_dir: None,
+            precision: Precision::F64,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Clamp the block size for small circuits: a block can never exceed
+    /// the state, and tiny states get one block.
+    pub fn effective_block_qubits(&self, n_qubits: usize) -> usize {
+        self.block_qubits.min(n_qubits)
+    }
+
+    /// Validate against a circuit size.
+    pub fn validate(&self, n_qubits: usize) -> Result<()> {
+        if n_qubits == 0 || n_qubits > 34 {
+            return Err(Error::Config(format!(
+                "n_qubits {n_qubits} outside supported range 1..=34"
+            )));
+        }
+        if self.memory_budget.is_some() && self.spill_dir.is_none() {
+            // Allowed: it means hard-OOM semantics (Table 2 probing).
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecKind;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = SimConfig::default();
+        assert_eq!(c.codec.kind, CodecKind::PointwiseRel);
+        assert_eq!(c.codec.error_bound, 1e-3);
+        assert_eq!(c.block_qubits, 14);
+        assert_eq!(c.inner_size, 2);
+    }
+
+    #[test]
+    fn effective_block_clamps() {
+        let c = SimConfig::default();
+        assert_eq!(c.effective_block_qubits(10), 10);
+        assert_eq!(c.effective_block_qubits(20), 14);
+    }
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Xla);
+        assert!("cuda".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn validate_bounds() {
+        let c = SimConfig::default();
+        assert!(c.validate(20).is_ok());
+        assert!(c.validate(0).is_err());
+        assert!(c.validate(99).is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! Simulation engines.
+//!
+//! * [`dense`] — uncompressed full-memory reference (the SV-Sim-class
+//!   baseline and the ψ_ideal source for fidelity).
+//! * [`bmqsim`] — the paper's system: staged (Algorithm 1), compressed
+//!   (Algorithm 2), pipelined (§4.2), two-level memory (§4.4).
+//! * [`sc19`] — the SC19-Sim baseline prototype: per-gate block
+//!   (de)compression (§3's "basic solution").
+
+pub mod bmqsim;
+pub mod config;
+pub mod dense;
+pub mod observable;
+pub mod sc19;
+
+pub use bmqsim::BmqSim;
+pub use config::{Backend, SimConfig};
+pub use dense::DenseSim;
+pub use sc19::Sc19Sim;
+
+use crate::circuit::Gate;
+use crate::gates::apply_gate_remapped;
+use crate::memory::MemStats;
+use crate::metrics::MetricsReport;
+use crate::state::StateVector;
+use crate::types::Result;
+
+/// Pluggable gate-application backend: native rust kernels or the AOT'd
+/// JAX/Pallas executables (implemented in `runtime::XlaApplier`).
+pub trait GateApplier: Sync {
+    /// Apply `gate` to the buffer with targets remapped to `bits`
+    /// (buffer bit positions).
+    fn apply(&self, re: &mut [f64], im: &mut [f64], gate: &Gate, bits: &[usize]) -> Result<()>;
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The tuned rust kernel path.
+pub struct NativeApplier;
+
+impl GateApplier for NativeApplier {
+    fn apply(&self, re: &mut [f64], im: &mut [f64], gate: &Gate, bits: &[usize]) -> Result<()> {
+        apply_gate_remapped(re, im, gate, bits);
+        Ok(())
+    }
+}
+
+/// Outcome of a simulation run: final state (when materialized), metrics,
+/// and memory statistics.
+#[derive(Debug)]
+pub struct SimResult {
+    pub engine: &'static str,
+    pub circuit_name: String,
+    pub n_qubits: usize,
+    pub wall_secs: f64,
+    pub metrics: MetricsReport,
+    pub mem: MemStats,
+    /// Peak compressed footprint in bytes (Fig. 9's "practical memory");
+    /// for the dense engine this is the full state size.
+    pub peak_bytes: usize,
+    /// Number of Algorithm-1 stages (1 per gate for sc19, 1 for dense).
+    pub stages: usize,
+    pub state: Option<StateVector>,
+}
+
+impl SimResult {
+    /// Fidelity against an ideal state (panics if state not materialized).
+    pub fn fidelity_vs(&self, ideal: &StateVector) -> f64 {
+        self.state
+            .as_ref()
+            .expect("state not materialized; run with materialize=true")
+            .fidelity(ideal)
+    }
+}

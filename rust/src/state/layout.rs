@@ -1,0 +1,290 @@
+//! SV block / SV group index algebra (paper Figures 1, 2, 4, 5).
+//!
+//! The state vector of `n` qubits is split into `2^c` SV blocks of `2^b`
+//! amplitudes (`n = b + c`). The low `b` bits of an amplitude index are its
+//! *local index*; the high `c` bits are its *global index* == the block id.
+//!
+//! A stage with sorted inner global indices `inner = [g_0 < g_1 < ...]`
+//! (absolute qubit numbers, all `>= b`) induces **SV groups**: fix the
+//! remaining (outer) global bits, vary the inner bits → `2^|inner|` blocks
+//! whose amplitudes close under every gate of the stage (Fig. 4). Gathering
+//! those blocks in inner-pattern order produces a contiguous buffer that
+//! behaves exactly like a dense state of `b + |inner|` qubits, where
+//!   * local qubit `t < b`       → buffer bit `t`
+//!   * inner global `g = inner[p]` → buffer bit `b + p`
+//! so the stage executor is just a dense simulator plus this remap.
+
+use crate::types::{Error, Result};
+
+/// Geometry of the block decomposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockLayout {
+    pub n_qubits: usize,
+    /// `b`: qubits resolved inside one block.
+    pub block_qubits: usize,
+}
+
+impl BlockLayout {
+    pub fn new(n_qubits: usize, block_qubits: usize) -> Result<Self> {
+        if block_qubits > n_qubits {
+            return Err(Error::Config(format!(
+                "block_qubits {block_qubits} > n_qubits {n_qubits}"
+            )));
+        }
+        Ok(BlockLayout { n_qubits, block_qubits })
+    }
+
+    /// `c`: number of global bits.
+    pub fn global_qubits(&self) -> usize {
+        self.n_qubits - self.block_qubits
+    }
+
+    /// Amplitudes per block, `2^b`.
+    pub fn block_len(&self) -> usize {
+        1usize << self.block_qubits
+    }
+
+    /// Number of blocks, `2^c`.
+    pub fn num_blocks(&self) -> usize {
+        1usize << self.global_qubits()
+    }
+
+    /// Block id (global index) of amplitude `i`.
+    pub fn block_of(&self, i: usize) -> usize {
+        i >> self.block_qubits
+    }
+
+    /// Local index of amplitude `i` within its block.
+    pub fn local_of(&self, i: usize) -> usize {
+        i & (self.block_len() - 1)
+    }
+
+    /// Build the group schedule for a stage's inner set.
+    pub fn group_schedule(&self, inner: &[usize]) -> Result<GroupSchedule> {
+        GroupSchedule::new(*self, inner)
+    }
+}
+
+/// Precomputed iteration data for the SV groups of one stage.
+#[derive(Debug, Clone)]
+pub struct GroupSchedule {
+    pub layout: BlockLayout,
+    /// Sorted absolute qubit numbers of the stage's inner globals.
+    pub inner: Vec<usize>,
+    /// Bit positions of the inner globals **within the global index**
+    /// (i.e. `inner[p] - b`), sorted ascending.
+    inner_bits: Vec<usize>,
+    /// Bit positions of the outer globals within the global index.
+    outer_bits: Vec<usize>,
+}
+
+impl GroupSchedule {
+    fn new(layout: BlockLayout, inner: &[usize]) -> Result<Self> {
+        let b = layout.block_qubits;
+        let c = layout.global_qubits();
+        let mut inner_bits = Vec::with_capacity(inner.len());
+        for (i, &g) in inner.iter().enumerate() {
+            if g < b || g >= layout.n_qubits {
+                return Err(Error::Config(format!(
+                    "inner qubit {g} outside global range [{b}, {})",
+                    layout.n_qubits
+                )));
+            }
+            if i > 0 && inner[i - 1] >= g {
+                return Err(Error::Config("inner set must be sorted & distinct".into()));
+            }
+            inner_bits.push(g - b);
+        }
+        let outer_bits: Vec<usize> =
+            (0..c).filter(|bit| !inner_bits.contains(bit)).collect();
+        Ok(GroupSchedule { layout, inner: inner.to_vec(), inner_bits, outer_bits })
+    }
+
+    /// Blocks per group: `2^|inner|`.
+    pub fn blocks_per_group(&self) -> usize {
+        1usize << self.inner_bits.len()
+    }
+
+    /// Number of groups: `2^(c - |inner|)`. Groups tile the block set.
+    pub fn num_groups(&self) -> usize {
+        1usize << self.outer_bits.len()
+    }
+
+    /// Amplitudes per gathered group buffer.
+    pub fn group_len(&self) -> usize {
+        self.blocks_per_group() * self.layout.block_len()
+    }
+
+    /// The block ids of group `g` (rank over outer assignments), ordered by
+    /// ascending inner-bit pattern — the gather order that makes the buffer
+    /// a dense `(b + |inner|)`-qubit state.
+    pub fn group_blocks(&self, g: usize) -> Vec<usize> {
+        debug_assert!(g < self.num_groups());
+        // Scatter outer rank bits into outer_bits positions.
+        let mut base = 0usize;
+        for (i, &bit) in self.outer_bits.iter().enumerate() {
+            if g & (1 << i) != 0 {
+                base |= 1 << bit;
+            }
+        }
+        (0..self.blocks_per_group())
+            .map(|pat| {
+                let mut id = base;
+                for (p, &bit) in self.inner_bits.iter().enumerate() {
+                    if pat & (1 << p) != 0 {
+                        id |= 1 << bit;
+                    }
+                }
+                id
+            })
+            .collect()
+    }
+
+    /// Remap an absolute circuit qubit to its bit position in the gathered
+    /// group buffer. Panics if the qubit is an *outer* global (a correctly
+    /// partitioned stage never targets one).
+    pub fn buffer_bit(&self, qubit: usize) -> usize {
+        let b = self.layout.block_qubits;
+        if qubit < b {
+            qubit
+        } else {
+            let p = self
+                .inner_bits
+                .iter()
+                .position(|&g| g == qubit - b)
+                .unwrap_or_else(|| panic!("qubit {qubit} is an outer global for this stage"));
+            b + p
+        }
+    }
+
+    /// Buffer qubit count: `b + |inner|`.
+    pub fn buffer_qubits(&self) -> usize {
+        self.layout.block_qubits + self.inner_bits.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_basics() {
+        let l = BlockLayout::new(6, 2).unwrap();
+        assert_eq!(l.global_qubits(), 4);
+        assert_eq!(l.block_len(), 4);
+        assert_eq!(l.num_blocks(), 16);
+        assert_eq!(l.block_of(0b110101), 0b1101);
+        assert_eq!(l.local_of(0b110101), 0b01);
+    }
+
+    #[test]
+    fn paper_figure5_example() {
+        // 6-qubit circuit, b=2, c=4; stage inner = {3, 5} (absolute).
+        let l = BlockLayout::new(6, 2).unwrap();
+        let gs = l.group_schedule(&[3, 5]).unwrap();
+        assert_eq!(gs.blocks_per_group(), 4);
+        assert_eq!(gs.num_groups(), 4); // paper: "a total of 4 groups"
+        assert_eq!(gs.group_len(), 16);
+        assert_eq!(gs.buffer_qubits(), 4);
+        // Inner bits within global index: {1, 3}; outer: {0, 2}.
+        // Group 0 (outer bits clear): patterns over inner bits.
+        assert_eq!(gs.group_blocks(0), vec![0b0000, 0b0010, 0b1000, 0b1010]);
+        // Group with outer rank 1 -> outer bit 0 set.
+        assert_eq!(gs.group_blocks(1), vec![0b0001, 0b0011, 0b1001, 0b1011]);
+        // Group with outer rank 2 -> outer bit 2 set.
+        assert_eq!(gs.group_blocks(2), vec![0b0100, 0b0110, 0b1100, 0b1110]);
+    }
+
+    #[test]
+    fn groups_tile_block_set_exactly_once() {
+        for (n, b, inner) in [
+            (8usize, 3usize, vec![4usize, 6]),
+            (10, 4, vec![5, 7, 9]),
+            (7, 7, vec![]),
+            (9, 2, vec![2, 3, 4]),
+        ] {
+            let l = BlockLayout::new(n, b).unwrap();
+            let gs = l.group_schedule(&inner).unwrap();
+            let mut seen = vec![false; l.num_blocks()];
+            for g in 0..gs.num_groups() {
+                for id in gs.group_blocks(g) {
+                    assert!(!seen[id], "block {id} visited twice");
+                    seen[id] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "blocks missed");
+        }
+    }
+
+    #[test]
+    fn buffer_bit_remap() {
+        let l = BlockLayout::new(8, 3).unwrap();
+        let gs = l.group_schedule(&[4, 6]).unwrap();
+        assert_eq!(gs.buffer_bit(0), 0);
+        assert_eq!(gs.buffer_bit(2), 2);
+        assert_eq!(gs.buffer_bit(4), 3); // first inner -> bit b+0
+        assert_eq!(gs.buffer_bit(6), 4); // second inner -> bit b+1
+    }
+
+    #[test]
+    #[should_panic(expected = "outer global")]
+    fn buffer_bit_rejects_outer() {
+        let l = BlockLayout::new(8, 3).unwrap();
+        let gs = l.group_schedule(&[4]).unwrap();
+        gs.buffer_bit(5);
+    }
+
+    #[test]
+    fn gather_semantics_match_amplitude_indices() {
+        // The k-th amplitude of the gathered buffer must be the amplitude
+        // whose full index has: local bits = k % block_len, inner global
+        // bits = the inner pattern of k's block slot, outer bits = group's.
+        let l = BlockLayout::new(6, 2).unwrap();
+        let gs = l.group_schedule(&[3, 5]).unwrap();
+        for g in 0..gs.num_groups() {
+            let blocks = gs.group_blocks(g);
+            for (slot, &blk) in blocks.iter().enumerate() {
+                for local in 0..l.block_len() {
+                    let full_index = (blk << l.block_qubits) | local;
+                    let buf_index = (slot << l.block_qubits) | local;
+                    // Reconstruct the buffer index from the remapped bits:
+                    let mut want = 0usize;
+                    for q in 0..l.n_qubits {
+                        let bit = (full_index >> q) & 1;
+                        if bit == 1 {
+                            let pos = if q < l.block_qubits {
+                                q
+                            } else if let Some(p) =
+                                gs.inner.iter().position(|&x| x == q)
+                            {
+                                l.block_qubits + p
+                            } else {
+                                continue; // outer bit: constant within group
+                            };
+                            want |= 1 << pos;
+                        }
+                    }
+                    assert_eq!(buf_index, want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inner_means_block_per_group() {
+        let l = BlockLayout::new(8, 3).unwrap();
+        let gs = l.group_schedule(&[]).unwrap();
+        assert_eq!(gs.blocks_per_group(), 1);
+        assert_eq!(gs.num_groups(), 32);
+        assert_eq!(gs.buffer_qubits(), 3);
+    }
+
+    #[test]
+    fn invalid_inner_rejected() {
+        let l = BlockLayout::new(8, 3).unwrap();
+        assert!(l.group_schedule(&[2]).is_err()); // local, not global
+        assert!(l.group_schedule(&[9]).is_err()); // out of range
+        assert!(l.group_schedule(&[5, 4]).is_err()); // unsorted
+        assert!(l.group_schedule(&[4, 4]).is_err()); // duplicate
+    }
+}

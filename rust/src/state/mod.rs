@@ -1,0 +1,165 @@
+//! State-vector storage and the SV block / SV group index algebra.
+//!
+//! Amplitudes live in split re/im planes (SoA). [`StateVector`] is the
+//! dense, whole-state container used by the `dense` reference engine and by
+//! fidelity checks; the compressed engines never materialize it — they work
+//! on per-group gather buffers managed by `sim::bmqsim` + `memory`.
+
+mod layout;
+
+pub use layout::{BlockLayout, GroupSchedule};
+
+use crate::types::{Complex, Error, Result};
+
+/// A dense `n`-qubit state vector as split re/im planes of length `2^n`.
+#[derive(Debug, Clone)]
+pub struct StateVector {
+    pub n_qubits: usize,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+impl StateVector {
+    /// `|0...0>` — the standard initial state (paper §4.2 "common practice").
+    pub fn zero_state(n_qubits: usize) -> Result<Self> {
+        if n_qubits == 0 || n_qubits > 40 {
+            return Err(Error::Config(format!("unsupported qubit count {n_qubits}")));
+        }
+        let len = 1usize << n_qubits;
+        let mut re = vec![0.0; len];
+        let im = vec![0.0; len];
+        re[0] = 1.0;
+        Ok(StateVector { n_qubits, re, im })
+    }
+
+    /// Construct from existing planes (must both be length `2^n`).
+    pub fn from_planes(n_qubits: usize, re: Vec<f64>, im: Vec<f64>) -> Result<Self> {
+        let len = 1usize << n_qubits;
+        if re.len() != len || im.len() != len {
+            return Err(Error::Config(format!(
+                "plane length {} / {} != 2^{n_qubits}",
+                re.len(),
+                im.len()
+            )));
+        }
+        Ok(StateVector { n_qubits, re, im })
+    }
+
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn amplitude(&self, i: usize) -> Complex {
+        Complex::new(self.re[i], self.im[i])
+    }
+
+    /// Total probability `sum |a_i|^2` (1.0 for a valid state).
+    pub fn norm_sq(&self) -> f64 {
+        self.re
+            .iter()
+            .zip(&self.im)
+            .map(|(r, i)| r * r + i * i)
+            .sum()
+    }
+
+    /// Fidelity `|<self|other>|` — the paper's §5.3 metric.
+    pub fn fidelity(&self, other: &StateVector) -> f64 {
+        assert_eq!(self.n_qubits, other.n_qubits, "qubit count mismatch");
+        let (mut re, mut im) = (0.0f64, 0.0f64);
+        for k in 0..self.len() {
+            // <self|other> = sum conj(a_k) b_k
+            re += self.re[k] * other.re[k] + self.im[k] * other.im[k];
+            im += self.re[k] * other.im[k] - self.im[k] * other.re[k];
+        }
+        (re * re + im * im).sqrt()
+    }
+
+    /// Normalized fidelity `|<self|other>| / (|self| |other|)` — bounded by
+    /// 1 (Cauchy-Schwarz) even when lossy compression perturbed the norms;
+    /// used when *comparing* engines (the raw paper metric can exceed 1 on
+    /// unnormalized states, making order comparisons meaningless).
+    pub fn fidelity_normalized(&self, other: &StateVector) -> f64 {
+        let denom = (self.norm_sq() * other.norm_sq()).sqrt();
+        if denom == 0.0 {
+            0.0
+        } else {
+            self.fidelity(other) / denom
+        }
+    }
+
+    /// Probability of measuring basis state `i`.
+    pub fn probability(&self, i: usize) -> f64 {
+        self.re[i] * self.re[i] + self.im[i] * self.im[i]
+    }
+
+    /// Marginal probability that qubit `q` reads 1.
+    pub fn prob_qubit_one(&self, q: usize) -> f64 {
+        let bit = 1usize << q;
+        let mut p = 0.0;
+        for i in 0..self.len() {
+            if i & bit != 0 {
+                p += self.probability(i);
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_state_is_normalized_basis_state() {
+        let s = StateVector::zero_state(5).unwrap();
+        assert_eq!(s.len(), 32);
+        assert_eq!(s.amplitude(0), Complex::ONE);
+        assert!((s.norm_sq() - 1.0).abs() < 1e-15);
+        assert_eq!(s.probability(3), 0.0);
+    }
+
+    #[test]
+    fn fidelity_self_is_one() {
+        let s = StateVector::zero_state(4).unwrap();
+        assert!((s.fidelity(&s) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fidelity_orthogonal_is_zero() {
+        let a = StateVector::zero_state(3).unwrap();
+        let mut re = vec![0.0; 8];
+        re[5] = 1.0;
+        let b = StateVector::from_planes(3, re, vec![0.0; 8]).unwrap();
+        assert!(a.fidelity(&b).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fidelity_is_phase_invariant() {
+        // |<a|b>| must ignore a global phase on b.
+        let a = StateVector::zero_state(2).unwrap();
+        let phase = Complex::cis(1.234);
+        let re = vec![phase.re, 0.0, 0.0, 0.0];
+        let im = vec![phase.im, 0.0, 0.0, 0.0];
+        let b = StateVector::from_planes(2, re, im).unwrap();
+        assert!((a.fidelity(&b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_planes_validates_length() {
+        assert!(StateVector::from_planes(3, vec![0.0; 7], vec![0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn prob_qubit_one() {
+        // |10> (qubit1=1, qubit0=0) at index 2
+        let mut re = vec![0.0; 4];
+        re[2] = 1.0;
+        let s = StateVector::from_planes(2, re, vec![0.0; 4]).unwrap();
+        assert_eq!(s.prob_qubit_one(1), 1.0);
+        assert_eq!(s.prob_qubit_one(0), 0.0);
+    }
+}

@@ -1,0 +1,66 @@
+//! Crate-wide error type. Every fallible public API returns [`Result`].
+
+/// Unified error for the simulator stack.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Invalid user/sim configuration (qubit counts, block sizes, ...).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Circuit construction or parsing problems.
+    #[error("circuit error: {0}")]
+    Circuit(String),
+
+    /// OpenQASM parse failure with line information.
+    #[error("qasm parse error at line {line}: {msg}")]
+    Qasm { line: usize, msg: String },
+
+    /// Compressed payload is corrupt or version-mismatched.
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    /// The two-level memory manager ran out of both tiers.
+    #[error("out of memory: {0}")]
+    OutOfMemory(String),
+
+    /// Secondary-tier (disk spill) I/O failure.
+    #[error("spill i/o error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// PJRT/XLA runtime failure (artifact load, compile, execute).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// AOT artifact set is missing or inconsistent with the manifest.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::Config("bad block size".into());
+        assert_eq!(e.to_string(), "config error: bad block size");
+        let e = Error::Qasm { line: 7, msg: "unknown gate foo".into() };
+        assert!(e.to_string().contains("line 7"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

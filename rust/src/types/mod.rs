@@ -1,0 +1,110 @@
+//! Core value types shared across the simulator: complex amplitudes,
+//! precision selection, deterministic RNG, and the crate-wide error type.
+//!
+//! Amplitude storage convention: the simulator keeps state vectors as
+//! *split planes* (structure-of-arrays `re: Vec<f64>`, `im: Vec<f64>`)
+//! rather than `Vec<Complex>`. This matches both the compressor (which
+//! consumes plain float planes) and the AOT'd XLA kernels (whose operands
+//! are separate re/im literals), so [`Complex`] appears mostly at API
+//! boundaries (gate matrices, fidelity results).
+
+mod complex;
+mod error;
+mod rng;
+
+pub use complex::Complex;
+pub use error::{Error, Result};
+pub use rng::SplitMix64;
+
+/// Floating-point precision of the state vector and artifacts.
+///
+/// The paper evaluates in float64 (noting cuQuantum's float32 gives it an
+/// inherent speed edge, §5.5); both are supported end-to-end here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    F64,
+}
+
+impl Precision {
+    /// Bytes per real scalar.
+    pub fn scalar_bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F64 => 8,
+        }
+    }
+
+    /// Bytes per complex amplitude (two scalars).
+    pub fn amp_bytes(self) -> usize {
+        2 * self.scalar_bytes()
+    }
+
+    /// The dtype tag used in `artifacts/manifest.json` module names.
+    pub fn dtype_tag(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" | "float32" => Ok(Precision::F32),
+            "f64" | "float64" => Ok(Precision::F64),
+            other => Err(Error::Config(format!("unknown precision {other:?}"))),
+        }
+    }
+}
+
+/// Standard (uncompressed) state-vector memory requirement in bytes:
+/// `2^(n+4)` for f64 (the paper's Fig. 9 baseline), `2^(n+3)` for f32.
+pub fn standard_memory_bytes(n_qubits: usize, precision: Precision) -> u128 {
+    (1u128 << n_qubits) * precision.amp_bytes() as u128
+}
+
+/// Human-readable byte size, used by the report tables.
+pub fn fmt_bytes(b: u128) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_memory_matches_paper_formula() {
+        // Paper §5.4: standard consumption is 2^(n+4) bytes (f64 amplitudes).
+        assert_eq!(standard_memory_bytes(10, Precision::F64), 1 << 14);
+        assert_eq!(standard_memory_bytes(33, Precision::F64), 1u128 << 37);
+        assert_eq!(standard_memory_bytes(10, Precision::F32), 1 << 13);
+    }
+
+    #[test]
+    fn precision_parsing() {
+        assert_eq!("f64".parse::<Precision>().unwrap(), Precision::F64);
+        assert_eq!("float32".parse::<Precision>().unwrap(), Precision::F32);
+        assert!("f16".parse::<Precision>().is_err());
+    }
+
+    #[test]
+    fn fmt_bytes_scales() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1 << 20), "1.00 MiB");
+        assert_eq!(fmt_bytes(3 * (1 << 30) / 2), "1.50 GiB");
+    }
+}

@@ -1,0 +1,234 @@
+//! Cross-engine integration + property tests.
+//!
+//! The vendor set ships no proptest, so properties run on a hand-rolled
+//! harness: seeded random cases via SplitMix64, many iterations, failing
+//! seeds printed for reproduction.
+
+use bmqsim::circuit::{generators, Circuit, Gate, GateKind};
+use bmqsim::compress::{decompress_any, Codec};
+use bmqsim::pipeline::PipelineConfig;
+use bmqsim::sim::{BmqSim, DenseSim, Sc19Sim, SimConfig};
+use bmqsim::state::BlockLayout;
+use bmqsim::types::SplitMix64;
+
+/// Random circuit over the full gate vocabulary.
+fn random_circuit(n: usize, gates: usize, rng: &mut SplitMix64) -> Circuit {
+    let mut c = Circuit::new(n, "random");
+    for _ in 0..gates {
+        let q = rng.next_below(n as u64) as usize;
+        let theta = rng.next_f64() * 6.0 - 3.0;
+        let gate = match rng.next_below(14) {
+            0 => Gate::q1(GateKind::H, q),
+            1 => Gate::q1(GateKind::X, q),
+            2 => Gate::q1(GateKind::T, q),
+            3 => Gate::q1(GateKind::Rx(theta), q),
+            4 => Gate::q1(GateKind::Ry(theta), q),
+            5 => Gate::q1(GateKind::Rz(theta), q),
+            6 => Gate::q1(GateKind::U3(theta, theta * 0.3, -theta), q),
+            7 => Gate::q1(GateKind::Sx, q),
+            _ => {
+                let mut p = rng.next_below(n as u64) as usize;
+                if p == q {
+                    p = (p + 1) % n;
+                }
+                match rng.next_below(6) {
+                    0 => Gate::q2(GateKind::Cx, q, p),
+                    1 => Gate::q2(GateKind::Cz, q, p),
+                    2 => Gate::q2(GateKind::Swap, q, p),
+                    3 => Gate::q2(GateKind::Cp(theta), q, p),
+                    4 => Gate::q2(GateKind::Rzz(theta), q, p),
+                    _ => Gate::q2(GateKind::Rxx(theta), q, p),
+                }
+            }
+        };
+        c.push(gate.unwrap()).unwrap();
+    }
+    c
+}
+
+/// PROPERTY: with a lossless (raw) codec, BMQSIM is bit-for-bit faithful to
+/// the dense engine for arbitrary circuits and block geometries.
+#[test]
+fn property_staged_engine_equals_dense_on_random_circuits() {
+    let mut seed_rng = SplitMix64::new(0xFEED);
+    for case in 0..25 {
+        let seed = seed_rng.next_u64();
+        let mut rng = SplitMix64::new(seed);
+        let n = 4 + (rng.next_below(6) as usize); // 4..9 qubits
+        let gates = 5 + (rng.next_below(60) as usize);
+        let b = 2 + (rng.next_below(n as u64 - 1) as usize); // 2..n
+        let inner = 2 + (rng.next_below(3) as usize);
+        let c = random_circuit(n, gates, &mut rng);
+
+        let ideal = DenseSim::new(SimConfig::default()).run(&c).unwrap().state.unwrap();
+        let mut config = SimConfig { block_qubits: b, inner_size: inner, ..SimConfig::default() };
+        config.codec = Codec::raw();
+        config.pipeline = PipelineConfig::new(1 + (case % 2), 1 + (case % 3));
+        let r = BmqSim::new(config).run(&c, true).unwrap();
+        let got = r.state.as_ref().unwrap();
+        for i in 0..ideal.len() {
+            assert!(
+                (ideal.re[i] - got.re[i]).abs() < 1e-12
+                    && (ideal.im[i] - got.im[i]).abs() < 1e-12,
+                "case {case} seed {seed:#x} n={n} b={b} inner={inner}: amp {i} differs"
+            );
+        }
+    }
+}
+
+/// PROPERTY: with the paper's lossy codec, fidelity stays above 0.99
+/// (the paper's headline) on random circuits.
+#[test]
+fn property_lossy_fidelity_above_paper_threshold() {
+    let mut seed_rng = SplitMix64::new(0xBEEF);
+    for case in 0..10 {
+        let seed = seed_rng.next_u64();
+        let mut rng = SplitMix64::new(seed);
+        let n = 6 + (rng.next_below(4) as usize);
+        let gates = 20 + (rng.next_below(80) as usize);
+        let c = random_circuit(n, gates, &mut rng);
+        let ideal = DenseSim::new(SimConfig::default()).run(&c).unwrap().state.unwrap();
+        let config = SimConfig { block_qubits: n - 3, ..SimConfig::default() };
+        let r = BmqSim::new(config).run(&c, true).unwrap();
+        let f = r.state.as_ref().unwrap().fidelity_normalized(&ideal);
+        assert!(f > 0.99, "case {case} seed {seed:#x}: fidelity {f}");
+    }
+}
+
+/// PROPERTY: sc19 and bmqsim agree with each other under a raw codec (the
+/// staging rewrite preserves semantics exactly).
+#[test]
+fn property_sc19_equals_bmqsim_raw() {
+    let mut seed_rng = SplitMix64::new(0xABCD);
+    for case in 0..8 {
+        let seed = seed_rng.next_u64();
+        let mut rng = SplitMix64::new(seed);
+        let n = 5 + (rng.next_below(3) as usize);
+        let c = random_circuit(n, 30, &mut rng);
+        let mut config = SimConfig { block_qubits: 3, ..SimConfig::default() };
+        config.codec = Codec::raw();
+        let a = Sc19Sim::new(config.clone(), 2).run(&c, true).unwrap();
+        let b = BmqSim::new(config).run(&c, true).unwrap();
+        let (sa, sb) = (a.state.as_ref().unwrap(), b.state.as_ref().unwrap());
+        for i in 0..sa.len() {
+            assert!(
+                (sa.re[i] - sb.re[i]).abs() < 1e-12 && (sa.im[i] - sb.im[i]).abs() < 1e-12,
+                "case {case} seed {seed:#x}: amp {i}"
+            );
+        }
+    }
+}
+
+/// PROPERTY: the two-level memory manager never exceeds its primary budget
+/// and never changes results, across random tight budgets.
+#[test]
+fn property_spill_respects_budget_and_preserves_results() {
+    let dir = std::env::temp_dir().join("bmqsim-int-spill");
+    let mut seed_rng = SplitMix64::new(0x5111);
+    for case in 0..6 {
+        let seed = seed_rng.next_u64();
+        let mut rng = SplitMix64::new(seed);
+        let n = 8;
+        let c = random_circuit(n, 40, &mut rng);
+        let base = {
+            let config = SimConfig { block_qubits: 4, ..SimConfig::default() };
+            BmqSim::new(config).run(&c, true).unwrap().state.unwrap()
+        };
+        let budget = 512 + (rng.next_below(4096) as usize);
+        let mut config = SimConfig { block_qubits: 4, ..SimConfig::default() };
+        config.memory_budget = Some(budget);
+        config.spill_dir = Some(dir.clone());
+        let r = BmqSim::new(config).run(&c, true).unwrap();
+        assert!(
+            r.mem.peak_primary_bytes <= budget,
+            "case {case} seed {seed:#x}: primary {} > budget {budget}",
+            r.mem.peak_primary_bytes
+        );
+        let f = r.state.as_ref().unwrap().fidelity_normalized(&base);
+        assert!(f > 1.0 - 1e-12, "case {case} seed {seed:#x}: spill changed state ({f})");
+    }
+}
+
+/// PROPERTY: codec round-trips respect the pointwise bound on adversarial
+/// plane shapes (constant, ramp, alternating, random, denormal).
+#[test]
+fn property_codec_bound_on_adversarial_planes() {
+    let mut rng = SplitMix64::new(0xC0DE);
+    let n = 4096;
+    let planes: Vec<Vec<f64>> = vec![
+        vec![0.0; n],
+        vec![1.0; n],
+        (0..n).map(|i| i as f64 * 1e-6).collect(),
+        (0..n).map(|i| if i % 2 == 0 { 1e-10 } else { -1e10 }).collect(),
+        (0..n).map(|_| rng.next_gaussian()).collect(),
+        (0..n).map(|_| f64::MIN_POSITIVE * (1.0 + rng.next_f64())).collect(),
+        (0..n)
+            .map(|i| if i % 37 == 0 { 0.0 } else { rng.next_gaussian() * 1e-150 })
+            .collect(),
+    ];
+    for (pi, plane) in planes.iter().enumerate() {
+        for eb in [1e-2, 1e-3, 1e-5] {
+            let codec = Codec::pointwise(eb);
+            let enc = codec.compress(plane).unwrap();
+            let dec = decompress_any(&enc).unwrap();
+            for (i, (&x, &y)) in plane.iter().zip(&dec).enumerate() {
+                if x == 0.0 {
+                    assert_eq!(y, 0.0, "plane {pi} eb {eb} idx {i}");
+                } else {
+                    let rel = (y - x).abs() / x.abs();
+                    assert!(rel <= eb * (1.0 + 1e-9), "plane {pi} eb {eb} idx {i}: {rel}");
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: group schedules tile the block set exactly once for random
+/// geometries (the routing invariant of the coordinator).
+#[test]
+fn property_group_schedules_tile_exactly() {
+    let mut rng = SplitMix64::new(0x9999);
+    for case in 0..200 {
+        let n = 4 + (rng.next_below(12) as usize);
+        let b = 1 + (rng.next_below(n as u64) as usize);
+        let layout = BlockLayout::new(n, b).unwrap();
+        let c = n - b;
+        // random inner subset of global bits
+        let mut inner: Vec<usize> =
+            (0..c).filter(|_| rng.next_f64() < 0.4).map(|g| b + g).collect();
+        inner.truncate(10);
+        let gs = layout.group_schedule(&inner).unwrap();
+        let mut seen = vec![false; layout.num_blocks()];
+        for g in 0..gs.num_groups() {
+            for id in gs.group_blocks(g) {
+                assert!(!seen[id], "case {case}: block {id} twice (n={n} b={b} inner={inner:?})");
+                seen[id] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "case {case}: blocks missed");
+    }
+}
+
+/// All 8 paper benchmarks, end to end, against the dense ideal.
+#[test]
+fn all_paper_benchmarks_meet_fidelity_headline() {
+    for name in generators::ALL {
+        let c = generators::build(name, 12, 42).unwrap();
+        let ideal = DenseSim::new(SimConfig::default()).run(&c).unwrap().state.unwrap();
+        let config = SimConfig { block_qubits: 8, ..SimConfig::default() };
+        let r = BmqSim::new(config).run(&c, true).unwrap();
+        let f = r.state.as_ref().unwrap().fidelity(&ideal);
+        assert!(f > 0.99, "{name}: fidelity {f} (paper headline >0.99)");
+    }
+}
+
+/// Deterministic results across repeated runs (same config, same seed).
+#[test]
+fn runs_are_deterministic() {
+    let c = generators::build("qaoa", 10, 7).unwrap();
+    let config = SimConfig { block_qubits: 6, ..SimConfig::default() };
+    let a = BmqSim::new(config.clone()).run(&c, true).unwrap().state.unwrap();
+    let b = BmqSim::new(config).run(&c, true).unwrap().state.unwrap();
+    assert_eq!(a.re, b.re);
+    assert_eq!(a.im, b.im);
+}
