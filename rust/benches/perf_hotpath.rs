@@ -1,8 +1,22 @@
-//! §Perf microbenchmarks: gate-kernel and codec throughput on the hot path.
-//! Self-timed (no criterion in the vendor set); prints GB/s and Mamps/s.
+//! §Perf microbenchmarks: gate-kernel, codec, and group-chain throughput
+//! on the hot path. Self-timed (no criterion in the vendor set); prints
+//! GB/s / Mamps/s tables and writes a machine-readable
+//! `BENCH_hotpath.json` next to the CWD, seeding the repo's perf
+//! trajectory.
+//!
+//! The codec section measures both the allocating path (`decompress` into
+//! a fresh Vec + copy into the destination — the pre-refactor engine hot
+//! path) and the zero-copy path (`decompress_into_with` + scratch arena),
+//! so the win of the `*_into` APIs is visible where it matters. The
+//! group-chain section runs the full fetch → decompress → apply →
+//! compress → store cycle the way `BmqSim::process_group` does.
+
 use bmqsim::circuit::{Gate, GateKind};
-use bmqsim::compress::Codec;
-use bmqsim::gates::apply_gate;
+use bmqsim::compress::{Codec, CodecScratch};
+use bmqsim::gates::{apply_gate, apply_gate_remapped};
+use bmqsim::memory::{BlockPayload, BlockStore};
+use bmqsim::pipeline::Scratch;
+use bmqsim::state::BlockLayout;
 use bmqsim::types::SplitMix64;
 use std::time::Instant;
 
@@ -16,7 +30,25 @@ fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
     t0.elapsed().as_secs_f64() / reps as f64
 }
 
+/// Minimal JSON writer (the vendor set has no serde; runtime::Json is
+/// parse-only). Values are (key, already-rendered-JSON-value) pairs.
+fn json_obj(fields: &[(String, String)]) -> String {
+    let inner: Vec<String> = fields.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+    format!("{{{}}}", inner.join(", "))
+}
+
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.4}")
+    } else {
+        "null".to_string()
+    }
+}
+
 fn main() {
+    let mut json_kernels: Vec<(String, String)> = Vec::new();
+    let mut json_codecs: Vec<(String, String)> = Vec::new();
+
     let n = 22; // 4M amplitudes, 64 MiB state
     let len = 1usize << n;
     let mut rng = SplitMix64::new(7);
@@ -25,14 +57,14 @@ fn main() {
     let bytes = (len * 16) as f64;
 
     println!("== gate kernels (n={n}, {} amps, state {:.0} MiB) ==", len, bytes / (1 << 20) as f64);
-    for (label, gate) in [
-        ("h (dense 1q)", Gate::q1(GateKind::H, 10).unwrap()),
-        ("x (perm 1q)", Gate::q1(GateKind::X, 10).unwrap()),
-        ("rz (diag 1q)", Gate::q1(GateKind::Rz(0.3), 10).unwrap()),
-        ("t  (diag 1q)", Gate::q1(GateKind::T, 10).unwrap()),
-        ("cx (perm 2q)", Gate::q2(GateKind::Cx, 12, 3).unwrap()),
-        ("cp (diag 2q)", Gate::q2(GateKind::Cp(0.7), 12, 3).unwrap()),
-        ("rxx (dense 2q)", Gate::q2(GateKind::Rxx(0.4), 12, 3).unwrap()),
+    for (label, key, gate) in [
+        ("h (dense 1q)", "h", Gate::q1(GateKind::H, 10).unwrap()),
+        ("x (perm 1q)", "x", Gate::q1(GateKind::X, 10).unwrap()),
+        ("rz (diag 1q)", "rz", Gate::q1(GateKind::Rz(0.3), 10).unwrap()),
+        ("t  (diag 1q)", "t", Gate::q1(GateKind::T, 10).unwrap()),
+        ("cx (perm 2q)", "cx", Gate::q2(GateKind::Cx, 12, 3).unwrap()),
+        ("cp (diag 2q)", "cp", Gate::q2(GateKind::Cp(0.7), 12, 3).unwrap()),
+        ("rxx (dense 2q)", "rxx", Gate::q2(GateKind::Rxx(0.4), 12, 3).unwrap()),
     ] {
         let secs = time_it(5, || apply_gate(&mut re, &mut im, &gate));
         println!(
@@ -41,6 +73,13 @@ fn main() {
             bytes / secs / 1e9,
             len as f64 / secs / 1e6
         );
+        json_kernels.push((
+            key.to_string(),
+            json_obj(&[
+                ("gbps".into(), jnum(bytes / secs / 1e9)),
+                ("mamps".into(), jnum(len as f64 / secs / 1e6)),
+            ]),
+        ));
     }
 
     // memcpy roofline reference
@@ -49,7 +88,16 @@ fn main() {
         dst.copy_from_slice(&re);
         std::hint::black_box(&mut dst);
     });
-    println!("  {:<15} {:>8.2} ms   {:>7.2} GB/s   (read+write of one plane)", "memcpy ref", secs * 1e3, (len * 16) as f64 / secs / 1e9);
+    println!(
+        "  {:<15} {:>8.2} ms   {:>7.2} GB/s   (read+write of one plane)",
+        "memcpy ref",
+        secs * 1e3,
+        (len * 16) as f64 / secs / 1e9
+    );
+    json_kernels.push((
+        "memcpy_ref".into(),
+        json_obj(&[("gbps".into(), jnum((len * 16) as f64 / secs / 1e9))]),
+    ));
 
     println!("\n== codecs (plane = 2^20 doubles, 8 MiB) ==");
     let plen = 1 << 20;
@@ -59,22 +107,188 @@ fn main() {
         sparse[i * (plen / 64)] = 0.1;
     }
     let pbytes = (plen * 8) as f64;
-    for (label, data) in [("dense gaussian", &dense), ("sparse (64 nz)", &sparse)] {
+    let mut scratch = CodecScratch::new();
+    for (label, key, data) in
+        [("dense gaussian", "dense_gaussian", &dense), ("sparse (64 nz)", "sparse_64nz", &sparse)]
+    {
+        let mut per_codec: Vec<(String, String)> = Vec::new();
         for codec in [Codec::pointwise(1e-3), Codec::absolute(1e-3), Codec::raw()] {
             let enc = codec.compress(data).unwrap();
+            let mut target = vec![0.0f64; plen];
+            let mut outbuf: Vec<u8> = Vec::new();
+            // Pre-refactor paths: fresh allocations each call, plus the
+            // plane copy decompress forced on the engine.
             let csecs = time_it(3, || {
-                let _ = codec.compress(data).unwrap();
+                let _ = std::hint::black_box(codec.compress(data).unwrap());
             });
             let dsecs = time_it(3, || {
-                let _ = codec.decompress(&enc).unwrap();
+                let v = codec.decompress(&enc).unwrap();
+                target.copy_from_slice(&v);
+                std::hint::black_box(&mut target);
+            });
+            // Zero-copy paths: reused output + scratch arena.
+            let cisecs = time_it(3, || {
+                codec.compress_into_with(data, &mut outbuf, &mut scratch).unwrap();
+                std::hint::black_box(&mut outbuf);
+            });
+            let disecs = time_it(3, || {
+                codec.decompress_into_with(&enc, &mut target, &mut scratch).unwrap();
+                std::hint::black_box(&mut target);
             });
             println!(
-                "  {label:<15} {:<14} ratio {:>8.1}x   comp {:>7.2} GB/s   decomp {:>7.2} GB/s",
+                "  {label:<15} {:<14} ratio {:>7.1}x   comp {:>6.2} GB/s (into {:>6.2})   decomp {:>6.2} GB/s (into {:>6.2}, {:.2}x)",
                 codec.name(),
                 pbytes / enc.len() as f64,
                 pbytes / csecs / 1e9,
-                pbytes / dsecs / 1e9
+                pbytes / cisecs / 1e9,
+                pbytes / dsecs / 1e9,
+                pbytes / disecs / 1e9,
+                dsecs / disecs
             );
+            per_codec.push((
+                codec.name().to_string(),
+                json_obj(&[
+                    ("ratio".into(), jnum(pbytes / enc.len() as f64)),
+                    ("comp_gbps".into(), jnum(pbytes / csecs / 1e9)),
+                    ("comp_into_gbps".into(), jnum(pbytes / cisecs / 1e9)),
+                    ("decomp_gbps".into(), jnum(pbytes / dsecs / 1e9)),
+                    ("decomp_into_gbps".into(), jnum(pbytes / disecs / 1e9)),
+                    ("decomp_into_speedup".into(), jnum(dsecs / disecs)),
+                ]),
+            ));
         }
+        json_codecs.push((key.to_string(), json_obj(&per_codec)));
+    }
+
+    // ---- Full group-chain benchmark: fetch → decompress → apply →
+    // compress → store, the shape of BmqSim::process_group. ----
+    println!("\n== group chain (n=20, b=16: 16 blocks, groups of 4, glen=2^18) ==");
+    let layout = BlockLayout::new(20, 16).unwrap();
+    let schedule = layout.group_schedule(&[16, 18]).unwrap();
+    let block_len = layout.block_len();
+    let glen = schedule.group_len();
+    let codec = Codec::pointwise(1e-3);
+    let gates = [
+        Gate::q1(GateKind::H, 3).unwrap(),
+        Gate::q2(GateKind::Cx, 17, 2).unwrap(),
+        Gate::q1(GateKind::Rz(0.41), 16).unwrap(),
+    ];
+    let remapped: Vec<(Gate, Vec<usize>)> = gates
+        .iter()
+        .map(|g| {
+            let bits: Vec<usize> = g.targets().iter().map(|&q| schedule.buffer_bit(q)).collect();
+            (*g, bits)
+        })
+        .collect();
+
+    let init_store = |rng: &mut SplitMix64| -> BlockStore {
+        let store = BlockStore::unbounded();
+        for id in 0..layout.num_blocks() {
+            let r: Vec<f64> = (0..block_len).map(|_| rng.next_gaussian() * 1e-2).collect();
+            let i: Vec<f64> = (0..block_len).map(|_| rng.next_gaussian() * 1e-2).collect();
+            store
+                .put(
+                    id,
+                    BlockPayload {
+                        re: codec.compress(&r).unwrap(),
+                        im: codec.compress(&i).unwrap(),
+                    },
+                )
+                .unwrap();
+        }
+        store
+    };
+
+    let total_amps = (layout.num_blocks() * block_len) as f64;
+    let reps = 3usize;
+
+    // Zero-copy chain: scratch arena + *_into APIs + recycled payloads.
+    let store = init_store(&mut rng);
+    let mut s = Scratch::new();
+    let zc_secs = time_it(reps, || {
+        for gidx in 0..schedule.num_groups() {
+            s.ensure_planes(glen);
+            schedule.group_blocks_into(gidx, &mut s.block_ids);
+            s.payloads.clear();
+            for &id in s.block_ids.iter() {
+                s.payloads.push(store.take(id).unwrap());
+            }
+            for (slot, p) in s.payloads.iter().enumerate() {
+                let dst = slot * block_len..(slot + 1) * block_len;
+                codec.decompress_into_with(&p.re, &mut s.re[dst.clone()], &mut s.codec).unwrap();
+                codec.decompress_into_with(&p.im, &mut s.im[dst], &mut s.codec).unwrap();
+            }
+            for (gate, bits) in &remapped {
+                apply_gate_remapped(&mut s.re, &mut s.im, gate, bits);
+            }
+            for (slot, p) in s.payloads.iter_mut().enumerate() {
+                let src = slot * block_len..(slot + 1) * block_len;
+                codec.compress_into_with(&s.re[src.clone()], &mut p.re, &mut s.codec).unwrap();
+                codec.compress_into_with(&s.im[src], &mut p.im, &mut s.codec).unwrap();
+            }
+            for (p, &id) in s.payloads.drain(..).zip(s.block_ids.iter()) {
+                store.put(id, p).unwrap();
+            }
+        }
+    });
+
+    // Allocating chain: the pre-refactor shape (fresh planes per group,
+    // temp Vec + copy on decompress, fresh Vec per compress).
+    let store = init_store(&mut rng);
+    let alloc_secs = time_it(reps, || {
+        for gidx in 0..schedule.num_groups() {
+            let block_ids = schedule.group_blocks(gidx);
+            let payloads: Vec<BlockPayload> =
+                block_ids.iter().map(|&id| store.take(id).unwrap()).collect();
+            let mut re = vec![0.0f64; glen];
+            let mut im = vec![0.0f64; glen];
+            for (slot, p) in payloads.iter().enumerate() {
+                let r = codec.decompress(&p.re).unwrap();
+                let i = codec.decompress(&p.im).unwrap();
+                re[slot * block_len..(slot + 1) * block_len].copy_from_slice(&r);
+                im[slot * block_len..(slot + 1) * block_len].copy_from_slice(&i);
+            }
+            for (gate, bits) in &remapped {
+                apply_gate_remapped(&mut re, &mut im, gate, bits);
+            }
+            for (slot, &id) in block_ids.iter().enumerate() {
+                let r = codec.compress(&re[slot * block_len..(slot + 1) * block_len]).unwrap();
+                let i = codec.compress(&im[slot * block_len..(slot + 1) * block_len]).unwrap();
+                store.put(id, BlockPayload { re: r, im: i }).unwrap();
+            }
+        }
+    });
+
+    let zc_amps = total_amps / zc_secs;
+    let alloc_amps = total_amps / alloc_secs;
+    println!(
+        "  zero-copy chain  {:>8.2} ms/pass   {:>8.2} Mamp/s",
+        zc_secs * 1e3,
+        zc_amps / 1e6
+    );
+    println!(
+        "  allocating chain {:>8.2} ms/pass   {:>8.2} Mamp/s",
+        alloc_secs * 1e3,
+        alloc_amps / 1e6
+    );
+    println!("  chain speedup    {:>8.2}x", alloc_secs / zc_secs);
+    let json_chain = json_obj(&[
+        ("amps_per_s".into(), jnum(zc_amps)),
+        ("alloc_amps_per_s".into(), jnum(alloc_amps)),
+        ("speedup".into(), jnum(alloc_secs / zc_secs)),
+        ("glen".into(), format!("{glen}")),
+        ("groups".into(), format!("{}", schedule.num_groups())),
+    ]);
+
+    // ---- Machine-readable output ----
+    let doc = json_obj(&[
+        ("bench".into(), "\"perf_hotpath\"".into()),
+        ("gate_kernels".into(), json_obj(&json_kernels)),
+        ("codecs".into(), json_obj(&json_codecs)),
+        ("group_chain".into(), json_chain),
+    ]);
+    match std::fs::write("BENCH_hotpath.json", doc + "\n") {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_hotpath.json: {e}"),
     }
 }

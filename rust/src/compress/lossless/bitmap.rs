@@ -22,8 +22,17 @@ const MODE_PRESCAN_HUFF: u8 = 2;
 
 /// Pack a bool-per-element sign slice into bitmap words (LSB-first).
 pub fn pack_bits(bits: impl ExactSizeIterator<Item = bool>) -> (Vec<u64>, usize) {
+    let mut words = Vec::new();
+    let nbits = pack_bits_into(bits, &mut words);
+    (words, nbits)
+}
+
+/// [`pack_bits`] into a reused word buffer: clears `words` (capacity is
+/// retained) and returns the bit count.
+pub fn pack_bits_into(bits: impl ExactSizeIterator<Item = bool>, words: &mut Vec<u64>) -> usize {
     let nbits = bits.len();
-    let mut words = Vec::with_capacity(nbits.div_ceil(64));
+    words.clear();
+    words.reserve(nbits.div_ceil(64));
     // Word-at-a-time accumulation (perf §Perf: the indexed per-bit loop was
     // ~12% of codec time; this form keeps the word in a register).
     let mut acc = 0u64;
@@ -40,7 +49,7 @@ pub fn pack_bits(bits: impl ExactSizeIterator<Item = bool>) -> (Vec<u64>, usize)
     if fill > 0 {
         words.push(acc);
     }
-    (words, nbits)
+    nbits
 }
 
 /// Read bit `i` of a packed bitmap.
@@ -52,60 +61,89 @@ pub fn get_bit(words: &[u64], i: usize) -> bool {
 /// Compress a bitmap. `prescan=false` disables the word-classification
 /// stage (the A1 ablation knob) and stores raw words.
 pub fn compress_bitmap(words: &[u64], nbits: usize, prescan: bool) -> Vec<u8> {
+    let mut out = Vec::new();
+    let (mut sa, mut sb) = (Vec::new(), Vec::new());
+    compress_bitmap_into(words, nbits, prescan, &mut out, &mut sa, &mut sb);
+    out
+}
+
+/// [`compress_bitmap`] into a reused output buffer (`out` is cleared, its
+/// capacity retained) with two reusable scratch buffers for the prescan
+/// body and its Huffman pass. Byte-for-byte identical to the allocating
+/// path: candidate encodings differ only in payload (headers are equal
+/// length), so the winner is selected by comparing payload sizes.
+pub fn compress_bitmap_into(
+    words: &[u64],
+    nbits: usize,
+    prescan: bool,
+    out: &mut Vec<u8>,
+    sa: &mut Vec<u8>,
+    sb: &mut Vec<u8>,
+) {
     debug_assert!(words.len() == nbits.div_ceil(64));
-    let mut raw = Vec::with_capacity(words.len() * 8 + 10);
-    varint::write_u64(&mut raw, nbits as u64);
-    raw.push(MODE_RAW);
-    for &w in words {
-        raw.extend_from_slice(&w.to_le_bytes());
-    }
-    if !prescan {
-        return raw;
+    out.clear();
+    let raw_payload = words.len() * 8;
+
+    let mut mode = MODE_RAW;
+    if prescan {
+        // Pre-scan: classify words, RLE same-class runs -> `sa`.
+        sa.clear();
+        let mut i = 0usize;
+        while i < words.len() {
+            let class = classify(words[i], tail_mask(nbits, i, words.len()));
+            let mut j = i + 1;
+            while j < words.len() && classify(words[j], tail_mask(nbits, j, words.len())) == class {
+                j += 1;
+            }
+            let run = (j - i) as u64;
+            varint::write_u64(sa, class | (run << 2));
+            if class == CLASS_MIXED {
+                for &w in &words[i..j] {
+                    sa.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            i = j;
+        }
+        // Algorithm 2 line 17: lossless-encode the prescan result when it
+        // wins; fall back to the raw words when even the prescan loses.
+        huffman::encode_into(sa, sb);
+        if sb.len() < sa.len() && sb.len() < raw_payload {
+            mode = MODE_PRESCAN_HUFF;
+        } else if sa.len() < raw_payload {
+            mode = MODE_PRESCAN;
+        }
     }
 
-    // Pre-scan: classify words, RLE same-class runs.
-    let mut body = Vec::with_capacity(words.len());
-    let mut i = 0usize;
-    while i < words.len() {
-        let class = classify(words[i], tail_mask(nbits, i, words.len()));
-        let mut j = i + 1;
-        while j < words.len() && classify(words[j], tail_mask(nbits, j, words.len())) == class {
-            j += 1;
-        }
-        let run = (j - i) as u64;
-        varint::write_u64(&mut body, class | (run << 2));
-        if class == CLASS_MIXED {
-            for &w in &words[i..j] {
-                body.extend_from_slice(&w.to_le_bytes());
+    varint::write_u64(out, nbits as u64);
+    out.push(mode);
+    match mode {
+        MODE_PRESCAN_HUFF => out.extend_from_slice(sb),
+        MODE_PRESCAN => out.extend_from_slice(sa),
+        _ => {
+            out.reserve(raw_payload);
+            for &w in words {
+                out.extend_from_slice(&w.to_le_bytes());
             }
         }
-        i = j;
-    }
-    let mut pres = Vec::with_capacity(body.len() + 10);
-    varint::write_u64(&mut pres, nbits as u64);
-    pres.push(MODE_PRESCAN);
-    pres.extend_from_slice(&body);
-
-    // Algorithm 2 line 17: lossless-encode the prescan result when it wins.
-    let huffed = huffman::encode(&body);
-    if huffed.len() < body.len() {
-        let mut ph = Vec::with_capacity(huffed.len() + 10);
-        varint::write_u64(&mut ph, nbits as u64);
-        ph.push(MODE_PRESCAN_HUFF);
-        ph.extend_from_slice(&huffed);
-        if ph.len() < pres.len() && ph.len() < raw.len() {
-            return ph;
-        }
-    }
-    if pres.len() < raw.len() {
-        pres
-    } else {
-        raw
     }
 }
 
 /// Inverse of [`compress_bitmap`]: returns `(words, nbits)`.
 pub fn decompress_bitmap(bytes: &[u8]) -> Result<(Vec<u64>, usize)> {
+    let mut words = Vec::new();
+    let mut hbuf = Vec::new();
+    let nbits = decompress_bitmap_into(bytes, &mut words, &mut hbuf)?;
+    Ok((words, nbits))
+}
+
+/// [`decompress_bitmap`] into a reused word buffer (`words` is cleared,
+/// capacity retained); `hbuf` is a reusable scratch for the Huffman pass.
+/// Returns the bit count.
+pub fn decompress_bitmap_into(
+    bytes: &[u8],
+    words: &mut Vec<u64>,
+    hbuf: &mut Vec<u8>,
+) -> Result<usize> {
     let mut pos = 0usize;
     let nbits = varint::read_u64(bytes, &mut pos)? as usize;
     let mode = *bytes
@@ -113,29 +151,36 @@ pub fn decompress_bitmap(bytes: &[u8]) -> Result<(Vec<u64>, usize)> {
         .ok_or_else(|| Error::Codec("bitmap: missing mode".into()))?;
     pos += 1;
     let n_words = nbits.div_ceil(64);
+    words.clear();
     match mode {
         MODE_RAW => {
             let need = n_words * 8;
             if bytes.len() < pos + need {
                 return Err(Error::Codec("bitmap: truncated raw words".into()));
             }
-            let words = bytes[pos..pos + need]
-                .chunks_exact(8)
-                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            Ok((words, nbits))
+            words.reserve(n_words);
+            words.extend(
+                bytes[pos..pos + need]
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap())),
+            );
+            Ok(nbits)
         }
-        MODE_PRESCAN => decode_prescan(&bytes[pos..], nbits, n_words),
+        MODE_PRESCAN => {
+            decode_prescan(&bytes[pos..], nbits, n_words, words)?;
+            Ok(nbits)
+        }
         MODE_PRESCAN_HUFF => {
-            let body = huffman::decode(&bytes[pos..])?;
-            decode_prescan(&body, nbits, n_words)
+            huffman::decode_into(&bytes[pos..], hbuf)?;
+            decode_prescan(hbuf, nbits, n_words, words)?;
+            Ok(nbits)
         }
         other => Err(Error::Codec(format!("bitmap: unknown mode {other}"))),
     }
 }
 
-fn decode_prescan(body: &[u8], nbits: usize, n_words: usize) -> Result<(Vec<u64>, usize)> {
-    let mut words = Vec::with_capacity(n_words);
+fn decode_prescan(body: &[u8], nbits: usize, n_words: usize, words: &mut Vec<u64>) -> Result<()> {
+    words.reserve(n_words);
     let mut pos = 0usize;
     while words.len() < n_words {
         let tag = varint::read_u64(body, &mut pos)?;
@@ -146,15 +191,7 @@ fn decode_prescan(body: &[u8], nbits: usize, n_words: usize) -> Result<(Vec<u64>
         }
         match class {
             CLASS_ZERO => words.extend(std::iter::repeat(0u64).take(run)),
-            CLASS_ONES => {
-                for k in 0..run {
-                    let idx = words.len() + k;
-                    let _ = idx;
-                }
-                for _ in 0..run {
-                    words.push(u64::MAX);
-                }
-            }
+            CLASS_ONES => words.extend(std::iter::repeat(u64::MAX).take(run)),
             CLASS_MIXED => {
                 if body.len() < pos + run * 8 {
                     return Err(Error::Codec("bitmap: truncated mixed words".into()));
@@ -173,7 +210,7 @@ fn decode_prescan(body: &[u8], nbits: usize, n_words: usize) -> Result<(Vec<u64>
             *last &= (1u64 << (nbits % 64)) - 1;
         }
     }
-    Ok((words, nbits))
+    Ok(())
 }
 
 /// Class of one word; the tail word is classified with padding masked out.

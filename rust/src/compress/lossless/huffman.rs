@@ -5,7 +5,6 @@
 //! Code lengths are canonical, so only lengths ship; codes are rebuilt on
 //! both sides with the same assignment rule.
 
-use super::bitio::BitWriter;
 use super::varint;
 use crate::types::{Error, Result};
 
@@ -15,6 +14,14 @@ const MAX_CODE_LEN: u32 = 48;
 /// incompressible come out slightly larger (header overhead); callers that
 /// care (the codec framing) compare against raw and keep the smaller.
 pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    encode_into(data, &mut out);
+    out
+}
+
+/// [`encode`] writing into a reused buffer: clears `out` (capacity is
+/// retained) and appends the identical byte stream.
+pub fn encode_into(data: &[u8], out: &mut Vec<u8>) {
     let mut freq = [0u64; 256];
     for &b in data {
         freq[b as usize] += 1;
@@ -22,15 +29,15 @@ pub fn encode(data: &[u8]) -> Vec<u8> {
     let lens = code_lengths(&freq);
     let codes = canonical_codes(&lens);
 
-    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    out.clear();
     // Symbol table: count + (symbol, len) pairs.
     let used: Vec<u8> = (0..256u16).filter(|&s| lens[s as usize] > 0).map(|s| s as u8).collect();
-    varint::write_u64(&mut out, used.len() as u64);
+    varint::write_u64(out, used.len() as u64);
     for &s in &used {
         out.push(s);
         out.push(lens[s as usize] as u8);
     }
-    varint::write_u64(&mut out, data.len() as u64);
+    varint::write_u64(out, data.len() as u64);
     // Dedicated bit accumulator (perf §Perf): codes are <= 48 bits, so an
     // u64 window + whole-byte flushes beats the general BitWriter loop.
     let mut acc: u64 = 0;
@@ -49,11 +56,19 @@ pub fn encode(data: &[u8]) -> Vec<u8> {
     if nbits > 0 {
         out.push(acc as u8);
     }
-    out
 }
 
 /// Inverse of [`encode`].
 pub fn decode(bytes: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    decode_into(bytes, &mut out)?;
+    Ok(out)
+}
+
+/// [`decode`] writing into a reused buffer: clears `out` (capacity is
+/// retained) and appends the decoded bytes.
+pub fn decode_into(bytes: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
     let mut pos = 0usize;
     let n_sym = varint::read_u64(bytes, &mut pos)? as usize;
     if n_sym > 256 {
@@ -74,7 +89,7 @@ pub fn decode(bytes: &[u8]) -> Result<Vec<u8>> {
     }
     let n_out = varint::read_u64(bytes, &mut pos)? as usize;
     if n_out == 0 {
-        return Ok(Vec::new());
+        return Ok(());
     }
     if n_sym == 0 {
         return Err(Error::Codec("huffman: no symbols but nonzero output".into()));
@@ -124,7 +139,7 @@ pub fn decode(bytes: &[u8]) -> Result<Vec<u8>> {
 
     let payload = &bytes[pos..];
     let total_bits = payload.len() * 8;
-    let mut out = Vec::with_capacity(n_out);
+    out.reserve(n_out);
     let mut bitpos = 0usize;
 
     // Branch-light bit peek: one unaligned 8-byte load for the common case
@@ -176,7 +191,7 @@ pub fn decode(bytes: &[u8]) -> Result<Vec<u8>> {
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Code lengths via a simple heap-free Huffman build (256-symbol alphabet,

@@ -11,7 +11,7 @@
 //! element, not just typical ones.
 
 use super::lossless::varint;
-use super::{residual, MODE_ABS};
+use super::{residual, CodecScratch, MODE_ABS};
 use crate::types::{Error, Result};
 
 /// Quantized codes above this magnitude go to the outlier table (guards
@@ -19,12 +19,29 @@ use crate::types::{Error, Result};
 const MAX_CODE: f64 = 4.0e15;
 
 pub fn compress(data: &[f64], eb: f64) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    compress_into_with(data, eb, &mut out, &mut CodecScratch::new())?;
+    Ok(out)
+}
+
+/// [`compress`] into a reused output buffer (`out` is cleared, capacity
+/// retained) with all intermediates drawn from `scratch`. Byte-for-byte
+/// identical to the allocating path.
+pub fn compress_into_with(
+    data: &[f64],
+    eb: f64,
+    out: &mut Vec<u8>,
+    s: &mut CodecScratch,
+) -> Result<()> {
     if !(eb > 0.0) || !eb.is_finite() {
         return Err(Error::Codec(format!("absolute codec needs eb > 0, got {eb}")));
     }
     let twoeb = 2.0 * eb;
-    let mut codes = Vec::with_capacity(data.len());
-    let mut outliers: Vec<(usize, f64)> = Vec::new();
+    let codes = &mut s.codes;
+    let outliers = &mut s.outliers;
+    codes.clear();
+    codes.reserve(data.len());
+    outliers.clear();
     for (i, &x) in data.iter().enumerate() {
         let q = x / twoeb;
         if !x.is_finite() || q.abs() > MAX_CODE {
@@ -36,22 +53,23 @@ pub fn compress(data: &[f64], eb: f64) -> Result<Vec<u8>> {
         }
     }
 
-    let body = residual::encode(&codes);
-    let mut out = Vec::with_capacity(body.len() + outliers.len() * 10 + 16);
+    out.clear();
     out.push(MODE_ABS);
     out.extend_from_slice(&eb.to_le_bytes());
-    varint::write_u64(&mut out, outliers.len() as u64);
+    varint::write_u64(out, outliers.len() as u64);
     let mut prev = 0usize;
-    for &(idx, x) in &outliers {
-        varint::write_u64(&mut out, (idx - prev) as u64);
+    for &(idx, x) in outliers.iter() {
+        varint::write_u64(out, (idx - prev) as u64);
         out.extend_from_slice(&x.to_le_bytes());
         prev = idx;
     }
-    out.extend_from_slice(&body);
-    Ok(out)
+    residual::encode_into(codes, out, &mut s.buf_a, &mut s.buf_b);
+    Ok(())
 }
 
-pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
+/// Parse the fixed header + outlier table; returns the scan position of
+/// the residual body. `outliers` (when given) receives the side table.
+fn parse_header(bytes: &[u8], mut outliers: Option<&mut Vec<(usize, f64)>>) -> Result<(f64, usize)> {
     if bytes.first() != Some(&MODE_ABS) {
         return Err(Error::Codec("not an absolute-mode payload".into()));
     }
@@ -62,7 +80,10 @@ pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
     let eb = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
     pos += 8;
     let n_out = varint::read_u64(bytes, &mut pos)? as usize;
-    let mut outliers = Vec::with_capacity(n_out);
+    if let Some(o) = outliers.as_mut() {
+        o.clear();
+        o.reserve(n_out);
+    }
     let mut prev = 0usize;
     for _ in 0..n_out {
         let d = varint::read_u64(bytes, &mut pos)? as usize;
@@ -72,17 +93,46 @@ pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
         let x = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
         pos += 8;
         prev += d;
-        outliers.push((prev, x));
+        if let Some(o) = outliers.as_mut() {
+            o.push((prev, x));
+        }
     }
-    let codes = residual::decode(&bytes[pos..])?;
+    Ok((eb, pos))
+}
+
+/// Decoded element count — header peek only (no residual decode).
+pub fn decoded_len(bytes: &[u8]) -> Result<usize> {
+    let (_, pos) = parse_header(bytes, None)?;
+    residual::encoded_count(&bytes[pos..])
+}
+
+pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
+    let mut data = vec![0.0f64; decoded_len(bytes)?];
+    decompress_into_with(bytes, &mut data, &mut CodecScratch::new())?;
+    Ok(data)
+}
+
+/// [`decompress`] directly into `out`, which must hold exactly
+/// [`decoded_len`] elements; every slot is overwritten.
+pub fn decompress_into_with(bytes: &[u8], out: &mut [f64], s: &mut CodecScratch) -> Result<()> {
+    let (eb, pos) = parse_header(bytes, Some(&mut s.outliers))?;
+    residual::decode_into(&bytes[pos..], &mut s.codes, &mut s.buf_a)?;
+    if out.len() != s.codes.len() {
+        return Err(Error::Codec(format!(
+            "abs: output buffer holds {} elements, payload has {}",
+            out.len(),
+            s.codes.len()
+        )));
+    }
     let twoeb = 2.0 * eb;
-    let mut data: Vec<f64> = codes.iter().map(|&c| c as f64 * twoeb).collect();
-    for (idx, x) in outliers {
-        *data
-            .get_mut(idx)
+    for (slot, &c) in out.iter_mut().zip(s.codes.iter()) {
+        *slot = c as f64 * twoeb;
+    }
+    for &(idx, x) in &s.outliers {
+        *out.get_mut(idx)
             .ok_or_else(|| Error::Codec("abs: outlier index out of range".into()))? = x;
     }
-    Ok(data)
+    Ok(())
 }
 
 #[cfg(test)]

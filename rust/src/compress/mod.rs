@@ -16,6 +16,23 @@
 //!   SC19-Sim baseline and the A2 ablation.
 //! * [`CodecKind::Raw`] — bit-exact passthrough (compression disabled),
 //!   used for the Fig. 11 no-compression comparison.
+//!
+//! ## Zero-allocation hot path (§Perf, DESIGN.md)
+//!
+//! Every codec comes in three flavors:
+//! * allocating ([`Codec::compress`], [`Codec::decompress`]) — one-shot
+//!   convenience; returns fresh buffers;
+//! * `*_into` ([`Codec::compress_into`], [`Codec::decompress_into`]) —
+//!   writes into a caller buffer, deleting the temp-Vec-plus-copy on the
+//!   engine hot path;
+//! * `*_into_with` — additionally reuses a [`CodecScratch`] arena for all
+//!   intermediate buffers (quantized codes, bitmap words, entropy-stage
+//!   bytes), making steady-state (de)compression allocation-free.
+//!
+//! All three are byte-for-byte (encode) and bit-for-bit (decode)
+//! equivalent; the property tests in `tests/codec_into.rs` pin this.
+//! `decompress_into` requires `out.len()` to equal the encoded element
+//! count exactly and fully overwrites `out` (dirty buffers are fine).
 
 pub mod lossless;
 pub mod lossy;
@@ -33,6 +50,31 @@ pub enum CodecKind {
     Absolute,
     /// No compression; exact bytes.
     Raw,
+}
+
+/// Reusable intermediate buffers for the codec hot path. One per pipeline
+/// worker (owned by `pipeline::Scratch`); creation is allocation-free, the
+/// buffers grow on first use and are recycled afterwards.
+#[derive(Debug, Default)]
+pub struct CodecScratch {
+    /// Quantized integer codes (sized from the zero-bitmap popcount).
+    codes: Vec<i64>,
+    /// Outlier side table (index, exact bits).
+    outliers: Vec<(usize, f64)>,
+    /// Packed sign-bitmap words.
+    sign_words: Vec<u64>,
+    /// Packed zero-bitmap words.
+    zero_words: Vec<u64>,
+    /// Entropy-stage byte scratch (bitmap/residual bodies, Huffman pass).
+    buf_a: Vec<u8>,
+    buf_b: Vec<u8>,
+    buf_c: Vec<u8>,
+}
+
+impl CodecScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 /// A configured plane compressor. Cheap to clone/share.
@@ -63,22 +105,62 @@ impl Codec {
         Codec { kind: CodecKind::PointwiseRel, error_bound: b_r, prescan: true }
     }
 
-    /// Compress one plane.
+    /// Compress one plane into a fresh buffer.
     pub fn compress(&self, data: &[f64]) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.compress_into(data, &mut out)?;
+        Ok(out)
+    }
+
+    /// Compress one plane into a reused buffer (`out` is cleared, its
+    /// capacity retained). Byte-for-byte identical to [`Codec::compress`].
+    pub fn compress_into(&self, data: &[f64], out: &mut Vec<u8>) -> Result<()> {
+        self.compress_into_with(data, out, &mut CodecScratch::new())
+    }
+
+    /// [`Codec::compress_into`] with an explicit scratch arena — the
+    /// steady-state zero-allocation form the pipeline workers use.
+    pub fn compress_into_with(
+        &self,
+        data: &[f64],
+        out: &mut Vec<u8>,
+        scratch: &mut CodecScratch,
+    ) -> Result<()> {
         match self.kind {
-            CodecKind::PointwiseRel => pointwise::compress(data, self.error_bound, self.prescan),
-            CodecKind::Absolute => lossy::compress(data, self.error_bound),
-            CodecKind::Raw => Ok(raw_compress(data)),
+            CodecKind::PointwiseRel => {
+                pointwise::compress_into_with(data, self.error_bound, self.prescan, out, scratch)
+            }
+            CodecKind::Absolute => lossy::compress_into_with(data, self.error_bound, out, scratch),
+            CodecKind::Raw => {
+                raw_compress_into(data, out);
+                Ok(())
+            }
         }
     }
 
-    /// Decompress one plane (appends to a fresh Vec).
+    /// Decompress one plane into a fresh Vec.
     pub fn decompress(&self, bytes: &[u8]) -> Result<Vec<f64>> {
         // The wire format is self-describing (mode byte), so decompression
         // does not depend on the configured kind — a codec can read blocks
         // written by another configuration (needed when an engine mixes
         // raw init blocks with compressed updates).
         decompress_any(bytes)
+    }
+
+    /// Decompress one plane directly into `out`, which must have exactly
+    /// the encoded length ([`decoded_len`]). Fully overwrites `out`.
+    pub fn decompress_into(&self, bytes: &[u8], out: &mut [f64]) -> Result<()> {
+        decompress_any_into(bytes, out)
+    }
+
+    /// [`Codec::decompress_into`] with an explicit scratch arena.
+    pub fn decompress_into_with(
+        &self,
+        bytes: &[u8],
+        out: &mut [f64],
+        scratch: &mut CodecScratch,
+    ) -> Result<()> {
+        decompress_any_into_with(bytes, out, scratch)
     }
 
     pub fn name(&self) -> &'static str {
@@ -95,34 +177,82 @@ pub(crate) const MODE_RAW: u8 = 0x10;
 pub(crate) const MODE_ABS: u8 = 0x11;
 pub(crate) const MODE_POINTWISE: u8 = 0x12;
 
-fn raw_compress(data: &[f64]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(1 + 8 + data.len() * 8);
+fn raw_compress_into(data: &[f64], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(1 + 9 + data.len() * 8);
     out.push(MODE_RAW);
-    lossless::varint::write_u64(&mut out, data.len() as u64);
+    lossless::varint::write_u64(out, data.len() as u64);
     for &x in data {
         out.extend_from_slice(&x.to_le_bytes());
     }
-    out
 }
 
-fn raw_decompress(bytes: &[u8]) -> Result<Vec<f64>> {
+fn raw_decoded_len(bytes: &[u8]) -> Result<usize> {
     let mut pos = 1usize;
     let n = lossless::varint::read_u64(bytes, &mut pos)? as usize;
+    // Validate before anyone allocates n elements from a corrupt header
+    // (division avoids overflow on absurd n).
+    if n > (bytes.len() - pos) / 8 {
+        return Err(Error::Codec("raw: truncated".into()));
+    }
+    Ok(n)
+}
+
+fn raw_decompress_into(bytes: &[u8], out: &mut [f64]) -> Result<()> {
+    let mut pos = 1usize;
+    let n = lossless::varint::read_u64(bytes, &mut pos)? as usize;
+    if out.len() != n {
+        return Err(Error::Codec(format!(
+            "raw: output buffer holds {} elements, payload has {n}",
+            out.len()
+        )));
+    }
     if bytes.len() < pos + n * 8 {
         return Err(Error::Codec("raw: truncated".into()));
     }
-    Ok(bytes[pos..pos + n * 8]
-        .chunks_exact(8)
-        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+    for (slot, c) in out.iter_mut().zip(bytes[pos..pos + n * 8].chunks_exact(8)) {
+        *slot = f64::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// Number of `f64` elements a compressed plane decodes to — a cheap header
+/// peek (no payload decode) used to size destination buffers.
+pub fn decoded_len(bytes: &[u8]) -> Result<usize> {
+    match bytes.first() {
+        Some(&MODE_RAW) => raw_decoded_len(bytes),
+        Some(&MODE_ABS) => lossy::decoded_len(bytes),
+        Some(&MODE_POINTWISE) => pointwise::decoded_len(bytes),
+        Some(&m) => Err(Error::Codec(format!("unknown mode byte {m:#x}"))),
+        None => Err(Error::Codec("empty payload".into())),
+    }
 }
 
 /// Dispatch on the self-describing mode byte.
 pub fn decompress_any(bytes: &[u8]) -> Result<Vec<f64>> {
+    let n = decoded_len(bytes)?;
+    let mut out = vec![0.0f64; n];
+    decompress_any_into(bytes, &mut out)?;
+    Ok(out)
+}
+
+/// [`decompress_any`] into a caller buffer of exactly [`decoded_len`]
+/// elements. Fully overwrites `out` (dirty buffers are fine).
+pub fn decompress_any_into(bytes: &[u8], out: &mut [f64]) -> Result<()> {
+    decompress_any_into_with(bytes, out, &mut CodecScratch::new())
+}
+
+/// [`decompress_any_into`] with an explicit scratch arena — the
+/// steady-state zero-allocation form the pipeline workers use.
+pub fn decompress_any_into_with(
+    bytes: &[u8],
+    out: &mut [f64],
+    scratch: &mut CodecScratch,
+) -> Result<()> {
     match bytes.first() {
-        Some(&MODE_RAW) => raw_decompress(bytes),
-        Some(&MODE_ABS) => lossy::decompress(bytes),
-        Some(&MODE_POINTWISE) => pointwise::decompress(bytes),
+        Some(&MODE_RAW) => raw_decompress_into(bytes, out),
+        Some(&MODE_ABS) => lossy::decompress_into_with(bytes, out, scratch),
+        Some(&MODE_POINTWISE) => pointwise::decompress_into_with(bytes, out, scratch),
         Some(&m) => Err(Error::Codec(format!("unknown mode byte {m:#x}"))),
         None => Err(Error::Codec("empty payload".into())),
     }
@@ -164,5 +294,46 @@ mod tests {
         assert_eq!(c.kind, CodecKind::PointwiseRel);
         assert_eq!(c.error_bound, 1e-3);
         assert!(c.prescan);
+    }
+
+    #[test]
+    fn decoded_len_matches_all_modes() {
+        let mut rng = SplitMix64::new(2);
+        let data: Vec<f64> = (0..777).map(|_| rng.next_gaussian()).collect();
+        for codec in [Codec::raw(), Codec::absolute(1e-4), Codec::pointwise(1e-3)] {
+            let enc = codec.compress(&data).unwrap();
+            assert_eq!(decoded_len(&enc).unwrap(), data.len(), "{}", codec.name());
+        }
+    }
+
+    #[test]
+    fn raw_into_requires_exact_length() {
+        let data = vec![1.0f64, 2.0, 3.0];
+        let enc = Codec::raw().compress(&data).unwrap();
+        let mut small = vec![0.0f64; 2];
+        assert!(decompress_any_into(&enc, &mut small).is_err());
+        let mut big = vec![0.0f64; 4];
+        assert!(decompress_any_into(&enc, &mut big).is_err());
+        let mut exact = vec![f64::NAN; 3];
+        decompress_any_into(&enc, &mut exact).unwrap();
+        assert_eq!(exact, data);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let mut rng = SplitMix64::new(3);
+        let mut scratch = CodecScratch::new();
+        let mut out = Vec::new();
+        for codec in [Codec::pointwise(1e-3), Codec::absolute(1e-3), Codec::raw()] {
+            for round in 0..3 {
+                let data: Vec<f64> =
+                    (0..2048).map(|_| rng.next_gaussian() * 10f64.powi(round - 1)).collect();
+                codec.compress_into_with(&data, &mut out, &mut scratch).unwrap();
+                assert_eq!(out, codec.compress(&data).unwrap(), "{} round {round}", codec.name());
+                let mut dec = vec![f64::NAN; data.len()];
+                decompress_any_into_with(&out, &mut dec, &mut scratch).unwrap();
+                assert_eq!(dec, decompress_any(&out).unwrap());
+            }
+        }
     }
 }

@@ -21,7 +21,7 @@
 //! values round-trip exactly; signs are always preserved.
 
 use super::lossless::{bitmap, varint};
-use super::{residual, MODE_POINTWISE};
+use super::{residual, CodecScratch, MODE_POINTWISE};
 use crate::types::{Error, Result};
 
 /// Guard for the quantized log-magnitude (|log2(x)| <= 1100 for f64, so
@@ -29,6 +29,22 @@ use crate::types::{Error, Result};
 const MAX_CODE: f64 = 4.0e15;
 
 pub fn compress(data: &[f64], b_r: f64, prescan: bool) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    compress_into_with(data, b_r, prescan, &mut out, &mut CodecScratch::new())?;
+    Ok(out)
+}
+
+/// [`compress`] into a reused output buffer (`out` is cleared, capacity
+/// retained) with all intermediates — bitmap words, quantized codes,
+/// entropy-stage bytes — drawn from `scratch`. Byte-for-byte identical to
+/// the allocating path.
+pub fn compress_into_with(
+    data: &[f64],
+    b_r: f64,
+    prescan: bool,
+    out: &mut Vec<u8>,
+    s: &mut CodecScratch,
+) -> Result<()> {
     if !(b_r > 0.0) || !b_r.is_finite() {
         return Err(Error::Codec(format!("pointwise codec needs b_r > 0, got {b_r}")));
     }
@@ -37,12 +53,17 @@ pub fn compress(data: &[f64], b_r: f64, prescan: bool) -> Result<Vec<u8>> {
     let inv_twoba = 1.0 / (2.0 * b_a);
 
     let n = data.len();
-    let (sign_words, _) = bitmap::pack_bits(data.iter().map(|&x| x.is_sign_negative() && x != 0.0));
-    let (zero_words, _) = bitmap::pack_bits(data.iter().map(|&x| x == 0.0));
+    let CodecScratch { codes, outliers, sign_words, zero_words, buf_a, buf_b, buf_c } = s;
+    bitmap::pack_bits_into(data.iter().map(|&x| x.is_sign_negative() && x != 0.0), sign_words);
+    bitmap::pack_bits_into(data.iter().map(|&x| x == 0.0), zero_words);
 
-    // Quantize nonzero magnitudes in log2 space.
-    let mut codes = Vec::with_capacity(n);
-    let mut outliers: Vec<(usize, f64)> = Vec::new();
+    // Quantize nonzero magnitudes in log2 space. The code stream is sized
+    // from the zero-bitmap popcount, not `n`: zeros carry no code, and
+    // state vectors are typically zero-dominated.
+    let zeros: usize = zero_words.iter().map(|w| w.count_ones() as usize).sum();
+    codes.clear();
+    codes.reserve(n - zeros);
+    outliers.clear();
     for (i, &x) in data.iter().enumerate() {
         if x == 0.0 {
             continue; // carried by the zero bitmap
@@ -65,31 +86,50 @@ pub fn compress(data: &[f64], b_r: f64, prescan: bool) -> Result<Vec<u8>> {
         }
     }
 
-    let sign_bytes = bitmap::compress_bitmap(&sign_words, n, prescan);
-    let zero_bytes = bitmap::compress_bitmap(&zero_words, n, prescan);
-    let body = residual::encode(&codes);
-
-    let mut out =
-        Vec::with_capacity(body.len() + sign_bytes.len() + zero_bytes.len() + outliers.len() * 10 + 32);
+    out.clear();
     out.push(MODE_POINTWISE);
     out.extend_from_slice(&b_r.to_le_bytes());
-    varint::write_u64(&mut out, n as u64);
-    varint::write_u64(&mut out, sign_bytes.len() as u64);
-    out.extend_from_slice(&sign_bytes);
-    varint::write_u64(&mut out, zero_bytes.len() as u64);
-    out.extend_from_slice(&zero_bytes);
-    varint::write_u64(&mut out, outliers.len() as u64);
+    varint::write_u64(out, n as u64);
+    bitmap::compress_bitmap_into(sign_words, n, prescan, buf_c, buf_a, buf_b);
+    varint::write_u64(out, buf_c.len() as u64);
+    out.extend_from_slice(buf_c);
+    bitmap::compress_bitmap_into(zero_words, n, prescan, buf_c, buf_a, buf_b);
+    varint::write_u64(out, buf_c.len() as u64);
+    out.extend_from_slice(buf_c);
+    varint::write_u64(out, outliers.len() as u64);
     let mut prev = 0usize;
-    for &(idx, x) in &outliers {
-        varint::write_u64(&mut out, (idx - prev) as u64);
+    for &(idx, x) in outliers.iter() {
+        varint::write_u64(out, (idx - prev) as u64);
         out.extend_from_slice(&x.to_le_bytes());
         prev = idx;
     }
-    out.extend_from_slice(&body);
-    Ok(out)
+    residual::encode_into(codes, out, buf_a, buf_b);
+    Ok(())
+}
+
+/// Decoded element count — header peek only (mode byte + `b_r` + `n`).
+pub fn decoded_len(bytes: &[u8]) -> Result<usize> {
+    if bytes.first() != Some(&MODE_POINTWISE) {
+        return Err(Error::Codec("not a pointwise-mode payload".into()));
+    }
+    let mut pos = 1usize;
+    if bytes.len() < pos + 8 {
+        return Err(Error::Codec("pointwise: truncated header".into()));
+    }
+    pos += 8;
+    Ok(varint::read_u64(bytes, &mut pos)? as usize)
 }
 
 pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
+    let mut data = vec![0.0f64; decoded_len(bytes)?];
+    decompress_into_with(bytes, &mut data, &mut CodecScratch::new())?;
+    Ok(data)
+}
+
+/// [`decompress`] directly into `out`, which must hold exactly
+/// [`decoded_len`] elements; every slot (including exact zeros) is
+/// overwritten, so a dirty buffer is fine.
+pub fn decompress_into_with(bytes: &[u8], out: &mut [f64], s: &mut CodecScratch) -> Result<()> {
     if bytes.first() != Some(&MODE_POINTWISE) {
         return Err(Error::Codec("not a pointwise-mode payload".into()));
     }
@@ -100,19 +140,31 @@ pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
     let b_r = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
     pos += 8;
     let n = varint::read_u64(bytes, &mut pos)? as usize;
+    if out.len() != n {
+        return Err(Error::Codec(format!(
+            "pointwise: output buffer holds {} elements, payload has {n}",
+            out.len()
+        )));
+    }
+
+    let CodecScratch { codes, outliers, sign_words, zero_words, buf_a, .. } = s;
 
     let sign_len = varint::read_u64(bytes, &mut pos)? as usize;
-    let (sign_words, sign_bits) = bitmap::decompress_bitmap(
+    let sign_bits = bitmap::decompress_bitmap_into(
         bytes
             .get(pos..pos + sign_len)
             .ok_or_else(|| Error::Codec("pointwise: truncated sign bitmap".into()))?,
+        sign_words,
+        buf_a,
     )?;
     pos += sign_len;
     let zero_len = varint::read_u64(bytes, &mut pos)? as usize;
-    let (zero_words, zero_bits) = bitmap::decompress_bitmap(
+    let zero_bits = bitmap::decompress_bitmap_into(
         bytes
             .get(pos..pos + zero_len)
             .ok_or_else(|| Error::Codec("pointwise: truncated zero bitmap".into()))?,
+        zero_words,
+        buf_a,
     )?;
     pos += zero_len;
     if sign_bits != n || zero_bits != n {
@@ -120,7 +172,8 @@ pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
     }
 
     let n_out = varint::read_u64(bytes, &mut pos)? as usize;
-    let mut outliers = Vec::with_capacity(n_out);
+    outliers.clear();
+    outliers.reserve(n_out);
     let mut prev = 0usize;
     for _ in 0..n_out {
         let d = varint::read_u64(bytes, &mut pos)? as usize;
@@ -133,11 +186,10 @@ pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
         outliers.push((prev, x));
     }
 
-    let codes = residual::decode(&bytes[pos..])?;
+    residual::decode_into(&bytes[pos..], codes, buf_a)?;
     let b_a = (1.0 + b_r).log2();
     let twoba = 2.0 * b_a;
 
-    let mut data = vec![0.0f64; n];
     let mut ci = 0usize;
     // Perf (§Perf): word-level bitmap walk + last-code memo. Quantum
     // amplitudes repeat magnitudes heavily (uniform superpositions,
@@ -150,7 +202,7 @@ pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
         let base = w * 64;
         let end = (base + 64).min(n);
         if zword == 0 {
-            for (i, slot) in data[base..end].iter_mut().enumerate() {
+            for (i, slot) in out[base..end].iter_mut().enumerate() {
                 let code = *codes
                     .get(ci)
                     .ok_or_else(|| Error::Codec("pointwise: code stream short".into()))?;
@@ -162,9 +214,10 @@ pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
                 *slot = if sword & (1 << i) != 0 { -last_mag } else { last_mag };
             }
         } else {
-            for (i, slot) in data[base..end].iter_mut().enumerate() {
+            for (i, slot) in out[base..end].iter_mut().enumerate() {
                 if zword & (1 << i) != 0 {
-                    continue; // exact zero
+                    *slot = 0.0; // exact zero (written: the buffer may be dirty)
+                    continue;
                 }
                 let code = *codes
                     .get(ci)
@@ -181,14 +234,13 @@ pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
     if ci != codes.len() {
         return Err(Error::Codec("pointwise: code stream long".into()));
     }
-    for (idx, x) in outliers {
+    for &(idx, x) in outliers.iter() {
         // Outlier slots were quantized as code 0; restore exact bits (the
         // sign bitmap already matches x's sign, but exact bits win).
-        *data
-            .get_mut(idx)
+        *out.get_mut(idx)
             .ok_or_else(|| Error::Codec("pointwise: outlier index out of range".into()))? = x;
     }
-    Ok(data)
+    Ok(())
 }
 
 #[cfg(test)]

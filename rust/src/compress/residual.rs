@@ -13,7 +13,17 @@ const FLAG_HUFFMAN: u8 = 1;
 
 /// Encode a code stream. Deterministic; `decode` is its exact inverse.
 pub fn encode(codes: &[i64]) -> Vec<u8> {
-    let mut body = Vec::with_capacity(codes.len());
+    let mut out = Vec::with_capacity(codes.len() + 10);
+    let (mut sa, mut sb) = (Vec::new(), Vec::new());
+    encode_into(codes, &mut out, &mut sa, &mut sb);
+    out
+}
+
+/// [`encode`] *appending* to `out` (callers frame the stream themselves),
+/// with two reusable scratch buffers for the delta body and its Huffman
+/// pass. Emits the identical byte stream as [`encode`].
+pub fn encode_into(codes: &[i64], out: &mut Vec<u8>, sa: &mut Vec<u8>, sb: &mut Vec<u8>) {
+    sa.clear();
     let mut prev = 0i64;
     let mut i = 0usize;
     while i < codes.len() {
@@ -25,47 +35,54 @@ pub fn encode(codes: &[i64]) -> Vec<u8> {
             while i + run < codes.len() && codes[i + run] == prev {
                 run += 1;
             }
-            varint::write_u64(&mut body, 0);
-            varint::write_u64(&mut body, run as u64);
+            varint::write_u64(sa, 0);
+            varint::write_u64(sa, run as u64);
             i += run;
         } else {
             // zigzag(delta) == 0 iff delta == 0, which the run branch owns,
             // so nonzero deltas never collide with the run marker 0.
-            varint::write_u64(&mut body, varint::zigzag(delta));
+            varint::write_u64(sa, varint::zigzag(delta));
             i += 1;
         }
     }
 
-    let huffed = huffman::encode(&body);
-    let mut out = Vec::with_capacity(body.len().min(huffed.len()) + 10);
-    varint::write_u64(&mut out, codes.len() as u64);
-    if huffed.len() < body.len() {
+    huffman::encode_into(sa, sb);
+    varint::write_u64(out, codes.len() as u64);
+    if sb.len() < sa.len() {
         out.push(FLAG_HUFFMAN);
-        out.extend_from_slice(&huffed);
+        out.extend_from_slice(sb);
     } else {
         out.push(0);
-        out.extend_from_slice(&body);
+        out.extend_from_slice(sa);
     }
-    out
 }
 
 /// Decode a stream produced by [`encode`].
 pub fn decode(bytes: &[u8]) -> Result<Vec<i64>> {
+    let mut codes = Vec::new();
+    let mut hbuf = Vec::new();
+    decode_into(bytes, &mut codes, &mut hbuf)?;
+    Ok(codes)
+}
+
+/// [`decode`] into a reused code buffer (`codes` is cleared, capacity
+/// retained); `hbuf` is a reusable scratch for the Huffman pass.
+pub fn decode_into(bytes: &[u8], codes: &mut Vec<i64>, hbuf: &mut Vec<u8>) -> Result<()> {
     let mut pos = 0usize;
     let n = varint::read_u64(bytes, &mut pos)? as usize;
     let flags = *bytes
         .get(pos)
         .ok_or_else(|| Error::Codec("residual: missing flags".into()))?;
     pos += 1;
-    let owned;
     let body: &[u8] = if flags & FLAG_HUFFMAN != 0 {
-        owned = huffman::decode(&bytes[pos..])?;
-        &owned
+        huffman::decode_into(&bytes[pos..], hbuf)?;
+        hbuf.as_slice()
     } else {
         &bytes[pos..]
     };
 
-    let mut codes = Vec::with_capacity(n);
+    codes.clear();
+    codes.reserve(n);
     let mut prev = 0i64;
     let mut bpos = 0usize;
     while codes.len() < n {
@@ -81,7 +98,14 @@ pub fn decode(bytes: &[u8]) -> Result<Vec<i64>> {
             codes.push(prev);
         }
     }
-    Ok(codes)
+    Ok(())
+}
+
+/// Number of codes in an encoded stream (the leading varint) — a cheap
+/// peek used by allocating decompress wrappers to size their output.
+pub fn encoded_count(bytes: &[u8]) -> Result<usize> {
+    let mut pos = 0usize;
+    Ok(varint::read_u64(bytes, &mut pos)? as usize)
 }
 
 #[cfg(test)]

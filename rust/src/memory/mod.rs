@@ -20,7 +20,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// One compressed block's payload: both planes, length-framed.
-#[derive(Debug, Clone)]
+///
+/// Payloads are *recycled* on the pipeline hot path: the byte buffers a
+/// worker receives from [`BlockStore::take`] are reused as
+/// `compress_into` outputs for the updated planes and handed straight
+/// back to [`BlockStore::put`], so in steady state block bytes cycle
+/// store → worker → store without fresh allocations (§Perf, DESIGN.md).
+#[derive(Debug, Clone, Default)]
 pub struct BlockPayload {
     pub re: Vec<u8>,
     pub im: Vec<u8>,

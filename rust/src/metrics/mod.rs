@@ -61,6 +61,9 @@ pub struct Metrics {
     pub bytes_compressed_out: AtomicU64,
     pub gates_applied: AtomicU64,
     pub groups_processed: AtomicU64,
+    /// Arena-reuse counter: how often a pipeline worker's scratch planes
+    /// had to grow (steady state after warmup: zero; see pipeline::Scratch).
+    pub scratch_grows: AtomicU64,
 }
 
 impl Metrics {
@@ -99,6 +102,7 @@ impl Metrics {
             bytes_out: self.bytes_compressed_out.load(Ordering::Relaxed),
             gates_applied: self.gates_applied.load(Ordering::Relaxed),
             groups_processed: self.groups_processed.load(Ordering::Relaxed),
+            scratch_grows: self.scratch_grows.load(Ordering::Relaxed),
         }
     }
 }
@@ -114,6 +118,8 @@ pub struct MetricsReport {
     pub bytes_out: u64,
     pub gates_applied: u64,
     pub groups_processed: u64,
+    /// Plane-growth events in the pipeline scratch arenas.
+    pub scratch_grows: u64,
 }
 
 impl MetricsReport {

@@ -15,7 +15,15 @@
 //!
 //! The environment vendors no tokio/rayon, so this is a dependency-free
 //! scoped thread pool + work queue + condvar semaphore.
+//!
+//! Each worker owns a [`Scratch`] arena (group planes, codec buffers,
+//! recycled block payloads) drawn from the caller's [`ScratchPool`], so a
+//! group chain's steady state performs no heap allocation: the pool
+//! outlives individual [`run_items`] calls and buffers carry over from
+//! stage to stage (§Perf, DESIGN.md).
 
+use crate::compress::CodecScratch;
+use crate::memory::BlockPayload;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
@@ -85,20 +93,91 @@ impl PipelineConfig {
     }
 }
 
+/// Per-worker reusable buffers for the group-chain hot path. Owned by a
+/// [`ScratchPool`] so capacity survives across [`run_items`] calls (i.e.
+/// across pipeline stages): after the first stage warms the arena, a
+/// steady-state group chain performs zero group-plane heap allocations.
+///
+/// Ownership rules (see DESIGN.md §Perf): the worker that holds the
+/// `Scratch` has exclusive access for the duration of one item; `re`/`im`
+/// are resized (never reallocated while capacity suffices) to the current
+/// group length; `payloads` recycles compressed-block byte buffers between
+/// `BlockStore::take` and `compress_into` so the bytes flow
+/// store → worker → store without fresh allocations.
+#[derive(Default)]
+pub struct Scratch {
+    /// Gathered group plane, real part.
+    pub re: Vec<f64>,
+    /// Gathered group plane, imaginary part.
+    pub im: Vec<f64>,
+    /// Block ids of the current group (gather order).
+    pub block_ids: Vec<usize>,
+    /// Fetched payloads; their byte buffers are reused as compression
+    /// outputs and handed back to the store.
+    pub payloads: Vec<BlockPayload>,
+    /// Codec intermediate buffers (codes, bitmap words, entropy bytes).
+    pub codec: CodecScratch,
+    /// How many times `ensure_planes` had to grow the plane backing
+    /// storage — the arena-reuse counter surfaced in `Metrics`.
+    pub plane_grows: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resize the group planes to exactly `len` amplitudes, reporting
+    /// whether backing storage had to grow (steady state: never).
+    pub fn ensure_planes(&mut self, len: usize) -> bool {
+        let grew = len > self.re.capacity() || len > self.im.capacity();
+        if grew {
+            self.plane_grows += 1;
+        }
+        self.re.resize(len, 0.0);
+        self.im.resize(len, 0.0);
+        grew
+    }
+}
+
+/// A set of per-worker [`Scratch`] arenas. Create one per engine run with
+/// `workers` slots and pass it to every [`run_items`] call so buffers are
+/// reused across stages. Worker `w` always gets slot `w`.
+pub struct ScratchPool {
+    slots: Vec<Mutex<Scratch>>,
+}
+
+impl ScratchPool {
+    pub fn new(workers: usize) -> Self {
+        ScratchPool { slots: (0..workers.max(1)).map(|_| Mutex::new(Scratch::new())).collect() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total plane-growth events across all slots (for the arena-reuse
+    /// assertions and `Metrics::scratch_grows`).
+    pub fn total_plane_grows(&self) -> u64 {
+        self.slots.iter().map(|s| s.lock().unwrap().plane_grows).sum()
+    }
+}
+
 /// Run `task` over items `0..n` on the pipeline's worker pool. Tasks pull
 /// from a shared queue (dynamic load balance, like the paper's round-robin
-/// stream assignment). The first error aborts remaining work and is
-/// returned; panics propagate.
-pub fn run_items<E, F>(cfg: PipelineConfig, n: usize, task: F) -> Result<(), E>
+/// stream assignment). Each worker thread checks out its [`Scratch`] slot
+/// from `pool` for the whole call. The first error aborts remaining work
+/// and is returned; panics propagate.
+pub fn run_items<E, F>(cfg: PipelineConfig, n: usize, pool: &ScratchPool, task: F) -> Result<(), E>
 where
     E: Send,
-    F: Fn(WorkerCtx<'_>, usize) -> Result<(), E> + Sync,
+    F: Fn(&mut WorkerCtx<'_>, usize) -> Result<(), E> + Sync,
     E: std::fmt::Debug,
 {
     let transfer = Semaphore::new(cfg.transfer_slots);
     let queue: Mutex<VecDeque<usize>> = Mutex::new((0..n).collect());
     let failed: Mutex<Option<E>> = Mutex::new(None);
-    let workers = cfg.workers().min(n.max(1));
+    let workers = cfg.workers().min(n.max(1)).min(pool.workers());
 
     std::thread::scope(|scope| {
         for w in 0..workers {
@@ -106,19 +185,28 @@ where
             let failed = &failed;
             let transfer = &transfer;
             let task = &task;
-            scope.spawn(move || loop {
-                if failed.lock().unwrap().is_some() {
-                    return;
-                }
-                let item = { queue.lock().unwrap().pop_front() };
-                let Some(item) = item else { return };
-                let ctx = WorkerCtx { worker: w, device: w % cfg.devices.max(1), transfer };
-                if let Err(e) = task(ctx, item) {
-                    let mut f = failed.lock().unwrap();
-                    if f.is_none() {
-                        *f = Some(e);
+            let pool = &pool;
+            scope.spawn(move || {
+                let mut scratch = pool.slots[w].lock().unwrap();
+                loop {
+                    if failed.lock().unwrap().is_some() {
+                        return;
                     }
-                    return;
+                    let item = { queue.lock().unwrap().pop_front() };
+                    let Some(item) = item else { return };
+                    let mut ctx = WorkerCtx {
+                        worker: w,
+                        device: w % cfg.devices.max(1),
+                        link: TransferLink { sem: transfer },
+                        scratch: &mut *scratch,
+                    };
+                    if let Err(e) = task(&mut ctx, item) {
+                        let mut f = failed.lock().unwrap();
+                        if f.is_none() {
+                            *f = Some(e);
+                        }
+                        return;
+                    }
                 }
             });
         }
@@ -130,19 +218,34 @@ where
     }
 }
 
-/// Per-task context: which worker/device is running, and the shared
-/// transfer link for fetch/store sections.
+/// Copyable handle to the shared transfer link; lets tasks enter transfer
+/// sections while holding disjoint borrows of the scratch arena.
+#[derive(Clone, Copy)]
+pub struct TransferLink<'a> {
+    sem: &'a Semaphore,
+}
+
+impl TransferLink<'_> {
+    /// Execute `f` while holding a transfer permit (the PCIe section).
+    pub fn section<T>(&self, f: impl FnOnce() -> T) -> T {
+        let _g = self.sem.acquire();
+        f()
+    }
+}
+
+/// Per-task context: which worker/device is running, the shared transfer
+/// link for fetch/store sections, and the worker's scratch arena.
 pub struct WorkerCtx<'a> {
     pub worker: usize,
     pub device: usize,
-    transfer: &'a Semaphore,
+    pub link: TransferLink<'a>,
+    pub scratch: &'a mut Scratch,
 }
 
 impl WorkerCtx<'_> {
     /// Execute `f` while holding a transfer permit (the PCIe section).
     pub fn transfer<T>(&self, f: impl FnOnce() -> T) -> T {
-        let _g = self.transfer.acquire();
-        f()
+        self.link.section(f)
     }
 }
 
@@ -154,7 +257,7 @@ mod tests {
     #[test]
     fn processes_every_item_exactly_once() {
         let hits = Vec::from_iter((0..500).map(|_| AtomicUsize::new(0)));
-        run_items::<(), _>(PipelineConfig::new(2, 4), 500, |_ctx, i| {
+        run_items::<(), _>(PipelineConfig::new(2, 4), 500, &ScratchPool::new(8), |_ctx, i| {
             hits[i].fetch_add(1, Ordering::Relaxed);
             Ok(())
         })
@@ -166,7 +269,7 @@ mod tests {
     fn sequential_config_uses_one_worker() {
         let max_live = AtomicUsize::new(0);
         let live = AtomicUsize::new(0);
-        run_items::<(), _>(PipelineConfig::sequential(), 50, |_ctx, _i| {
+        run_items::<(), _>(PipelineConfig::sequential(), 50, &ScratchPool::new(1), |_ctx, _i| {
             let now = live.fetch_add(1, Ordering::SeqCst) + 1;
             max_live.fetch_max(now, Ordering::SeqCst);
             std::thread::sleep(std::time::Duration::from_micros(200));
@@ -182,7 +285,7 @@ mod tests {
         let cfg = PipelineConfig::new(2, 2);
         let max_live = AtomicUsize::new(0);
         let live = AtomicUsize::new(0);
-        run_items::<(), _>(cfg, 64, |_ctx, _i| {
+        run_items::<(), _>(cfg, 64, &ScratchPool::new(cfg.workers()), |_ctx, _i| {
             let now = live.fetch_add(1, Ordering::SeqCst) + 1;
             max_live.fetch_max(now, Ordering::SeqCst);
             std::thread::sleep(std::time::Duration::from_micros(300));
@@ -198,7 +301,7 @@ mod tests {
         let cfg = PipelineConfig { devices: 1, streams: 8, transfer_slots: 1 };
         let max_live = AtomicUsize::new(0);
         let live = AtomicUsize::new(0);
-        run_items::<(), _>(cfg, 32, |ctx, _i| {
+        run_items::<(), _>(cfg, 32, &ScratchPool::new(cfg.workers()), |ctx, _i| {
             ctx.transfer(|| {
                 let now = live.fetch_add(1, Ordering::SeqCst) + 1;
                 max_live.fetch_max(now, Ordering::SeqCst);
@@ -214,7 +317,7 @@ mod tests {
     #[test]
     fn first_error_aborts_and_propagates() {
         let done = AtomicUsize::new(0);
-        let r = run_items::<String, _>(PipelineConfig::new(1, 2), 1000, |_ctx, i| {
+        let r = run_items::<String, _>(PipelineConfig::new(1, 2), 1000, &ScratchPool::new(2), |_ctx, i| {
             if i == 3 {
                 return Err("boom".to_string());
             }
@@ -230,7 +333,7 @@ mod tests {
     fn devices_assign_round_robin() {
         let cfg = PipelineConfig::new(4, 1);
         let seen = Mutex::new(std::collections::BTreeSet::new());
-        run_items::<(), _>(cfg, 64, |ctx, _i| {
+        run_items::<(), _>(cfg, 64, &ScratchPool::new(cfg.workers()), |ctx, _i| {
             seen.lock().unwrap().insert(ctx.device);
             std::thread::sleep(std::time::Duration::from_micros(100));
             Ok(())
@@ -241,6 +344,38 @@ mod tests {
 
     #[test]
     fn zero_items_is_fine() {
-        run_items::<(), _>(PipelineConfig::new(2, 2), 0, |_ctx, _i| Ok(())).unwrap();
+        run_items::<(), _>(PipelineConfig::new(2, 2), 0, &ScratchPool::new(4), |_ctx, _i| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn ensure_planes_grows_only_on_capacity_increase() {
+        let mut s = Scratch::new();
+        assert!(s.ensure_planes(1024)); // cold arena grows
+        assert_eq!(s.plane_grows, 1);
+        assert_eq!(s.re.len(), 1024);
+        assert!(!s.ensure_planes(512)); // shrink: no growth
+        assert_eq!(s.re.len(), 512);
+        assert!(!s.ensure_planes(1024)); // back within capacity: no growth
+        assert_eq!(s.plane_grows, 1);
+        assert!(s.ensure_planes(4096)); // genuinely larger: grows once more
+        assert_eq!(s.plane_grows, 2);
+    }
+
+    #[test]
+    fn scratch_pool_persists_across_run_items_calls() {
+        // The arena must survive stage boundaries: the second call sees the
+        // capacity warmed by the first, so no plane growth happens.
+        let cfg = PipelineConfig::new(1, 2);
+        let pool = ScratchPool::new(cfg.workers());
+        for _round in 0..3 {
+            run_items::<(), _>(cfg, 16, &pool, |ctx, _i| {
+                ctx.scratch.ensure_planes(2048);
+                Ok(())
+            })
+            .unwrap();
+        }
+        // At most one growth per worker, ever — not one per round or item.
+        assert!(pool.total_plane_grows() <= cfg.workers() as u64);
+        assert!(pool.total_plane_grows() >= 1);
     }
 }

@@ -12,6 +12,12 @@
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): see
 //! DESIGN.md and /opt/xla-example/README.md for why serialized protos from
 //! jax >= 0.5 are rejected by xla_extension 0.5.1.
+//!
+//! **Build gating:** the `xla` crate is a vendored native dependency that
+//! the default environment does not ship, so the PJRT path compiles only
+//! under the `xla` cargo feature. Without it, [`XlaApplier`] is a stub
+//! whose constructor fails with a clear message — the manifest/JSON layer
+//! stays available either way.
 
 mod json;
 mod manifest;
@@ -19,393 +25,62 @@ mod manifest;
 pub use json::Json;
 pub use manifest::{Manifest, ModuleInfo};
 
-use crate::circuit::Gate;
-use crate::sim::GateApplier;
-use crate::types::{Error, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::mpsc;
-use std::sync::Mutex;
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::XlaApplier;
 
-// ---------------------------------------------------------------------
-// Service-thread jobs
-// ---------------------------------------------------------------------
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::circuit::Gate;
+    use crate::sim::GateApplier;
+    use crate::types::{Error, Result};
+    use std::path::PathBuf;
 
-enum Job {
-    /// Batched K x K complex mat-vec over pair-major planes.
-    Gate {
-        arity: usize,
-        diagonal: bool,
-        xr: Vec<f64>,
-        xi: Vec<f64>,
-        ur: Vec<f64>,
-        ui: Vec<f64>,
-        rows: usize,
-        k: usize,
-        reply: mpsc::Sender<Result<(Vec<f64>, Vec<f64>)>>,
-    },
-    /// Point-wise quantize via the Pallas quantizer artifact.
-    Quantize {
-        x: Vec<f64>,
-        error_bound: f64,
-        reply: mpsc::Sender<Result<(Vec<i32>, Vec<i32>)>>,
-    },
-    /// Inverse of `Quantize`.
-    Dequantize {
-        codes: Vec<i32>,
-        signs: Vec<i32>,
-        error_bound: f64,
-        reply: mpsc::Sender<Result<Vec<f64>>>,
-    },
-    Shutdown,
-}
+    const MSG: &str =
+        "built without the `xla` feature; rebuild with `--features xla` and a vendored xla crate";
 
-// ---------------------------------------------------------------------
-// Service thread internals (all PJRT state lives here)
-// ---------------------------------------------------------------------
-
-struct Service {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl Service {
-    fn new(artifacts_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Service { client, manifest, execs: HashMap::new() })
+    /// Stub [`GateApplier`] compiled when the `xla` feature is off. The
+    /// constructor always fails, so the methods are unreachable.
+    pub struct XlaApplier {
+        _private: (),
     }
 
-    fn exec(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.execs.contains_key(name) {
-            let info = self
-                .manifest
-                .modules
-                .get(name)
-                .ok_or_else(|| Error::Artifact(format!("no module {name} in manifest")))?;
-            let proto = xla::HloModuleProto::from_text_file(
-                info.file
-                    .to_str()
-                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.execs.insert(name.to_string(), exe);
+    impl XlaApplier {
+        pub fn new(_artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            Err(Error::Xla(MSG.into()))
         }
-        Ok(&self.execs[name])
-    }
 
-    /// Chunked gate execution: the artifact has a fixed row count
-    /// (`m_1q`/`m_2q`); larger inputs loop whole chunks, smaller ones are
-    /// zero-padded (zero rows are invariant under the mat-vec).
-    fn run_gate(
-        &mut self,
-        arity: usize,
-        diagonal: bool,
-        xr: &[f64],
-        xi: &[f64],
-        ur: &[f64],
-        ui: &[f64],
-        rows: usize,
-        k: usize,
-    ) -> Result<(Vec<f64>, Vec<f64>)> {
-        let chunk = if arity == 1 { self.manifest.m_1q } else { self.manifest.m_2q };
-        let name = self.manifest.gate_module(arity, diagonal, "f64")?.name.clone();
-        let (mat_rows, mat_cols) = if diagonal { (1usize, k) } else { (k, k) };
-
-        let mut out_r = vec![0.0f64; rows * k];
-        let mut out_i = vec![0.0f64; rows * k];
-        let mut row = 0usize;
-        while row < rows {
-            let take = chunk.min(rows - row);
-            let (cr, ci) = {
-                // Pad the final partial chunk to the artifact shape.
-                let mut bufr = vec![0.0f64; chunk * k];
-                let mut bufi = vec![0.0f64; chunk * k];
-                bufr[..take * k].copy_from_slice(&xr[row * k..(row + take) * k]);
-                bufi[..take * k].copy_from_slice(&xi[row * k..(row + take) * k]);
-                let exe = self.exec(&name)?;
-                let lxr = xla::Literal::vec1(&bufr).reshape(&[chunk as i64, k as i64])?;
-                let lxi = xla::Literal::vec1(&bufi).reshape(&[chunk as i64, k as i64])?;
-                let lur =
-                    xla::Literal::vec1(ur).reshape(&[mat_rows as i64, mat_cols as i64])?;
-                let lui =
-                    xla::Literal::vec1(ui).reshape(&[mat_rows as i64, mat_cols as i64])?;
-                let result = exe.execute::<xla::Literal>(&[lxr, lxi, lur, lui])?[0][0]
-                    .to_literal_sync()?;
-                let (or_, oi_) = result.to_tuple2()?;
-                (or_.to_vec::<f64>()?, oi_.to_vec::<f64>()?)
-            };
-            out_r[row * k..(row + take) * k].copy_from_slice(&cr[..take * k]);
-            out_i[row * k..(row + take) * k].copy_from_slice(&ci[..take * k]);
-            row += take;
+        pub fn quantize(&self, _x: &[f64], _error_bound: f64) -> Result<(Vec<i32>, Vec<i32>)> {
+            Err(Error::Xla(MSG.into()))
         }
-        Ok((out_r, out_i))
-    }
 
-    fn quant_module(&self, kernel: &str, error_bound: f64) -> Result<String> {
-        self.manifest
-            .modules
-            .values()
-            .find(|m| {
-                m.kernel == kernel
-                    && m.dtype == "f64"
-                    && m.error_bound
-                        .map(|e| (e - error_bound).abs() < e * 1e-9)
-                        .unwrap_or(false)
-            })
-            .map(|m| m.name.clone())
-            .ok_or_else(|| {
-                Error::Artifact(format!("no {kernel} artifact for error bound {error_bound}"))
-            })
-    }
-
-    fn run_quantize(&mut self, x: &[f64], error_bound: f64) -> Result<(Vec<i32>, Vec<i32>)> {
-        let chunk = self.manifest.n_quant;
-        let name = self.quant_module("quantize", error_bound)?;
-        let n = x.len();
-        let mut codes = vec![0i32; n];
-        let mut signs = vec![0i32; n];
-        let mut at = 0usize;
-        while at < n {
-            let take = chunk.min(n - at);
-            let mut buf = vec![0.0f64; chunk];
-            buf[..take].copy_from_slice(&x[at..at + take]);
-            let exe = self.exec(&name)?;
-            let lx = xla::Literal::vec1(&buf);
-            let result = exe.execute::<xla::Literal>(&[lx])?[0][0].to_literal_sync()?;
-            let (lc, ls) = result.to_tuple2()?;
-            let (cv, sv) = (lc.to_vec::<i32>()?, ls.to_vec::<i32>()?);
-            codes[at..at + take].copy_from_slice(&cv[..take]);
-            signs[at..at + take].copy_from_slice(&sv[..take]);
-            at += take;
+        pub fn dequantize(
+            &self,
+            _codes: &[i32],
+            _signs: &[i32],
+            _error_bound: f64,
+        ) -> Result<Vec<f64>> {
+            Err(Error::Xla(MSG.into()))
         }
-        Ok((codes, signs))
     }
 
-    fn run_dequantize(
-        &mut self,
-        codes: &[i32],
-        signs: &[i32],
-        error_bound: f64,
-    ) -> Result<Vec<f64>> {
-        let chunk = self.manifest.n_quant;
-        let name = self.quant_module("dequantize", error_bound)?;
-        let n = codes.len();
-        let mut out = vec![0.0f64; n];
-        let mut at = 0usize;
-        while at < n {
-            let take = chunk.min(n - at);
-            let mut bc = vec![0i32; chunk];
-            let mut bs = vec![0i32; chunk];
-            bc[..take].copy_from_slice(&codes[at..at + take]);
-            bs[..take].copy_from_slice(&signs[at..at + take]);
-            let exe = self.exec(&name)?;
-            let lc = xla::Literal::vec1(&bc);
-            let ls = xla::Literal::vec1(&bs);
-            let result = exe.execute::<xla::Literal>(&[lc, ls])?[0][0].to_literal_sync()?;
-            let lx = result.to_tuple1()?;
-            let xv = lx.to_vec::<f64>()?;
-            out[at..at + take].copy_from_slice(&xv[..take]);
-            at += take;
+    impl GateApplier for XlaApplier {
+        fn apply(
+            &self,
+            _re: &mut [f64],
+            _im: &mut [f64],
+            _gate: &Gate,
+            _bits: &[usize],
+        ) -> Result<()> {
+            Err(Error::Xla(MSG.into()))
         }
-        Ok(out)
-    }
 
-    fn serve(mut self, rx: mpsc::Receiver<Job>) {
-        while let Ok(job) = rx.recv() {
-            match job {
-                Job::Gate { arity, diagonal, xr, xi, ur, ui, rows, k, reply } => {
-                    let r = self.run_gate(arity, diagonal, &xr, &xi, &ur, &ui, rows, k);
-                    let _ = reply.send(r);
-                }
-                Job::Quantize { x, error_bound, reply } => {
-                    let _ = reply.send(self.run_quantize(&x, error_bound));
-                }
-                Job::Dequantize { codes, signs, error_bound, reply } => {
-                    let _ = reply.send(self.run_dequantize(&codes, &signs, error_bound));
-                }
-                Job::Shutdown => return,
-            }
+        fn name(&self) -> &'static str {
+            "xla-stub"
         }
     }
 }
 
-// ---------------------------------------------------------------------
-// Public handle
-// ---------------------------------------------------------------------
-
-/// Thread-safe handle to the PJRT service; implements [`GateApplier`] so
-/// the engines can run their hot path through the AOT'd Pallas kernels.
-pub struct XlaApplier {
-    tx: Mutex<mpsc::Sender<Job>>,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
-
-impl XlaApplier {
-    /// Start the service thread against an artifacts directory. Fails fast
-    /// if the manifest or PJRT client cannot be initialized.
-    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let dir = artifacts_dir.into();
-        let (tx, rx) = mpsc::channel::<Job>();
-        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("xla-service".into())
-            .spawn(move || match Service::new(&dir) {
-                Ok(svc) => {
-                    let _ = init_tx.send(Ok(()));
-                    svc.serve(rx);
-                }
-                Err(e) => {
-                    let _ = init_tx.send(Err(e));
-                }
-            })
-            .map_err(|e| Error::Xla(format!("cannot spawn xla service: {e}")))?;
-        init_rx
-            .recv()
-            .map_err(|_| Error::Xla("xla service died during init".into()))??;
-        Ok(XlaApplier { tx: Mutex::new(tx), handle: Some(handle) })
-    }
-
-    fn submit<T>(
-        &self,
-        make: impl FnOnce(mpsc::Sender<Result<T>>) -> Job,
-    ) -> Result<T> {
-        let (rtx, rrx) = mpsc::channel();
-        {
-            let tx = self.tx.lock().unwrap();
-            tx.send(make(rtx)).map_err(|_| Error::Xla("xla service gone".into()))?;
-        }
-        rrx.recv().map_err(|_| Error::Xla("xla service dropped reply".into()))?
-    }
-
-    /// Quantize a plane through the Pallas quantizer artifact (parity path
-    /// for the rust codec; see python/compile/kernels/quant_kernel.py).
-    pub fn quantize(&self, x: &[f64], error_bound: f64) -> Result<(Vec<i32>, Vec<i32>)> {
-        self.submit(|reply| Job::Quantize { x: x.to_vec(), error_bound, reply })
-    }
-
-    /// Dequantize codes produced by [`XlaApplier::quantize`].
-    pub fn dequantize(&self, codes: &[i32], signs: &[i32], error_bound: f64) -> Result<Vec<f64>> {
-        self.submit(|reply| Job::Dequantize {
-            codes: codes.to_vec(),
-            signs: signs.to_vec(),
-            error_bound,
-            reply,
-        })
-    }
-}
-
-impl Drop for XlaApplier {
-    fn drop(&mut self) {
-        if let Ok(tx) = self.tx.lock() {
-            let _ = tx.send(Job::Shutdown);
-        }
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl GateApplier for XlaApplier {
-    fn apply(&self, re: &mut [f64], im: &mut [f64], gate: &Gate, bits: &[usize]) -> Result<()> {
-        let len = re.len();
-        let diagonal = gate.kind.is_diagonal();
-        match gate.arity() {
-            1 => {
-                let t = bits[0];
-                let bit = 1usize << t;
-                let rows = len / 2;
-                // Gather pairs into [rows, 2] planes (paper Fig. 2 pairing).
-                let mut xr = vec![0.0f64; rows * 2];
-                let mut xi = vec![0.0f64; rows * 2];
-                for (m, i0) in crate::gates::pair_indices(len, t).enumerate() {
-                    let i1 = i0 | bit;
-                    xr[m * 2] = re[i0];
-                    xr[m * 2 + 1] = re[i1];
-                    xi[m * 2] = im[i0];
-                    xi[m * 2 + 1] = im[i1];
-                }
-                let (ur, ui) = if diagonal {
-                    let d = gate.diagonal();
-                    (vec![d[0].re, d[1].re], vec![d[0].im, d[1].im])
-                } else {
-                    let m = gate.matrix1q();
-                    (m.iter().map(|c| c.re).collect(), m.iter().map(|c| c.im).collect())
-                };
-                let (or_, oi_) = self.submit(|reply| Job::Gate {
-                    arity: 1,
-                    diagonal,
-                    xr,
-                    xi,
-                    ur,
-                    ui,
-                    rows,
-                    k: 2,
-                    reply,
-                })?;
-                for (m, i0) in crate::gates::pair_indices(len, t).enumerate() {
-                    let i1 = i0 | bit;
-                    re[i0] = or_[m * 2];
-                    re[i1] = or_[m * 2 + 1];
-                    im[i0] = oi_[m * 2];
-                    im[i1] = oi_[m * 2 + 1];
-                }
-                Ok(())
-            }
-            _ => {
-                let (qa, qb) = (bits[0], bits[1]);
-                let (ba, bb) = (1usize << qa, 1usize << qb);
-                let rows = len / 4;
-                let mut xr = vec![0.0f64; rows * 4];
-                let mut xi = vec![0.0f64; rows * 4];
-                // Basis order |q_a q_b> = 00,01,10,11 (q_a the high bit),
-                // matching Gate::matrix2q.
-                for (m, i) in crate::gates::quad_indices(len, qa.max(qb), qa.min(qb)).enumerate() {
-                    let idx = [i, i | bb, i | ba, i | ba | bb];
-                    for (s, &ix) in idx.iter().enumerate() {
-                        xr[m * 4 + s] = re[ix];
-                        xi[m * 4 + s] = im[ix];
-                    }
-                }
-                let (ur, ui) = if diagonal {
-                    let d = gate.diagonal();
-                    (
-                        d.iter().map(|c| c.re).collect::<Vec<_>>(),
-                        d.iter().map(|c| c.im).collect::<Vec<_>>(),
-                    )
-                } else {
-                    let m = gate.matrix2q();
-                    (
-                        m.iter().map(|c| c.re).collect::<Vec<_>>(),
-                        m.iter().map(|c| c.im).collect::<Vec<_>>(),
-                    )
-                };
-                let (or_, oi_) = self.submit(|reply| Job::Gate {
-                    arity: 2,
-                    diagonal,
-                    xr,
-                    xi,
-                    ur,
-                    ui,
-                    rows,
-                    k: 4,
-                    reply,
-                })?;
-                for (m, i) in crate::gates::quad_indices(len, qa.max(qb), qa.min(qb)).enumerate() {
-                    let idx = [i, i | bb, i | ba, i | ba | bb];
-                    for (s, &ix) in idx.iter().enumerate() {
-                        re[ix] = or_[m * 4 + s];
-                        im[ix] = oi_[m * 4 + s];
-                    }
-                }
-                Ok(())
-            }
-        }
-    }
-
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaApplier;

@@ -17,10 +17,10 @@
 
 use super::{GateApplier, NativeApplier, SimConfig, SimResult};
 use crate::circuit::{partition_circuit, Circuit};
-use crate::compress::Codec;
+use crate::compress::{Codec, CodecScratch};
 use crate::memory::{BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
-use crate::pipeline::{run_items, WorkerCtx};
+use crate::pipeline::{run_items, Scratch, ScratchPool, WorkerCtx};
 use crate::state::{BlockLayout, StateVector};
 use crate::types::{Error, Result};
 use std::sync::atomic::Ordering;
@@ -30,6 +30,16 @@ use std::time::Instant;
 pub struct BmqSim<'a> {
     pub config: SimConfig,
     applier: &'a dyn GateApplier,
+}
+
+/// Prefix a codec failure with the block it hit, without double-wrapping
+/// the "codec error:" Display prefix.
+fn block_err(e: Error, block: usize, plane: &str) -> Error {
+    let msg = match e {
+        Error::Codec(m) => m,
+        other => other.to_string(),
+    };
+    Error::Codec(format!("block {block} ({plane}): {msg}"))
 }
 
 impl<'a> BmqSim<'a> {
@@ -83,6 +93,10 @@ impl<'a> BmqSim<'a> {
         self.init_blocks(&layout, &codec, &store, &metrics)?;
 
         // ---- Staged, pipelined execution ----
+        // One scratch arena per worker for the WHOLE run: plane buffers,
+        // codec intermediates, and recycled payload bytes carry over from
+        // stage to stage, so steady-state group chains allocate nothing.
+        let pool = ScratchPool::new(self.config.pipeline.workers());
         for stage in &plan.stages {
             let schedule = layout.group_schedule(&stage.inner)?;
             // Precompute buffer-bit remaps for every gate of the stage.
@@ -96,15 +110,16 @@ impl<'a> BmqSim<'a> {
                 .collect();
 
             let block_len = layout.block_len();
-            run_items::<Error, _>(self.config.pipeline, schedule.num_groups(), |ctx, gidx| {
+            run_items::<Error, _>(self.config.pipeline, schedule.num_groups(), &pool, |ctx, gidx| {
                 self.process_group(
-                    &ctx, &schedule, gidx, block_len, &remapped, &codec, &store, &metrics,
+                    ctx, &schedule, gidx, block_len, &remapped, &codec, &store, &metrics,
                 )
             })?;
             metrics
                 .groups_processed
                 .fetch_add(schedule.num_groups() as u64, Ordering::Relaxed);
         }
+        metrics.scratch_grows.store(pool.total_plane_grows(), Ordering::Relaxed);
 
         // ---- Wrap up ----
         let wall = t0.elapsed().as_secs_f64();
@@ -162,10 +177,15 @@ impl<'a> BmqSim<'a> {
     }
 
     /// One SV-group chain: fetch → decompress → update → compress → store.
+    ///
+    /// Zero-copy / zero-allocation (§Perf): decompression writes directly
+    /// into the worker's scratch planes (no temp Vec + copy), compression
+    /// reuses the fetched payloads' byte buffers, and the planes themselves
+    /// are reused across groups and stages via the scratch arena.
     #[allow(clippy::too_many_arguments)]
     fn process_group(
         &self,
-        ctx: &WorkerCtx<'_>,
+        ctx: &mut WorkerCtx<'_>,
         schedule: &crate::state::GroupSchedule,
         gidx: usize,
         block_len: usize,
@@ -174,33 +194,33 @@ impl<'a> BmqSim<'a> {
         store: &BlockStore,
         metrics: &Metrics,
     ) -> Result<()> {
-        let block_ids = schedule.group_blocks(gidx);
+        let link = ctx.link;
+        let glen = schedule.group_len();
+        ctx.scratch.ensure_planes(glen);
+        schedule.group_blocks_into(gidx, &mut ctx.scratch.block_ids);
+        let Scratch { re, im, block_ids, payloads, codec: cs, .. } = &mut *ctx.scratch;
 
         // Fetch (H2D analogue; holds a transfer permit).
-        let payloads: Vec<BlockPayload> = ctx.transfer(|| {
-            metrics.time(Phase::Fetch, || {
-                block_ids.iter().map(|&id| store.take(id)).collect::<Result<Vec<_>>>()
+        link.section(|| {
+            metrics.time(Phase::Fetch, || -> Result<()> {
+                payloads.clear();
+                for &id in block_ids.iter() {
+                    payloads.push(store.take(id)?);
+                }
+                Ok(())
             })
         })?;
 
-        // Decompress into the gathered group buffer.
-        let glen = schedule.group_len();
-        let mut re = vec![0.0f64; glen];
-        let mut im = vec![0.0f64; glen];
+        // Decompress straight into the gathered group buffer.
         metrics.time(Phase::Decompress, || -> Result<()> {
             for (slot, p) in payloads.iter().enumerate() {
-                let r = codec.decompress(&p.re)?;
-                let i = codec.decompress(&p.im)?;
-                if r.len() != block_len || i.len() != block_len {
-                    return Err(Error::Codec(format!(
-                        "block {} decompressed to {} / {} (want {block_len})",
-                        block_ids[slot],
-                        r.len(),
-                        i.len()
-                    )));
+                let dst = slot * block_len..(slot + 1) * block_len;
+                if let Err(e) = codec.decompress_into_with(&p.re, &mut re[dst.clone()], cs) {
+                    return Err(block_err(e, block_ids[slot], "re"));
                 }
-                re[slot * block_len..(slot + 1) * block_len].copy_from_slice(&r);
-                im[slot * block_len..(slot + 1) * block_len].copy_from_slice(&i);
+                if let Err(e) = codec.decompress_into_with(&p.im, &mut im[dst], cs) {
+                    return Err(block_err(e, block_ids[slot], "im"));
+                }
                 metrics.decompressions.fetch_add(2, Ordering::Relaxed);
             }
             Ok(())
@@ -209,32 +229,34 @@ impl<'a> BmqSim<'a> {
         // Apply every gate of the stage — ONE (de)compression for all.
         metrics.time(Phase::Apply, || -> Result<()> {
             for (gate, bits) in gates {
-                self.applier.apply(&mut re, &mut im, gate, bits)?;
+                self.applier.apply(re, im, gate, bits)?;
             }
             Ok(())
         })?;
         metrics.gates_applied.fetch_add(gates.len() as u64, Ordering::Relaxed);
 
-        // Compress per block and store (D2H analogue).
-        let mut out: Vec<(usize, BlockPayload)> = Vec::with_capacity(block_ids.len());
+        // Compress per block, recycling the fetched payloads' byte buffers
+        // as outputs (store → worker → store, no fresh allocations).
         metrics.time(Phase::Compress, || -> Result<()> {
-            for (slot, &id) in block_ids.iter().enumerate() {
-                let r = codec.compress(&re[slot * block_len..(slot + 1) * block_len])?;
-                let i = codec.compress(&im[slot * block_len..(slot + 1) * block_len])?;
+            for (slot, p) in payloads.iter_mut().enumerate() {
+                let src = slot * block_len..(slot + 1) * block_len;
+                codec.compress_into_with(&re[src.clone()], &mut p.re, cs)?;
+                codec.compress_into_with(&im[src], &mut p.im, cs)?;
                 metrics.compressions.fetch_add(2, Ordering::Relaxed);
                 metrics
                     .bytes_compressed_in
                     .fetch_add((block_len * 16) as u64, Ordering::Relaxed);
                 metrics
                     .bytes_compressed_out
-                    .fetch_add((r.len() + i.len()) as u64, Ordering::Relaxed);
-                out.push((id, BlockPayload { re: r, im: i }));
+                    .fetch_add((p.re.len() + p.im.len()) as u64, Ordering::Relaxed);
             }
             Ok(())
         })?;
-        ctx.transfer(|| {
+
+        // Store (D2H analogue; holds a transfer permit).
+        link.section(|| {
             metrics.time(Phase::Store, || -> Result<()> {
-                for (id, p) in out {
+                for (p, &id) in payloads.drain(..).zip(block_ids.iter()) {
                     store.put(id, p)?;
                 }
                 Ok(())
@@ -243,18 +265,18 @@ impl<'a> BmqSim<'a> {
         Ok(())
     }
 
-    /// Assemble the dense state from compressed blocks.
+    /// Assemble the dense state from compressed blocks (streamed: each
+    /// block decompresses directly into its slice of the dense planes).
     fn materialize(&self, layout: &BlockLayout, store: &BlockStore) -> Result<StateVector> {
         let len = 1usize << layout.n_qubits;
         let mut re = vec![0.0f64; len];
         let mut im = vec![0.0f64; len];
         let bl = layout.block_len();
+        let mut cs = CodecScratch::new();
         for id in 0..layout.num_blocks() {
             let p = store.get(id)?;
-            let r = crate::compress::decompress_any(&p.re)?;
-            let i = crate::compress::decompress_any(&p.im)?;
-            re[id * bl..(id + 1) * bl].copy_from_slice(&r);
-            im[id * bl..(id + 1) * bl].copy_from_slice(&i);
+            crate::compress::decompress_any_into_with(&p.re, &mut re[id * bl..(id + 1) * bl], &mut cs)?;
+            crate::compress::decompress_any_into_with(&p.im, &mut im[id * bl..(id + 1) * bl], &mut cs)?;
         }
         StateVector::from_planes(layout.n_qubits, re, im)
     }
@@ -385,6 +407,31 @@ mod tests {
         let qaoa = ratio("qaoa");
         assert!(cat > 40.0, "cat ratio {cat}");
         assert!(cat > 3.0 * qaoa, "cat {cat} vs qaoa {qaoa}");
+    }
+
+    #[test]
+    fn scratch_arena_is_reused_across_groups_and_stages() {
+        // Zero-allocation steady state: group planes are allocated at most
+        // once per worker per distinct (growing) group size — NOT once per
+        // group chain. With a sequential pipeline the growth count is
+        // bounded by the stage count while the chain count is far larger.
+        let c = generators::qft(12);
+        let mut config = cfg(6, 2);
+        config.pipeline = PipelineConfig::sequential();
+        let r = BmqSim::new(config).run(&c, false).unwrap();
+        assert!(r.metrics.scratch_grows >= 1, "arena never warmed");
+        assert!(
+            r.metrics.scratch_grows <= r.stages as u64,
+            "scratch grew {} times over {} stages — planes are being reallocated",
+            r.metrics.scratch_grows,
+            r.stages
+        );
+        assert!(
+            r.metrics.groups_processed >= 4 * r.metrics.scratch_grows,
+            "groups {} vs grows {}",
+            r.metrics.groups_processed,
+            r.metrics.scratch_grows
+        );
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! memory = one decompressed block), so end-to-end memory stays at the
 //! compressed footprint + O(block).
 
-use crate::compress::decompress_any;
+use crate::compress::{decompress_any_into_with, CodecScratch};
 use crate::memory::BlockStore;
 use crate::state::BlockLayout;
 use crate::types::{Result, SplitMix64};
@@ -30,10 +30,17 @@ impl<'a> CompressedState<'a> {
         &self,
         mut f: impl FnMut(usize, &[f64], &[f64]) -> Result<()>,
     ) -> Result<()> {
+        // One block-sized pair of buffers + codec scratch for the whole
+        // stream: peak extra memory stays O(block), with no per-block
+        // allocation (§Perf).
+        let bl = self.layout.block_len();
+        let mut re = vec![0.0f64; bl];
+        let mut im = vec![0.0f64; bl];
+        let mut cs = CodecScratch::new();
         for id in 0..self.layout.num_blocks() {
             let p = self.store.get(id)?;
-            let re = decompress_any(&p.re)?;
-            let im = decompress_any(&p.im)?;
+            decompress_any_into_with(&p.re, &mut re, &mut cs)?;
+            decompress_any_into_with(&p.im, &mut im, &mut cs)?;
             f(id, &re, &im)?;
         }
         Ok(())
@@ -69,12 +76,15 @@ impl<'a> CompressedState<'a> {
         let mut d = 0usize;
         let mut block_start = 0.0f64;
         let bl = self.layout.block_len();
+        let mut re = vec![0.0f64; bl];
+        let mut im = vec![0.0f64; bl];
+        let mut cs = CodecScratch::new();
         for id in 0..self.layout.num_blocks() {
             let block_end = block_start + mass[id];
             if d < draws.len() && draws[d] < block_end {
                 let p = self.store.get(id)?;
-                let re = decompress_any(&p.re)?;
-                let im = decompress_any(&p.im)?;
+                decompress_any_into_with(&p.re, &mut re, &mut cs)?;
+                decompress_any_into_with(&p.im, &mut im, &mut cs)?;
                 // `upto` = cumulative mass through element k inclusive;
                 // multiple draws landing in one element must not advance it.
                 let mut k = 0usize;

@@ -15,9 +15,10 @@
 
 use super::{GateApplier, NativeApplier, SimConfig, SimResult};
 use crate::circuit::Circuit;
+use crate::compress::CodecScratch;
 use crate::memory::{BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
-use crate::pipeline::{run_items, PipelineConfig};
+use crate::pipeline::{run_items, PipelineConfig, Scratch, ScratchPool};
 use crate::state::{BlockLayout, StateVector};
 use crate::types::{Error, Result};
 use std::sync::atomic::Ordering;
@@ -67,7 +68,10 @@ impl<'a> Sc19Sim<'a> {
         }
 
         // Per-gate sweep: the defining behaviour of the basic solution.
+        // (The scratch arenas persist across gates, so even this engine's
+        // far more frequent chains stay allocation-free in steady state.)
         let pipe = PipelineConfig::new(1, self.workers);
+        let pool = ScratchPool::new(pipe.workers());
         for gate in &circuit.gates {
             let mut globals: Vec<usize> =
                 gate.targets().iter().copied().filter(|&q| q >= b).collect();
@@ -78,45 +82,56 @@ impl<'a> Sc19Sim<'a> {
                 gate.targets().iter().map(|&q| schedule.buffer_bit(q)).collect();
             let block_len = layout.block_len();
 
-            run_items::<Error, _>(pipe, schedule.num_groups(), |_ctx, gidx| {
-                let ids = schedule.group_blocks(gidx);
-                let payloads: Vec<BlockPayload> = metrics.time(Phase::Fetch, || {
-                    ids.iter().map(|&id| store.take(id)).collect::<Result<Vec<_>>>()
-                })?;
+            run_items::<Error, _>(pipe, schedule.num_groups(), &pool, |ctx, gidx| {
                 let glen = schedule.group_len();
-                let mut re = vec![0.0f64; glen];
-                let mut im = vec![0.0f64; glen];
+                ctx.scratch.ensure_planes(glen);
+                schedule.group_blocks_into(gidx, &mut ctx.scratch.block_ids);
+                let Scratch { re, im, block_ids, payloads, codec: cs, .. } = &mut *ctx.scratch;
+
+                metrics.time(Phase::Fetch, || -> Result<()> {
+                    payloads.clear();
+                    for &id in block_ids.iter() {
+                        payloads.push(store.take(id)?);
+                    }
+                    Ok(())
+                })?;
                 metrics.time(Phase::Decompress, || -> Result<()> {
                     for (slot, p) in payloads.iter().enumerate() {
-                        let r = codec.decompress(&p.re)?;
-                        let i = codec.decompress(&p.im)?;
-                        re[slot * block_len..(slot + 1) * block_len].copy_from_slice(&r);
-                        im[slot * block_len..(slot + 1) * block_len].copy_from_slice(&i);
+                        let dst = slot * block_len..(slot + 1) * block_len;
+                        codec.decompress_into_with(&p.re, &mut re[dst.clone()], cs)?;
+                        codec.decompress_into_with(&p.im, &mut im[dst], cs)?;
                         metrics.decompressions.fetch_add(2, Ordering::Relaxed);
                     }
                     Ok(())
                 })?;
                 metrics.time(Phase::Apply, || {
-                    self.applier.apply(&mut re, &mut im, gate, &bits)
+                    self.applier.apply(re, im, gate, &bits)
                 })?;
                 metrics.time(Phase::Compress, || -> Result<()> {
-                    for (slot, &id) in ids.iter().enumerate() {
-                        let r = codec.compress(&re[slot * block_len..(slot + 1) * block_len])?;
-                        let i = codec.compress(&im[slot * block_len..(slot + 1) * block_len])?;
+                    for (slot, p) in payloads.iter_mut().enumerate() {
+                        let src = slot * block_len..(slot + 1) * block_len;
+                        codec.compress_into_with(&re[src.clone()], &mut p.re, cs)?;
+                        codec.compress_into_with(&im[src], &mut p.im, cs)?;
                         metrics.compressions.fetch_add(2, Ordering::Relaxed);
                         metrics
                             .bytes_compressed_in
                             .fetch_add((block_len * 16) as u64, Ordering::Relaxed);
                         metrics
                             .bytes_compressed_out
-                            .fetch_add((r.len() + i.len()) as u64, Ordering::Relaxed);
-                        store.put(id, BlockPayload { re: r, im: i })?;
+                            .fetch_add((p.re.len() + p.im.len()) as u64, Ordering::Relaxed);
+                    }
+                    Ok(())
+                })?;
+                metrics.time(Phase::Store, || -> Result<()> {
+                    for (p, &id) in payloads.drain(..).zip(block_ids.iter()) {
+                        store.put(id, p)?;
                     }
                     Ok(())
                 })
             })?;
             metrics.gates_applied.fetch_add(1, Ordering::Relaxed);
         }
+        metrics.scratch_grows.store(pool.total_plane_grows(), Ordering::Relaxed);
 
         let wall = t0.elapsed().as_secs_f64();
         let state = if materialize {
@@ -124,12 +139,19 @@ impl<'a> Sc19Sim<'a> {
             let mut re = vec![0.0f64; len];
             let mut im = vec![0.0f64; len];
             let bl = layout.block_len();
+            let mut cs = CodecScratch::new();
             for id in 0..layout.num_blocks() {
                 let p = store.get(id)?;
-                re[id * bl..(id + 1) * bl]
-                    .copy_from_slice(&crate::compress::decompress_any(&p.re)?);
-                im[id * bl..(id + 1) * bl]
-                    .copy_from_slice(&crate::compress::decompress_any(&p.im)?);
+                crate::compress::decompress_any_into_with(
+                    &p.re,
+                    &mut re[id * bl..(id + 1) * bl],
+                    &mut cs,
+                )?;
+                crate::compress::decompress_any_into_with(
+                    &p.im,
+                    &mut im[id * bl..(id + 1) * bl],
+                    &mut cs,
+                )?;
             }
             Some(StateVector::from_planes(layout.n_qubits, re, im)?)
         } else {

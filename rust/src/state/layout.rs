@@ -119,6 +119,15 @@ impl GroupSchedule {
     /// ascending inner-bit pattern — the gather order that makes the buffer
     /// a dense `(b + |inner|)`-qubit state.
     pub fn group_blocks(&self, g: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.group_blocks_into(g, &mut out);
+        out
+    }
+
+    /// [`GroupSchedule::group_blocks`] into a reused buffer (`out` is
+    /// cleared, capacity retained) — the allocation-free gather helper the
+    /// pipeline workers use.
+    pub fn group_blocks_into(&self, g: usize, out: &mut Vec<usize>) {
         debug_assert!(g < self.num_groups());
         // Scatter outer rank bits into outer_bits positions.
         let mut base = 0usize;
@@ -127,17 +136,17 @@ impl GroupSchedule {
                 base |= 1 << bit;
             }
         }
-        (0..self.blocks_per_group())
-            .map(|pat| {
-                let mut id = base;
-                for (p, &bit) in self.inner_bits.iter().enumerate() {
-                    if pat & (1 << p) != 0 {
-                        id |= 1 << bit;
-                    }
+        out.clear();
+        out.reserve(self.blocks_per_group());
+        out.extend((0..self.blocks_per_group()).map(|pat| {
+            let mut id = base;
+            for (p, &bit) in self.inner_bits.iter().enumerate() {
+                if pat & (1 << p) != 0 {
+                    id |= 1 << bit;
                 }
-                id
-            })
-            .collect()
+            }
+            id
+        }));
     }
 
     /// Remap an absolute circuit qubit to its bit position in the gathered

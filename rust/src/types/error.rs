@@ -1,41 +1,67 @@
 //! Crate-wide error type. Every fallible public API returns [`Result`].
+//!
+//! Hand-rolled `Display`/`Error` impls (the build environment vendors no
+//! `thiserror`; see DESIGN.md substitutions).
 
 /// Unified error for the simulator stack.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid user/sim configuration (qubit counts, block sizes, ...).
-    #[error("config error: {0}")]
     Config(String),
 
     /// Circuit construction or parsing problems.
-    #[error("circuit error: {0}")]
     Circuit(String),
 
     /// OpenQASM parse failure with line information.
-    #[error("qasm parse error at line {line}: {msg}")]
     Qasm { line: usize, msg: String },
 
     /// Compressed payload is corrupt or version-mismatched.
-    #[error("codec error: {0}")]
     Codec(String),
 
     /// The two-level memory manager ran out of both tiers.
-    #[error("out of memory: {0}")]
     OutOfMemory(String),
 
     /// Secondary-tier (disk spill) I/O failure.
-    #[error("spill i/o error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// PJRT/XLA runtime failure (artifact load, compile, execute).
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// AOT artifact set is missing or inconsistent with the manifest.
-    #[error("artifact error: {0}")]
     Artifact(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Circuit(m) => write!(f, "circuit error: {m}"),
+            Error::Qasm { line, msg } => write!(f, "qasm parse error at line {line}: {msg}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::OutOfMemory(m) => write!(f, "out of memory: {m}"),
+            Error::Io(e) => write!(f, "spill i/o error: {e}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
