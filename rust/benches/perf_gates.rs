@@ -1,0 +1,183 @@
+//! Gate-throughput microbenchmark: fused-batched stage application
+//! (`gates::fused::apply_stage`) vs the per-gate scalar reference, on a
+//! deep 20+ qubit stage-shaped workload plus the QFT gate list.
+//!
+//! Reports amplitudes/sec (len x gates / wall — the per-gate path touches
+//! exactly that many amplitudes, so the ratio is the wall-clock speedup),
+//! plane-sweep counts, and the fidelity of the fused output against the
+//! per-gate output (expected >= 1 - 1e-10: both are the same product in
+//! f64, differing only in rounding association). Writes
+//! `BENCH_gates.json` next to the CWD for the per-PR perf trajectory.
+//!
+//! `BENCH_SMOKE=1` shrinks the plane so CI finishes in seconds.
+
+use bmqsim::bench_harness::{bench_json, bench_smoke, time_it};
+use bmqsim::circuit::fusion::fuse_gates;
+use bmqsim::circuit::{generators, Circuit};
+use bmqsim::gates::fused::{stage_sweeps, DEFAULT_TILE_BITS};
+use bmqsim::gates::{apply_gate, apply_stage};
+use bmqsim::state::StateVector;
+use bmqsim::types::SplitMix64;
+
+/// Stage-shaped deep circuit on an `n`-qubit group plane: a dense body of
+/// block-local gates (low qubits) plus per-layer inner-global traffic on
+/// the top 4 bits — the workload `BmqSim::process_group` actually sees.
+fn deep_stage_circuit(n: usize, layers: usize, seed: u64) -> Circuit {
+    let mut rng = SplitMix64::new(seed);
+    let mut c = Circuit::new(n, "deep_stage");
+    let hi_start = n.saturating_sub(4).max(2);
+    for _ in 0..layers {
+        for q in 0..hi_start - 1 {
+            let th = rng.next_f64() * 2.0 - 1.0;
+            c.u3(th, 0.3, -0.1, q);
+            if q % 2 == 0 {
+                c.cx(q, q + 1);
+            } else {
+                c.cp(th, q, q + 1);
+            }
+        }
+        for g in hi_start..n {
+            c.h(g);
+            c.cp(rng.next_f64(), g, g - hi_start);
+        }
+    }
+    c
+}
+
+/// `StateVector::fidelity_normalized` over raw plane pairs — the same
+/// metric the engine tests report, so trajectory numbers stay comparable.
+fn fidelity(n: usize, a_re: &[f64], a_im: &[f64], b_re: &[f64], b_im: &[f64]) -> f64 {
+    let a = StateVector::from_planes(n, a_re.to_vec(), a_im.to_vec()).unwrap();
+    let b = StateVector::from_planes(n, b_re.to_vec(), b_im.to_vec()).unwrap();
+    a.fidelity_normalized(&b)
+}
+
+struct CaseResult {
+    json: String,
+    headline_speedup: f64,
+    fidelity: f64,
+}
+
+fn run_case(
+    label: &str,
+    c: &Circuit,
+    tile_bits: usize,
+    par_workers: usize,
+    reps: usize,
+) -> CaseResult {
+    let n = c.n_qubits;
+    let len = 1usize << n;
+    let mut rng = SplitMix64::new(0x6A7E5);
+    let re0: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+    let im0: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+    let gates = c.gates.len();
+    let amps = (len as f64) * (gates as f64);
+
+    // Per-gate scalar reference.
+    let mut re = re0.clone();
+    let mut im = im0.clone();
+    let unfused_secs = time_it(reps, || {
+        re.copy_from_slice(&re0);
+        im.copy_from_slice(&im0);
+        for g in &c.gates {
+            apply_gate(&mut re, &mut im, g);
+        }
+    });
+    let unfused_state = (re.clone(), im.clone());
+
+    // Fused-batched, single worker.
+    let ops = fuse_gates(&c.gates, 3);
+    let sweeps = stage_sweeps(&ops, n, tile_bits);
+    let fused_secs = time_it(reps, || {
+        re.copy_from_slice(&re0);
+        im.copy_from_slice(&im0);
+        apply_stage(&mut re, &mut im, &ops, tile_bits, 1);
+    });
+    let fid = fidelity(n, &re, &im, &unfused_state.0, &unfused_state.1);
+
+    // Fused-batched, worker-parallel sweeps.
+    let fused_par_secs = time_it(reps, || {
+        re.copy_from_slice(&re0);
+        im.copy_from_slice(&im0);
+        apply_stage(&mut re, &mut im, &ops, tile_bits, par_workers);
+    });
+    let fid_par = fidelity(n, &re, &im, &unfused_state.0, &unfused_state.1);
+
+    let speedup = unfused_secs / fused_secs;
+    let speedup_par = unfused_secs / fused_par_secs;
+    println!(
+        "== {label}: n={n}, {gates} gates -> {} fused ops, {sweeps} sweeps ==",
+        ops.len()
+    );
+    println!(
+        "  per-gate scalar   {:>9.2} ms   {:>9.1} Mamp/s",
+        unfused_secs * 1e3,
+        amps / unfused_secs / 1e6
+    );
+    println!(
+        "  fused batched x1  {:>9.2} ms   {:>9.1} Mamp/s   {speedup:>6.2}x   fidelity {fid:.12}",
+        fused_secs * 1e3,
+        amps / fused_secs / 1e6
+    );
+    println!(
+        "  fused batched x{par_workers}  {:>9.2} ms   {:>9.1} Mamp/s   {speedup_par:>6.2}x   fidelity {fid_par:.12}",
+        fused_par_secs * 1e3,
+        amps / fused_par_secs / 1e6
+    );
+
+    let json = bench_json::obj(&[
+        ("n".into(), format!("{n}")),
+        ("gates".into(), format!("{gates}")),
+        ("fused_ops".into(), format!("{}", ops.len())),
+        ("sweeps".into(), format!("{sweeps}")),
+        ("tile_bits".into(), format!("{tile_bits}")),
+        ("par_workers".into(), format!("{par_workers}")),
+        ("unfused_amps_per_s".into(), bench_json::num(amps / unfused_secs)),
+        ("fused_amps_per_s".into(), bench_json::num(amps / fused_secs)),
+        ("fused_par_amps_per_s".into(), bench_json::num(amps / fused_par_secs)),
+        ("speedup_fused".into(), bench_json::num(speedup)),
+        ("speedup_fused_parallel".into(), bench_json::num(speedup_par)),
+        ("fidelity_fused_vs_unfused".into(), format!("{:.14}", fid.min(fid_par))),
+    ]);
+    // Headline = SINGLE-worker fused vs per-gate scalar: parallelism must
+    // not mask a regression in the fusion/tiling win itself.
+    CaseResult { json, headline_speedup: speedup, fidelity: fid.min(fid_par) }
+}
+
+fn main() {
+    let smoke = bench_smoke();
+    // Acceptance target: 20+ qubit deep circuit in full mode.
+    let (n, layers, reps) = if smoke { (14, 2, 1) } else { (20, 6, 2) };
+    let par_workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+
+    let deep = deep_stage_circuit(n, layers, 0xD4E9);
+    let deep_res = run_case("deep_stage", &deep, DEFAULT_TILE_BITS, par_workers, reps);
+
+    let qft = generators::qft(n);
+    let qft_res = run_case("qft", &qft, DEFAULT_TILE_BITS, par_workers, reps);
+
+    let doc = bench_json::obj(&[
+        ("bench".into(), "\"perf_gates\"".into()),
+        ("smoke".into(), format!("{smoke}")),
+        ("deep_stage".into(), deep_res.json.clone()),
+        ("qft".into(), qft_res.json.clone()),
+        (
+            "speedup".into(),
+            bench_json::num(deep_res.headline_speedup),
+        ),
+        ("fidelity".into(), format!("{:.14}", deep_res.fidelity.min(qft_res.fidelity))),
+    ]);
+    match std::fs::write("BENCH_gates.json", doc + "\n") {
+        Ok(()) => println!("\nwrote BENCH_gates.json"),
+        Err(e) => {
+            eprintln!("\ncould not write BENCH_gates.json: {e}");
+            std::process::exit(1);
+        }
+    }
+    if deep_res.headline_speedup < 2.0 {
+        eprintln!(
+            "WARNING: fused-batched speedup {:.2}x below the 2x target",
+            deep_res.headline_speedup
+        );
+    }
+}

@@ -11,6 +11,8 @@
 //! group-chain section runs the full fetch → decompress → apply →
 //! compress → store cycle the way `BmqSim::process_group` does.
 
+use bmqsim::bench_harness::bench_json::{num as jnum, obj as json_obj};
+use bmqsim::bench_harness::{bench_smoke, time_it};
 use bmqsim::circuit::{Gate, GateKind};
 use bmqsim::compress::{Codec, CodecScratch};
 use bmqsim::gates::{apply_gate, apply_gate_remapped};
@@ -18,38 +20,17 @@ use bmqsim::memory::{BlockPayload, BlockStore};
 use bmqsim::pipeline::Scratch;
 use bmqsim::state::BlockLayout;
 use bmqsim::types::SplitMix64;
-use std::time::Instant;
-
-fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
-    // warmup
-    f();
-    let t0 = Instant::now();
-    for _ in 0..reps {
-        f();
-    }
-    t0.elapsed().as_secs_f64() / reps as f64
-}
-
-/// Minimal JSON writer (the vendor set has no serde; runtime::Json is
-/// parse-only). Values are (key, already-rendered-JSON-value) pairs.
-fn json_obj(fields: &[(String, String)]) -> String {
-    let inner: Vec<String> = fields.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
-    format!("{{{}}}", inner.join(", "))
-}
-
-fn jnum(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x:.4}")
-    } else {
-        "null".to_string()
-    }
-}
 
 fn main() {
     let mut json_kernels: Vec<(String, String)> = Vec::new();
     let mut json_codecs: Vec<(String, String)> = Vec::new();
 
-    let n = 22; // 4M amplitudes, 64 MiB state
+    // BENCH_SMOKE=1 (CI): shrink planes/reps so the full bench still runs
+    // end-to-end and emits BENCH_hotpath.json in seconds.
+    let smoke = bench_smoke();
+    let n = if smoke { 16 } else { 22 }; // full: 4M amplitudes, 64 MiB state
+    let kernel_reps = if smoke { 2 } else { 5 };
+    let codec_reps = if smoke { 1 } else { 3 };
     let len = 1usize << n;
     let mut rng = SplitMix64::new(7);
     let mut re: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
@@ -66,7 +47,7 @@ fn main() {
         ("cp (diag 2q)", "cp", Gate::q2(GateKind::Cp(0.7), 12, 3).unwrap()),
         ("rxx (dense 2q)", "rxx", Gate::q2(GateKind::Rxx(0.4), 12, 3).unwrap()),
     ] {
-        let secs = time_it(5, || apply_gate(&mut re, &mut im, &gate));
+        let secs = time_it(kernel_reps, || apply_gate(&mut re, &mut im, &gate));
         println!(
             "  {label:<15} {:>8.2} ms   {:>7.2} GB/s   {:>8.1} Mamp/s",
             secs * 1e3,
@@ -84,7 +65,7 @@ fn main() {
 
     // memcpy roofline reference
     let mut dst = vec![0.0f64; len];
-    let secs = time_it(5, || {
+    let secs = time_it(kernel_reps, || {
         dst.copy_from_slice(&re);
         std::hint::black_box(&mut dst);
     });
@@ -99,8 +80,11 @@ fn main() {
         json_obj(&[("gbps".into(), jnum((len * 16) as f64 / secs / 1e9))]),
     ));
 
-    println!("\n== codecs (plane = 2^20 doubles, 8 MiB) ==");
-    let plen = 1 << 20;
+    let plen = if smoke { 1 << 16 } else { 1 << 20 };
+    println!(
+        "\n== codecs (plane = {plen} doubles, {:.1} MiB) ==",
+        (plen * 8) as f64 / (1 << 20) as f64
+    );
     let dense: Vec<f64> = (0..plen).map(|_| rng.next_gaussian() * 1e-2).collect();
     let mut sparse = vec![0.0f64; plen];
     for i in 0..64 {
@@ -118,20 +102,20 @@ fn main() {
             let mut outbuf: Vec<u8> = Vec::new();
             // Pre-refactor paths: fresh allocations each call, plus the
             // plane copy decompress forced on the engine.
-            let csecs = time_it(3, || {
+            let csecs = time_it(codec_reps, || {
                 let _ = std::hint::black_box(codec.compress(data).unwrap());
             });
-            let dsecs = time_it(3, || {
+            let dsecs = time_it(codec_reps, || {
                 let v = codec.decompress(&enc).unwrap();
                 target.copy_from_slice(&v);
                 std::hint::black_box(&mut target);
             });
             // Zero-copy paths: reused output + scratch arena.
-            let cisecs = time_it(3, || {
+            let cisecs = time_it(codec_reps, || {
                 codec.compress_into_with(data, &mut outbuf, &mut scratch).unwrap();
                 std::hint::black_box(&mut outbuf);
             });
-            let disecs = time_it(3, || {
+            let disecs = time_it(codec_reps, || {
                 codec.decompress_into_with(&enc, &mut target, &mut scratch).unwrap();
                 std::hint::black_box(&mut target);
             });
@@ -162,16 +146,19 @@ fn main() {
 
     // ---- Full group-chain benchmark: fetch → decompress → apply →
     // compress → store, the shape of BmqSim::process_group. ----
-    println!("\n== group chain (n=20, b=16: 16 blocks, groups of 4, glen=2^18) ==");
-    let layout = BlockLayout::new(20, 16).unwrap();
-    let schedule = layout.group_schedule(&[16, 18]).unwrap();
+    let (cn, cb) = if smoke { (16, 12) } else { (20, 16) };
+    println!("\n== group chain (n={cn}, b={cb}: 16 blocks, groups of 4, glen=2^{}) ==", cb + 2);
+    let layout = BlockLayout::new(cn, cb).unwrap();
+    let schedule = layout.group_schedule(&[cb, cb + 2]).unwrap();
     let block_len = layout.block_len();
     let glen = schedule.group_len();
     let codec = Codec::pointwise(1e-3);
+    // Targets must be block-local or INNER globals (cb, cb+2): an outer
+    // global would panic in `buffer_bit`.
     let gates = [
         Gate::q1(GateKind::H, 3).unwrap(),
-        Gate::q2(GateKind::Cx, 17, 2).unwrap(),
-        Gate::q1(GateKind::Rz(0.41), 16).unwrap(),
+        Gate::q2(GateKind::Cx, cb + 2, 2).unwrap(),
+        Gate::q1(GateKind::Rz(0.41), cb).unwrap(),
     ];
     let remapped: Vec<(Gate, Vec<usize>)> = gates
         .iter()
@@ -200,7 +187,7 @@ fn main() {
     };
 
     let total_amps = (layout.num_blocks() * block_len) as f64;
-    let reps = 3usize;
+    let reps = if smoke { 1usize } else { 3 };
 
     // Zero-copy chain: scratch arena + *_into APIs + recycled payloads.
     let store = init_store(&mut rng);
@@ -283,12 +270,16 @@ fn main() {
     // ---- Machine-readable output ----
     let doc = json_obj(&[
         ("bench".into(), "\"perf_hotpath\"".into()),
+        ("smoke".into(), format!("{smoke}")),
         ("gate_kernels".into(), json_obj(&json_kernels)),
         ("codecs".into(), json_obj(&json_codecs)),
         ("group_chain".into(), json_chain),
     ]);
     match std::fs::write("BENCH_hotpath.json", doc + "\n") {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_hotpath.json: {e}"),
+        Err(e) => {
+            eprintln!("\ncould not write BENCH_hotpath.json: {e}");
+            std::process::exit(1);
+        }
     }
 }

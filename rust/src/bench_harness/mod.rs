@@ -17,6 +17,45 @@ use std::time::Instant;
 /// Default benchmark seed (fixed: experiments are reproducible).
 pub const SEED: u64 = 0xB39_51B;
 
+/// True when `BENCH_SMOKE` is set to a non-empty value other than `0`:
+/// self-timed benches shrink problem sizes/reps so CI can exercise them
+/// end-to-end (and still emit their `BENCH_*.json`) in seconds.
+pub fn bench_smoke() -> bool {
+    matches!(std::env::var("BENCH_SMOKE"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// Shared stopwatch for the self-timed perf benches: one warmup call,
+/// then the mean of `reps` timed calls.
+pub fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Minimal JSON writers shared by the self-timed perf benches (the vendor
+/// set has no serde; `runtime::Json` is parse-only). Values are
+/// `(key, already-rendered-JSON-value)` pairs.
+pub mod bench_json {
+    /// Render an object from already-rendered value strings.
+    pub fn obj(fields: &[(String, String)]) -> String {
+        let inner: Vec<String> =
+            fields.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        format!("{{{}}}", inner.join(", "))
+    }
+
+    /// Render a finite number (4 decimal places) or `null`.
+    pub fn num(x: f64) -> String {
+        if x.is_finite() {
+            format!("{x:.4}")
+        } else {
+            "null".to_string()
+        }
+    }
+}
+
 fn spill_dir() -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!("bmqsim-bench-{}", std::process::id()));
     let _ = std::fs::create_dir_all(&d);

@@ -1,0 +1,128 @@
+//! Quick local triage for stage application: profile fused-batched vs
+//! per-gate scalar gate application at configurable qubit counts.
+//!
+//! ```text
+//! profile_gates [--qubits N] [--depth D] [--mode fused|unfused|both]
+//!               [--tile-bits T] [--workers W] [--max-k K]
+//!               [--circuit qft|layers] [--reps R] [--seed S]
+//! ```
+//!
+//! Defaults: 20 qubits, qft circuit, both modes, tile 15, 1 worker,
+//! k = 3, 2 reps. Prints ms/pass and Mamp/s per mode so a perf
+//! regression bisects in one command (`perf_gates` is the recorded
+//! benchmark; this is the knob-turning tool).
+
+use bmqsim::bench_harness::time_it;
+use bmqsim::circuit::fusion::fuse_gates;
+use bmqsim::circuit::{generators, Circuit};
+use bmqsim::gates::fused::stage_sweeps;
+use bmqsim::gates::{apply_gate, apply_stage};
+use bmqsim::types::SplitMix64;
+
+fn parse_flag<T: std::str::FromStr>(args: &[String], key: &str, default: T) -> T {
+    let Some(i) = args.iter().position(|a| a == key) else {
+        return default;
+    };
+    let Some(v) = args.get(i + 1) else {
+        eprintln!("missing value for {key}");
+        std::process::exit(2);
+    };
+    v.parse().unwrap_or_else(|_| {
+        eprintln!("bad value for {key}: {v:?}");
+        std::process::exit(2);
+    })
+}
+
+fn layered_circuit(n: usize, depth: usize, seed: u64) -> Circuit {
+    let mut rng = SplitMix64::new(seed);
+    let mut c = Circuit::new(n, "layers");
+    for _ in 0..depth {
+        for q in 0..n {
+            c.u3(rng.next_f64(), 0.2, -0.4, q);
+        }
+        for q in 0..n - 1 {
+            if q % 2 == 0 {
+                c.cx(q, q + 1);
+            } else {
+                c.cp(rng.next_f64(), q, q + 1);
+            }
+        }
+    }
+    c
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = parse_flag(&args, "--qubits", 20);
+    let depth: usize = parse_flag(&args, "--depth", 4);
+    let tile_bits: usize = parse_flag(&args, "--tile-bits", 15);
+    let workers: usize = parse_flag(&args, "--workers", 1);
+    let max_k: usize = parse_flag(&args, "--max-k", 3);
+    let reps: usize = parse_flag(&args, "--reps", 2);
+    let seed: u64 = parse_flag(&args, "--seed", 7u64);
+    let mode: String = parse_flag(&args, "--mode", "both".to_string());
+    let circuit: String = parse_flag(&args, "--circuit", "qft".to_string());
+
+    if !matches!(mode.as_str(), "both" | "fused" | "unfused") {
+        eprintln!("unknown --mode {mode:?} (fused|unfused|both)");
+        std::process::exit(2);
+    }
+    let c = match circuit.as_str() {
+        "qft" => generators::qft(n),
+        "layers" => layered_circuit(n, depth, seed),
+        other => {
+            eprintln!("unknown --circuit {other:?} (qft|layers)");
+            std::process::exit(2);
+        }
+    };
+    let len = 1usize << n;
+    let mut rng = SplitMix64::new(seed);
+    let re0: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+    let im0: Vec<f64> = (0..len).map(|_| rng.next_gaussian()).collect();
+    let amps = (len as f64) * (c.gates.len() as f64);
+    println!(
+        "circuit {} — n={n}, {} gates, plane 2^{n} amps, tile 2^{tile_bits}, {workers} worker(s)",
+        c.name,
+        c.gates.len()
+    );
+
+    let mut re = re0.clone();
+    let mut im = im0.clone();
+    let mut timed = |label: &str, f: &mut dyn FnMut(&mut [f64], &mut [f64])| {
+        let secs = time_it(reps, || {
+            re.copy_from_slice(&re0);
+            im.copy_from_slice(&im0);
+            f(re.as_mut_slice(), im.as_mut_slice());
+        });
+        println!(
+            "  {label:<18} {:>9.2} ms/pass   {:>9.1} Mamp/s",
+            secs * 1e3,
+            amps / secs / 1e6
+        );
+        secs
+    };
+
+    let mut unfused_secs = None;
+    if mode == "both" || mode == "unfused" {
+        unfused_secs = Some(timed("per-gate scalar", &mut |re, im| {
+            for g in &c.gates {
+                apply_gate(re, im, g);
+            }
+        }));
+    }
+    if mode == "both" || mode == "fused" {
+        let ops = fuse_gates(&c.gates, max_k);
+        println!(
+            "  fusion: {} gates -> {} ops, {} sweeps (k<={max_k})",
+            c.gates.len(),
+            ops.len(),
+            stage_sweeps(&ops, n, tile_bits)
+        );
+        let fused_secs = timed("fused batched", &mut |re, im| {
+            apply_stage(re, im, &ops, tile_bits, workers);
+        });
+        if let Some(u) = unfused_secs {
+            println!("  speedup            {:>9.2}x", u / fused_secs);
+        }
+    }
+}

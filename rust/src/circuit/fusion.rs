@@ -1,0 +1,447 @@
+//! Gate fusion: merge runs of consecutive gates whose combined support
+//! fits `k <= 3` qubits into one dense `2^k x 2^k` unitary.
+//!
+//! Rationale (§Perf): after the zero-allocation refactor the group-chain
+//! hot path is dominated by gate application, and `gates/apply.rs` walks
+//! the whole plane once *per gate*. A fused run costs ONE walk for its
+//! whole gate sequence, so the sweep count per stage drops by the fusion
+//! factor — the same amortization Algorithm 1 buys for (de)compression,
+//! applied one level down. SC19 ("Full-State Quantum Circuit Simulation
+//! by Using Data Compression") reports the update step is
+//! memory-bandwidth-bound, so fewer sweeps translate directly to time.
+//!
+//! Fusion rules:
+//! * gates merge **in circuit order** — a gate joins the current run iff
+//!   the union of supports stays within the `k` limit; no commuting-based
+//!   reordering is attempted, so runs are always contiguous subsequences
+//!   and the fused product is exactly the sequential product;
+//! * `k` is capped at [`MAX_FUSED_QUBITS`] (= 3): an 8x8 matvec per octet
+//!   still fits registers, while `k = 4` would already touch 16 amplitudes
+//!   per site and stop vectorizing well;
+//! * a single gate always forms a (trivial) `FusedGate`, even when the
+//!   `max_k` knob is below its arity — fusion never splits a gate.
+//!
+//! Matrix basis convention: support bits are sorted ascending and basis
+//! bit `j` of a matrix index corresponds to support bit `bits[j]`, i.e.
+//! `bits[0]` is the matrix LSB. (Note this differs from
+//! [`Gate::matrix2q`], whose basis puts `qubits[0]` in the HIGH bit; the
+//! constructors permute accordingly.)
+
+use super::Gate;
+use crate::types::Complex;
+
+/// Hard cap on the fused-unitary width `k`.
+pub const MAX_FUSED_QUBITS: usize = 3;
+
+/// A dense `2^k x 2^k` unitary over `k <= 3` support bits — the unit of
+/// batched gate application ([`crate::gates::fused`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedGate {
+    /// Sorted, distinct buffer bit positions of the support (ascending).
+    bits: Vec<usize>,
+    /// Row-major `2^k x 2^k` unitary; basis bit `j` <-> `bits[j]`.
+    mat: Vec<Complex>,
+    /// How many original circuit gates were merged into this op.
+    source_gates: usize,
+}
+
+impl FusedGate {
+    /// Wrap a single gate, with its targets already remapped to buffer
+    /// bit positions (`bits[i]` is the buffer bit of `gate.targets()[i]`).
+    pub fn from_gate(gate: &Gate, bits: &[usize]) -> FusedGate {
+        debug_assert_eq!(bits.len(), gate.arity());
+        match gate.arity() {
+            1 => FusedGate {
+                bits: vec![bits[0]],
+                mat: gate.matrix1q().to_vec(),
+                source_gates: 1,
+            },
+            _ => {
+                let (pa, pb) = (bits[0], bits[1]);
+                debug_assert_ne!(pa, pb);
+                let support = if pa < pb { vec![pa, pb] } else { vec![pb, pa] };
+                // matrix2q basis: bit 1 <-> qubits[0] (buffer bit pa),
+                // bit 0 <-> qubits[1] (buffer bit pb).
+                let pos = [
+                    support.iter().position(|&b| b == pb).unwrap(),
+                    support.iter().position(|&b| b == pa).unwrap(),
+                ];
+                let mat = embed(&gate.matrix2q(), &pos, support.len());
+                FusedGate { bits: support, mat, source_gates: 1 }
+            }
+        }
+    }
+
+    /// Support width `k`.
+    pub fn k(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Matrix dimension `2^k`.
+    pub fn dim(&self) -> usize {
+        1usize << self.bits.len()
+    }
+
+    /// Sorted support bit positions.
+    pub fn bits(&self) -> &[usize] {
+        &self.bits
+    }
+
+    /// Row-major `2^k x 2^k` unitary (basis bit `j` <-> `bits[j]`).
+    pub fn matrix(&self) -> &[Complex] {
+        &self.mat
+    }
+
+    /// Highest support bit — decides tile locality in the batched kernel.
+    pub fn max_bit(&self) -> usize {
+        *self.bits.last().expect("fused gate has non-empty support")
+    }
+
+    /// Number of original gates folded into this op.
+    pub fn source_gates(&self) -> usize {
+        self.source_gates
+    }
+
+    /// Try to fold `gate` (applied AFTER this op) into the product. Fails
+    /// (without modifying `self`) when the union support would exceed
+    /// `max_k` bits.
+    pub fn try_absorb(&mut self, gate: &Gate, bits: &[usize], max_k: usize) -> bool {
+        let mut union = self.bits.clone();
+        for &b in bits {
+            if let Err(pos) = union.binary_search(&b) {
+                union.insert(pos, b);
+            }
+        }
+        if union.len() > max_k {
+            return false;
+        }
+        let dim = 1usize << union.len();
+        let cur = if union == self.bits {
+            std::mem::take(&mut self.mat)
+        } else {
+            let pos: Vec<usize> =
+                self.bits.iter().map(|b| union.binary_search(b).unwrap()).collect();
+            embed(&self.mat, &pos, union.len())
+        };
+        let g = FusedGate::from_gate(gate, bits);
+        let gpos: Vec<usize> =
+            g.bits.iter().map(|b| union.binary_search(b).unwrap()).collect();
+        let gm = embed(&g.mat, &gpos, union.len());
+        // `gate` acts after the accumulated run: v' = G (M v) = (G M) v.
+        self.mat = matmul(&gm, &cur, dim);
+        self.bits = union;
+        self.source_gates += 1;
+        true
+    }
+}
+
+/// Expand `m` (a matrix over `pos.len()` basis bits) onto a `2^k` space:
+/// matrix-basis bit `i` sits at target-basis bit `pos[i]`; bits outside
+/// `pos` are untouched (identity).
+fn embed(m: &[Complex], pos: &[usize], k: usize) -> Vec<Complex> {
+    let sm = pos.len();
+    let dm = 1usize << sm;
+    debug_assert_eq!(m.len(), dm * dm);
+    let dim = 1usize << k;
+    let mut mask = 0usize;
+    for &p in pos {
+        mask |= 1 << p;
+    }
+    let gather = |idx: usize| -> usize {
+        let mut s = 0usize;
+        for (i, &p) in pos.iter().enumerate() {
+            if (idx >> p) & 1 == 1 {
+                s |= 1 << i;
+            }
+        }
+        s
+    };
+    let mut out = vec![Complex::ZERO; dim * dim];
+    for r in 0..dim {
+        for c in 0..dim {
+            if (r & !mask) == (c & !mask) {
+                out[r * dim + c] = m[gather(r) * dm + gather(c)];
+            }
+        }
+    }
+    out
+}
+
+/// Row-major `dim x dim` complex matrix product `a * b`.
+fn matmul(a: &[Complex], b: &[Complex], dim: usize) -> Vec<Complex> {
+    let mut out = vec![Complex::ZERO; dim * dim];
+    for r in 0..dim {
+        for c in 0..dim {
+            let mut acc = Complex::ZERO;
+            for t in 0..dim {
+                acc += a[r * dim + t] * b[t * dim + c];
+            }
+            out[r * dim + c] = acc;
+        }
+    }
+    out
+}
+
+fn fuse_inner<'a, I>(items: I, max_k: usize) -> Vec<FusedGate>
+where
+    I: Iterator<Item = (&'a Gate, &'a [usize])>,
+{
+    let max_k = max_k.clamp(1, MAX_FUSED_QUBITS);
+    let mut out: Vec<FusedGate> = Vec::new();
+    for (gate, bits) in items {
+        let absorbed = match out.last_mut() {
+            Some(cur) => cur.try_absorb(gate, bits, max_k),
+            None => false,
+        };
+        if !absorbed {
+            out.push(FusedGate::from_gate(gate, bits));
+        }
+    }
+    out
+}
+
+/// Fuse a gate list whose targets are already buffer bit positions (the
+/// SV-group path: `bits` come from `GroupSchedule::buffer_bit`).
+pub fn fuse_remapped(gates: &[(Gate, Vec<usize>)], max_k: usize) -> Vec<FusedGate> {
+    fuse_inner(gates.iter().map(|(g, b)| (g, b.as_slice())), max_k)
+}
+
+/// Fuse a gate list in absolute-qubit space (dense-plane semantics).
+pub fn fuse_gates(gates: &[Gate], max_k: usize) -> Vec<FusedGate> {
+    fuse_inner(gates.iter().map(|g| (g, g.targets())), max_k)
+}
+
+/// Fusion tally for a gate list: `(fused_ops, gate_merges)` where
+/// `gate_merges = gates - fused_ops` is the number of plane sweeps the
+/// fusion pass removes.
+pub fn fusion_summary(gates: &[Gate], max_k: usize) -> (usize, usize) {
+    let ops = fuse_gates(gates, max_k).len();
+    (ops, gates.len() - ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::{Circuit, GateKind};
+    use crate::types::SplitMix64;
+
+    /// Reference: apply `op` to a dense state by brute-force expansion.
+    fn apply_fused_ref(re: &mut [f64], im: &mut [f64], op: &FusedGate) {
+        let len = re.len();
+        let dim = op.dim();
+        let m = op.matrix();
+        let mask: usize = op.bits().iter().map(|&b| 1usize << b).sum();
+        let mut out_re = vec![0.0; len];
+        let mut out_im = vec![0.0; len];
+        for out in 0..len {
+            let mut r = 0usize;
+            for (j, &b) in op.bits().iter().enumerate() {
+                if (out >> b) & 1 == 1 {
+                    r |= 1 << j;
+                }
+            }
+            for s in 0..dim {
+                let mut input = out & !mask;
+                for (j, &b) in op.bits().iter().enumerate() {
+                    if (s >> j) & 1 == 1 {
+                        input |= 1 << b;
+                    }
+                }
+                let c = m[r * dim + s];
+                out_re[out] += c.re * re[input] - c.im * im[input];
+                out_im[out] += c.re * im[input] + c.im * re[input];
+            }
+        }
+        re.copy_from_slice(&out_re);
+        im.copy_from_slice(&out_im);
+    }
+
+    fn random_planes(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = SplitMix64::new(seed);
+        let len = 1usize << n;
+        (
+            (0..len).map(|_| rng.next_gaussian()).collect(),
+            (0..len).map(|_| rng.next_gaussian()).collect(),
+        )
+    }
+
+    fn random_circuit(n: usize, depth: usize, seed: u64) -> Circuit {
+        use GateKind::*;
+        let mut rng = SplitMix64::new(seed);
+        let mut c = Circuit::new(n, "rand");
+        for _ in 0..depth {
+            let q = (rng.next_u64() as usize) % n;
+            let p = {
+                let mut p = (rng.next_u64() as usize) % n;
+                while p == q {
+                    p = (rng.next_u64() as usize) % n;
+                }
+                p
+            };
+            let theta = rng.next_f64() * 2.0 - 1.0;
+            let gate = match rng.next_u64() % 8 {
+                0 => Gate::q1(H, q).unwrap(),
+                1 => Gate::q1(X, q).unwrap(),
+                2 => Gate::q1(Rz(theta), q).unwrap(),
+                3 => Gate::q1(U3(theta, 0.4, -0.2), q).unwrap(),
+                4 => Gate::q2(Cx, q, p).unwrap(),
+                5 => Gate::q2(Cp(theta), q, p).unwrap(),
+                6 => Gate::q2(Rxx(theta), q, p).unwrap(),
+                _ => Gate::q2(Swap, q, p).unwrap(),
+            };
+            c.push(gate).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn single_gate_wrapping_matches_per_gate_kernels() {
+        use GateKind::*;
+        let n = 4;
+        let kinds_1q =
+            [X, Y, Z, H, S, T, Sx, Rx(0.7), Ry(-0.4), Rz(1.9), P(0.33), U3(0.3, 1.2, -0.8)];
+        for t in 0..n {
+            for (ki, kind) in kinds_1q.iter().enumerate() {
+                let gate = Gate::q1(*kind, t).unwrap();
+                let op = FusedGate::from_gate(&gate, gate.targets());
+                assert_eq!(op.k(), 1);
+                assert_eq!(op.bits(), &[t]);
+                let (mut re, mut im) = random_planes(n, (t * 100 + ki) as u64);
+                let (mut re2, mut im2) = (re.clone(), im.clone());
+                crate::gates::apply_gate(&mut re, &mut im, &gate);
+                apply_fused_ref(&mut re2, &mut im2, &op);
+                for i in 0..re.len() {
+                    assert!((re[i] - re2[i]).abs() < 1e-12 && (im[i] - im2[i]).abs() < 1e-12);
+                }
+            }
+        }
+        let kinds_2q = [Cx, Cy, Cz, Swap, Cp(0.9), Crx(0.5), Cry(-1.1), Rxx(0.6), Rzz(-0.3)];
+        for qa in 0..n {
+            for qb in 0..n {
+                if qa == qb {
+                    continue;
+                }
+                for (ki, kind) in kinds_2q.iter().enumerate() {
+                    let gate = Gate::q2(*kind, qa, qb).unwrap();
+                    let op = FusedGate::from_gate(&gate, gate.targets());
+                    assert_eq!(op.k(), 2);
+                    assert_eq!(op.bits(), &[qa.min(qb), qa.max(qb)]);
+                    let (mut re, mut im) =
+                        random_planes(n, (qa * 1000 + qb * 100 + ki) as u64);
+                    let (mut re2, mut im2) = (re.clone(), im.clone());
+                    crate::gates::apply_gate(&mut re, &mut im, &gate);
+                    apply_fused_ref(&mut re2, &mut im2, &op);
+                    for i in 0..re.len() {
+                        assert!(
+                            (re[i] - re2[i]).abs() < 1e-12 && (im[i] - im2[i]).abs() < 1e-12,
+                            "{kind:?} ({qa},{qb}) amp {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_product_equals_sequential_application() {
+        for seed in 0..6u64 {
+            let n = 5;
+            let c = random_circuit(n, 40, seed);
+            for max_k in 1..=3usize {
+                let ops = fuse_gates(&c.gates, max_k);
+                // Reference: per-gate application.
+                let (mut re_ref, mut im_ref) = random_planes(n, seed + 77);
+                let (mut re, mut im) = (re_ref.clone(), im_ref.clone());
+                for g in &c.gates {
+                    crate::gates::apply_gate(&mut re_ref, &mut im_ref, g);
+                }
+                for op in &ops {
+                    apply_fused_ref(&mut re, &mut im, op);
+                }
+                for i in 0..re.len() {
+                    assert!(
+                        (re[i] - re_ref[i]).abs() < 1e-12 && (im[i] - im_ref[i]).abs() < 1e-12,
+                        "seed {seed} max_k {max_k} amp {i}"
+                    );
+                }
+                // Bookkeeping: every source gate accounted for exactly once.
+                let total: usize = ops.iter().map(|o| o.source_gates()).sum();
+                assert_eq!(total, c.gates.len());
+                for op in &ops {
+                    assert!(op.k() <= max_k.max(2), "op wider than limit");
+                    assert!(op.bits().windows(2).all(|w| w[0] < w[1]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_qubit_run_fuses_to_one_op() {
+        let mut c = Circuit::new(4, "deep");
+        for _ in 0..50 {
+            c.t(2).h(2);
+        }
+        let ops = fuse_gates(&c.gates, 3);
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].source_gates(), 100);
+        assert_eq!(ops[0].bits(), &[2]);
+    }
+
+    #[test]
+    fn k_limit_bounds_runs() {
+        // Gates on disjoint qubit pairs: k=2 keeps them separate, k=3
+        // cannot hold two disjoint 2q gates either (4 qubits), so only
+        // overlapping pairs merge.
+        let mut c = Circuit::new(6, "pairs");
+        c.cx(0, 1).cx(2, 3).cx(4, 5);
+        assert_eq!(fuse_gates(&c.gates, 2).len(), 3);
+        assert_eq!(fuse_gates(&c.gates, 3).len(), 3);
+        // Overlapping chain fits in 3 qubits pairwise.
+        let mut c = Circuit::new(6, "chain");
+        c.cx(0, 1).cx(1, 2).cx(0, 2);
+        assert_eq!(fuse_gates(&c.gates, 3).len(), 1);
+        assert_eq!(fuse_gates(&c.gates, 2).len(), 3);
+    }
+
+    #[test]
+    fn max_k_one_still_admits_two_qubit_gates() {
+        let mut c = Circuit::new(4, "mk1");
+        c.h(0).h(0).cx(0, 1).rz(0.5, 1);
+        let ops = fuse_gates(&c.gates, 1);
+        // h+h fuse (k=1); cx stands alone (k=2 allowed as a single gate);
+        // rz cannot join the cx (union still 2 > 1).
+        assert_eq!(ops.len(), 3);
+        assert_eq!(ops[0].source_gates(), 2);
+        assert_eq!(ops[1].k(), 2);
+    }
+
+    #[test]
+    fn fused_matrices_stay_unitary() {
+        let c = random_circuit(5, 60, 9);
+        for op in fuse_gates(&c.gates, 3) {
+            let dim = op.dim();
+            let m = op.matrix();
+            for r1 in 0..dim {
+                for r2 in 0..dim {
+                    let mut acc = Complex::ZERO;
+                    for t in 0..dim {
+                        acc += m[r1 * dim + t] * m[r2 * dim + t].conj();
+                    }
+                    let want = if r1 == r2 { Complex::ONE } else { Complex::ZERO };
+                    assert!(acc.approx_eq(want, 1e-10), "row pair ({r1},{r2})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn summary_counts_merges() {
+        let mut c = Circuit::new(4, "sum");
+        c.h(0).t(0).h(1).cx(0, 1);
+        let (ops, merges) = fusion_summary(&c.gates, 3);
+        // h0+t0 fuse; h1 joins {0,1}? h1 -> union {0} u {1} = 2 <= 3: all
+        // four gates collapse into one op.
+        assert_eq!(ops, 1);
+        assert_eq!(merges, 3);
+    }
+}

@@ -2,11 +2,13 @@
 //! an OpenQASM-2 subset parser, the 8 NWQBench-style benchmark generators,
 //! and the paper's Algorithm-1 circuit partitioner.
 
+pub mod fusion;
 pub mod gate;
 pub mod generators;
 pub mod partition;
 pub mod qasm;
 
+pub use fusion::{fuse_gates, fuse_remapped, FusedGate, MAX_FUSED_QUBITS};
 pub use gate::{Gate, GateKind};
 pub use partition::{partition_circuit, PartitionPlan, Stage};
 

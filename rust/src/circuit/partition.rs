@@ -15,6 +15,7 @@
 //! mechanism behind the paper's 2673-gates -> 28-stages reduction on
 //! 33-qubit QFT.
 
+use super::fusion::{self, FusedGate};
 use super::{Circuit, Gate};
 use crate::types::{Error, Result};
 
@@ -32,6 +33,15 @@ impl Stage {
     /// Number of SV blocks per SV group for this stage: `2^|inner|`.
     pub fn group_blocks(&self) -> usize {
         1usize << self.inner.len()
+    }
+
+    /// The stage's gate list fused into `k <= max_k` dense unitaries, in
+    /// absolute-qubit space (see [`fusion`]). Engines that gather SV
+    /// groups fuse the *remapped* gate list instead
+    /// ([`fusion::fuse_remapped`]); this view serves dense execution and
+    /// sweep-count planning.
+    pub fn fused_ops(&self, max_k: usize) -> Vec<FusedGate> {
+        fusion::fuse_gates(&self.gates, max_k)
     }
 }
 
@@ -67,6 +77,22 @@ impl PartitionPlan {
     /// Number of SV groups in `stage` (groups partition the block set).
     pub fn groups_in_stage(&self, stage: &Stage) -> usize {
         1usize << (self.global_qubits() - stage.inner.len())
+    }
+
+    /// Plan-wide fusion tally at width `max_k`: `(fused_ops, gate_merges)`
+    /// summed over stages. `gate_merges` is the number of plane sweeps the
+    /// fusion pass removes relative to per-gate application — compare
+    /// against `total gates` the way [`Self::compression_rounds`] compares
+    /// against the gate-wise (de)compression count.
+    pub fn fusion_summary(&self, max_k: usize) -> (usize, usize) {
+        let mut ops = 0usize;
+        let mut merges = 0usize;
+        for stage in &self.stages {
+            let (o, m) = fusion::fusion_summary(&stage.gates, max_k);
+            ops += o;
+            merges += m;
+        }
+        (ops, merges)
     }
 }
 
@@ -241,6 +267,22 @@ mod tests {
         assert_eq!(s.group_blocks(), 4); // 2^2 blocks per group
         assert_eq!(plan.total_blocks(), 16); // 2^4
         assert_eq!(plan.groups_in_stage(s), 4); // 16 / 4
+    }
+
+    #[test]
+    fn stage_fusion_reduces_ops_on_qft() {
+        let c = generators::qft(16);
+        let plan = partition_circuit(&c, 12, 3).unwrap();
+        let total: usize = plan.stages.iter().map(|s| s.gates.len()).sum();
+        let (ops, merges) = plan.fusion_summary(3);
+        assert_eq!(ops + merges, total);
+        assert!(ops < total, "fusion merged nothing: {ops} ops over {total} gates");
+        for s in &plan.stages {
+            let fused = s.fused_ops(3);
+            assert!(fused.len() <= s.gates.len());
+            let sources: usize = fused.iter().map(|o| o.source_gates()).sum();
+            assert_eq!(sources, s.gates.len());
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Gate application onto amplitude planes: general 1q/2q paths, diagonal
 //! fast paths, and permutation specializations for X/CX/SWAP.
 
-use super::{mul_1q, pair_indices, quad_indices};
+use super::{pair_indices, quad_indices};
 use crate::circuit::{Gate, GateKind};
 use crate::types::Complex;
 
@@ -47,27 +47,7 @@ fn apply_1q(re: &mut [f64], im: &mut [f64], gate: &Gate, t: usize) {
         }
         _ => {
             let m = gate.matrix1q();
-            // Perf (§Perf): block-contiguous traversal — the inner loop
-            // runs over `bit` consecutive indices in both halves of each
-            // 2*bit-aligned block, which vectorizes and streams, unlike
-            // the generic bit-interleave of `pair_indices`.
-            let (m00r, m00i) = (m[0].re, m[0].im);
-            let (m01r, m01i) = (m[1].re, m[1].im);
-            let (m10r, m10i) = (m[2].re, m[2].im);
-            let (m11r, m11i) = (m[3].re, m[3].im);
-            let mut base = 0usize;
-            while base < len {
-                for i0 in base..base + bit {
-                    let i1 = i0 | bit;
-                    let (r0, v0) = (re[i0], im[i0]);
-                    let (r1, v1) = (re[i1], im[i1]);
-                    re[i0] = m00r * r0 - m00i * v0 + m01r * r1 - m01i * v1;
-                    im[i0] = m00r * v0 + m00i * r0 + m01r * v1 + m01i * r1;
-                    re[i1] = m10r * r0 - m10i * v0 + m11r * r1 - m11i * v1;
-                    im[i1] = m10r * v0 + m10i * r0 + m11r * v1 + m11i * r1;
-                }
-                base += bit << 1;
-            }
+            super::dense_1q(&m, re, im, bit);
         }
     }
 }
@@ -103,47 +83,55 @@ fn apply_2q(re: &mut [f64], im: &mut [f64], gate: &Gate, qa: usize, qb: usize) {
     let len = re.len();
     // Matrix basis: |q_a q_b> with q_a (qubits[0]) the HIGH bit. The quad
     // iterator wants hi > lo as buffer positions; track where each matrix
-    // index lands.
+    // index lands. The hi/lo pair and the four basis-pattern offsets are
+    // loop invariants — hoisted so the inner loops are pure index | offset.
     let (ba, bb) = (1usize << qa, 1usize << qb);
+    let (hi, lo) = (qa.max(qb), qa.min(qb));
+    let off10 = ba;
+    let off01 = bb;
+    let off11 = ba | bb;
     match gate.kind {
         GateKind::Cx => {
             // control = qa, target = qb: swap amplitudes where control set.
-            for i in quad_indices(len, qa.max(qb), qa.min(qb)) {
-                let i10 = i | ba;
-                let i11 = i | ba | bb;
+            for i in quad_indices(len, hi, lo) {
+                let i10 = i | off10;
+                let i11 = i | off11;
                 re.swap(i10, i11);
                 im.swap(i10, i11);
             }
         }
         GateKind::Swap => {
-            for i in quad_indices(len, qa.max(qb), qa.min(qb)) {
-                let i01 = i | bb;
-                let i10 = i | ba;
+            for i in quad_indices(len, hi, lo) {
+                let i01 = i | off01;
+                let i10 = i | off10;
                 re.swap(i01, i10);
                 im.swap(i01, i10);
             }
         }
         GateKind::Cz => {
-            for i in quad_indices(len, qa.max(qb), qa.min(qb)) {
-                let i11 = i | ba | bb;
+            for i in quad_indices(len, hi, lo) {
+                let i11 = i | off11;
                 re[i11] = -re[i11];
                 im[i11] = -im[i11];
             }
         }
         _ if gate.kind.is_diagonal() => {
+            // Pre-filter the identity entries once (Z-family gates have
+            // d[0..3] == 1) instead of testing every entry per quad.
             let d = gate.diagonal();
-            for i in quad_indices(len, qa.max(qb), qa.min(qb)) {
-                for (pat, dv) in d.iter().enumerate() {
-                    if dv.approx_eq(Complex::ONE, 0.0) {
-                        continue;
-                    }
-                    let mut idx = i;
-                    if pat & 0b10 != 0 {
-                        idx |= ba;
-                    }
-                    if pat & 0b01 != 0 {
-                        idx |= bb;
-                    }
+            let offs = [0usize, off01, off10, off11]; // |00>,|01>,|10>,|11>
+            let mut active = [(0usize, Complex::ZERO); 4];
+            let mut na = 0usize;
+            for (pat, dv) in d.iter().enumerate() {
+                if !dv.approx_eq(Complex::ONE, 0.0) {
+                    active[na] = (offs[pat], *dv);
+                    na += 1;
+                }
+            }
+            let active = &active[..na];
+            for i in quad_indices(len, hi, lo) {
+                for &(off, dv) in active {
+                    let idx = i | off;
                     let (r, v) = (re[idx], im[idx]);
                     re[idx] = dv.re * r - dv.im * v;
                     im[idx] = dv.re * v + dv.im * r;
@@ -152,8 +140,8 @@ fn apply_2q(re: &mut [f64], im: &mut [f64], gate: &Gate, qa: usize, qb: usize) {
         }
         _ => {
             let m = gate.matrix2q();
-            for i in quad_indices(len, qa.max(qb), qa.min(qb)) {
-                let idx = [i, i | bb, i | ba, i | ba | bb]; // |00>,|01>,|10>,|11>
+            for i in quad_indices(len, hi, lo) {
+                let idx = [i, i | off01, i | off10, i | off11]; // |00>,|01>,|10>,|11>
                 let mut vr = [0.0f64; 4];
                 let mut vi = [0.0f64; 4];
                 for (s, &ix) in idx.iter().enumerate() {

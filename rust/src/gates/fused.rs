@@ -1,0 +1,494 @@
+//! Batched application of fused stage ops (tentpole of the fusion PR).
+//!
+//! [`apply_stage`] replaces the per-gate loop of the group chain: instead
+//! of one full plane sweep per gate, the stage's [`FusedGate`] list is cut
+//! into *sweep segments* and each segment costs ONE pass over the plane:
+//!
+//! * a maximal run of consecutive **tile-local** ops (every support bit
+//!   below `tile_bits`) is applied tile-by-tile — the plane is walked in
+//!   `2^tile_bits`-amplitude chunks and the whole run hits each chunk
+//!   while it is hot in L2, so N local ops cost one sweep's worth of DRAM
+//!   traffic instead of N;
+//! * an op with a **high** support bit (`>= tile_bits`) falls back to a
+//!   per-op sweep whose chunks are widened to close over its support.
+//!
+//! Ops are never reordered across segment boundaries, so the result is
+//! bit-for-bit the sequential fused product regardless of tiling.
+//!
+//! Every sweep is parallelized over the pipeline's plane-chunk primitive
+//! ([`run_plane_chunks`]): workers own disjoint, aligned index ranges —
+//! no locking, and identical arithmetic per amplitude at every worker
+//! count, so parallel sweeps are deterministic in the state.
+
+use crate::circuit::fusion::FusedGate;
+use crate::circuit::Gate;
+use crate::gates::apply_gate_remapped;
+use crate::pipeline::run_plane_chunks;
+
+/// Default `log2(amplitudes)` per cache tile: `2^15` amplitudes are
+/// 256 KiB per plane, 512 KiB for the re/im pair — sized for a ~1 MiB L2.
+pub const DEFAULT_TILE_BITS: usize = 15;
+
+/// What one [`apply_stage`] call did, for the `Metrics` counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageStats {
+    /// Full passes over the plane (tiled runs count once).
+    pub sweeps: u64,
+    /// Fused-op kernel invocations over the whole plane.
+    pub fused_ops_applied: u64,
+}
+
+/// One sweep segment: ops `[start, end)` applied in a single pass walked
+/// in `2^chunk_bits`-amplitude chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub start: usize,
+    pub end: usize,
+    pub chunk_bits: usize,
+}
+
+/// Cut a stage's fused ops into sweep segments for a `2^plane_bits`
+/// plane. Identical for every SV group of a stage (all groups share the
+/// plane geometry), so engines plan ONCE per stage and replay the plan
+/// per group via [`apply_segments`] — no allocation in the group chain.
+pub fn plan_segments(ops: &[FusedGate], plane_bits: usize, tile_bits: usize) -> Vec<Segment> {
+    let tb = tile_bits.clamp(1, plane_bits.max(1));
+    let mut segs = Vec::new();
+    let mut i = 0;
+    while i < ops.len() {
+        if ops[i].max_bit() < tb {
+            let start = i;
+            while i < ops.len() && ops[i].max_bit() < tb {
+                i += 1;
+            }
+            segs.push(Segment { start, end: i, chunk_bits: tb });
+        } else {
+            segs.push(Segment { start: i, end: i + 1, chunk_bits: ops[i].max_bit() + 1 });
+            i += 1;
+        }
+    }
+    segs
+}
+
+/// Plane sweeps a stage costs on a `2^plane_bits` plane — the per-stage
+/// `Metrics::plane_sweeps` increment.
+pub fn stage_sweeps(ops: &[FusedGate], plane_bits: usize, tile_bits: usize) -> u64 {
+    plan_segments(ops, plane_bits, tile_bits).len() as u64
+}
+
+/// Apply a whole stage's fused ops in sweep-segmented, cache-blocked,
+/// worker-parallel passes. `re`/`im` are the gathered group planes (any
+/// power-of-two length covering every op's support). Convenience wrapper
+/// that plans and applies in one call; hot loops that replay one stage
+/// across many groups should plan once and use [`apply_segments`].
+pub fn apply_stage(
+    re: &mut [f64],
+    im: &mut [f64],
+    ops: &[FusedGate],
+    tile_bits: usize,
+    workers: usize,
+) -> StageStats {
+    let plane_bits = re.len().trailing_zeros() as usize;
+    let segs = plan_segments(ops, plane_bits, tile_bits);
+    apply_segments(re, im, ops, &segs, workers)
+}
+
+/// Execute a pre-planned sweep segmentation over one group plane.
+pub fn apply_segments(
+    re: &mut [f64],
+    im: &mut [f64],
+    ops: &[FusedGate],
+    segs: &[Segment],
+    workers: usize,
+) -> StageStats {
+    let len = re.len();
+    debug_assert_eq!(len, im.len());
+    debug_assert!(len.is_power_of_two());
+    let plane_bits = len.trailing_zeros() as usize;
+    let mut stats = StageStats { sweeps: 0, fused_ops_applied: 0 };
+    for seg in segs {
+        let run = &ops[seg.start..seg.end];
+        let chunk_len = 1usize << seg.chunk_bits.min(plane_bits);
+        run_plane_chunks(workers, chunk_len, re, im, |_base, rc, ic| {
+            for op in run {
+                apply_fused(rc, ic, op);
+            }
+        });
+        stats.sweeps += 1;
+        stats.fused_ops_applied += run.len() as u64;
+    }
+    stats
+}
+
+/// Apply one per-gate kernel as a worker-parallel plane sweep (the Sc19
+/// path: per-gate semantics, parallel bandwidth). Chunks are sized to
+/// close over the gate's highest target bit, at least `2^14` amplitudes
+/// so per-chunk dispatch stays negligible.
+pub fn apply_gate_parallel(
+    re: &mut [f64],
+    im: &mut [f64],
+    gate: &Gate,
+    bits: &[usize],
+    workers: usize,
+) {
+    let len = re.len();
+    debug_assert!(len.is_power_of_two() && len == im.len());
+    let plane_bits = len.trailing_zeros() as usize;
+    let max_bit = bits.iter().copied().max().unwrap_or(0);
+    debug_assert!(max_bit < plane_bits);
+    let chunk_bits = (max_bit + 1).max(14.min(plane_bits)).min(plane_bits);
+    run_plane_chunks(workers, 1usize << chunk_bits, re, im, |_base, rc, ic| {
+        apply_gate_remapped(rc, ic, gate, bits);
+    });
+}
+
+/// Apply one fused op to a plane (or aligned sub-plane) that closes over
+/// its support: `len >= 2^(max_bit + 1)`.
+pub fn apply_fused(re: &mut [f64], im: &mut [f64], op: &FusedGate) {
+    debug_assert_eq!(re.len(), im.len());
+    debug_assert!(re.len().is_power_of_two());
+    debug_assert!(re.len() >> op.max_bit() >= 2, "plane does not close over op support");
+    match op.k() {
+        1 => apply_fused_1q(re, im, op),
+        _ => apply_fused_kq(re, im, op),
+    }
+}
+
+/// Dense 1q fused kernel: the shared block-contiguous `dense_1q` loop
+/// (`gates::dense_1q`), fed the fused 2x2 matrix.
+fn apply_fused_1q(re: &mut [f64], im: &mut [f64], op: &FusedGate) {
+    super::dense_1q(op.matrix(), re, im, 1usize << op.bits()[0]);
+}
+
+/// Generic k-qubit (k = 2, 3) fused kernel: gather `2^k` amplitudes per
+/// site, dense mat-vec from a pre-flattened f64 matrix, scatter back.
+fn apply_fused_kq(re: &mut [f64], im: &mut [f64], op: &FusedGate) {
+    let len = re.len();
+    let bits = op.bits();
+    let k = op.k();
+    let dim = 1usize << k;
+    debug_assert!(dim <= 8);
+    // Basis-pattern address offsets: site s lives at base | offs[s].
+    let mut offs = [0usize; 8];
+    for (s, off) in offs.iter_mut().enumerate().take(dim) {
+        for (j, &b) in bits.iter().enumerate() {
+            if s & (1 << j) != 0 {
+                *off |= 1 << b;
+            }
+        }
+    }
+    let m = op.matrix();
+    let mut mr = [[0f64; 8]; 8];
+    let mut mi = [[0f64; 8]; 8];
+    for r in 0..dim {
+        for c in 0..dim {
+            mr[r][c] = m[r * dim + c].re;
+            mi[r][c] = m[r * dim + c].im;
+        }
+    }
+    let mut vr = [0f64; 8];
+    let mut vi = [0f64; 8];
+    for base in subspace_bases(len, bits) {
+        for s in 0..dim {
+            let ix = base | offs[s];
+            vr[s] = re[ix];
+            vi[s] = im[ix];
+        }
+        for r in 0..dim {
+            let (mrow, irow) = (&mr[r], &mi[r]);
+            let mut ar = 0.0;
+            let mut ai = 0.0;
+            for s in 0..dim {
+                ar += mrow[s] * vr[s] - irow[s] * vi[s];
+                ai += mrow[s] * vi[s] + irow[s] * vr[s];
+            }
+            let ix = base | offs[r];
+            re[ix] = ar;
+            im[ix] = ai;
+        }
+    }
+}
+
+/// Iterate base indices with every bit of `bits` (sorted ascending) clear
+/// — the k-bit generalization of `pair_indices`/`quad_indices`.
+#[inline(always)]
+pub fn subspace_bases(len: usize, bits: &[usize]) -> impl Iterator<Item = usize> + '_ {
+    let k = bits.len();
+    (0..len >> k).map(move |t| {
+        let mut idx = t;
+        // Insert a zero at each support position, ascending: lower
+        // insertions do not disturb the positions of later ones.
+        for &b in bits {
+            let low = idx & ((1usize << b) - 1);
+            idx = ((idx & !((1usize << b) - 1)) << 1) | low;
+        }
+        idx
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::fusion::fuse_gates;
+    use crate::circuit::{Circuit, Gate, GateKind};
+    use crate::gates::apply_gate;
+    use crate::types::SplitMix64;
+
+    fn random_planes(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = SplitMix64::new(seed);
+        let len = 1usize << n;
+        (
+            (0..len).map(|_| rng.next_gaussian()).collect(),
+            (0..len).map(|_| rng.next_gaussian()).collect(),
+        )
+    }
+
+    fn assert_planes_close(
+        a_re: &[f64],
+        a_im: &[f64],
+        b_re: &[f64],
+        b_im: &[f64],
+        tol: f64,
+        tag: &str,
+    ) {
+        // `<=` so tol = 0.0 demands exact (bit-identical) equality.
+        for i in 0..a_re.len() {
+            assert!(
+                (a_re[i] - b_re[i]).abs() <= tol && (a_im[i] - b_im[i]).abs() <= tol,
+                "{tag}: amp {i}: ({}, {}) vs ({}, {})",
+                a_re[i],
+                a_im[i],
+                b_re[i],
+                b_im[i]
+            );
+        }
+    }
+
+    #[test]
+    fn subspace_bases_cover_all_sites() {
+        let len = 64;
+        for bits in [vec![0usize], vec![2], vec![0, 3], vec![1, 2, 5], vec![3, 4, 5]] {
+            let mask: usize = bits.iter().map(|&b| 1usize << b).sum();
+            let mut seen = vec![false; len];
+            for base in subspace_bases(len, &bits) {
+                assert_eq!(base & mask, 0);
+                for s in 0..(1usize << bits.len()) {
+                    let mut ix = base;
+                    for (j, &b) in bits.iter().enumerate() {
+                        if s & (1 << j) != 0 {
+                            ix |= 1 << b;
+                        }
+                    }
+                    assert!(!seen[ix], "bits {bits:?} idx {ix} twice");
+                    seen[ix] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "bits {bits:?} missed sites");
+        }
+    }
+
+    #[test]
+    fn fused_kernels_match_per_gate_kernels_per_kind() {
+        use GateKind::*;
+        let n = 6;
+        // Runs chosen to produce k = 1, 2 and 3 ops across gate kinds.
+        let runs: Vec<Vec<Gate>> = vec![
+            vec![Gate::q1(H, 4).unwrap(), Gate::q1(T, 4).unwrap()],
+            vec![Gate::q2(Cx, 5, 1).unwrap(), Gate::q1(Rz(0.7), 5).unwrap()],
+            vec![
+                Gate::q2(Rxx(0.4), 0, 3).unwrap(),
+                Gate::q2(Cp(0.9), 3, 5).unwrap(),
+                Gate::q1(Sx, 0).unwrap(),
+            ],
+            vec![
+                Gate::q2(Swap, 2, 4).unwrap(),
+                Gate::q2(Cry(-1.1), 4, 2).unwrap(),
+                Gate::q2(Cz, 2, 0).unwrap(),
+            ],
+        ];
+        for (ri, gates) in runs.iter().enumerate() {
+            let ops = fuse_gates(gates, 3);
+            assert_eq!(ops.len(), 1, "run {ri} did not fuse");
+            let (re_ref, im_ref) = random_planes(n, ri as u64 + 5);
+            let mut want = (re_ref.clone(), im_ref.clone());
+            for g in gates {
+                apply_gate(&mut want.0, &mut want.1, g);
+            }
+            let mut got = (re_ref.clone(), im_ref.clone());
+            apply_fused(&mut got.0, &mut got.1, &ops[0]);
+            assert_planes_close(&got.0, &got.1, &want.0, &want.1, 1e-12, &format!("run {ri}"));
+        }
+    }
+
+    #[test]
+    fn apply_stage_matches_sequential_for_all_tiles_and_workers() {
+        use GateKind::*;
+        let n = 9;
+        let mut rng = SplitMix64::new(31);
+        let mut c = Circuit::new(n, "mix");
+        for step in 0..80 {
+            let q = (rng.next_u64() as usize) % n;
+            let mut p = (rng.next_u64() as usize) % n;
+            while p == q {
+                p = (rng.next_u64() as usize) % n;
+            }
+            let th = rng.next_f64();
+            match step % 5 {
+                0 => c.h(q),
+                1 => c.rz(th, q),
+                2 => c.cx(q, p),
+                3 => c.rxx(th, q, p),
+                _ => c.cp(th, q, p),
+            };
+        }
+        let (re0, im0) = random_planes(n, 404);
+        let mut want = (re0.clone(), im0.clone());
+        for g in &c.gates {
+            apply_gate(&mut want.0, &mut want.1, g);
+        }
+        let ops = fuse_gates(&c.gates, 3);
+        assert!(ops.len() < c.gates.len(), "no fusion happened");
+        for tile_bits in [2usize, 4, 6, 9, 30] {
+            for workers in [1usize, 2, 4] {
+                let mut got = (re0.clone(), im0.clone());
+                let stats = apply_stage(&mut got.0, &mut got.1, &ops, tile_bits, workers);
+                assert_eq!(stats.fused_ops_applied, ops.len() as u64);
+                assert_eq!(
+                    stats.sweeps,
+                    stage_sweeps(&ops, n, tile_bits),
+                    "tile={tile_bits}"
+                );
+                assert!(stats.sweeps <= ops.len() as u64);
+                assert_planes_close(
+                    &got.0,
+                    &got.1,
+                    &want.0,
+                    &want.1,
+                    1e-12,
+                    &format!("tile={tile_bits} workers={workers}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_runs_collapse_sweeps() {
+        // Local ops on DISJOINT low supports cannot fuse (union > 3) but
+        // still share one tiled sweep: 4 ops, 1 sweep.
+        let mut c = Circuit::new(8, "low");
+        c.cx(0, 1).cx(2, 3).cx(0, 2).cx(1, 3);
+        let ops = fuse_gates(&c.gates, 2);
+        assert_eq!(ops.len(), 4);
+        assert_eq!(stage_sweeps(&ops, 8, 4), 1);
+    }
+
+    #[test]
+    fn local_run_is_one_sweep_high_ops_sweep_alone() {
+        let mut c = Circuit::new(10, "hi-lo");
+        // A local op, a high op, another local op — each pairwise union
+        // exceeds k=3, so the three runs stay separate.
+        c.h(0).cx(0, 1); // fuses to one op, max_bit 1
+        c.cx(9, 8); // high op, max_bit 9
+        c.cx(2, 3).rz(0.1, 2); // fuses, max_bit 3
+        let ops = fuse_gates(&c.gates, 3);
+        assert_eq!(ops.len(), 3);
+        // tile_bits=5: [local][high][local] -> 3 sweeps.
+        assert_eq!(stage_sweeps(&ops, 10, 5), 3);
+        // tile_bits=10: everything local -> ONE sweep for all three.
+        assert_eq!(stage_sweeps(&ops, 10, 10), 1);
+        let (mut re, mut im) = random_planes(10, 8);
+        let mut want = (re.clone(), im.clone());
+        for g in &c.gates {
+            apply_gate(&mut want.0, &mut want.1, g);
+        }
+        let stats = apply_stage(&mut re, &mut im, &ops, 5, 2);
+        assert_eq!(stats.sweeps, 3);
+        assert_planes_close(&re, &im, &want.0, &want.1, 1e-12, "hi-lo");
+    }
+
+    #[test]
+    fn deep_same_qubit_run_needs_fewer_sweeps_than_gates() {
+        // The satellite assertion: a deep run on one qubit is ONE fused op
+        // and ONE sweep, against `gates` sweeps for the per-gate path.
+        let mut c = Circuit::new(12, "deep");
+        for i in 0..200 {
+            if i % 2 == 0 {
+                c.t(3);
+            } else {
+                c.h(3);
+            }
+        }
+        let ops = fuse_gates(&c.gates, 3);
+        assert_eq!(ops.len(), 1);
+        let sweeps = stage_sweeps(&ops, 12, DEFAULT_TILE_BITS);
+        assert_eq!(sweeps, 1);
+        assert!((sweeps as usize) < c.gates.len());
+    }
+
+    #[test]
+    fn apply_gate_parallel_matches_serial() {
+        let n = 8;
+        for (kind, qs) in [
+            (GateKind::H, vec![6usize]),
+            (GateKind::X, vec![0]),
+            (GateKind::Rz(0.9), vec![7]),
+        ] {
+            let gate = Gate::q1(kind, qs[0]).unwrap();
+            let (re0, im0) = random_planes(n, 99);
+            let mut want = (re0.clone(), im0.clone());
+            apply_gate(&mut want.0, &mut want.1, &gate);
+            for workers in [1usize, 2, 4] {
+                let mut got = (re0.clone(), im0.clone());
+                apply_gate_parallel(&mut got.0, &mut got.1, &gate, &qs, workers);
+                assert_planes_close(
+                    &got.0,
+                    &got.1,
+                    &want.0,
+                    &want.1,
+                    0.0,
+                    &format!("{kind:?} workers={workers}"),
+                );
+            }
+        }
+        let gate = Gate::q2(GateKind::Cx, 7, 2).unwrap();
+        let (re0, im0) = random_planes(n, 100);
+        let mut want = (re0.clone(), im0.clone());
+        apply_gate(&mut want.0, &mut want.1, &gate);
+        for workers in [1usize, 3] {
+            let mut got = (re0.clone(), im0.clone());
+            apply_gate_parallel(&mut got.0, &mut got.1, &gate, &[7, 2], workers);
+            assert_planes_close(&got.0, &got.1, &want.0, &want.1, 0.0, "cx par");
+        }
+    }
+
+    #[test]
+    fn apply_gate_parallel_spans_multiple_chunks() {
+        // Planes ABOVE the 2^14-amplitude chunk floor: the sweep really
+        // splits (4 chunks for H on bit 13, 2 for CX on bit 14), so this
+        // exercises the threaded path that smaller test planes collapse
+        // into a single inline chunk. Rz on the top bit is the boundary
+        // case that stays one chunk by construction.
+        let n = 16;
+        let (re0, im0) = random_planes(n, 1234);
+        for (gate, bits) in [
+            (Gate::q1(GateKind::H, 13).unwrap(), vec![13usize]),
+            (Gate::q2(GateKind::Cx, 14, 1).unwrap(), vec![14, 1]),
+            (Gate::q1(GateKind::Rz(0.31), 15).unwrap(), vec![15]),
+        ] {
+            let mut want = (re0.clone(), im0.clone());
+            apply_gate(&mut want.0, &mut want.1, &gate);
+            for workers in [2usize, 3, 4] {
+                let mut got = (re0.clone(), im0.clone());
+                apply_gate_parallel(&mut got.0, &mut got.1, &gate, &bits, workers);
+                assert_planes_close(
+                    &got.0,
+                    &got.1,
+                    &want.0,
+                    &want.1,
+                    0.0,
+                    &format!("{:?} workers={workers}", gate.kind),
+                );
+            }
+        }
+    }
+}

@@ -11,18 +11,59 @@
 //!
 //! Diagonal gates use an element-wise fast path (no pair addressing), the
 //! same specialization the L1 Pallas kernel set exposes (`diag1q/diag2q`).
+//!
+//! [`fused`] holds the batched stage kernels: whole fused-op lists
+//! ([`crate::circuit::fusion`]) applied in cache-blocked, worker-parallel
+//! plane sweeps — see DESIGN.md §"Gate fusion & sweep model".
 
 pub mod apply;
+pub mod fused;
 pub mod measure;
 
 pub use apply::{apply_gate, apply_gate_remapped};
+pub use fused::{apply_fused, apply_gate_parallel, apply_stage, StageStats};
 
 use crate::types::Complex;
+
+/// Dense 1q mat-vec over a whole plane, shared by the per-gate
+/// (`apply.rs`) and fused (`fused.rs`) paths so the hot loop exists once.
+///
+/// Perf (§Perf): block-contiguous traversal — the inner loop runs over
+/// `bit` consecutive indices in both halves of each `2*bit`-aligned
+/// block, which vectorizes and streams, unlike the generic bit-interleave
+/// of [`pair_indices`].
+#[inline]
+pub(crate) fn dense_1q(m: &[Complex], re: &mut [f64], im: &mut [f64], bit: usize) {
+    debug_assert!(m.len() >= 4);
+    let len = re.len();
+    let (m00r, m00i) = (m[0].re, m[0].im);
+    let (m01r, m01i) = (m[1].re, m[1].im);
+    let (m10r, m10i) = (m[2].re, m[2].im);
+    let (m11r, m11i) = (m[3].re, m[3].im);
+    let mut base = 0usize;
+    while base < len {
+        for i0 in base..base + bit {
+            let i1 = i0 | bit;
+            let (r0, v0) = (re[i0], im[i0]);
+            let (r1, v1) = (re[i1], im[i1]);
+            re[i0] = m00r * r0 - m00i * v0 + m01r * r1 - m01i * v1;
+            im[i0] = m00r * v0 + m00i * r0 + m01r * v1 + m01i * r1;
+            re[i1] = m10r * r0 - m10i * v0 + m11r * r1 - m11i * v1;
+            im[i1] = m10r * v0 + m10i * r0 + m11r * v1 + m11i * r1;
+        }
+        base += bit << 1;
+    }
+}
 
 /// Iterate amplitude-pair base indices for target bit `t` in a buffer of
 /// `len` amplitudes: yields `i0` with bit `t` clear; the partner is
 /// `i0 | (1 << t)`.
-#[inline]
+///
+/// `inline(always)` (here and on [`quad_indices`]): the map closure must
+/// inline into the caller's loop so the compiler sees the index algebra,
+/// proves `i0 | bit < len`, and drops the bounds checks in the kernels'
+/// inner loops.
+#[inline(always)]
 pub fn pair_indices(len: usize, t: usize) -> impl Iterator<Item = usize> {
     let bit = 1usize << t;
     let low_mask = bit - 1;
@@ -35,7 +76,7 @@ pub fn pair_indices(len: usize, t: usize) -> impl Iterator<Item = usize> {
 
 /// Iterate quad base indices for target bits `q > t` (as buffer positions):
 /// yields `i00` with both bits clear.
-#[inline]
+#[inline(always)]
 pub fn quad_indices(len: usize, hi_bit: usize, lo_bit: usize) -> impl Iterator<Item = usize> {
     debug_assert!(hi_bit > lo_bit);
     let b_lo = 1usize << lo_bit;
@@ -49,23 +90,6 @@ pub fn quad_indices(len: usize, hi_bit: usize, lo_bit: usize) -> impl Iterator<I
         let hi = (k & !(m_lo | m_mid)) << 2;
         hi | mid | lo
     })
-}
-
-/// 2x2 complex mat-vec on a single amplitude pair, written to fuse well.
-#[inline(always)]
-pub fn mul_1q(
-    m: &[Complex; 4],
-    re: &mut [f64],
-    im: &mut [f64],
-    i0: usize,
-    i1: usize,
-) {
-    let (r0, i0v) = (re[i0], im[i0]);
-    let (r1, i1v) = (re[i1], im[i1]);
-    re[i0] = m[0].re * r0 - m[0].im * i0v + m[1].re * r1 - m[1].im * i1v;
-    im[i0] = m[0].re * i0v + m[0].im * r0 + m[1].re * i1v + m[1].im * r1;
-    re[i1] = m[2].re * r0 - m[2].im * i0v + m[3].re * r1 - m[3].im * i1v;
-    im[i1] = m[2].re * i0v + m[2].im * r0 + m[3].re * i1v + m[3].im * r1;
 }
 
 #[cfg(test)]

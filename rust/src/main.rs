@@ -40,6 +40,10 @@ OPTIONS (run/compare/sample):
   --error-bound <e>     point-wise relative bound                  [1e-3]
   --no-compress         disable compression (raw blocks)
   --no-prescan          disable the sign-bitmap pre-scan
+  --no-fusion           disable gate fusion (per-gate application)
+  --max-fuse <K>        fused-unitary width cap (1..=3)            [3]
+  --tile-bits <T>       log2 amplitudes per cache tile             [15]
+  --apply-workers <W>   parallel plane-sweep workers per chain     [1]
   --streams <S>         pipeline streams per device                [2]
   --devices <D>         logical devices                            [1]
   --memory-budget <MB>  primary-tier budget in MiB (enables probing)
@@ -96,7 +100,7 @@ impl Opts {
                 return Err(format!("unexpected argument {a:?}"));
             }
             let key = a.trim_start_matches("--").to_string();
-            let flag = matches!(key.as_str(), "no-compress" | "no-prescan");
+            let flag = matches!(key.as_str(), "no-compress" | "no-prescan" | "no-fusion");
             if flag {
                 map.insert(key, "true".into());
                 i += 1;
@@ -158,6 +162,12 @@ fn build_config(opts: &Opts) -> Result<SimConfig, String> {
         opts.parse_num("devices", 1usize)?,
         opts.parse_num("streams", 2usize)?,
     );
+    if opts.flag("no-fusion") {
+        cfg.fusion = false;
+    }
+    cfg.max_fuse_qubits = opts.parse_num("max-fuse", cfg.max_fuse_qubits)?;
+    cfg.tile_bits = opts.parse_num("tile-bits", cfg.tile_bits)?;
+    cfg.apply_workers = opts.parse_num("apply-workers", cfg.apply_workers)?;
     if let Some(mb) = opts.get("memory-budget") {
         let mb: usize = mb.parse().map_err(|_| "bad --memory-budget")?;
         cfg.memory_budget = Some(mb * (1 << 20));

@@ -64,6 +64,18 @@ pub struct Metrics {
     /// Arena-reuse counter: how often a pipeline worker's scratch planes
     /// had to grow (steady state after warmup: zero; see pipeline::Scratch).
     pub scratch_grows: AtomicU64,
+    /// Gate merges performed by the fusion pass: original gates minus
+    /// fused ops, summed over stages (each merge removes one plane sweep).
+    pub gates_fused: AtomicU64,
+    /// Full passes over the state per gate-application phase: counted once
+    /// per stage (a stage's SV groups tile the state, so walking every
+    /// group once is ONE state sweep). Per-gate engines count one per
+    /// gate; the fused-batched path counts one per sweep segment — the
+    /// headline "sweeps << gates" metric.
+    pub plane_sweeps: AtomicU64,
+    /// Fused-op kernel invocations across all group chains (scales with
+    /// group count, unlike `plane_sweeps`).
+    pub fused_ops_applied: AtomicU64,
 }
 
 impl Metrics {
@@ -103,6 +115,9 @@ impl Metrics {
             gates_applied: self.gates_applied.load(Ordering::Relaxed),
             groups_processed: self.groups_processed.load(Ordering::Relaxed),
             scratch_grows: self.scratch_grows.load(Ordering::Relaxed),
+            gates_fused: self.gates_fused.load(Ordering::Relaxed),
+            plane_sweeps: self.plane_sweeps.load(Ordering::Relaxed),
+            fused_ops_applied: self.fused_ops_applied.load(Ordering::Relaxed),
         }
     }
 }
@@ -120,6 +135,13 @@ pub struct MetricsReport {
     pub groups_processed: u64,
     /// Plane-growth events in the pipeline scratch arenas.
     pub scratch_grows: u64,
+    /// Gate merges performed by the fusion pass (sweeps removed).
+    pub gates_fused: u64,
+    /// Full state sweeps spent applying gates (one per stage sweep
+    /// segment; per-gate paths count one per gate).
+    pub plane_sweeps: u64,
+    /// Fused-op kernel invocations summed over group chains.
+    pub fused_ops_applied: u64,
 }
 
 impl MetricsReport {
@@ -149,6 +171,11 @@ impl std::fmt::Display for MetricsReport {
             writeln!(f, "{name:<17}: {secs:>10.3} s (busy, summed over workers)")?;
         }
         writeln!(f, "gates applied    : {:>10}", self.gates_applied)?;
+        writeln!(
+            f,
+            "gates fused      : {:>10} ({} sweeps over {} fused ops)",
+            self.gates_fused, self.plane_sweeps, self.fused_ops_applied
+        )?;
         writeln!(f, "groups processed : {:>10}", self.groups_processed)?;
         writeln!(
             f,

@@ -218,6 +218,67 @@ where
     }
 }
 
+/// Run `f` over both amplitude planes in disjoint, aligned chunks of
+/// `chunk_len` amplitudes, split across up to `workers` scoped worker
+/// threads — the worker-parallel *plane sweep* primitive the batched gate
+/// kernels use (`gates::fused`).
+///
+/// Each worker owns a contiguous span of whole chunks (disjoint index
+/// ranges, no locking); `f` receives the chunk's base amplitude index and
+/// mutable sub-slices of both planes. `chunk_len` must divide `re.len()`
+/// (both are powers of two on every call site). With `workers <= 1` — or
+/// a single chunk — the sweep runs inline on the calling thread, so the
+/// sequential path has zero thread overhead.
+pub fn run_plane_chunks<F>(workers: usize, chunk_len: usize, re: &mut [f64], im: &mut [f64], f: F)
+where
+    F: Fn(usize, &mut [f64], &mut [f64]) + Sync,
+{
+    let len = re.len();
+    debug_assert_eq!(len, im.len());
+    debug_assert!(chunk_len > 0 && len % chunk_len == 0);
+    let n_chunks = len / chunk_len;
+    let workers = workers.max(1).min(n_chunks.max(1));
+    if workers <= 1 {
+        for (ci, (rc, ic)) in
+            re.chunks_mut(chunk_len).zip(im.chunks_mut(chunk_len)).enumerate()
+        {
+            f(ci * chunk_len, rc, ic);
+        }
+        return;
+    }
+    let per = n_chunks / workers;
+    let extra = n_chunks % workers;
+    std::thread::scope(|scope| {
+        let mut re_rest = re;
+        let mut im_rest = im;
+        let mut base = 0usize;
+        // Spawn workers - 1 threads; the calling thread takes the last
+        // span itself instead of idling at the scope join.
+        for w in 0..workers - 1 {
+            let span = (per + usize::from(w < extra)) * chunk_len;
+            let (r_span, r_next) = re_rest.split_at_mut(span);
+            let (i_span, i_next) = im_rest.split_at_mut(span);
+            re_rest = r_next;
+            im_rest = i_next;
+            let f = &f;
+            let start = base;
+            scope.spawn(move || {
+                for (ci, (rc, ic)) in
+                    r_span.chunks_mut(chunk_len).zip(i_span.chunks_mut(chunk_len)).enumerate()
+                {
+                    f(start + ci * chunk_len, rc, ic);
+                }
+            });
+            base += span;
+        }
+        for (ci, (rc, ic)) in
+            re_rest.chunks_mut(chunk_len).zip(im_rest.chunks_mut(chunk_len)).enumerate()
+        {
+            f(base + ci * chunk_len, rc, ic);
+        }
+    });
+}
+
 /// Copyable handle to the shared transfer link; lets tasks enter transfer
 /// sections while holding disjoint borrows of the scratch arena.
 #[derive(Clone, Copy)]
@@ -345,6 +406,43 @@ mod tests {
     #[test]
     fn zero_items_is_fine() {
         run_items::<(), _>(PipelineConfig::new(2, 2), 0, &ScratchPool::new(4), |_ctx, _i| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn plane_chunks_cover_plane_exactly_once() {
+        for workers in [1usize, 2, 3, 8, 64] {
+            let len = 1usize << 10;
+            let mut re = vec![0.0f64; len];
+            let mut im = vec![0.0f64; len];
+            run_plane_chunks(workers, 1 << 4, &mut re, &mut im, |base, rc, ic| {
+                assert_eq!(rc.len(), 1 << 4);
+                assert_eq!(ic.len(), rc.len());
+                assert_eq!(base % rc.len(), 0);
+                for (i, v) in rc.iter_mut().enumerate() {
+                    *v += (base + i) as f64;
+                }
+                for v in ic.iter_mut() {
+                    *v += 1.0;
+                }
+            });
+            for (i, (&r, &v)) in re.iter().zip(im.iter()).enumerate() {
+                assert_eq!(r, i as f64, "workers={workers}");
+                assert_eq!(v, 1.0, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn plane_chunks_single_chunk_runs_inline() {
+        let len = 64usize;
+        let mut re = vec![0.0f64; len];
+        let mut im = vec![0.0f64; len];
+        let tid = std::thread::current().id();
+        run_plane_chunks(8, len, &mut re, &mut im, |base, rc, _ic| {
+            assert_eq!(base, 0);
+            assert_eq!(rc.len(), len);
+            assert_eq!(std::thread::current().id(), tid);
+        });
     }
 
     #[test]

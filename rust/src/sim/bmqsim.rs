@@ -16,8 +16,10 @@
 //!    disk spill.
 
 use super::{GateApplier, NativeApplier, SimConfig, SimResult};
+use crate::circuit::fusion::{fuse_remapped, FusedGate};
 use crate::circuit::{partition_circuit, Circuit};
 use crate::compress::{Codec, CodecScratch};
+use crate::gates::fused;
 use crate::memory::{BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
 use crate::pipeline::{run_items, Scratch, ScratchPool, WorkerCtx};
@@ -97,6 +99,7 @@ impl<'a> BmqSim<'a> {
         // codec intermediates, and recycled payload bytes carry over from
         // stage to stage, so steady-state group chains allocate nothing.
         let pool = ScratchPool::new(self.config.pipeline.workers());
+        let use_fusion = self.config.fusion && self.applier.supports_fusion();
         for stage in &plan.stages {
             let schedule = layout.group_schedule(&stage.inner)?;
             // Precompute buffer-bit remaps for every gate of the stage.
@@ -109,10 +112,40 @@ impl<'a> BmqSim<'a> {
                 })
                 .collect();
 
+            // Fuse the remapped gate list and plan its sweep segmentation
+            // ONCE per stage; every SV group replays the same plan (all
+            // groups share the plane geometry), keeping the group chain
+            // allocation-free. Sweep count is per *state* pass (groups
+            // tile the state), so it too is recorded once per stage.
+            let fused_plan: Option<(Vec<FusedGate>, Vec<fused::Segment>)> = if use_fusion {
+                let ops = fuse_remapped(&remapped, self.config.max_fuse_qubits);
+                metrics
+                    .gates_fused
+                    .fetch_add((remapped.len() - ops.len()) as u64, Ordering::Relaxed);
+                let segs =
+                    fused::plan_segments(&ops, schedule.buffer_qubits(), self.config.tile_bits);
+                Some((ops, segs))
+            } else {
+                None
+            };
+            let stage_sweeps = match &fused_plan {
+                Some((_, segs)) => segs.len() as u64,
+                None => stage.gates.len() as u64,
+            };
+            metrics.plane_sweeps.fetch_add(stage_sweeps, Ordering::Relaxed);
+
             let block_len = layout.block_len();
             run_items::<Error, _>(self.config.pipeline, schedule.num_groups(), &pool, |ctx, gidx| {
                 self.process_group(
-                    ctx, &schedule, gidx, block_len, &remapped, &codec, &store, &metrics,
+                    ctx,
+                    &schedule,
+                    gidx,
+                    block_len,
+                    &remapped,
+                    fused_plan.as_ref().map(|(ops, segs)| (ops.as_slice(), segs.as_slice())),
+                    &codec,
+                    &store,
+                    &metrics,
                 )
             })?;
             metrics
@@ -190,6 +223,7 @@ impl<'a> BmqSim<'a> {
         gidx: usize,
         block_len: usize,
         gates: &[(crate::circuit::Gate, Vec<usize>)],
+        fused_plan: Option<(&[FusedGate], &[fused::Segment])>,
         codec: &Codec,
         store: &BlockStore,
         metrics: &Metrics,
@@ -227,11 +261,25 @@ impl<'a> BmqSim<'a> {
         })?;
 
         // Apply every gate of the stage — ONE (de)compression for all.
+        // Fused-batched path: the whole stage runs in tiled, worker-
+        // parallel sweeps; per-gate path serves non-native appliers.
         metrics.time(Phase::Apply, || -> Result<()> {
-            for (gate, bits) in gates {
-                self.applier.apply(re, im, gate, bits)?;
+            match fused_plan {
+                Some((ops, segs)) => {
+                    let stats =
+                        fused::apply_segments(re, im, ops, segs, self.config.apply_workers);
+                    metrics
+                        .fused_ops_applied
+                        .fetch_add(stats.fused_ops_applied, Ordering::Relaxed);
+                    Ok(())
+                }
+                None => {
+                    for (gate, bits) in gates {
+                        self.applier.apply(re, im, gate, bits)?;
+                    }
+                    Ok(())
+                }
             }
-            Ok(())
         })?;
         metrics.gates_applied.fetch_add(gates.len() as u64, Ordering::Relaxed);
 
@@ -346,6 +394,63 @@ mod tests {
             let r = BmqSim::new(config).run(&c, true).unwrap();
             let f = r.state.as_ref().unwrap().fidelity(&base);
             assert!(f > 1.0 - 1e-12, "devices={d} streams={s}: {f}");
+        }
+    }
+
+    #[test]
+    fn fused_path_matches_unfused_and_cuts_sweeps() {
+        // Acceptance: on the QFT generator, plane sweeps are STRICTLY
+        // fewer than gates, and the fused state matches the per-gate
+        // state to raw-codec precision.
+        let c = generators::qft(10);
+        let mut fused_cfg = cfg(5, 3);
+        fused_cfg.codec = Codec::raw();
+        let mut unfused_cfg = fused_cfg.clone();
+        unfused_cfg.fusion = false;
+        let rf = BmqSim::new(fused_cfg).run(&c, true).unwrap();
+        let ru = BmqSim::new(unfused_cfg).run(&c, true).unwrap();
+        let f = rf.state.as_ref().unwrap().fidelity(ru.state.as_ref().unwrap());
+        assert!(f > 1.0 - 1e-12, "fused vs unfused fidelity {f}");
+        assert!(rf.metrics.gates_fused > 0, "fusion merged nothing");
+        assert!(
+            rf.metrics.plane_sweeps < c.len() as u64,
+            "sweeps {} not below gate count {}",
+            rf.metrics.plane_sweeps,
+            c.len()
+        );
+        assert!(rf.metrics.fused_ops_applied > 0);
+        // Per-gate path: exactly one sweep per gate, no fused ops.
+        assert_eq!(ru.metrics.plane_sweeps, c.len() as u64);
+        assert_eq!(ru.metrics.gates_fused, 0);
+        assert_eq!(ru.metrics.fused_ops_applied, 0);
+    }
+
+    #[test]
+    fn fused_tile_and_worker_knobs_are_deterministic_in_state() {
+        let c = generators::build("qaoa", 9, 11).unwrap();
+        let base_state = {
+            let mut config = cfg(4, 2);
+            config.codec = Codec::raw();
+            config.pipeline = PipelineConfig::sequential();
+            BmqSim::new(config).run(&c, true).unwrap().state.unwrap()
+        };
+        for (tile_bits, apply_workers) in [(2usize, 1usize), (4, 2), (20, 4), (6, 3)] {
+            let mut config = cfg(4, 2);
+            config.codec = Codec::raw();
+            config.pipeline = PipelineConfig::sequential();
+            config.tile_bits = tile_bits;
+            config.apply_workers = apply_workers;
+            let r = BmqSim::new(config).run(&c, true).unwrap();
+            let f = r.state.as_ref().unwrap().fidelity(&base_state);
+            assert!(f > 1.0 - 1e-12, "tile={tile_bits} workers={apply_workers}: {f}");
+        }
+    }
+
+    #[test]
+    fn fusion_respects_default_fidelity_bound() {
+        // Lossy default codec + fusion across every benchmark family.
+        for name in generators::ALL {
+            fidelity_check(name, 10, cfg(6, 3), 0.99);
         }
     }
 

@@ -48,6 +48,20 @@ pub struct SimConfig {
     pub precision: Precision,
     /// Directory holding `manifest.json` + HLO artifacts (Xla backend).
     pub artifacts_dir: PathBuf,
+    /// Gate fusion + batched stage application (`circuit::fusion`,
+    /// `gates::fused`). Only takes effect on backends whose applier
+    /// reports [`super::GateApplier::supports_fusion`].
+    pub fusion: bool,
+    /// Fused-unitary width cap `k` (clamped to `1..=MAX_FUSED_QUBITS`).
+    pub max_fuse_qubits: usize,
+    /// `log2(amplitudes)` per cache tile in the batched kernel.
+    pub tile_bits: usize,
+    /// Worker threads per plane sweep inside gate application (1 = sweep
+    /// on the pipeline worker itself; raise it when groups are fewer than
+    /// cores, e.g. sequential pipelines on big planes). Like `fusion`,
+    /// only takes effect on backends whose applier reports
+    /// [`super::GateApplier::supports_fusion`]; others sweep serially.
+    pub apply_workers: usize,
 }
 
 impl Default for SimConfig {
@@ -62,6 +76,10 @@ impl Default for SimConfig {
             spill_dir: None,
             precision: Precision::F64,
             artifacts_dir: PathBuf::from("artifacts"),
+            fusion: true,
+            max_fuse_qubits: crate::circuit::MAX_FUSED_QUBITS,
+            tile_bits: crate::gates::fused::DEFAULT_TILE_BITS,
+            apply_workers: 1,
         }
     }
 }
@@ -99,6 +117,9 @@ mod tests {
         assert_eq!(c.codec.error_bound, 1e-3);
         assert_eq!(c.block_qubits, 14);
         assert_eq!(c.inner_size, 2);
+        assert!(c.fusion);
+        assert_eq!(c.max_fuse_qubits, 3);
+        assert_eq!(c.apply_workers, 1);
     }
 
     #[test]

@@ -35,6 +35,14 @@ pub trait GateApplier: Sync {
     fn name(&self) -> &'static str {
         "native"
     }
+
+    /// True when this backend runs on the native fused/batched kernels,
+    /// letting engines replace per-gate `apply` loops with fused stage
+    /// ops (`gates::fused::apply_stage`) and parallel plane sweeps.
+    /// Backends that ship gates elsewhere (XLA) keep the per-gate path.
+    fn supports_fusion(&self) -> bool {
+        false
+    }
 }
 
 /// The tuned rust kernel path.
@@ -44,6 +52,10 @@ impl GateApplier for NativeApplier {
     fn apply(&self, re: &mut [f64], im: &mut [f64], gate: &Gate, bits: &[usize]) -> Result<()> {
         apply_gate_remapped(re, im, gate, bits);
         Ok(())
+    }
+
+    fn supports_fusion(&self) -> bool {
+        true
     }
 }
 

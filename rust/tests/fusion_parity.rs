@@ -1,0 +1,164 @@
+//! Property tests pinning fused-batched gate application against the
+//! per-gate reference kernels: every gate kind, every target
+//! permutation, random circuits, all tile sizes and worker counts
+//! (including workers = 1). Tolerance 1e-12 absolute per amplitude.
+//!
+//! No proptest in the vendor set: seeded SplitMix64 cases, failing seeds
+//! printed for reproduction (same harness as `engine_integration.rs`).
+
+use bmqsim::circuit::fusion::{fuse_gates, FusedGate};
+use bmqsim::circuit::{Circuit, Gate, GateKind};
+use bmqsim::gates::{apply_gate, apply_stage};
+use bmqsim::types::SplitMix64;
+
+fn random_planes(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = SplitMix64::new(seed);
+    let len = 1usize << n;
+    (
+        (0..len).map(|_| rng.next_gaussian()).collect(),
+        (0..len).map(|_| rng.next_gaussian()).collect(),
+    )
+}
+
+fn assert_close(got_re: &[f64], got_im: &[f64], want_re: &[f64], want_im: &[f64], tag: &str) {
+    for i in 0..got_re.len() {
+        assert!(
+            (got_re[i] - want_re[i]).abs() < 1e-12 && (got_im[i] - want_im[i]).abs() < 1e-12,
+            "{tag}: amp {i}: got ({}, {}) want ({}, {})",
+            got_re[i],
+            got_im[i],
+            want_re[i],
+            want_im[i]
+        );
+    }
+}
+
+fn all_1q_kinds() -> Vec<GateKind> {
+    use GateKind::*;
+    vec![
+        X,
+        Y,
+        Z,
+        H,
+        S,
+        Sdg,
+        T,
+        Tdg,
+        Sx,
+        Rx(0.7),
+        Ry(-0.4),
+        Rz(1.9),
+        P(0.33),
+        U3(0.3, 1.2, -0.8),
+    ]
+}
+
+fn all_2q_kinds() -> Vec<GateKind> {
+    use GateKind::*;
+    vec![Cx, Cy, Cz, Swap, Cp(0.9), Crx(0.5), Cry(-1.1), Crz(2.0), Rxx(0.6), Rzz(-0.3)]
+}
+
+/// Fused singleton ops must match the per-gate kernels for EVERY kind on
+/// EVERY target (1q) / ordered target pair (2q), at every worker count.
+#[test]
+fn every_kind_and_permutation_matches_per_gate_reference() {
+    let n = 5;
+    for (ki, kind) in all_1q_kinds().into_iter().enumerate() {
+        for t in 0..n {
+            let gate = Gate::q1(kind, t).unwrap();
+            check_gate_list(&[gate], n, (ki * 100 + t) as u64, &format!("{kind:?} t={t}"));
+        }
+    }
+    for (ki, kind) in all_2q_kinds().into_iter().enumerate() {
+        for qa in 0..n {
+            for qb in 0..n {
+                if qa == qb {
+                    continue;
+                }
+                let gate = Gate::q2(kind, qa, qb).unwrap();
+                check_gate_list(
+                    &[gate],
+                    n,
+                    (ki * 1000 + qa * 10 + qb) as u64,
+                    &format!("{kind:?} ({qa},{qb})"),
+                );
+            }
+        }
+    }
+}
+
+/// Apply `gates` per-gate and fused-batched (all tile/worker shapes) and
+/// compare amplitudes.
+fn check_gate_list(gates: &[Gate], n: usize, seed: u64, tag: &str) {
+    let (re0, im0) = random_planes(n, seed);
+    let mut want = (re0.clone(), im0.clone());
+    for g in gates {
+        apply_gate(&mut want.0, &mut want.1, g);
+    }
+    for max_k in [2usize, 3] {
+        let ops: Vec<FusedGate> = fuse_gates(gates, max_k);
+        for tile_bits in [1usize, 3, n, 24] {
+            for workers in [1usize, 2, 4] {
+                let mut got = (re0.clone(), im0.clone());
+                apply_stage(&mut got.0, &mut got.1, &ops, tile_bits, workers);
+                assert_close(
+                    &got.0,
+                    &got.1,
+                    &want.0,
+                    &want.1,
+                    &format!("{tag} k={max_k} tile={tile_bits} workers={workers}"),
+                );
+            }
+        }
+    }
+}
+
+/// Random circuits over the full vocabulary: fused-batched == per-gate.
+#[test]
+fn property_random_circuits_fused_equals_per_gate() {
+    let mut seed_rng = SplitMix64::new(0xF05E);
+    let kinds_1q = all_1q_kinds();
+    let kinds_2q = all_2q_kinds();
+    for case in 0..20 {
+        let seed = seed_rng.next_u64();
+        let mut rng = SplitMix64::new(seed);
+        let n = 4 + (rng.next_below(5) as usize); // 4..8 qubits
+        let gates = 10 + (rng.next_below(70) as usize);
+        let mut c = Circuit::new(n, "rand");
+        for _ in 0..gates {
+            let q = rng.next_below(n as u64) as usize;
+            if rng.next_below(2) == 0 {
+                let kind = kinds_1q[rng.next_below(kinds_1q.len() as u64) as usize];
+                c.push(Gate::q1(kind, q).unwrap()).unwrap();
+            } else {
+                let mut p = rng.next_below(n as u64) as usize;
+                if p == q {
+                    p = (p + 1) % n;
+                }
+                let kind = kinds_2q[rng.next_below(kinds_2q.len() as u64) as usize];
+                c.push(Gate::q2(kind, q, p).unwrap()).unwrap();
+            }
+        }
+        check_gate_list(&c.gates, n, seed ^ 0xA5A5, &format!("case {case} seed {seed:#x}"));
+    }
+}
+
+/// Fusion bookkeeping on random circuits: sources conserved, sweep count
+/// never exceeds op count, and a deep same-qubit run beats its gate count.
+#[test]
+fn sweep_counts_shrink_on_deep_runs() {
+    use bmqsim::gates::fused::stage_sweeps;
+    let mut c = Circuit::new(10, "deep");
+    for i in 0..120 {
+        match i % 3 {
+            0 => c.h(4),
+            1 => c.t(4),
+            _ => c.cx(4, 5),
+        };
+    }
+    let ops = fuse_gates(&c.gates, 3);
+    assert_eq!(ops.len(), 1, "same-support run must fuse to one op");
+    let sweeps = stage_sweeps(&ops, 10, 15);
+    assert_eq!(sweeps, 1);
+    assert!((sweeps as usize) < c.gates.len(), "sweeps {} >= gates {}", sweeps, c.gates.len());
+}
