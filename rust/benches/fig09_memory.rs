@@ -1,12 +1,45 @@
-//! Fig. 9 — memory consumption vs standard 2^(n+4) bytes, plus §5.4 spill
-//! fractions under a restricted budget.
+//! Fig. 9 — memory consumption vs standard 2^(n+4) bytes, §5.4 spill
+//! fractions under a restricted budget, and the two-level-store
+//! concurrency study (single-lock synchronous spill vs sharded + async
+//! writer + prefetch), which also emits machine-readable
+//! `BENCH_memory.json` for the per-PR perf trajectory.
+//!
+//! `BENCH_SMOKE=1` shrinks problem sizes so CI exercises the full path
+//! (same JSON shape) in seconds.
 use bmqsim::bench_harness as bench;
+use bmqsim::bench_harness::bench_json;
 use bmqsim::circuit::generators;
 
 fn main() {
+    let smoke = bench::bench_smoke();
+    let (algos, ns, budget): (Vec<&str>, Vec<usize>, usize) = if smoke {
+        (vec!["qft", "qaoa", "ghz_state"], vec![12], 1 << 16)
+    } else {
+        (generators::ALL.to_vec(), vec![16, 18, 20], 1 << 20)
+    };
     bench::print_experiment("Fig 9: memory consumption + §5.4 spill", || {
-        let (a, b) = bench::fig09_memory(&generators::ALL, &[16, 18, 20], 1 << 20)?;
+        let (a, b) = bench::fig09_memory(&algos, &ns, budget)?;
         Ok(vec![a, b])
     });
+
+    // The concurrency study: >=30% spill fraction, workers > 1, sharded +
+    // async + prefetch vs the 1-shard synchronous baseline.
+    let (n, b, streams) = if smoke { (12, 8, 4) } else { (16, 12, 4) };
+    let mut fields: Vec<(String, String)> = Vec::new();
+    bench::print_experiment("Fig 9 addendum: sync vs sharded+async spill", || {
+        let (t, f) = bench::fig09_async_spill("qaoa", n, b, streams)?;
+        fields = f;
+        Ok(vec![t])
+    });
+    if !fields.is_empty() {
+        let doc = bench_json::obj(&fields);
+        match std::fs::write("BENCH_memory.json", doc + "\n") {
+            Ok(()) => println!("wrote BENCH_memory.json"),
+            Err(e) => {
+                eprintln!("could not write BENCH_memory.json: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
     println!("paper shape: cat/bv/ghz reduce 400-700x; cc ~15x; qft ~10x.");
 }

@@ -192,6 +192,99 @@ pub fn fig09_memory(algos: &[&str], ns: &[usize], restricted_budget: usize) -> R
     Ok((t, spill))
 }
 
+/// Fig. 9 addendum — the §4.4 *concurrency* study: single-shard
+/// synchronous-spill baseline vs the sharded + async-writer + prefetching
+/// store, under a budget squeezed to force a heavy spill fraction with
+/// `streams > 1` concurrent group chains. Returns the printable table plus
+/// machine-readable fields for `BENCH_memory.json` (spill fraction,
+/// prefetch hit rate, spill stall time, group-chain throughput).
+pub fn fig09_async_spill(
+    name: &str,
+    n: usize,
+    block_qubits: usize,
+    streams: usize,
+) -> Result<(Table, Vec<(String, String)>)> {
+    let c = generators::build(name, n, SEED)?;
+    let mk = |budget: Option<usize>, shards: usize, sync: bool, depth: usize| {
+        let mut config = cfg(block_qubits, 2);
+        config.pipeline = PipelineConfig::new(1, streams);
+        config.memory_budget = budget;
+        if budget.is_some() {
+            config.spill_dir = Some(spill_dir());
+        }
+        config.store_shards = shards;
+        config.sync_spill = sync;
+        config.prefetch_depth = depth;
+        config
+    };
+    // Probe the unconstrained compressed peak, then squeeze the budget to
+    // a quarter of it: >=30% of blocks must live on the secondary tier.
+    let probe = BmqSim::new(mk(None, 8, false, 0)).run(&c, false)?;
+    let budget = (probe.peak_bytes / 4).max(1 << 12);
+    let sync_r = BmqSim::new(mk(Some(budget), 1, true, 0)).run(&c, true)?;
+    let async_r = BmqSim::new(mk(Some(budget), 8, false, 4)).run(&c, true)?;
+    let fidelity = async_r
+        .state
+        .as_ref()
+        .unwrap()
+        .fidelity_normalized(sync_r.state.as_ref().unwrap());
+    let sync_thr = sync_r.metrics.groups_processed as f64 / sync_r.wall_secs;
+    let async_thr = async_r.metrics.groups_processed as f64 / async_r.wall_secs;
+
+    let mut t = Table::new(&[
+        "store", "wall (s)", "groups/s", "spill %", "evictions", "prefetch h/m",
+        "stall (ms)",
+    ]);
+    for (label, r, thr) in
+        [("1-shard sync", &sync_r, sync_thr), ("sharded async", &async_r, async_thr)]
+    {
+        t.row(&[
+            label.to_string(),
+            format!("{:.3}", r.wall_secs),
+            format!("{thr:.0}"),
+            format!("{:.0}%", 100.0 * r.mem.secondary_fraction()),
+            r.mem.evictions.to_string(),
+            format!("{}/{}", r.mem.prefetch_hits, r.mem.prefetch_misses),
+            format!("{:.1}", r.mem.spill_stall_ns as f64 * 1e-6),
+        ]);
+    }
+    let fields = vec![
+        ("algo".to_string(), format!("\"{name}\"")),
+        ("n".to_string(), n.to_string()),
+        ("workers".to_string(), streams.to_string()),
+        ("budget_bytes".to_string(), budget.to_string()),
+        ("unconstrained_peak_bytes".to_string(), probe.peak_bytes.to_string()),
+        ("sync_wall_s".to_string(), bench_json::num(sync_r.wall_secs)),
+        ("async_wall_s".to_string(), bench_json::num(async_r.wall_secs)),
+        ("speedup".to_string(), bench_json::num(sync_r.wall_secs / async_r.wall_secs)),
+        ("sync_groups_per_s".to_string(), bench_json::num(sync_thr)),
+        ("async_groups_per_s".to_string(), bench_json::num(async_thr)),
+        (
+            "spill_fraction".to_string(),
+            bench_json::num(async_r.mem.secondary_fraction()),
+        ),
+        ("evictions".to_string(), async_r.mem.evictions.to_string()),
+        ("prefetch_hits".to_string(), async_r.mem.prefetch_hits.to_string()),
+        ("prefetch_misses".to_string(), async_r.mem.prefetch_misses.to_string()),
+        (
+            "prefetch_hit_rate".to_string(),
+            bench_json::num(async_r.mem.prefetch_hit_rate()),
+        ),
+        (
+            "sync_spill_stall_ms".to_string(),
+            bench_json::num(sync_r.mem.spill_stall_ns as f64 * 1e-6),
+        ),
+        (
+            "async_spill_stall_ms".to_string(),
+            bench_json::num(async_r.mem.spill_stall_ns as f64 * 1e-6),
+        ),
+        ("peak_bytes_sync".to_string(), sync_r.peak_bytes.to_string()),
+        ("peak_bytes_async".to_string(), async_r.peak_bytes.to_string()),
+        ("fidelity_async_vs_sync".to_string(), bench_json::num(fidelity)),
+    ];
+    Ok((t, fields))
+}
+
 /// Fig. 10 — simulation time vs the dense baseline across circuits/sizes.
 pub fn fig10_simtime(algos: &[&str], ns: &[usize]) -> Result<Table> {
     let mut t = Table::new(&["algorithm", "n", "dense (s)", "bmqsim (s)", "bmqsim/dense"]);

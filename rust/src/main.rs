@@ -48,6 +48,9 @@ OPTIONS (run/compare/sample):
   --devices <D>         logical devices                            [1]
   --memory-budget <MB>  primary-tier budget in MiB (enables probing)
   --spill-dir <path>    secondary-tier directory (enables spilling)
+  --store-shards <N>    lock shards in the two-level store             [8]
+  --prefetch-depth <G>  groups the spill prefetcher stages ahead      [4]
+  --sync-spill          spill inline on workers (no background writer)
   --artifacts <dir>     AOT artifact directory                     [artifacts]
   --seed <s>            circuit/sampling seed                      [42]
 
@@ -100,7 +103,10 @@ impl Opts {
                 return Err(format!("unexpected argument {a:?}"));
             }
             let key = a.trim_start_matches("--").to_string();
-            let flag = matches!(key.as_str(), "no-compress" | "no-prescan" | "no-fusion");
+            let flag = matches!(
+                key.as_str(),
+                "no-compress" | "no-prescan" | "no-fusion" | "sync-spill"
+            );
             if flag {
                 map.insert(key, "true".into());
                 i += 1;
@@ -175,6 +181,11 @@ fn build_config(opts: &Opts) -> Result<SimConfig, String> {
     if let Some(dir) = opts.get("spill-dir") {
         cfg.spill_dir = Some(dir.into());
     }
+    cfg.store_shards = opts.parse_num("store-shards", cfg.store_shards)?;
+    cfg.prefetch_depth = opts.parse_num("prefetch-depth", cfg.prefetch_depth)?;
+    if opts.flag("sync-spill") {
+        cfg.sync_spill = true;
+    }
     if let Some(dir) = opts.get("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
@@ -237,6 +248,14 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
             "spill events     : {:>10}  ({:.0}% of blocks on secondary tier)",
             r.mem.spill_events,
             100.0 * r.mem.secondary_fraction()
+        );
+        println!(
+            "evictions        : {:>10}  (prefetch {} hit / {} miss = {:.0}% hit rate, {:.1} ms stalled)",
+            r.mem.evictions,
+            r.mem.prefetch_hits,
+            r.mem.prefetch_misses,
+            100.0 * r.mem.prefetch_hit_rate(),
+            r.mem.spill_stall_ns as f64 * 1e-6,
         );
     }
     Ok(())

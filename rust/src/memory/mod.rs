@@ -1,23 +1,43 @@
-//! Two-level memory management (paper §4.4).
+//! Two-level memory management (paper §4.4): a **sharded**, I/O-decoupled
+//! block store.
 //!
 //! Compressed SV blocks have *unpredictable* sizes (Challenge ④): the
 //! compression ratio depends on state content, so a fixed primary budget
 //! can overflow mid-simulation. [`BlockStore`] keeps compressed blocks in a
-//! budgeted primary tier (host RAM here; the paper's CPU DRAM) and, when an
-//! incoming block would exceed the budget, writes it straight to a
-//! secondary tier file (the GPUDirect-Storage/SSD analogue: the block
-//! bypasses the primary tier entirely, like GDS bypasses the CPU bounce
-//! buffer). Blocks are re-promoted on fetch when the budget allows.
+//! budgeted primary tier (host RAM; the paper's CPU DRAM) and overflows to
+//! a secondary-tier file (the GPUDirect-Storage/SSD analogue).
 //!
-//! The store also keeps the statistics behind Fig. 9 (peak footprint) and
-//! §5.4's spill-fraction numbers.
+//! Layering (see DESIGN.md "Two-level memory"):
+//!
+//! * **Shards** — block slots live in `N` independently locked maps keyed
+//!   by block id, so pipeline workers on disjoint groups never contend on
+//!   one global lock. **No file I/O ever happens under a shard lock.**
+//! * **Belady eviction** — the engine publishes each stage's group
+//!   schedule ([`BlockStore::publish_schedule`]); when the budget
+//!   overflows, the store evicts the resident block whose next use is
+//!   *farthest* in the schedule (the schedule is fully known per stage,
+//!   so Belady's optimal policy is implementable), instead of exiling the
+//!   hot block just written.
+//! * **Async spill writer** (`spill.rs`) — eviction candidates enter a
+//!   write-back queue; a background thread performs the file writes.
+//!   `take`/`get`/`put` intercept queued blocks before they hit disk.
+//! * **Prefetcher** (`prefetch.rs`) — walks the schedule ahead of the
+//!   workers and stages upcoming spilled blocks back into primary, turning
+//!   mid-chain synchronous disk reads into primary hits.
+//!
+//! The store also keeps the statistics behind Fig. 9 (peak footprint),
+//! §5.4's spill fractions, and the new eviction/prefetch/stall counters.
+
+mod prefetch;
+mod spill;
 
 use crate::types::{Error, Result};
-use std::collections::HashMap;
-use std::io::{Read, Seek, SeekFrom, Write};
+use spill::SpillFile;
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// One compressed block's payload: both planes, length-framed.
 ///
@@ -66,11 +86,87 @@ impl BlockPayload {
     }
 }
 
+/// Framing overhead of [`BlockPayload::to_bytes`] (two u64 lengths).
+const FRAME_BYTES: usize = 16;
+
+/// Next-use rank for blocks already processed this stage (next use is the
+/// following stage at the earliest — prime eviction candidates).
+const DONE_BASE: u64 = 1 << 40;
+/// Rank for blocks absent from the published schedule (never used this
+/// stage — evicted first).
+const NO_USE: u64 = u64::MAX;
+
 #[derive(Debug)]
 enum Slot {
-    Primary(BlockPayload),
-    /// Offset + length into the spill file.
-    Spilled { offset: u64, len: usize },
+    /// Resident in the primary tier. `prefetched` marks blocks staged by
+    /// the prefetcher, so `take` can count prefetch hits.
+    Primary { payload: BlockPayload, prefetched: bool },
+    /// Eviction in progress: the payload sits in the write-back queue
+    /// (interceptable) or is being written by the spill writer (waiters
+    /// block until the slot flips to `Spilled`).
+    Evicting { epoch: u64 },
+    /// On disk. `gen` guards lock-free readers: any slot transition bumps
+    /// it, invalidating reads that raced with an extent reuse.
+    Spilled { offset: u64, len: usize, gen: u64 },
+}
+
+/// Write-back entry state: queued payloads are interceptable; in-flight
+/// writes force interceptors to wait for the `Spilled` transition.
+enum WbState {
+    Queued(BlockPayload),
+    InFlight,
+}
+
+struct WbEntry {
+    epoch: u64,
+    state: WbState,
+}
+
+#[derive(Default)]
+struct WriteBack {
+    /// FIFO of (block id, eviction epoch); stale entries are skipped.
+    queue: VecDeque<(usize, u64)>,
+    map: HashMap<usize, WbEntry>,
+}
+
+/// Belady policy state: next-use rank per block id (group position in the
+/// published schedule) and an ordered index of primary-resident blocks.
+#[derive(Default)]
+struct Policy {
+    rank: HashMap<usize, u64>,
+    /// (rank, id) — `last()` is the eviction victim.
+    resident: BTreeSet<(u64, usize)>,
+    /// id → rank key currently used in `resident`.
+    resident_rank: HashMap<usize, u64>,
+    done_seq: u64,
+}
+
+/// Prefetcher input: the flat block order of the current stage.
+#[derive(Default)]
+struct ScheduleState {
+    order: Arc<Vec<usize>>,
+    blocks_per_group: usize,
+}
+
+/// Store tuning knobs (see `SimConfig::{store_shards, prefetch_depth,
+/// sync_spill}` and the corresponding CLI flags).
+#[derive(Debug, Clone, Copy)]
+pub struct StoreOptions {
+    /// Lock shards (rounded up to a power of two).
+    pub shards: usize,
+    /// Groups the prefetcher stages ahead of the workers (0 = disabled).
+    pub prefetch_depth: usize,
+    /// Background spill writer (false = spill inline on the caller, the
+    /// single-lock-era behaviour minus the I/O-under-lock).
+    pub async_spill: bool,
+    /// Max blocks in the write-back queue before `put` back-pressures.
+    pub write_back_cap: usize,
+}
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        StoreOptions { shards: 8, prefetch_depth: 4, async_spill: true, write_back_cap: 64 }
+    }
 }
 
 /// Cumulative statistics, readable at any time.
@@ -80,10 +176,24 @@ pub struct MemStats {
     pub peak_primary_bytes: usize,
     pub secondary_bytes: usize,
     pub peak_secondary_bytes: usize,
+    /// Bytes currently staged in the write-back queue (RAM, leaving).
+    pub write_back_bytes: usize,
     pub spill_events: u64,
     pub fetch_from_secondary: u64,
     pub blocks_primary: usize,
     pub blocks_secondary: usize,
+    pub blocks_write_back: usize,
+    /// Budget-driven evictions of a resident victim (policy decisions;
+    /// `spill_events` additionally counts budget-bypass direct spills).
+    pub evictions: u64,
+    /// `take` served from primary by a prefetcher-staged block.
+    pub prefetch_hits: u64,
+    /// `take` that paid a synchronous disk read while a schedule was
+    /// published (the reads prefetching exists to remove).
+    pub prefetch_misses: u64,
+    /// Worker time stalled on spill machinery: in-flight write waits,
+    /// write-back back-pressure, and synchronous secondary-tier reads.
+    pub spill_stall_ns: u64,
 }
 
 impl MemStats {
@@ -94,75 +204,881 @@ impl MemStats {
         self.peak_primary_bytes + self.peak_secondary_bytes
     }
 
-    /// Fraction of resident blocks currently in the secondary tier (§5.4).
+    /// Fraction of resident blocks on (or bound for) the secondary tier
+    /// (§5.4).
     pub fn secondary_fraction(&self) -> f64 {
-        let total = self.blocks_primary + self.blocks_secondary;
+        let off_primary = self.blocks_secondary + self.blocks_write_back;
+        let total = self.blocks_primary + off_primary;
         if total == 0 {
             0.0
         } else {
-            self.blocks_secondary as f64 / total as f64
+            off_primary as f64 / total as f64
+        }
+    }
+
+    /// Prefetch hit rate over all schedule-covered secondary fetches.
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        let total = self.prefetch_hits + self.prefetch_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefetch_hits as f64 / total as f64
         }
     }
 }
 
-struct Inner {
-    slots: HashMap<usize, Slot>,
-    primary_bytes: usize,
-    peak_primary: usize,
-    secondary_bytes: usize,
-    peak_secondary: usize,
-    peak_total: usize,
-    blocks_secondary: usize,
-    spill_file: Option<std::fs::File>,
-    spill_tail: u64,
-    /// Reusable holes in the spill file (freed block extents).
-    spill_free: Vec<(u64, usize)>,
+/// Copy of a slot's state, extracted so locks can be dropped before
+/// acting (no borrows into the shard map survive the peek).
+enum Peek {
+    Missing,
+    Prim,
+    Evict(u64),
+    Spill { offset: u64, len: usize, gen: u64 },
 }
 
-/// Thread-safe two-level block store.
-pub struct BlockStore {
-    /// Primary tier budget in bytes; `None` = unlimited (no spilling).
+fn peek(slots: &HashMap<usize, Slot>, id: usize) -> Peek {
+    match slots.get(&id) {
+        None => Peek::Missing,
+        Some(Slot::Primary { .. }) => Peek::Prim,
+        Some(Slot::Evicting { epoch }) => Peek::Evict(*epoch),
+        Some(&Slot::Spilled { offset, len, gen }) => Peek::Spill { offset, len, gen },
+    }
+}
+
+/// State shared between the store handle, the spill writer, and the
+/// prefetcher. All methods uphold one invariant: **no file I/O while any
+/// shard lock is held** — disk work happens between a peek (copy slot
+/// state out) and a verify (re-lock, check the slot didn't move).
+pub(crate) struct Shared {
     budget: Option<usize>,
-    spill_path: Option<PathBuf>,
-    inner: Mutex<Inner>,
+    opts: StoreOptions,
+    shards: Vec<Mutex<HashMap<usize, Slot>>>,
+    shard_mask: usize,
+    policy: Mutex<Policy>,
+    spill: Option<SpillFile>,
+    pub(crate) wb: Mutex<WriteBack>,
+    pub(crate) wb_cv: Condvar,
+    pub(crate) sched: Mutex<ScheduleState>,
+    pub(crate) sched_cv: Condvar,
+    pub(crate) progress: AtomicUsize,
+    pub(crate) shutdown: AtomicBool,
+    /// Source for eviction epochs and spill generations.
+    epoch_counter: AtomicU64,
+    /// First spill-writer failure, surfaced on the next store op.
+    failure: Mutex<Option<String>>,
+
+    primary_bytes: AtomicUsize,
+    peak_primary: AtomicUsize,
+    secondary_bytes: AtomicUsize,
+    peak_secondary: AtomicUsize,
+    wb_bytes: AtomicUsize,
+    peak_total: AtomicUsize,
+    blocks_primary: AtomicUsize,
+    blocks_secondary: AtomicUsize,
+    wb_blocks: AtomicUsize,
     spill_events: AtomicU64,
     fetch_secondary: AtomicU64,
+    sched_epoch: AtomicU64,
+    evictions: AtomicU64,
+    prefetch_hits: AtomicU64,
+    prefetch_misses: AtomicU64,
+    spill_stall_ns: AtomicU64,
+}
+
+impl Shared {
+    fn shard(&self, id: usize) -> &Mutex<HashMap<usize, Slot>> {
+        &self.shards[id & self.shard_mask]
+    }
+
+    fn next_epoch(&self) -> u64 {
+        self.epoch_counter.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn record_failure(&self, e: &Error) {
+        let mut f = self.failure.lock().unwrap();
+        if f.is_none() {
+            *f = Some(e.to_string());
+        }
+    }
+
+    fn check_failure(&self) -> Result<()> {
+        match self.failure.lock().unwrap().as_ref() {
+            Some(m) => Err(Error::OutOfMemory(format!("spill writer failed: {m}"))),
+            None => Ok(()),
+        }
+    }
+
+    fn stall(&self, t0: Instant) {
+        self.spill_stall_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn bump_peaks(&self) {
+        let p = self.primary_bytes.load(Ordering::Relaxed);
+        let s = self.secondary_bytes.load(Ordering::Relaxed);
+        let w = self.wb_bytes.load(Ordering::Relaxed);
+        self.peak_primary.fetch_max(p, Ordering::Relaxed);
+        self.peak_secondary.fetch_max(s, Ordering::Relaxed);
+        self.peak_total.fetch_max(p + s + w, Ordering::Relaxed);
+    }
+
+    /// Reserve `len` bytes of primary budget. With a budget this is a CAS
+    /// loop that never lets `primary_bytes` exceed it; without one it
+    /// always succeeds.
+    fn try_reserve(&self, len: usize) -> bool {
+        match self.budget {
+            None => {
+                self.primary_bytes.fetch_add(len, Ordering::Relaxed);
+                true
+            }
+            Some(b) => {
+                let mut cur = self.primary_bytes.load(Ordering::Relaxed);
+                loop {
+                    if cur + len > b {
+                        return false;
+                    }
+                    match self.primary_bytes.compare_exchange_weak(
+                        cur,
+                        cur + len,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => return true,
+                        Err(c) => cur = c,
+                    }
+                }
+            }
+        }
+    }
+
+    fn unreserve(&self, len: usize) {
+        self.primary_bytes.fetch_sub(len, Ordering::Relaxed);
+    }
+
+    // ---- Belady policy index (metadata only; no I/O under this lock) ----
+
+    fn policy_insert(&self, id: usize) {
+        let mut p = self.policy.lock().unwrap();
+        let r = *p.rank.get(&id).unwrap_or(&NO_USE);
+        if let Some(old) = p.resident_rank.insert(id, r) {
+            p.resident.remove(&(old, id));
+        }
+        p.resident.insert((r, id));
+    }
+
+    fn policy_remove(&self, id: usize) {
+        let mut p = self.policy.lock().unwrap();
+        if let Some(old) = p.resident_rank.remove(&id) {
+            p.resident.remove(&(old, id));
+        }
+    }
+
+    /// The block was consumed this stage: its next use is next stage at
+    /// the earliest, so a subsequent `put` files it as a prime victim.
+    fn policy_mark_done(&self, id: usize) {
+        let mut p = self.policy.lock().unwrap();
+        p.done_seq += 1;
+        let r = DONE_BASE + p.done_seq;
+        p.rank.insert(id, r);
+        if let Some(old) = p.resident_rank.remove(&id) {
+            p.resident.remove(&(old, id));
+        }
+    }
+
+    /// Pop the farthest-next-use resident candidate (rank >= `min_rank`).
+    fn policy_pick_victim(&self, min_rank: u64) -> Option<usize> {
+        let mut p = self.policy.lock().unwrap();
+        let &(rank, id) = p.resident.iter().next_back()?;
+        if rank < min_rank {
+            return None;
+        }
+        p.resident.remove(&(rank, id));
+        p.resident_rank.remove(&id);
+        Some(id)
+    }
+
+    /// Fallback victim search when the index is empty or stale: scan the
+    /// shards for primary blocks, rank them, pick the farthest.
+    fn scan_for_victim(&self, min_rank: u64) -> Option<usize> {
+        let mut candidates: Vec<usize> = Vec::new();
+        for shard in &self.shards {
+            let sg = shard.lock().unwrap();
+            candidates.extend(
+                sg.iter()
+                    .filter(|(_, s)| matches!(s, Slot::Primary { .. }))
+                    .map(|(&id, _)| id),
+            );
+        }
+        if candidates.is_empty() {
+            return None;
+        }
+        let p = self.policy.lock().unwrap();
+        let mut best: Option<(u64, usize)> = None;
+        for id in candidates {
+            let r = *p.rank.get(&id).unwrap_or(&NO_USE);
+            let better = match best {
+                None => true,
+                Some((br, bid)) => (r, id) > (br, bid),
+            };
+            if better {
+                best = Some((r, id));
+            }
+        }
+        drop(p);
+        let (r, id) = best?;
+        if r < min_rank {
+            None
+        } else {
+            Some(id)
+        }
+    }
+
+    // ---- Eviction & spilling ----
+
+    /// Evict one primary-resident block (next use farthest, rank >=
+    /// `min_rank`) into the write-back pipeline. Returns false when no
+    /// eligible victim exists.
+    fn evict_one(&self, min_rank: u64) -> Result<bool> {
+        for _ in 0..64 {
+            let victim = match self.policy_pick_victim(min_rank) {
+                Some(v) => Some(v),
+                None => self.scan_for_victim(min_rank),
+            };
+            let Some(victim) = victim else { return Ok(false) };
+            let epoch = self.next_epoch();
+            let payload = {
+                let mut sg = self.shard(victim).lock().unwrap();
+                if matches!(sg.get(&victim), Some(Slot::Primary { .. })) {
+                    let Some(Slot::Primary { payload, .. }) =
+                        sg.insert(victim, Slot::Evicting { epoch })
+                    else {
+                        unreachable!()
+                    };
+                    Some(payload)
+                } else {
+                    None // raced with take/put: stale candidate, try next
+                }
+            };
+            let Some(payload) = payload else { continue };
+            let len = payload.len();
+            self.primary_bytes.fetch_sub(len, Ordering::Relaxed);
+            self.blocks_primary.fetch_sub(1, Ordering::Relaxed);
+            self.wb_bytes.fetch_add(len, Ordering::Relaxed);
+            self.wb_blocks.fetch_add(1, Ordering::Relaxed);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.spill_events.fetch_add(1, Ordering::Relaxed);
+            self.dispatch_spill(victim, epoch, payload);
+            self.check_failure()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Route an `Evicting` payload to disk: enqueue for the background
+    /// writer, or (sync mode) write inline on the calling thread.
+    fn dispatch_spill(&self, id: usize, epoch: u64, payload: BlockPayload) {
+        if self.opts.async_spill {
+            let mut wg = self.wb.lock().unwrap();
+            wg.map.insert(id, WbEntry { epoch, state: WbState::Queued(payload) });
+            wg.queue.push_back((id, epoch));
+            drop(wg);
+            self.wb_cv.notify_all();
+        } else {
+            self.spill_block_now(id, epoch, payload);
+        }
+    }
+
+    /// A block that cannot fit the primary tier at all bypasses it
+    /// (paper: "directly save this chunk to the storage via GDS").
+    fn spill_incoming(&self, id: usize, payload: BlockPayload) -> Result<()> {
+        let epoch = self.next_epoch();
+        self.shard(id).lock().unwrap().insert(id, Slot::Evicting { epoch });
+        self.wb_bytes.fetch_add(payload.len(), Ordering::Relaxed);
+        self.wb_blocks.fetch_add(1, Ordering::Relaxed);
+        self.spill_events.fetch_add(1, Ordering::Relaxed);
+        self.bump_peaks();
+        self.dispatch_spill(id, epoch, payload);
+        self.check_failure()
+    }
+
+    /// Serialize → write → install `Spilled`, entirely outside shard
+    /// locks. Called by the writer thread (async) or inline (sync).
+    pub(crate) fn spill_block_now(&self, id: usize, epoch: u64, payload: BlockPayload) {
+        let plen = payload.len();
+        let written: Result<(u64, usize)> = match self.spill.as_ref() {
+            Some(spill) => spill.write(&payload.to_bytes()),
+            None => Err(Error::OutOfMemory("spill file missing".into())),
+        };
+        match written {
+            Ok((offset, stored)) => {
+                let gen = self.next_epoch();
+                let installed = {
+                    let mut sg = self.shard(id).lock().unwrap();
+                    match sg.get(&id) {
+                        Some(Slot::Evicting { epoch: e }) if *e == epoch => {
+                            sg.insert(id, Slot::Spilled { offset, len: stored, gen });
+                            true
+                        }
+                        _ => false,
+                    }
+                };
+                if installed {
+                    self.secondary_bytes.fetch_add(stored, Ordering::Relaxed);
+                    self.blocks_secondary.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    // Unreachable by protocol (interceptors wait on
+                    // in-flight writes); defensively drop the disk copy.
+                    self.spill.as_ref().unwrap().free_extent(offset, stored);
+                }
+                // Write-back accounting is released only now, AFTER the
+                // Spilled slot is installed: flush()/stats() never observe
+                // a block in no tier.
+                self.wb_bytes.fetch_sub(plen, Ordering::Relaxed);
+                self.wb_blocks.fetch_sub(1, Ordering::Relaxed);
+                self.bump_peaks();
+            }
+            Err(e) => {
+                // Never lose data: reinstate the payload in primary (even
+                // over budget) and surface the failure on the next op.
+                {
+                    let mut sg = self.shard(id).lock().unwrap();
+                    if matches!(sg.get(&id), Some(Slot::Evicting { epoch: ep }) if *ep == epoch) {
+                        sg.insert(id, Slot::Primary { payload, prefetched: false });
+                        self.primary_bytes.fetch_add(plen, Ordering::Relaxed);
+                        self.blocks_primary.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                self.wb_bytes.fetch_sub(plen, Ordering::Relaxed);
+                self.wb_blocks.fetch_sub(1, Ordering::Relaxed);
+                if self.budget.is_some() {
+                    self.policy_insert(id);
+                }
+                self.record_failure(&e);
+            }
+        }
+        let mut wg = self.wb.lock().unwrap();
+        if matches!(wg.map.get(&id), Some(en) if en.epoch == epoch) {
+            wg.map.remove(&id);
+        }
+        drop(wg);
+        self.wb_cv.notify_all();
+    }
+
+    /// Remove any existing version of `id` (any tier), waiting out
+    /// in-flight spill writes. No-op when absent.
+    fn clear_slot(&self, id: usize) -> Result<()> {
+        let mut spins = 0u32;
+        loop {
+            let mut sg = self.shard(id).lock().unwrap();
+            match peek(&sg, id) {
+                Peek::Missing => return Ok(()),
+                Peek::Prim => {
+                    let Some(Slot::Primary { payload, .. }) = sg.remove(&id) else {
+                        unreachable!()
+                    };
+                    drop(sg);
+                    self.primary_bytes.fetch_sub(payload.len(), Ordering::Relaxed);
+                    self.blocks_primary.fetch_sub(1, Ordering::Relaxed);
+                    if self.budget.is_some() {
+                        self.policy_remove(id);
+                    }
+                    return Ok(());
+                }
+                Peek::Evict(epoch) => {
+                    let mut wg = self.wb.lock().unwrap();
+                    let queued = matches!(
+                        wg.map.get(&id),
+                        Some(e) if e.epoch == epoch && matches!(e.state, WbState::Queued(_))
+                    );
+                    if queued {
+                        let entry = wg.map.remove(&id).unwrap();
+                        let WbState::Queued(payload) = entry.state else { unreachable!() };
+                        sg.remove(&id);
+                        drop(wg);
+                        drop(sg);
+                        self.wb_bytes.fetch_sub(payload.len(), Ordering::Relaxed);
+                        self.wb_blocks.fetch_sub(1, Ordering::Relaxed);
+                        self.wb_cv.notify_all();
+                        return Ok(());
+                    }
+                    drop(sg);
+                    let t0 = Instant::now();
+                    let (wg, _) =
+                        self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
+                    drop(wg);
+                    self.stall(t0);
+                    spins += 1;
+                    if spins > 120_000 {
+                        return Err(Error::OutOfMemory(format!(
+                            "block {id}: spill write never completed"
+                        )));
+                    }
+                    self.check_failure()?;
+                }
+                Peek::Spill { offset, len, .. } => {
+                    sg.remove(&id);
+                    drop(sg);
+                    self.secondary_bytes.fetch_sub(len, Ordering::Relaxed);
+                    self.blocks_secondary.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(spill) = self.spill.as_ref() {
+                        spill.free_extent(offset, len);
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    // ---- Public-facing operations (via BlockStore) ----
+
+    fn put(&self, id: usize, payload: BlockPayload) -> Result<()> {
+        self.check_failure()?;
+        let len = payload.len();
+        self.clear_slot(id)?;
+        let mut attempts = 0u32;
+        let mut waits = 0u32;
+        while !self.try_reserve(len) {
+            attempts += 1;
+            if self.spill.is_none() {
+                return Err(Error::OutOfMemory(format!(
+                    "block {id} ({len} B) exceeds primary budget {:?} and no spill dir configured",
+                    self.budget
+                )));
+            }
+            // Back-pressure: bound the write-back queue's RAM. Bounded
+            // like every other wait path — a wedged writer must surface
+            // as an error, not a silent hang.
+            if self.opts.async_spill
+                && self.wb_blocks.load(Ordering::Relaxed) >= self.opts.write_back_cap
+            {
+                let t0 = Instant::now();
+                let wg = self.wb.lock().unwrap();
+                let (wg, _) = self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
+                drop(wg);
+                self.stall(t0);
+                waits += 1;
+                if waits > 120_000 {
+                    return Err(Error::OutOfMemory(format!(
+                        "block {id}: write-back queue never drained"
+                    )));
+                }
+                self.check_failure()?;
+                continue;
+            }
+            if attempts > 10_000 || !self.evict_one(0)? {
+                return self.spill_incoming(id, payload);
+            }
+        }
+        self.shard(id)
+            .lock()
+            .unwrap()
+            .insert(id, Slot::Primary { payload, prefetched: false });
+        self.blocks_primary.fetch_add(1, Ordering::Relaxed);
+        if self.budget.is_some() {
+            self.policy_insert(id);
+        }
+        self.bump_peaks();
+        Ok(())
+    }
+
+    fn take(&self, id: usize) -> Result<BlockPayload> {
+        self.check_failure()?;
+        let mut spins = 0u32;
+        loop {
+            let mut sg = self.shard(id).lock().unwrap();
+            match peek(&sg, id) {
+                Peek::Missing => {
+                    return Err(Error::OutOfMemory(format!("block {id} not resident")))
+                }
+                Peek::Prim => {
+                    let Some(Slot::Primary { payload, prefetched }) = sg.remove(&id) else {
+                        unreachable!()
+                    };
+                    drop(sg);
+                    self.primary_bytes.fetch_sub(payload.len(), Ordering::Relaxed);
+                    self.blocks_primary.fetch_sub(1, Ordering::Relaxed);
+                    if prefetched {
+                        self.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if self.budget.is_some() {
+                        self.policy_mark_done(id);
+                    }
+                    return Ok(payload);
+                }
+                Peek::Evict(epoch) => {
+                    let mut wg = self.wb.lock().unwrap();
+                    let queued = matches!(
+                        wg.map.get(&id),
+                        Some(e) if e.epoch == epoch && matches!(e.state, WbState::Queued(_))
+                    );
+                    if queued {
+                        // Intercept the block before it hits disk.
+                        let entry = wg.map.remove(&id).unwrap();
+                        let WbState::Queued(payload) = entry.state else { unreachable!() };
+                        sg.remove(&id);
+                        drop(wg);
+                        drop(sg);
+                        self.wb_bytes.fetch_sub(payload.len(), Ordering::Relaxed);
+                        self.wb_blocks.fetch_sub(1, Ordering::Relaxed);
+                        if self.budget.is_some() {
+                            self.policy_mark_done(id);
+                        }
+                        self.wb_cv.notify_all();
+                        return Ok(payload);
+                    }
+                    // Write in flight: wait (outside the shard lock) for
+                    // the Spilled transition, then retry.
+                    drop(sg);
+                    let t0 = Instant::now();
+                    let (wg, _) =
+                        self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
+                    drop(wg);
+                    self.stall(t0);
+                    spins += 1;
+                    if spins > 120_000 {
+                        return Err(Error::OutOfMemory(format!(
+                            "block {id}: spill write never completed"
+                        )));
+                    }
+                    self.check_failure()?;
+                }
+                Peek::Spill { offset, len, .. } => {
+                    sg.remove(&id);
+                    drop(sg);
+                    self.secondary_bytes.fetch_sub(len, Ordering::Relaxed);
+                    self.blocks_secondary.fetch_sub(1, Ordering::Relaxed);
+                    self.fetch_secondary.fetch_add(1, Ordering::Relaxed);
+                    if self.sched_epoch.load(Ordering::Relaxed) > 0 {
+                        self.prefetch_misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if self.budget.is_some() {
+                        self.policy_mark_done(id);
+                    }
+                    // The extent is unreachable (slot removed) until we
+                    // free it below, so the read races with nothing.
+                    let spill =
+                        self.spill.as_ref().expect("spilled slot without spill file");
+                    let t0 = Instant::now();
+                    let mut buf = Vec::new();
+                    let read = spill.read_into(offset, len, &mut buf);
+                    // The slot is already gone either way: release the
+                    // extent even on a read error (no one references it).
+                    spill.free_extent(offset, len);
+                    self.stall(t0);
+                    read?;
+                    return BlockPayload::from_bytes(&buf);
+                }
+            }
+        }
+    }
+
+    fn get(&self, id: usize) -> Result<BlockPayload> {
+        self.check_failure()?;
+        let mut spins = 0u32;
+        loop {
+            let sg = self.shard(id).lock().unwrap();
+            match peek(&sg, id) {
+                Peek::Missing => {
+                    return Err(Error::OutOfMemory(format!("block {id} not resident")))
+                }
+                Peek::Prim => {
+                    let Some(Slot::Primary { payload, .. }) = sg.get(&id) else {
+                        unreachable!()
+                    };
+                    return Ok(payload.clone());
+                }
+                Peek::Evict(epoch) => {
+                    let wg = self.wb.lock().unwrap();
+                    if let Some(e) = wg.map.get(&id) {
+                        if e.epoch == epoch {
+                            if let WbState::Queued(p) = &e.state {
+                                // Still queued: read it from RAM and let the
+                                // write-back proceed.
+                                return Ok(p.clone());
+                            }
+                        }
+                    }
+                    drop(sg);
+                    let t0 = Instant::now();
+                    let (wg, _) =
+                        self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
+                    drop(wg);
+                    self.stall(t0);
+                    spins += 1;
+                    if spins > 120_000 {
+                        return Err(Error::OutOfMemory(format!(
+                            "block {id}: spill write never completed"
+                        )));
+                    }
+                    self.check_failure()?;
+                }
+                Peek::Spill { offset, len, gen } => {
+                    drop(sg);
+                    let spill =
+                        self.spill.as_ref().expect("spilled slot without spill file");
+                    let t0 = Instant::now();
+                    let mut buf = Vec::new();
+                    spill.read_into(offset, len, &mut buf)?;
+                    self.stall(t0);
+                    let parsed = BlockPayload::from_bytes(&buf);
+                    let mut sg = self.shard(id).lock().unwrap();
+                    let unchanged =
+                        matches!(sg.get(&id), Some(&Slot::Spilled { gen: g, .. }) if g == gen);
+                    if !unchanged {
+                        // The slot moved while we read (take/put/prefetch
+                        // raced): discard and re-resolve.
+                        drop(sg);
+                        spins += 1;
+                        if spins > 120_000 {
+                            return Err(Error::OutOfMemory(format!(
+                                "block {id}: unstable under concurrent churn"
+                            )));
+                        }
+                        continue;
+                    }
+                    // Generation verified: the extent was stable for the
+                    // whole read, so parse failures are real corruption.
+                    let payload = match parsed {
+                        Ok(p) => p,
+                        Err(e) => return Err(e),
+                    };
+                    self.fetch_secondary.fetch_add(1, Ordering::Relaxed);
+                    // Promote to primary when the budget allows, so
+                    // repeated terminal reads (materialize / observables)
+                    // stop re-reading the file.
+                    if self.try_reserve(payload.len()) {
+                        sg.insert(
+                            id,
+                            Slot::Primary { payload: payload.clone(), prefetched: false },
+                        );
+                        drop(sg);
+                        self.blocks_primary.fetch_add(1, Ordering::Relaxed);
+                        self.secondary_bytes.fetch_sub(len, Ordering::Relaxed);
+                        self.blocks_secondary.fetch_sub(1, Ordering::Relaxed);
+                        spill.free_extent(offset, len);
+                        if self.budget.is_some() {
+                            self.policy_insert(id);
+                        }
+                        self.bump_peaks();
+                    }
+                    return Ok(payload);
+                }
+            }
+        }
+    }
+
+    /// Prefetcher work unit: promote a spilled block into primary if its
+    /// read survives generation checks. Eviction to make room only touches
+    /// blocks with rank >= `protect_below` (beyond the prefetch window).
+    pub(crate) fn try_promote(
+        &self,
+        id: usize,
+        protect_below: u64,
+        mark_prefetched: bool,
+        buf: &mut Vec<u8>,
+    ) -> bool {
+        let (offset, len, gen) = {
+            let sg = self.shard(id).lock().unwrap();
+            match sg.get(&id) {
+                Some(&Slot::Spilled { offset, len, gen }) => (offset, len, gen),
+                _ => return false,
+            }
+        };
+        let plen = len.saturating_sub(FRAME_BYTES);
+        let mut guard = 0u32;
+        while !self.try_reserve(plen) {
+            guard += 1;
+            if guard > 64 || !matches!(self.evict_one(protect_below), Ok(true)) {
+                return false;
+            }
+        }
+        let Some(spill) = self.spill.as_ref() else {
+            self.unreserve(plen);
+            return false;
+        };
+        if spill.read_into(offset, len, buf).is_err() {
+            self.unreserve(plen);
+            return false;
+        }
+        let parsed = BlockPayload::from_bytes(buf);
+        let mut sg = self.shard(id).lock().unwrap();
+        let unchanged = matches!(sg.get(&id), Some(&Slot::Spilled { gen: g, .. }) if g == gen);
+        let payload = match (unchanged, parsed) {
+            (true, Ok(p)) => p,
+            _ => {
+                drop(sg);
+                self.unreserve(plen);
+                return false;
+            }
+        };
+        sg.insert(id, Slot::Primary { payload, prefetched: mark_prefetched });
+        drop(sg);
+        self.blocks_primary.fetch_add(1, Ordering::Relaxed);
+        self.secondary_bytes.fetch_sub(len, Ordering::Relaxed);
+        self.blocks_secondary.fetch_sub(1, Ordering::Relaxed);
+        spill.free_extent(offset, len);
+        if self.budget.is_some() {
+            self.policy_insert(id);
+        }
+        self.bump_peaks();
+        true
+    }
+
+    fn publish_schedule(&self, order: &[usize], blocks_per_group: usize) {
+        let bpg = blocks_per_group.max(1);
+        {
+            let mut s = self.sched.lock().unwrap();
+            s.order = Arc::new(order.to_vec());
+            s.blocks_per_group = bpg;
+        }
+        self.sched_epoch.fetch_add(1, Ordering::Relaxed);
+        self.progress.store(0, Ordering::Release);
+        if self.budget.is_some() {
+            {
+                let mut p = self.policy.lock().unwrap();
+                p.rank.clear();
+                p.done_seq = 0;
+                for (i, &id) in order.iter().enumerate() {
+                    p.rank.insert(id, (i / bpg) as u64);
+                }
+            }
+            // Re-key the resident index under the new ranks, shard by
+            // shard (entries for ids that move mid-rebuild self-heal via
+            // the victim verify-and-skip loop).
+            for shard in &self.shards {
+                let sg = shard.lock().unwrap();
+                let ids: Vec<usize> = sg
+                    .iter()
+                    .filter(|(_, s)| matches!(s, Slot::Primary { .. }))
+                    .map(|(&id, _)| id)
+                    .collect();
+                drop(sg);
+                for id in ids {
+                    self.policy_insert(id);
+                }
+            }
+        }
+        self.sched_cv.notify_all();
+    }
+
+    fn group_completed(&self) {
+        self.progress.fetch_add(1, Ordering::AcqRel);
+        self.sched_cv.notify_all();
+    }
+
+    fn flush(&self) -> Result<()> {
+        let mut wg = self.wb.lock().unwrap();
+        while self.wb_blocks.load(Ordering::Relaxed) > 0 {
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let (g, _) = self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
+            wg = g;
+        }
+        drop(wg);
+        self.check_failure()
+    }
+
+    fn stats(&self) -> MemStats {
+        MemStats {
+            primary_bytes: self.primary_bytes.load(Ordering::Relaxed),
+            peak_primary_bytes: self.peak_primary.load(Ordering::Relaxed),
+            secondary_bytes: self.secondary_bytes.load(Ordering::Relaxed),
+            peak_secondary_bytes: self.peak_secondary.load(Ordering::Relaxed),
+            write_back_bytes: self.wb_bytes.load(Ordering::Relaxed),
+            spill_events: self.spill_events.load(Ordering::Relaxed),
+            fetch_from_secondary: self.fetch_secondary.load(Ordering::Relaxed),
+            blocks_primary: self.blocks_primary.load(Ordering::Relaxed),
+            blocks_secondary: self.blocks_secondary.load(Ordering::Relaxed),
+            blocks_write_back: self.wb_blocks.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
+            spill_stall_ns: self.spill_stall_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Thread-safe, sharded two-level block store.
+pub struct BlockStore {
+    shared: Arc<Shared>,
+    writer: Option<std::thread::JoinHandle<()>>,
+    prefetcher: Option<std::thread::JoinHandle<()>>,
 }
 
 impl BlockStore {
     /// `budget = None` disables the secondary tier entirely; putting beyond
-    /// the budget then returns [`Error::OutOfMemory`].
+    /// the budget then returns [`Error::OutOfMemory`]. Uses default
+    /// [`StoreOptions`].
     pub fn new(budget: Option<usize>, spill_dir: Option<PathBuf>) -> Result<Self> {
-        let spill_path = match (&budget, spill_dir) {
-            (Some(_), Some(dir)) => {
-                std::fs::create_dir_all(&dir)?;
-                let unique = format!(
-                    "bmqsim-spill-{}-{:x}.bin",
-                    std::process::id(),
-                    &dir as *const _ as usize
-                );
-                Some(dir.join(unique))
-            }
+        Self::with_options(budget, spill_dir, StoreOptions::default())
+    }
+
+    /// Full-control constructor: shard count, prefetch depth, sync/async
+    /// spill. Background threads spawn only when spilling is configured.
+    pub fn with_options(
+        budget: Option<usize>,
+        spill_dir: Option<PathBuf>,
+        opts: StoreOptions,
+    ) -> Result<Self> {
+        let spill = match (&budget, &spill_dir) {
+            (Some(_), Some(dir)) => Some(SpillFile::create(dir)?),
             _ => None,
         };
-        Ok(BlockStore {
+        let nshards = opts.shards.max(1).next_power_of_two();
+        let shared = Arc::new(Shared {
             budget,
-            spill_path,
-            inner: Mutex::new(Inner {
-                slots: HashMap::new(),
-                primary_bytes: 0,
-                peak_primary: 0,
-                secondary_bytes: 0,
-                peak_secondary: 0,
-                peak_total: 0,
-                blocks_secondary: 0,
-                spill_file: None,
-                spill_tail: 0,
-                spill_free: Vec::new(),
-            }),
+            opts,
+            shards: (0..nshards).map(|_| Mutex::new(HashMap::new())).collect(),
+            shard_mask: nshards - 1,
+            policy: Mutex::new(Policy::default()),
+            spill,
+            wb: Mutex::new(WriteBack::default()),
+            wb_cv: Condvar::new(),
+            sched: Mutex::new(ScheduleState::default()),
+            sched_cv: Condvar::new(),
+            progress: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            epoch_counter: AtomicU64::new(0),
+            failure: Mutex::new(None),
+            primary_bytes: AtomicUsize::new(0),
+            peak_primary: AtomicUsize::new(0),
+            secondary_bytes: AtomicUsize::new(0),
+            peak_secondary: AtomicUsize::new(0),
+            wb_bytes: AtomicUsize::new(0),
+            peak_total: AtomicUsize::new(0),
+            blocks_primary: AtomicUsize::new(0),
+            blocks_secondary: AtomicUsize::new(0),
+            wb_blocks: AtomicUsize::new(0),
             spill_events: AtomicU64::new(0),
             fetch_secondary: AtomicU64::new(0),
-        })
+            sched_epoch: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            prefetch_hits: AtomicU64::new(0),
+            prefetch_misses: AtomicU64::new(0),
+            spill_stall_ns: AtomicU64::new(0),
+        });
+        let mut store = BlockStore { shared, prefetcher: None, writer: None };
+        if store.shared.spill.is_some() {
+            if opts.async_spill {
+                let s = Arc::clone(&store.shared);
+                store.writer = Some(
+                    std::thread::Builder::new()
+                        .name("bmqsim-spill".into())
+                        .spawn(move || spill::writer_loop(s))
+                        .map_err(Error::Io)?,
+                );
+            }
+            if opts.prefetch_depth > 0 {
+                let s = Arc::clone(&store.shared);
+                store.prefetcher = Some(
+                    std::thread::Builder::new()
+                        .name("bmqsim-prefetch".into())
+                        .spawn(move || prefetch::prefetch_loop(s))
+                        .map_err(Error::Io)?,
+                );
+            }
+        }
+        Ok(store)
     }
 
     /// Unbounded in-RAM store (the common case when memory suffices).
@@ -170,166 +1086,80 @@ impl BlockStore {
         Self::new(None, None).expect("unbounded store cannot fail")
     }
 
-    /// Insert/overwrite block `id`. Spills to the secondary tier when the
-    /// primary budget would be exceeded (paper: "directly save this chunk
-    /// to the storage via GDS").
+    /// Insert/overwrite block `id`. When the primary budget would be
+    /// exceeded, the *farthest-next-use* resident block is evicted to the
+    /// write-back pipeline (Belady; falls back to spilling the incoming
+    /// block only when nothing else is evictable).
     pub fn put(&self, id: usize, payload: BlockPayload) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
-        // Drop any previous version of this block first.
-        Self::remove_locked(&mut g, id);
-        let len = payload.len();
-        let fits = match self.budget {
-            Some(b) => g.primary_bytes + len <= b,
-            None => true,
-        };
-        if fits {
-            g.primary_bytes += len;
-            g.peak_primary = g.peak_primary.max(g.primary_bytes);
-            g.slots.insert(id, Slot::Primary(payload));
-        } else {
-            if self.spill_path.is_none() {
-                return Err(Error::OutOfMemory(format!(
-                    "block {id} ({len} B) exceeds primary budget {:?} and no spill dir configured",
-                    self.budget
-                )));
-            }
-            let bytes = payload.to_bytes();
-            let (offset, stored) = Self::spill_write_locked(&mut g, self.spill_path.as_ref().unwrap(), &bytes)?;
-            g.secondary_bytes += stored;
-            g.peak_secondary = g.peak_secondary.max(g.secondary_bytes);
-            g.blocks_secondary += 1;
-            g.slots.insert(id, Slot::Spilled { offset, len: stored });
-            self.spill_events.fetch_add(1, Ordering::Relaxed);
-        }
-        g.peak_total = g.peak_total.max(g.primary_bytes + g.secondary_bytes);
-        Ok(())
+        self.shared.put(id, payload)
     }
 
     /// Remove and return block `id` (the engines' fetch-for-update path —
     /// the block's budget is released while it's being worked on).
+    /// Intercepts queued write-backs before they hit disk.
     pub fn take(&self, id: usize) -> Result<BlockPayload> {
-        let mut g = self.inner.lock().unwrap();
-        let slot = g
-            .slots
-            .remove(&id)
-            .ok_or_else(|| Error::OutOfMemory(format!("block {id} not resident")))?;
-        match slot {
-            Slot::Primary(p) => {
-                g.primary_bytes -= p.len();
-                Ok(p)
-            }
-            Slot::Spilled { offset, len } => {
-                g.secondary_bytes -= len;
-                g.blocks_secondary -= 1;
-                g.spill_free.push((offset, len));
-                self.fetch_secondary.fetch_add(1, Ordering::Relaxed);
-                let bytes = Self::spill_read_locked(&mut g, offset, len)?;
-                BlockPayload::from_bytes(&bytes)
-            }
-        }
+        self.shared.take(id)
     }
 
     /// Read a block without removing it (terminal state materialization).
+    /// Spilled blocks are promoted back to primary when the budget allows.
     pub fn get(&self, id: usize) -> Result<BlockPayload> {
-        let mut g = self.inner.lock().unwrap();
-        match g.slots.get(&id) {
-            Some(Slot::Primary(p)) => Ok(p.clone()),
-            Some(&Slot::Spilled { offset, len }) => {
-                self.fetch_secondary.fetch_add(1, Ordering::Relaxed);
-                let bytes = Self::spill_read_locked(&mut g, offset, len)?;
-                BlockPayload::from_bytes(&bytes)
-            }
-            None => Err(Error::OutOfMemory(format!("block {id} not resident"))),
-        }
+        self.shared.get(id)
     }
 
     pub fn contains(&self, id: usize) -> bool {
-        self.inner.lock().unwrap().slots.contains_key(&id)
+        self.shared.shard(id).lock().unwrap().contains_key(&id)
+    }
+
+    /// Publish a stage's group schedule: `order` lists block ids in group
+    /// processing order, `blocks_per_group` of them per group. Drives both
+    /// Belady eviction ranks and the prefetch window.
+    pub fn publish_schedule(&self, order: &[usize], blocks_per_group: usize) {
+        self.shared.publish_schedule(order, blocks_per_group);
+    }
+
+    /// Advance the schedule cursor: one group's chain finished (store
+    /// phase done). The prefetcher works `prefetch_depth` groups ahead of
+    /// this point.
+    pub fn group_completed(&self) {
+        self.shared.group_completed();
+    }
+
+    /// Wait until the write-back queue drains; surfaces any background
+    /// spill-writer failure.
+    pub fn flush(&self) -> Result<()> {
+        self.shared.flush()
     }
 
     pub fn stats(&self) -> MemStats {
-        let g = self.inner.lock().unwrap();
-        MemStats {
-            primary_bytes: g.primary_bytes,
-            peak_primary_bytes: g.peak_primary,
-            secondary_bytes: g.secondary_bytes,
-            peak_secondary_bytes: g.peak_secondary,
-            spill_events: self.spill_events.load(Ordering::Relaxed),
-            fetch_from_secondary: self.fetch_secondary.load(Ordering::Relaxed),
-            blocks_primary: g.slots.len() - g.blocks_secondary,
-            blocks_secondary: g.blocks_secondary,
-        }
+        self.shared.stats()
     }
 
-    /// Precise peak of primary+secondary together (Fig. 9 metric).
+    /// Precise peak of primary + write-back + secondary together (Fig. 9
+    /// metric).
     pub fn peak_total_bytes(&self) -> usize {
-        self.inner.lock().unwrap().peak_total
+        self.shared.peak_total.load(Ordering::Relaxed)
     }
 
-    fn remove_locked(g: &mut Inner, id: usize) {
-        if let Some(old) = g.slots.remove(&id) {
-            match old {
-                Slot::Primary(p) => g.primary_bytes -= p.len(),
-                Slot::Spilled { offset, len } => {
-                    g.secondary_bytes -= len;
-                    g.blocks_secondary -= 1;
-                    g.spill_free.push((offset, len));
-                }
-            }
-        }
-    }
-
-    fn spill_write_locked(g: &mut Inner, path: &PathBuf, bytes: &[u8]) -> Result<(u64, usize)> {
-        if g.spill_file.is_none() {
-            g.spill_file = Some(
-                std::fs::OpenOptions::new()
-                    .create(true)
-                    .read(true)
-                    .write(true)
-                    .truncate(true)
-                    .open(path)?,
-            );
-        }
-        // First-fit reuse of freed extents to bound spill-file growth.
-        let mut offset = None;
-        for i in 0..g.spill_free.len() {
-            if g.spill_free[i].1 >= bytes.len() {
-                let (off, cap) = g.spill_free.swap_remove(i);
-                if cap > bytes.len() {
-                    g.spill_free.push((off + bytes.len() as u64, cap - bytes.len()));
-                }
-                offset = Some(off);
-                break;
-            }
-        }
-        let offset = offset.unwrap_or_else(|| {
-            let o = g.spill_tail;
-            g.spill_tail += bytes.len() as u64;
-            o
-        });
-        let f = g.spill_file.as_mut().unwrap();
-        f.seek(SeekFrom::Start(offset))?;
-        f.write_all(bytes)?;
-        Ok((offset, bytes.len()))
-    }
-
-    fn spill_read_locked(g: &mut Inner, offset: u64, len: usize) -> Result<Vec<u8>> {
-        let f = g
-            .spill_file
-            .as_mut()
-            .ok_or_else(|| Error::OutOfMemory("spill file missing".into()))?;
-        f.seek(SeekFrom::Start(offset))?;
-        let mut buf = vec![0u8; len];
-        f.read_exact(&mut buf)?;
-        Ok(buf)
+    /// Spill-file tail in bytes (0 without a spill file) — diagnostics:
+    /// bounds file growth under extent reuse.
+    pub fn spill_tail_bytes(&self) -> u64 {
+        self.shared.spill.as_ref().map_or(0, |s| s.tail())
     }
 }
 
 impl Drop for BlockStore {
     fn drop(&mut self) {
-        if let Some(p) = &self.spill_path {
-            let _ = std::fs::remove_file(p);
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.wb_cv.notify_all();
+        self.shared.sched_cv.notify_all();
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
         }
+        if let Some(h) = self.prefetcher.take() {
+            let _ = h.join();
+        }
+        // The spill file itself is removed by SpillFile::drop.
     }
 }
 
@@ -345,6 +1175,10 @@ mod tests {
         let d = std::env::temp_dir().join(format!("bmqsim-test-{}", std::process::id()));
         std::fs::create_dir_all(&d).unwrap();
         d
+    }
+
+    fn sync_opts() -> StoreOptions {
+        StoreOptions { async_spill: false, prefetch_depth: 0, ..StoreOptions::default() }
     }
 
     #[test]
@@ -380,20 +1214,73 @@ mod tests {
     }
 
     #[test]
-    fn spills_when_over_budget_and_reads_back() {
-        let s = BlockStore::new(Some(250), Some(tmpdir())).unwrap();
+    fn evicts_resident_not_incoming_and_reads_back() {
+        // Old behaviour spilled the hot incoming block; the eviction
+        // policy instead keeps the incoming block resident and evicts a
+        // prior one (no schedule -> all ranks equal, highest id wins ties
+        // in the index but any resident victim is acceptable).
+        let s = BlockStore::with_options(Some(250), Some(tmpdir()), sync_opts()).unwrap();
         s.put(0, payload(100, 1)).unwrap(); // 200 B primary
-        s.put(1, payload(100, 2)).unwrap(); // would be 400 -> spill
+        s.put(1, payload(100, 2)).unwrap(); // would be 400 -> evict block 0
         let st = s.stats();
         assert_eq!(st.blocks_primary, 1);
         assert_eq!(st.blocks_secondary, 1);
         assert_eq!(st.spill_events, 1);
+        assert_eq!(st.evictions, 1);
         assert!(st.secondary_fraction() > 0.49);
-        // Read back from the secondary tier, content intact.
-        let p = s.take(1).unwrap();
-        assert_eq!(p.re, vec![2u8; 100]);
-        assert_eq!(p.im, vec![3u8; 100]);
+        assert!(st.primary_bytes <= 250);
+        // The incoming block stayed in primary; the victim reads back
+        // intact from the secondary tier.
+        let p1 = s.take(1).unwrap();
+        assert_eq!(p1.re, vec![2u8; 100]);
+        assert_eq!(s.stats().fetch_from_secondary, 0, "block 1 must be a primary hit");
+        let p0 = s.take(0).unwrap();
+        assert_eq!(p0.re, vec![1u8; 100]);
+        assert_eq!(p0.im, vec![2u8; 100]);
         assert_eq!(s.stats().fetch_from_secondary, 1);
+    }
+
+    #[test]
+    fn belady_eviction_follows_published_schedule() {
+        // Budget fits 3 of 4 equal blocks. Schedule order 0,1,2,3: the
+        // farthest-next-use resident must be evicted at each overflow.
+        let s = BlockStore::with_options(Some(620), Some(tmpdir()), sync_opts()).unwrap();
+        s.publish_schedule(&[0, 1, 2, 3], 1);
+        for id in 0..3 {
+            s.put(id, payload(100, id as u8)).unwrap(); // 600 B primary
+        }
+        s.put(3, payload(100, 3)).unwrap(); // overflow: evict block 2 (farthest resident)
+        let st = s.stats();
+        assert_eq!(st.evictions, 1);
+        // Blocks 0 and 1 (next uses) stayed resident: taking them must not
+        // touch the disk.
+        s.take(0).unwrap();
+        s.take(1).unwrap();
+        assert_eq!(s.stats().fetch_from_secondary, 0);
+        // Block 2 was the victim.
+        s.take(2).unwrap();
+        assert_eq!(s.stats().fetch_from_secondary, 1);
+    }
+
+    #[test]
+    fn done_blocks_are_preferred_victims() {
+        // After take+put (a processed group), a block's next use is the
+        // NEXT stage — it must be evicted before upcoming-schedule blocks.
+        let s = BlockStore::with_options(Some(620), Some(tmpdir()), sync_opts()).unwrap();
+        s.publish_schedule(&[0, 1, 2, 3], 1);
+        for id in 0..3 {
+            s.put(id, payload(100, id as u8)).unwrap();
+        }
+        // Process block 0: take marks it done; re-put keeps it resident.
+        let p = s.take(0).unwrap();
+        s.put(0, p).unwrap();
+        // Overflow: block 0 (done) outranks blocks 1/2 (upcoming).
+        s.put(3, payload(100, 3)).unwrap();
+        s.take(1).unwrap();
+        s.take(2).unwrap();
+        assert_eq!(s.stats().fetch_from_secondary, 0, "upcoming blocks were evicted");
+        s.take(0).unwrap();
+        assert_eq!(s.stats().fetch_from_secondary, 1, "done block was not the victim");
     }
 
     #[test]
@@ -403,8 +1290,8 @@ mod tests {
     }
 
     #[test]
-    fn spill_extent_reuse() {
-        let s = BlockStore::new(Some(10), Some(tmpdir())).unwrap();
+    fn spill_extent_reuse_bounds_file_growth() {
+        let s = BlockStore::with_options(Some(10), Some(tmpdir()), sync_opts()).unwrap();
         for round in 0..5 {
             for id in 0..4 {
                 s.put(id, payload(64, (round * 4 + id) as u8)).unwrap();
@@ -415,8 +1302,8 @@ mod tests {
             }
         }
         // All extents freed and reused: spill file shouldn't have grown 5x.
-        let g = s.inner.lock().unwrap();
-        assert!(g.spill_tail <= 4 * (64 * 2 + 16) as u64 * 2, "tail {}", g.spill_tail);
+        let tail = s.spill_tail_bytes();
+        assert!(tail <= 4 * (64 * 2 + 16) as u64 * 2, "tail {tail}");
     }
 
     #[test]
@@ -427,6 +1314,139 @@ mod tests {
         let b = s.get(5).unwrap();
         assert_eq!(a.re, b.re);
         assert!(s.contains(5));
+    }
+
+    #[test]
+    fn get_promotes_spilled_block_when_budget_allows() {
+        let s = BlockStore::with_options(Some(450), Some(tmpdir()), sync_opts()).unwrap();
+        s.put(0, payload(100, 1)).unwrap();
+        s.put(1, payload(100, 2)).unwrap();
+        s.put(2, payload(100, 3)).unwrap(); // evicts one of 0/1 to disk
+        assert_eq!(s.stats().blocks_secondary, 1);
+        let spilled = if s.stats().fetch_from_secondary == 0 {
+            // Find the spilled id without disturbing counters: whichever
+            // take below reports a secondary fetch. Instead free room
+            // first, then exercise get().
+            let st = s.stats();
+            assert_eq!(st.blocks_primary, 2);
+            // Determine victim: with no schedule both candidates tie on
+            // rank and the index picks the max id among {0, 1} -> 1.
+            1usize
+        } else {
+            unreachable!()
+        };
+        // Make room, then get() must promote (disk read once, then RAM).
+        s.take(2).unwrap();
+        let a = s.get(spilled).unwrap();
+        assert_eq!(a.re, vec![2u8; 100]);
+        let st = s.stats();
+        assert_eq!(st.fetch_from_secondary, 1);
+        assert_eq!(st.blocks_secondary, 0, "get() did not promote");
+        let b = s.get(spilled).unwrap();
+        assert_eq!(b.re, a.re);
+        assert_eq!(s.stats().fetch_from_secondary, 1, "second get() re-read the file");
+    }
+
+    #[test]
+    fn async_interception_returns_correct_bytes() {
+        // Queue evictions behind the background writer and immediately
+        // take them back: whether intercepted in the queue or read from
+        // disk, bytes must round-trip.
+        let opts = StoreOptions { async_spill: true, prefetch_depth: 0, ..Default::default() };
+        let s = BlockStore::with_options(Some(300), Some(tmpdir()), opts).unwrap();
+        for round in 0..50usize {
+            for id in 0..4usize {
+                let tag = (round * 4 + id % 251) as u8;
+                s.put(id, payload(60, tag)).unwrap();
+            }
+            for id in (0..4usize).rev() {
+                let p = s.take(id).unwrap();
+                assert_eq!(p.re[0], ((round * 4 + id % 251) as u8), "round {round} id {id}");
+                assert_eq!(p.re.len(), 60);
+            }
+        }
+        s.flush().unwrap();
+        let st = s.stats();
+        assert_eq!(st.blocks_primary + st.blocks_secondary + st.blocks_write_back, 0);
+        assert_eq!(st.primary_bytes, 0);
+        assert_eq!(st.secondary_bytes, 0);
+        assert_eq!(st.write_back_bytes, 0);
+    }
+
+    #[test]
+    fn sync_and_async_agree_on_contents() {
+        let run = |async_spill: bool| -> Vec<BlockPayload> {
+            let opts = StoreOptions { async_spill, prefetch_depth: 0, ..Default::default() };
+            let s = BlockStore::with_options(Some(500), Some(tmpdir()), opts).unwrap();
+            for id in 0..8 {
+                s.put(id, payload(50 + id, (id * 3) as u8)).unwrap();
+            }
+            s.flush().unwrap();
+            (0..8).map(|id| s.get(id).unwrap()).collect()
+        };
+        let sync = run(false);
+        let async_ = run(true);
+        for (a, b) in sync.iter().zip(&async_) {
+            assert_eq!(a.re, b.re);
+            assert_eq!(a.im, b.im);
+        }
+    }
+
+    #[test]
+    fn two_stores_in_one_process_use_distinct_spill_files() {
+        // The old naming scheme derived uniqueness from a stack address,
+        // which can collide across stores and clobber a live spill file.
+        let dir = tmpdir();
+        let a = BlockStore::with_options(Some(10), Some(dir.clone()), sync_opts()).unwrap();
+        let b = BlockStore::with_options(Some(10), Some(dir), sync_opts()).unwrap();
+        for id in 0..6 {
+            a.put(id, payload(40, 0xA0 | id as u8)).unwrap();
+            b.put(id, payload(40, 0xB0 | id as u8)).unwrap();
+        }
+        for id in 0..6 {
+            assert_eq!(a.take(id).unwrap().re[0], 0xA0 | id as u8);
+            assert_eq!(b.take(id).unwrap().re[0], 0xB0 | id as u8);
+        }
+    }
+
+    #[test]
+    fn prefetcher_stages_scheduled_blocks_and_counts_hits() {
+        let opts = StoreOptions {
+            async_spill: true,
+            prefetch_depth: 4,
+            shards: 4,
+            ..Default::default()
+        };
+        let s = BlockStore::with_options(Some(450), Some(tmpdir()), opts).unwrap();
+        for id in 0..6 {
+            s.put(id, payload(100, id as u8)).unwrap();
+        }
+        s.flush().unwrap();
+        assert!(s.stats().blocks_secondary >= 4);
+        // Publish the schedule; the prefetcher should stage upcoming
+        // blocks into primary as room allows.
+        s.publish_schedule(&[0, 1, 2, 3, 4, 5], 1);
+        for id in 0..6usize {
+            // Give the prefetcher a window to win the race, then take.
+            let deadline = Instant::now() + Duration::from_millis(200);
+            while !matches!(
+                s.shared.shard(id).lock().unwrap().get(&id),
+                Some(Slot::Primary { .. })
+            ) && Instant::now() < deadline
+            {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            let p = s.take(id).unwrap();
+            assert_eq!(p.re, vec![id as u8; 100]);
+            s.group_completed();
+        }
+        let st = s.stats();
+        assert!(
+            st.prefetch_hits > 0,
+            "prefetcher staged nothing (hits {} misses {})",
+            st.prefetch_hits,
+            st.prefetch_misses
+        );
     }
 
     #[test]
@@ -446,8 +1466,10 @@ mod tests {
                 });
             }
         });
+        s.flush().unwrap();
         let st = s.stats();
-        assert_eq!(st.blocks_primary + st.blocks_secondary, 400);
+        assert_eq!(st.blocks_primary + st.blocks_secondary + st.blocks_write_back, 400);
+        assert!(st.peak_primary_bytes <= 3000);
     }
 
     #[test]

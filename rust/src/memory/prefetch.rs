@@ -1,0 +1,58 @@
+//! Schedule-driven prefetcher: walks the published group schedule ahead of
+//! the pipeline workers and stages upcoming spilled blocks back into the
+//! primary tier, so the workers' `take` calls hit RAM instead of paying a
+//! mid-chain synchronous disk read.
+//!
+//! The prefetcher is a plain background thread with its own read buffer.
+//! It never holds a shard lock across file I/O: it snapshots a spilled
+//! slot's `(offset, len, gen)` under the lock, reads the extent outside
+//! it, and installs the promoted payload only if the slot's generation is
+//! unchanged (any concurrent `take`/`put` bumps or removes the slot, which
+//! invalidates the read). To make room under a tight budget it evicts only
+//! blocks whose next use lies *beyond* its prefetch window, preserving the
+//! Belady ordering.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+pub(crate) fn prefetch_loop(shared: Arc<super::Shared>) {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // Snapshot the current schedule (cheap: Arc clone of the order).
+        let (order, bpg) = {
+            let s = shared.sched.lock().unwrap();
+            (s.order.clone(), s.blocks_per_group.max(1))
+        };
+        let mut did_work = false;
+        if !order.is_empty() {
+            let num_groups = order.len() / bpg;
+            let progress = shared.progress.load(Ordering::Acquire).min(num_groups);
+            let end = (progress + 1 + shared.opts.prefetch_depth).min(num_groups);
+            // Blocks with rank < `end` are inside the window; eviction to
+            // make room may only touch ranks >= `end` (strictly farther).
+            for g in progress..end {
+                for &id in &order[g * bpg..(g + 1) * bpg] {
+                    if shared.shutdown.load(Ordering::Acquire) {
+                        return;
+                    }
+                    if shared.try_promote(id, end as u64, true, &mut buf) {
+                        did_work = true;
+                    }
+                }
+            }
+        }
+        if !did_work {
+            // Nothing promotable right now: doze until the engine publishes
+            // a schedule / finishes a group (or the timeout re-polls).
+            let guard = shared.sched.lock().unwrap();
+            let _ = shared
+                .sched_cv
+                .wait_timeout(guard, Duration::from_millis(2))
+                .unwrap();
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Secondary-tier spill file: extent allocation + positioned I/O, and the
+//! background spill-writer thread.
+//!
+//! All file I/O in the memory subsystem goes through [`SpillFile`], which
+//! uses positioned reads/writes (`pread`/`pwrite` via
+//! [`std::os::unix::fs::FileExt`]) on a single shared handle — no seek
+//! state, so the writer thread, pipeline workers (`take`/`get` on spilled
+//! blocks), and the prefetcher all touch the file concurrently without a
+//! file lock. Only the *extent allocator* (tail pointer + free list) is
+//! mutex-protected, and its critical sections are pure bookkeeping.
+//!
+//! The writer thread ([`writer_loop`]) drains the store's write-back
+//! queue: eviction candidates accumulate as `Queued` payloads that
+//! `take`/`get`/`put` can still intercept; once the writer claims one it
+//! becomes `InFlight` (interceptors wait), is written outside all shard
+//! locks, and the slot flips to `Spilled`. See `memory::Shared` for the
+//! state machine and DESIGN.md "Two-level memory" for the ownership rules.
+
+use crate::types::{Error, Result};
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Process-wide spill-file sequence number: two stores created in the same
+/// process (even with the same spill dir) always get distinct file names.
+/// (The previous scheme derived uniqueness from a *stack address*, which
+/// can be reused across stores and clobber a live spill file.)
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+struct ExtentAlloc {
+    tail: u64,
+    /// Reusable holes (offset, capacity) from freed block extents.
+    free: Vec<(u64, usize)>,
+}
+
+/// The secondary-tier file: positioned I/O + first-fit extent reuse.
+pub(crate) struct SpillFile {
+    file: File,
+    path: PathBuf,
+    alloc: Mutex<ExtentAlloc>,
+}
+
+impl SpillFile {
+    /// Create a fresh, uniquely named spill file inside `dir`.
+    pub(crate) fn create(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let unique = format!(
+            "bmqsim-spill-{}-{}.bin",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        let path = dir.join(unique);
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(SpillFile { file, path, alloc: Mutex::new(ExtentAlloc { tail: 0, free: Vec::new() }) })
+    }
+
+    /// Reserve an extent of `len` bytes (first-fit over freed holes, else
+    /// the tail). Pure bookkeeping — no I/O.
+    fn alloc_extent(&self, len: usize) -> u64 {
+        let mut a = self.alloc.lock().unwrap();
+        for i in 0..a.free.len() {
+            if a.free[i].1 >= len {
+                let (off, cap) = a.free.swap_remove(i);
+                if cap > len {
+                    a.free.push((off + len as u64, cap - len));
+                }
+                return off;
+            }
+        }
+        let off = a.tail;
+        a.tail += len as u64;
+        off
+    }
+
+    /// Return an extent to the free list. No I/O; safe under shard locks,
+    /// though callers free after releasing them anyway.
+    pub(crate) fn free_extent(&self, offset: u64, len: usize) {
+        self.alloc.lock().unwrap().free.push((offset, len));
+    }
+
+    /// Allocate an extent and write `bytes` into it (pwrite; no allocator
+    /// lock held during the write).
+    pub(crate) fn write(&self, bytes: &[u8]) -> Result<(u64, usize)> {
+        let offset = self.alloc_extent(bytes.len());
+        if let Err(e) = self.file.write_all_at(bytes, offset) {
+            self.free_extent(offset, bytes.len());
+            return Err(Error::Io(e));
+        }
+        Ok((offset, bytes.len()))
+    }
+
+    /// Positioned read of a whole extent into `buf` (resized to `len`).
+    pub(crate) fn read_into(&self, offset: u64, len: usize, buf: &mut Vec<u8>) -> Result<()> {
+        buf.clear();
+        buf.resize(len, 0);
+        self.file.read_exact_at(buf, offset).map_err(Error::Io)
+    }
+
+    /// Current tail (diagnostics/tests: bounds file growth under reuse).
+    pub(crate) fn tail(&self) -> u64 {
+        self.alloc.lock().unwrap().tail
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Background spill writer: claims queued eviction candidates from the
+/// write-back queue and performs the serialize→write→install sequence
+/// outside every shard lock. Exits when the store shuts down.
+pub(crate) fn writer_loop(shared: Arc<super::Shared>) {
+    loop {
+        let job = {
+            let mut wb = shared.wb.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                // Pop the oldest queue entry whose epoch is still current;
+                // stale entries (intercepted or re-evicted ids) are skipped.
+                let mut claimed = None;
+                while let Some((id, epoch)) = wb.queue.pop_front() {
+                    let take = matches!(
+                        wb.map.get(&id),
+                        Some(e) if e.epoch == epoch && matches!(e.state, super::WbState::Queued(_))
+                    );
+                    if take {
+                        let entry = wb.map.get_mut(&id).unwrap();
+                        let state = std::mem::replace(&mut entry.state, super::WbState::InFlight);
+                        let super::WbState::Queued(payload) = state else { unreachable!() };
+                        claimed = Some((id, epoch, payload));
+                        break;
+                    }
+                }
+                if let Some(job) = claimed {
+                    break job;
+                }
+                let (guard, _) = shared
+                    .wb_cv
+                    .wait_timeout(wb, Duration::from_millis(5))
+                    .unwrap();
+                wb = guard;
+            }
+        };
+        let (id, epoch, payload) = job;
+        shared.spill_block_now(id, epoch, payload);
+    }
+}

@@ -76,6 +76,17 @@ pub struct Metrics {
     /// Fused-op kernel invocations across all group chains (scales with
     /// group count, unlike `plane_sweeps`).
     pub fused_ops_applied: AtomicU64,
+    /// Budget-driven Belady evictions in the two-level store (engines copy
+    /// these four from `MemStats` at end of run so the report is
+    /// self-contained).
+    pub evictions: AtomicU64,
+    /// Group fetches served from primary by a prefetcher-staged block.
+    pub prefetch_hits: AtomicU64,
+    /// Group fetches that paid a synchronous secondary-tier read.
+    pub prefetch_misses: AtomicU64,
+    /// Worker time stalled on spill machinery (in-flight write waits,
+    /// write-back back-pressure, synchronous disk reads).
+    pub spill_stall_ns: AtomicU64,
 }
 
 impl Metrics {
@@ -118,7 +129,20 @@ impl Metrics {
             gates_fused: self.gates_fused.load(Ordering::Relaxed),
             plane_sweeps: self.plane_sweeps.load(Ordering::Relaxed),
             fused_ops_applied: self.fused_ops_applied.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
+            spill_stall_ns: self.spill_stall_ns.load(Ordering::Relaxed),
         }
+    }
+
+    /// Copy the memory-subsystem counters out of a [`crate::memory::MemStats`]
+    /// snapshot (engines call this once, after flushing the store).
+    pub fn absorb_mem(&self, mem: &crate::memory::MemStats) {
+        self.evictions.store(mem.evictions, Ordering::Relaxed);
+        self.prefetch_hits.store(mem.prefetch_hits, Ordering::Relaxed);
+        self.prefetch_misses.store(mem.prefetch_misses, Ordering::Relaxed);
+        self.spill_stall_ns.store(mem.spill_stall_ns, Ordering::Relaxed);
     }
 }
 
@@ -142,6 +166,14 @@ pub struct MetricsReport {
     pub plane_sweeps: u64,
     /// Fused-op kernel invocations summed over group chains.
     pub fused_ops_applied: u64,
+    /// Budget-driven Belady evictions in the two-level store.
+    pub evictions: u64,
+    /// Group fetches served from primary by a prefetcher-staged block.
+    pub prefetch_hits: u64,
+    /// Group fetches that paid a synchronous secondary-tier read.
+    pub prefetch_misses: u64,
+    /// Worker time stalled on spill machinery, in nanoseconds.
+    pub spill_stall_ns: u64,
 }
 
 impl MetricsReport {
@@ -177,6 +209,16 @@ impl std::fmt::Display for MetricsReport {
             self.gates_fused, self.plane_sweeps, self.fused_ops_applied
         )?;
         writeln!(f, "groups processed : {:>10}", self.groups_processed)?;
+        if self.evictions + self.prefetch_hits + self.prefetch_misses > 0 {
+            writeln!(
+                f,
+                "evictions        : {:>10} (prefetch {} hit / {} miss, {:.1} ms stalled)",
+                self.evictions,
+                self.prefetch_hits,
+                self.prefetch_misses,
+                self.spill_stall_ns as f64 * 1e-6
+            )?;
+        }
         writeln!(
             f,
             "(de)compressions : {:>10} / {}",

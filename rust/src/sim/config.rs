@@ -62,6 +62,17 @@ pub struct SimConfig {
     /// only takes effect on backends whose applier reports
     /// [`super::GateApplier::supports_fusion`]; others sweep serially.
     pub apply_workers: usize,
+    /// Lock shards in the two-level [`crate::memory::BlockStore`]
+    /// (rounded up to a power of two). 1 approximates the old
+    /// single-lock store's contention profile.
+    pub store_shards: usize,
+    /// SV groups the store's prefetcher stages ahead of the pipeline
+    /// workers (0 disables prefetching).
+    pub prefetch_depth: usize,
+    /// Spill evictions synchronously on the worker thread instead of the
+    /// background writer (the pre-refactor behaviour, minus the
+    /// I/O-under-lock; baseline knob for the fig09 concurrency study).
+    pub sync_spill: bool,
 }
 
 impl Default for SimConfig {
@@ -80,6 +91,9 @@ impl Default for SimConfig {
             max_fuse_qubits: crate::circuit::MAX_FUSED_QUBITS,
             tile_bits: crate::gates::fused::DEFAULT_TILE_BITS,
             apply_workers: 1,
+            store_shards: 8,
+            prefetch_depth: 4,
+            sync_spill: false,
         }
     }
 }
@@ -89,6 +103,17 @@ impl SimConfig {
     /// the state, and tiny states get one block.
     pub fn effective_block_qubits(&self, n_qubits: usize) -> usize {
         self.block_qubits.min(n_qubits)
+    }
+
+    /// Store tuning derived from the config (shards, prefetch, spill
+    /// mode), handed to [`crate::memory::BlockStore::with_options`].
+    pub fn store_options(&self) -> crate::memory::StoreOptions {
+        crate::memory::StoreOptions {
+            shards: self.store_shards.max(1),
+            prefetch_depth: self.prefetch_depth,
+            async_spill: !self.sync_spill,
+            ..crate::memory::StoreOptions::default()
+        }
     }
 
     /// Validate against a circuit size.
@@ -120,6 +145,12 @@ mod tests {
         assert!(c.fusion);
         assert_eq!(c.max_fuse_qubits, 3);
         assert_eq!(c.apply_workers, 1);
+        assert_eq!(c.store_shards, 8);
+        assert_eq!(c.prefetch_depth, 4);
+        assert!(!c.sync_spill);
+        let opts = c.store_options();
+        assert_eq!(opts.shards, 8);
+        assert!(opts.async_spill);
     }
 
     #[test]

@@ -49,7 +49,11 @@ impl<'a> Sc19Sim<'a> {
         let b = self.config.effective_block_qubits(circuit.n_qubits);
         let layout = BlockLayout::new(circuit.n_qubits, b)?;
         let codec = self.config.codec;
-        let store = BlockStore::new(self.config.memory_budget, self.config.spill_dir.clone())?;
+        let store = BlockStore::with_options(
+            self.config.memory_budget,
+            self.config.spill_dir.clone(),
+            self.config.store_options(),
+        )?;
 
         // Initial compression of every block (SC19 compresses the whole
         // initial state; we reuse the zero-clone trick for fairness).
@@ -86,6 +90,19 @@ impl<'a> Sc19Sim<'a> {
             let bits: Vec<usize> =
                 gate.targets().iter().map(|&q| schedule.buffer_bit(q)).collect();
             let block_len = layout.block_len();
+
+            // Publish this gate's group schedule (per-gate sweeps are what
+            // SC19 *is*, so the schedule horizon is one gate).
+            {
+                let mut order: Vec<usize> =
+                    Vec::with_capacity(schedule.num_groups() * schedule.blocks_per_group());
+                let mut ids: Vec<usize> = Vec::new();
+                for g in 0..schedule.num_groups() {
+                    schedule.group_blocks_into(g, &mut ids);
+                    order.extend_from_slice(&ids);
+                }
+                store.publish_schedule(&order, schedule.blocks_per_group());
+            }
 
             run_items::<Error, _>(pipe, schedule.num_groups(), &pool, |ctx, gidx| {
                 let glen = schedule.group_len();
@@ -143,13 +160,16 @@ impl<'a> Sc19Sim<'a> {
                         store.put(id, p)?;
                     }
                     Ok(())
-                })
+                })?;
+                store.group_completed();
+                Ok(())
             })?;
             metrics.gates_applied.fetch_add(1, Ordering::Relaxed);
             // One full state sweep per gate — the frequency problem.
             metrics.plane_sweeps.fetch_add(1, Ordering::Relaxed);
         }
         metrics.scratch_grows.store(pool.total_plane_grows(), Ordering::Relaxed);
+        store.flush()?;
 
         let wall = t0.elapsed().as_secs_f64();
         let state = if materialize {
@@ -175,13 +195,15 @@ impl<'a> Sc19Sim<'a> {
         } else {
             None
         };
+        let mem = store.stats();
+        metrics.absorb_mem(&mem);
         Ok(SimResult {
             engine: if self.workers == 1 { "sc19-cpu" } else { "sc19-gpu" },
             circuit_name: circuit.name.clone(),
             n_qubits: circuit.n_qubits,
             wall_secs: wall,
             metrics: metrics.snapshot(wall),
-            mem: store.stats(),
+            mem,
             peak_bytes: store.peak_total_bytes(),
             stages: circuit.len(),
             state,
