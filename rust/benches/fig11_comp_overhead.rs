@@ -1,10 +1,47 @@
-//! Fig. 11 — compression overhead: BMQSIM vs BMQSIM without compression.
+//! Fig. 11 — compression overhead: BMQSIM vs BMQSIM without compression,
+//! plus the overhead-concealment study (sequential vs software-pipelined
+//! decode/apply/encode group chains under a squeezed budget), which emits
+//! machine-readable `BENCH_overlap.json` for the per-PR perf trajectory.
+//!
+//! `BENCH_SMOKE=1` shrinks problem sizes so CI exercises the full path
+//! (same JSON shape) in seconds.
 use bmqsim::bench_harness as bench;
+use bmqsim::bench_harness::bench_json;
 use bmqsim::circuit::generators;
 
 fn main() {
+    let smoke = bench::bench_smoke();
+    let (algos, ns): (Vec<&str>, Vec<usize>) = if smoke {
+        (vec!["qft", "qaoa", "ghz_state"], vec![12])
+    } else {
+        (generators::ALL.to_vec(), vec![16, 18])
+    };
     bench::print_experiment("Fig 11: compression overhead", || {
-        Ok(vec![bench::fig11_comp_overhead(&generators::ALL, &[16, 18])?])
+        Ok(vec![bench::fig11_comp_overhead(&algos, &ns)?])
     });
-    println!("paper shape: overhead minimal; on high-ratio circuits (cat/bv/ghz)\ncompression WINS (smaller transfers) — paper reports 9% average speedup.");
+
+    // Overhead concealment: sequential vs pipelined chains at budget =
+    // peak/4 with >= 4 concurrent workers (ISSUE 4 acceptance geometry).
+    let (n, b, workers, depth) = if smoke { (12, 8, 4, 2) } else { (16, 12, 4, 2) };
+    let mut fields: Vec<(String, String)> = Vec::new();
+    bench::print_experiment("Fig 11 addendum: sequential vs pipelined chains", || {
+        let (t, f) = bench::overlap_study("qaoa", n, b, workers, depth)?;
+        fields = f;
+        Ok(vec![t])
+    });
+    if fields.is_empty() {
+        // The study itself failed (print_experiment already reported why);
+        // an acceptance artifact must never go missing silently.
+        eprintln!("overlap study failed; BENCH_overlap.json not written");
+        std::process::exit(1);
+    }
+    let doc = bench_json::obj(&fields);
+    match std::fs::write("BENCH_overlap.json", doc + "\n") {
+        Ok(()) => println!("wrote BENCH_overlap.json"),
+        Err(e) => {
+            eprintln!("could not write BENCH_overlap.json: {e}");
+            std::process::exit(1);
+        }
+    }
+    println!("paper shape: overhead minimal; on high-ratio circuits (cat/bv/ghz)\ncompression WINS (smaller transfers) — paper reports 9% average speedup.\npipelined chains must be byte-identical while concealing codec time.");
 }

@@ -1,9 +1,21 @@
-//! Fig. 12 — impact of pipeline stream count (1/2/4/8).
+//! Fig. 12 — impact of pipeline stream count (1/2/4/8), with and without
+//! the overlapped (decode/apply/encode) chain pipeline layered on top.
+//!
+//! `BENCH_SMOKE=1` shrinks the sweep so CI exercises it in seconds.
 use bmqsim::bench_harness as bench;
 
 fn main() {
+    let smoke = bench::bench_smoke();
+    let (algos, n): (Vec<&str>, usize) = if smoke {
+        (vec!["qft", "qaoa"], 12)
+    } else {
+        (vec!["qft", "qaoa", "ising", "qsvm"], 18)
+    };
     bench::print_experiment("Fig 12: stream count sweep", || {
-        Ok(vec![bench::fig12_streams(&["qft", "qaoa", "ising", "qsvm"], 18)?])
+        Ok(vec![
+            bench::fig12_streams(&algos, n, false)?,
+            bench::fig12_streams(&algos, n, true)?,
+        ])
     });
-    println!("paper shape: best around 2 streams; 8 streams loses to context overhead.");
+    println!("paper shape: best around 2 streams; 8 streams loses to context overhead.\noverlapped rows conceal codec time inside each stream's chain.");
 }

@@ -285,6 +285,105 @@ pub fn fig09_async_spill(
     Ok((t, fields))
 }
 
+/// Overhead-concealment study (Fig. 11 addendum / ISSUE 4 acceptance):
+/// sequential vs software-pipelined (decode → apply → encode overlapped)
+/// group chains under a budget squeezed to a quarter of the compressed
+/// peak, `workers` concurrent chains. The pipelined run must be
+/// *byte-identical* in its terminal state while concealing codec/transfer
+/// time behind gate application. Returns the printable table plus the
+/// machine-readable fields for `BENCH_overlap.json` (throughput, speedup,
+/// occupancy, stall breakdown, fidelity, bitwise-equality flag).
+pub fn overlap_study(
+    name: &str,
+    n: usize,
+    block_qubits: usize,
+    workers: usize,
+    depth: usize,
+) -> Result<(Table, Vec<(String, String)>)> {
+    let c = generators::build(name, n, SEED)?;
+    let mk = |budget: Option<usize>, overlap: bool| {
+        let mut config = cfg(block_qubits, 2);
+        config.pipeline = PipelineConfig::new(1, workers);
+        config.memory_budget = budget;
+        if budget.is_some() {
+            config.spill_dir = Some(spill_dir());
+        }
+        config.overlap = overlap;
+        config.pipeline_depth = depth;
+        config
+    };
+    // Probe the unconstrained compressed peak, then squeeze the budget to
+    // a quarter of it so the spill machinery is fully engaged.
+    let probe = BmqSim::new(mk(None, false)).run(&c, false)?;
+    let budget = (probe.peak_bytes / 4).max(1 << 12);
+    let seq = BmqSim::new(mk(Some(budget), false)).run(&c, true)?;
+    let ovl = BmqSim::new(mk(Some(budget), true)).run(&c, true)?;
+
+    let sa = seq.state.as_ref().unwrap();
+    let oa = ovl.state.as_ref().unwrap();
+    let bitwise = sa.re == oa.re && sa.im == oa.im;
+    let fidelity = oa.fidelity_normalized(sa);
+    let seq_thr = seq.metrics.groups_processed as f64 / seq.wall_secs;
+    let ovl_thr = ovl.metrics.groups_processed as f64 / ovl.wall_secs;
+
+    let mut t = Table::new(&[
+        "chain", "wall (s)", "groups/s", "occupancy", "decode-ahead", "overlap stall (ms)",
+        "spill stall (ms)", "reordered",
+    ]);
+    for (label, r, thr) in
+        [("sequential", &seq, seq_thr), ("pipelined", &ovl, ovl_thr)]
+    {
+        t.row(&[
+            label.to_string(),
+            format!("{:.3}", r.wall_secs),
+            format!("{thr:.0}"),
+            format!("{:.0}%", 100.0 * r.metrics.pipeline_occupancy()),
+            r.metrics.decode_ahead_hits.to_string(),
+            format!("{:.1}", r.metrics.overlap_stall_ns as f64 * 1e-6),
+            format!("{:.1}", r.mem.spill_stall_ns as f64 * 1e-6),
+            r.metrics.groups_reordered.to_string(),
+        ]);
+    }
+    let fields = vec![
+        ("algo".to_string(), format!("\"{name}\"")),
+        ("n".to_string(), n.to_string()),
+        ("workers".to_string(), workers.to_string()),
+        ("pipeline_depth".to_string(), depth.to_string()),
+        ("budget_bytes".to_string(), budget.to_string()),
+        ("unconstrained_peak_bytes".to_string(), probe.peak_bytes.to_string()),
+        ("seq_wall_s".to_string(), bench_json::num(seq.wall_secs)),
+        ("pipelined_wall_s".to_string(), bench_json::num(ovl.wall_secs)),
+        ("seq_groups_per_s".to_string(), bench_json::num(seq_thr)),
+        ("pipelined_groups_per_s".to_string(), bench_json::num(ovl_thr)),
+        ("speedup".to_string(), bench_json::num(ovl_thr / seq_thr)),
+        (
+            "pipeline_occupancy".to_string(),
+            bench_json::num(ovl.metrics.pipeline_occupancy()),
+        ),
+        (
+            "decode_ahead_hits".to_string(),
+            ovl.metrics.decode_ahead_hits.to_string(),
+        ),
+        (
+            "overlap_stall_ms".to_string(),
+            bench_json::num(ovl.metrics.overlap_stall_ns as f64 * 1e-6),
+        ),
+        (
+            "seq_spill_stall_ms".to_string(),
+            bench_json::num(seq.mem.spill_stall_ns as f64 * 1e-6),
+        ),
+        (
+            "pipelined_spill_stall_ms".to_string(),
+            bench_json::num(ovl.mem.spill_stall_ns as f64 * 1e-6),
+        ),
+        ("groups_reordered".to_string(), ovl.metrics.groups_reordered.to_string()),
+        ("prefetch_depth_final".to_string(), ovl.mem.prefetch_depth.to_string()),
+        ("state_bitwise_equal".to_string(), bitwise.to_string()),
+        ("fidelity_pipelined_vs_seq".to_string(), bench_json::num(fidelity)),
+    ];
+    Ok((t, fields))
+}
+
 /// Fig. 10 — simulation time vs the dense baseline across circuits/sizes.
 pub fn fig10_simtime(algos: &[&str], ns: &[usize]) -> Result<Table> {
     let mut t = Table::new(&["algorithm", "n", "dense (s)", "bmqsim (s)", "bmqsim/dense"]);
@@ -331,14 +430,19 @@ pub fn fig11_comp_overhead(algos: &[&str], ns: &[usize]) -> Result<Table> {
 }
 
 /// Fig. 12 — pipeline stream-count sweep (1/2/4/8) at fixed geometry.
-pub fn fig12_streams(algos: &[&str], n: usize) -> Result<Table> {
-    let mut t = Table::new(&["algorithm", "streams=1 (s)", "2", "4", "8"]);
+/// `overlap` additionally runs each stream's chain on the three-phase
+/// decode/apply/encode pipeline (depth 2), the §4.2 overhead-concealment
+/// knob layered on top of the stream count.
+pub fn fig12_streams(algos: &[&str], n: usize, overlap: bool) -> Result<Table> {
+    let label = if overlap { "streams=1 (s, overlapped)" } else { "streams=1 (s)" };
+    let mut t = Table::new(&["algorithm", label, "2", "4", "8"]);
     for &name in algos {
         let c = generators::build(name, n, SEED)?;
         let mut cells = vec![name.to_string()];
         for streams in [1usize, 2, 4, 8] {
             let mut config = cfg(n.saturating_sub(6).max(4), 2);
             config.pipeline = PipelineConfig::new(1, streams);
+            config.overlap = overlap;
             let r = BmqSim::new(config).run(&c, false)?;
             cells.push(format!("{:.3}", r.wall_secs));
         }
@@ -517,6 +621,31 @@ mod tests {
     fn fig11_runs_at_tiny_scale() {
         let t = fig11_comp_overhead(&["ghz_state"], &[10]).unwrap();
         assert!(t.to_string().contains("ghz_state"));
+    }
+
+    #[test]
+    fn overlap_study_is_byte_identical_at_tiny_scale() {
+        let (t, fields) = overlap_study("qaoa", 10, 6, 2, 2).unwrap();
+        let s = t.to_string();
+        assert!(s.contains("sequential") && s.contains("pipelined"));
+        let get = |k: &str| {
+            fields
+                .iter()
+                .find(|(key, _)| key.as_str() == k)
+                .map(|(_, v)| v.clone())
+                .unwrap_or_else(|| panic!("missing field {k}"))
+        };
+        assert_eq!(get("state_bitwise_equal"), "true");
+        assert_eq!(get("workers"), "2");
+        assert!(get("speedup").parse::<f64>().unwrap() > 0.0);
+        let occ = get("pipeline_occupancy").parse::<f64>().unwrap();
+        assert!(occ > 0.0 && occ <= 1.0);
+    }
+
+    #[test]
+    fn fig12_overlap_variant_runs_at_tiny_scale() {
+        let t = fig12_streams(&["ghz_state"], 10, true).unwrap();
+        assert!(t.to_string().contains("overlapped"));
     }
 
     #[test]

@@ -46,10 +46,17 @@ OPTIONS (run/compare/sample):
   --apply-workers <W>   parallel plane-sweep workers per chain     [1]
   --streams <S>         pipeline streams per device                [2]
   --devices <D>         logical devices                            [1]
+  --overlap             overlap decode/apply/encode per worker (3-phase
+                        software pipeline over a scratch-slot ring)
+  --pipeline-depth <K>  scratch slots per worker ring (overlap)       [2]
+  --no-spill-order      disable spill-aware group ordering (resident
+                        groups first) within each stage
   --memory-budget <MB>  primary-tier budget in MiB (enables probing)
   --spill-dir <path>    secondary-tier directory (enables spilling)
   --store-shards <N>    lock shards in the two-level store             [8]
-  --prefetch-depth <G>  groups the spill prefetcher stages ahead      [4]
+  --prefetch-depth <G>  groups the spill prefetcher stages ahead; when
+                        omitted the depth auto-adapts per stage (AIMD
+                        on hit/miss ratio + stall time)             [auto]
   --sync-spill          spill inline on workers (no background writer)
   --artifacts <dir>     AOT artifact directory                     [artifacts]
   --seed <s>            circuit/sampling seed                      [42]
@@ -105,7 +112,8 @@ impl Opts {
             let key = a.trim_start_matches("--").to_string();
             let flag = matches!(
                 key.as_str(),
-                "no-compress" | "no-prescan" | "no-fusion" | "sync-spill"
+                "no-compress" | "no-prescan" | "no-fusion" | "sync-spill" | "overlap"
+                    | "no-spill-order"
             );
             if flag {
                 map.insert(key, "true".into());
@@ -182,9 +190,24 @@ fn build_config(opts: &Opts) -> Result<SimConfig, String> {
         cfg.spill_dir = Some(dir.into());
     }
     cfg.store_shards = opts.parse_num("store-shards", cfg.store_shards)?;
-    cfg.prefetch_depth = opts.parse_num("prefetch-depth", cfg.prefetch_depth)?;
+    // Explicit --prefetch-depth pins the depth; omitting it engages the
+    // per-stage AIMD auto-depth controller (ROADMAP "prefetch auto-depth").
+    match opts.get("prefetch-depth") {
+        Some(_) => {
+            cfg.prefetch_depth = opts.parse_num("prefetch-depth", cfg.prefetch_depth)?;
+            cfg.prefetch_auto = false;
+        }
+        None => cfg.prefetch_auto = true,
+    }
     if opts.flag("sync-spill") {
         cfg.sync_spill = true;
+    }
+    if opts.flag("overlap") {
+        cfg.overlap = true;
+    }
+    cfg.pipeline_depth = opts.parse_num("pipeline-depth", cfg.pipeline_depth)?;
+    if opts.flag("no-spill-order") {
+        cfg.spill_aware = false;
     }
     if let Some(dir) = opts.get("artifacts") {
         cfg.artifacts_dir = dir.into();
@@ -256,6 +279,11 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
             r.mem.prefetch_misses,
             100.0 * r.mem.prefetch_hit_rate(),
             r.mem.spill_stall_ns as f64 * 1e-6,
+        );
+        println!(
+            "prefetch depth   : {:>10}{}",
+            r.mem.prefetch_depth,
+            if cfg.prefetch_auto { "  (auto-adapted)" } else { "" }
         );
     }
     Ok(())
@@ -362,7 +390,10 @@ fn cmd_report(opts: &Opts) -> Result<(), String> {
         Ok(vec![bench::fig11_comp_overhead(&algos, &ns)?])
     });
     bench::print_experiment("Fig 12: stream count", || {
-        Ok(vec![bench::fig12_streams(&short, n_mid)?])
+        Ok(vec![
+            bench::fig12_streams(&short, n_mid, false)?,
+            bench::fig12_streams(&short, n_mid, true)?,
+        ])
     });
     bench::print_experiment("Fig 13: device scaling", || {
         Ok(vec![bench::fig13_scaling(&short, n_mid)?])

@@ -155,18 +155,46 @@ pub struct StoreOptions {
     /// Lock shards (rounded up to a power of two).
     pub shards: usize,
     /// Groups the prefetcher stages ahead of the workers (0 = disabled).
+    /// With `auto_depth` this is only the *starting* depth.
     pub prefetch_depth: usize,
     /// Background spill writer (false = spill inline on the caller, the
     /// single-lock-era behaviour minus the I/O-under-lock).
     pub async_spill: bool,
     /// Max blocks in the write-back queue before `put` back-pressures.
     pub write_back_cap: usize,
+    /// Adapt the prefetch depth per stage (AIMD on the observed hit/miss
+    /// ratio and spill stall time) instead of holding `prefetch_depth`
+    /// fixed. See [`Shared::auto_depth_step`].
+    pub auto_depth: bool,
 }
 
 impl Default for StoreOptions {
     fn default() -> Self {
-        StoreOptions { shards: 8, prefetch_depth: 4, async_spill: true, write_back_cap: 64 }
+        StoreOptions {
+            shards: 8,
+            prefetch_depth: 4,
+            async_spill: true,
+            write_back_cap: 64,
+            auto_depth: false,
+        }
     }
+}
+
+/// Auto-depth bounds and thresholds (see [`Shared::auto_depth_step`]).
+const AUTO_DEPTH_MAX: usize = 32;
+/// Stall growth per stage that counts as prefetch pressure even without
+/// an outright miss (in-flight-write waits, back-pressure): 200 µs.
+const AUTO_DEPTH_STALL_STEP_NS: u64 = 200_000;
+
+/// Last-stage counter snapshot the AIMD step diffs against. `primed`
+/// distinguishes "no stage observed yet" from "an idle stage ran": the
+/// very first publish only records the baseline, it never steps.
+#[derive(Default)]
+struct AutoDepthState {
+    primed: bool,
+    hits: u64,
+    misses: u64,
+    stall_ns: u64,
 }
 
 /// Cumulative statistics, readable at any time.
@@ -194,6 +222,9 @@ pub struct MemStats {
     /// Worker time stalled on spill machinery: in-flight write waits,
     /// write-back back-pressure, and synchronous secondary-tier reads.
     pub spill_stall_ns: u64,
+    /// Prefetch depth at snapshot time (tracks the AIMD controller when
+    /// `StoreOptions::auto_depth` is set, else the configured constant).
+    pub prefetch_depth: usize,
 }
 
 impl MemStats {
@@ -261,6 +292,15 @@ pub(crate) struct Shared {
     pub(crate) sched: Mutex<ScheduleState>,
     pub(crate) sched_cv: Condvar,
     pub(crate) progress: AtomicUsize,
+    /// Schedule cursor advanced by the *decode* phase (group fetched, not
+    /// yet stored back). The prefetcher windows off
+    /// `max(progress, fetch_cursor)` so an overlapped pipeline's
+    /// read-ahead pulls the window forward before groups complete.
+    pub(crate) fetch_cursor: AtomicUsize,
+    /// Current prefetch depth: `opts.prefetch_depth` when fixed, adapted
+    /// per stage when `opts.auto_depth`.
+    pub(crate) dyn_depth: AtomicUsize,
+    auto_state: Mutex<AutoDepthState>,
     pub(crate) shutdown: AtomicBool,
     /// Source for eviction epochs and spill generations.
     epoch_counter: AtomicU64,
@@ -923,6 +963,62 @@ impl Shared {
         true
     }
 
+    /// How many of `ids` would cost a synchronous disk read to fetch
+    /// right now (slot on the secondary tier, or absent). Primary and
+    /// write-back-queued blocks are free: `take` intercepts the queue in
+    /// RAM. This is the spill-aware-scheduling query — engines rank a
+    /// stage's groups by it and run the cheap (resident) groups first,
+    /// shrinking the prefetcher's cold-start window.
+    fn residency_rank(&self, ids: &[usize]) -> usize {
+        ids.iter()
+            .filter(|&&id| {
+                let sg = self.shard(id).lock().unwrap();
+                matches!(peek(&sg, id), Peek::Spill { .. } | Peek::Missing)
+            })
+            .count()
+    }
+
+    /// Decode-phase cursor: a group's blocks were all fetched (taken).
+    fn group_fetched(&self) {
+        self.fetch_cursor.fetch_add(1, Ordering::AcqRel);
+        self.sched_cv.notify_all();
+    }
+
+    /// One AIMD step of the prefetch-depth controller, run per published
+    /// schedule (i.e. per stage): misses or stall growth since the last
+    /// stage mean the window is too shallow → additive increase; a stage
+    /// with no secondary-tier traffic at all means there is nothing to
+    /// stage → multiplicative decrease back toward 1 (cheap to re-grow).
+    fn auto_depth_step(&self) {
+        let hits = self.prefetch_hits.load(Ordering::Relaxed);
+        let misses = self.prefetch_misses.load(Ordering::Relaxed);
+        let stall = self.spill_stall_ns.load(Ordering::Relaxed);
+        let mut last = self.auto_state.lock().unwrap();
+        let primed = last.primed;
+        let hit_d = hits.saturating_sub(last.hits);
+        let miss_d = misses.saturating_sub(last.misses);
+        let stall_d = stall.saturating_sub(last.stall_ns);
+        *last = AutoDepthState { primed: true, hits, misses, stall_ns: stall };
+        drop(last);
+        if !primed {
+            // First stage of the run: no prior stage to diff against —
+            // "no history" must not read as "idle stage" and shrink the
+            // window during exactly the cold start prefetching covers.
+            return;
+        }
+        let cur = self.dyn_depth.load(Ordering::Relaxed);
+        let next = if miss_d > 0 || stall_d > AUTO_DEPTH_STALL_STEP_NS {
+            (cur + 1).min(AUTO_DEPTH_MAX)
+        } else if hit_d == 0 {
+            (cur / 2).max(1)
+        } else {
+            cur
+        };
+        if next != cur {
+            self.dyn_depth.store(next, Ordering::Relaxed);
+        }
+    }
+
     fn publish_schedule(&self, order: &[usize], blocks_per_group: usize) {
         let bpg = blocks_per_group.max(1);
         {
@@ -930,8 +1026,12 @@ impl Shared {
             s.order = Arc::new(order.to_vec());
             s.blocks_per_group = bpg;
         }
+        if self.opts.auto_depth {
+            self.auto_depth_step();
+        }
         self.sched_epoch.fetch_add(1, Ordering::Relaxed);
         self.progress.store(0, Ordering::Release);
+        self.fetch_cursor.store(0, Ordering::Release);
         if self.budget.is_some() {
             {
                 let mut p = self.policy.lock().unwrap();
@@ -994,6 +1094,7 @@ impl Shared {
             prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
             prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
             spill_stall_ns: self.spill_stall_ns.load(Ordering::Relaxed),
+            prefetch_depth: self.dyn_depth.load(Ordering::Relaxed),
         }
     }
 }
@@ -1037,6 +1138,9 @@ impl BlockStore {
             sched: Mutex::new(ScheduleState::default()),
             sched_cv: Condvar::new(),
             progress: AtomicUsize::new(0),
+            fetch_cursor: AtomicUsize::new(0),
+            dyn_depth: AtomicUsize::new(opts.prefetch_depth.max(usize::from(opts.auto_depth))),
+            auto_state: Mutex::new(AutoDepthState::default()),
             shutdown: AtomicBool::new(false),
             epoch_counter: AtomicU64::new(0),
             failure: Mutex::new(None),
@@ -1068,7 +1172,7 @@ impl BlockStore {
                         .map_err(Error::Io)?,
                 );
             }
-            if opts.prefetch_depth > 0 {
+            if opts.prefetch_depth > 0 || opts.auto_depth {
                 let s = Arc::clone(&store.shared);
                 store.prefetcher = Some(
                     std::thread::Builder::new()
@@ -1123,6 +1227,37 @@ impl BlockStore {
     /// this point.
     pub fn group_completed(&self) {
         self.shared.group_completed();
+    }
+
+    /// Advance the *decode-phase* cursor: one group's blocks were all
+    /// fetched (taken) for update. In an overlapped pipeline the decode
+    /// phase runs ahead of group completion, and the prefetcher windows
+    /// off the farther of the two cursors — so read-ahead starts pulling
+    /// the next spilled blocks while earlier groups are still in flight.
+    pub fn group_fetched(&self) {
+        self.shared.group_fetched();
+    }
+
+    /// How many of `ids` would cost a synchronous disk read to fetch
+    /// right now (spilled or absent). Primary-resident and
+    /// write-back-queued blocks rank 0 — `take` serves them from RAM.
+    /// Engines use this to run resident groups first within a stage
+    /// (spill-aware scheduling).
+    pub fn residency_rank(&self, ids: &[usize]) -> usize {
+        self.shared.residency_rank(ids)
+    }
+
+    /// True when blocks can actually move between tiers (budget + spill
+    /// file configured) — i.e. when residency ranks can differ at all.
+    /// Lets engines skip the per-group residency query otherwise.
+    pub fn may_spill(&self) -> bool {
+        self.shared.budget.is_some() && self.shared.spill.is_some()
+    }
+
+    /// The prefetcher's current depth (adapts per stage under
+    /// [`StoreOptions::auto_depth`], else the configured constant).
+    pub fn current_prefetch_depth(&self) -> usize {
+        self.shared.dyn_depth.load(Ordering::Relaxed)
     }
 
     /// Wait until the write-back queue drains; surfaces any background
@@ -1447,6 +1582,90 @@ mod tests {
             st.prefetch_hits,
             st.prefetch_misses
         );
+    }
+
+    #[test]
+    fn residency_rank_counts_only_disk_fetches() {
+        let s = BlockStore::with_options(Some(450), Some(tmpdir()), sync_opts()).unwrap();
+        s.put(0, payload(100, 1)).unwrap();
+        s.put(1, payload(100, 2)).unwrap();
+        s.put(2, payload(100, 3)).unwrap(); // overflow: evicts block 1 (id tie-break)
+        assert!(s.may_spill());
+        assert_eq!(s.stats().blocks_secondary, 1);
+        assert_eq!(s.residency_rank(&[0, 2]), 0, "resident blocks rank 0");
+        assert_eq!(s.residency_rank(&[1]), 1, "spilled block costs a read");
+        assert_eq!(s.residency_rank(&[0, 1, 2]), 1);
+        assert_eq!(s.residency_rank(&[99]), 1, "absent counts as a miss");
+        assert_eq!(s.residency_rank(&[]), 0);
+        let un = BlockStore::unbounded();
+        un.put(0, payload(10, 1)).unwrap();
+        assert!(!un.may_spill());
+        assert_eq!(un.residency_rank(&[0]), 0);
+    }
+
+    #[test]
+    fn fetch_cursor_advances_and_resets_with_schedule() {
+        let s = BlockStore::unbounded();
+        s.publish_schedule(&[0, 1, 2, 3], 1);
+        assert_eq!(s.shared.fetch_cursor.load(Ordering::Relaxed), 0);
+        s.group_fetched();
+        s.group_fetched();
+        assert_eq!(s.shared.fetch_cursor.load(Ordering::Relaxed), 2);
+        // Completion lags decode; the prefetch window keys off the max.
+        assert_eq!(s.shared.progress.load(Ordering::Relaxed), 0);
+        s.publish_schedule(&[4, 5], 1);
+        assert_eq!(s.shared.fetch_cursor.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn auto_depth_aimd_steps_per_stage() {
+        // No budget/spill: no background threads, so counter injection is
+        // race-free; the AIMD step still runs on every publish.
+        let opts = StoreOptions { auto_depth: true, prefetch_depth: 4, ..Default::default() };
+        let s = BlockStore::with_options(None, None, opts).unwrap();
+        assert_eq!(s.current_prefetch_depth(), 4);
+        // First publish only primes the baseline — no history, no step.
+        s.publish_schedule(&[0], 1);
+        assert_eq!(s.current_prefetch_depth(), 4);
+        // Idle stage (no secondary traffic): multiplicative decrease.
+        s.publish_schedule(&[0], 1);
+        assert_eq!(s.current_prefetch_depth(), 2);
+        // Misses since last stage: additive increase.
+        s.shared.prefetch_misses.fetch_add(3, Ordering::Relaxed);
+        s.publish_schedule(&[0], 1);
+        assert_eq!(s.current_prefetch_depth(), 3);
+        // Stall growth alone (in-flight waits / back-pressure) also counts
+        // as pressure.
+        s.shared.spill_stall_ns.fetch_add(1_000_000, Ordering::Relaxed);
+        s.publish_schedule(&[0], 1);
+        assert_eq!(s.current_prefetch_depth(), 4);
+        // All hits, no misses, no stall: the depth is right — hold.
+        s.shared.prefetch_hits.fetch_add(5, Ordering::Relaxed);
+        s.publish_schedule(&[0], 1);
+        assert_eq!(s.current_prefetch_depth(), 4);
+        // Idle again: decay toward the floor of 1, never 0.
+        s.publish_schedule(&[0], 1);
+        s.publish_schedule(&[0], 1);
+        s.publish_schedule(&[0], 1);
+        assert_eq!(s.current_prefetch_depth(), 1);
+        // Sustained misses cap at AUTO_DEPTH_MAX.
+        for _ in 0..40 {
+            s.shared.prefetch_misses.fetch_add(1, Ordering::Relaxed);
+            s.publish_schedule(&[0], 1);
+        }
+        assert_eq!(s.current_prefetch_depth(), AUTO_DEPTH_MAX);
+        // MemStats reports the live depth.
+        assert_eq!(s.stats().prefetch_depth, AUTO_DEPTH_MAX);
+    }
+
+    #[test]
+    fn fixed_depth_never_adapts() {
+        let s = BlockStore::with_options(None, None, StoreOptions::default()).unwrap();
+        assert_eq!(s.current_prefetch_depth(), 4);
+        s.shared.prefetch_misses.fetch_add(10, Ordering::Relaxed);
+        s.publish_schedule(&[0], 1);
+        s.publish_schedule(&[0], 1);
+        assert_eq!(s.current_prefetch_depth(), 4);
     }
 
     #[test]

@@ -30,8 +30,19 @@ pub(crate) fn prefetch_loop(shared: Arc<super::Shared>) {
         let mut did_work = false;
         if !order.is_empty() {
             let num_groups = order.len() / bpg;
-            let progress = shared.progress.load(Ordering::Acquire).min(num_groups);
-            let end = (progress + 1 + shared.opts.prefetch_depth).min(num_groups);
+            // Window base: the farther of the completion cursor and the
+            // decode-phase cursor (`group_fetched`). An overlapped
+            // pipeline fetches ahead of completion, so windowing off the
+            // fetch cursor keeps the prefetcher ahead of *decode* instead
+            // of trailing the slower store phase. Depth is dynamic under
+            // the AIMD auto-depth controller.
+            let progress = shared
+                .progress
+                .load(Ordering::Acquire)
+                .max(shared.fetch_cursor.load(Ordering::Acquire))
+                .min(num_groups);
+            let depth = shared.dyn_depth.load(Ordering::Relaxed);
+            let end = (progress + 1 + depth).min(num_groups);
             // Blocks with rank < `end` are inside the window; eviction to
             // make room may only touch ranks >= `end` (strictly farther).
             for g in progress..end {

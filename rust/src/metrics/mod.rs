@@ -87,6 +87,17 @@ pub struct Metrics {
     /// Worker time stalled on spill machinery (in-flight write waits,
     /// write-back back-pressure, synchronous disk reads).
     pub spill_stall_ns: AtomicU64,
+    /// Overlapped pipeline: how often the apply phase found its next
+    /// group already decoded (zero wait) — the "overhead concealed"
+    /// counter. 0 when `overlap` is off.
+    pub decode_ahead_hits: AtomicU64,
+    /// Overlapped pipeline: total time phase threads spent waiting on the
+    /// ring handshake (decode waiting for a free slot, apply for a
+    /// decoded one, encode for an applied one). 0 when `overlap` is off.
+    pub overlap_stall_ns: AtomicU64,
+    /// Spill-aware scheduling: groups moved ahead of their natural stage
+    /// position because their blocks were already primary-resident.
+    pub groups_reordered: AtomicU64,
 }
 
 impl Metrics {
@@ -118,6 +129,10 @@ impl Metrics {
     pub fn snapshot(&self, wall_secs: f64) -> MetricsReport {
         MetricsReport {
             wall_secs,
+            aggregate_phase_secs: Phase::ALL
+                .iter()
+                .map(|&p| self.phase_secs(p))
+                .sum(),
             phase_secs: Phase::ALL.map(|p| (p.name(), self.phase_secs(p))),
             compressions: self.compressions.load(Ordering::Relaxed),
             decompressions: self.decompressions.load(Ordering::Relaxed),
@@ -133,6 +148,9 @@ impl Metrics {
             prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
             prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
             spill_stall_ns: self.spill_stall_ns.load(Ordering::Relaxed),
+            decode_ahead_hits: self.decode_ahead_hits.load(Ordering::Relaxed),
+            overlap_stall_ns: self.overlap_stall_ns.load(Ordering::Relaxed),
+            groups_reordered: self.groups_reordered.load(Ordering::Relaxed),
         }
     }
 
@@ -144,12 +162,29 @@ impl Metrics {
         self.prefetch_misses.store(mem.prefetch_misses, Ordering::Relaxed);
         self.spill_stall_ns.store(mem.spill_stall_ns, Ordering::Relaxed);
     }
+
+    /// Copy the overlapped-pipeline counters out of a run's accumulated
+    /// [`crate::pipeline::OverlapStats`] (engines call this once, after
+    /// the last stage).
+    pub fn absorb_overlap(&self, o: &crate::pipeline::OverlapStats) {
+        self.decode_ahead_hits.store(
+            o.decode_ahead_hits.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+        self.overlap_stall_ns.store(o.total_stall_ns(), Ordering::Relaxed);
+    }
 }
 
 /// Immutable metrics snapshot attached to every `SimResult`.
 #[derive(Debug, Clone)]
 pub struct MetricsReport {
     pub wall_secs: f64,
+    /// Sum of all per-phase busy times across workers. Phase timers are
+    /// *monotonic per-phase accumulators summed per worker*, NOT
+    /// wall-clock attribution: once phases overlap (pipelined chains,
+    /// `workers > 1`) this aggregate legitimately exceeds `wall_secs` —
+    /// compare phases to this total, not to wall time.
+    pub aggregate_phase_secs: f64,
     pub phase_secs: [(&'static str, f64); 6],
     pub compressions: u64,
     pub decompressions: u64,
@@ -174,6 +209,13 @@ pub struct MetricsReport {
     pub prefetch_misses: u64,
     /// Worker time stalled on spill machinery, in nanoseconds.
     pub spill_stall_ns: u64,
+    /// Overlapped pipeline: apply found its next group already decoded.
+    pub decode_ahead_hits: u64,
+    /// Overlapped pipeline: total ring-handshake wait time (ns).
+    pub overlap_stall_ns: u64,
+    /// Groups promoted ahead of their natural order by spill-aware
+    /// scheduling (their blocks were already primary-resident).
+    pub groups_reordered: u64,
 }
 
 impl MetricsReport {
@@ -194,13 +236,49 @@ impl MetricsReport {
             self.bytes_in as f64 / self.bytes_out as f64
         }
     }
+
+    /// Overlapped-pipeline occupancy: fraction of phase-thread time spent
+    /// doing chain work rather than waiting on a ring handshake,
+    /// `busy / (busy + overlap_stall)`. 1.0 for non-overlapped runs
+    /// (no handshakes, so no stalls).
+    pub fn pipeline_occupancy(&self) -> f64 {
+        let busy: f64 = self
+            .phase_secs
+            .iter()
+            .filter(|(n, _)| *n != "partition")
+            .map(|(_, s)| *s)
+            .sum();
+        let stall = self.overlap_stall_ns as f64 * 1e-9;
+        if busy + stall <= 0.0 {
+            1.0
+        } else {
+            busy / (busy + stall)
+        }
+    }
 }
 
 impl std::fmt::Display for MetricsReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "wall time        : {:>10.3} s", self.wall_secs)?;
+        writeln!(
+            f,
+            "phase time total : {:>10.3} s (busy, summed over workers/phases)",
+            self.aggregate_phase_secs
+        )?;
         for (name, secs) in &self.phase_secs {
             writeln!(f, "{name:<17}: {secs:>10.3} s (busy, summed over workers)")?;
+        }
+        if self.decode_ahead_hits + self.overlap_stall_ns > 0 {
+            writeln!(
+                f,
+                "pipeline overlap : {:>10.1}% occupancy ({} decode-ahead hits, {:.1} ms stalled)",
+                100.0 * self.pipeline_occupancy(),
+                self.decode_ahead_hits,
+                self.overlap_stall_ns as f64 * 1e-6
+            )?;
+        }
+        if self.groups_reordered > 0 {
+            writeln!(f, "groups reordered : {:>10} (spill-aware scheduling)", self.groups_reordered)?;
         }
         writeln!(f, "gates applied    : {:>10}", self.gates_applied)?;
         writeln!(
@@ -306,6 +384,31 @@ mod tests {
     fn ratio_without_compression_is_one() {
         let m = Metrics::new();
         assert_eq!(m.snapshot(0.0).compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn aggregate_phase_time_sums_phases() {
+        let m = Metrics::new();
+        m.add_nanos(Phase::Apply, 2_000_000_000);
+        m.add_nanos(Phase::Compress, 1_000_000_000);
+        let r = m.snapshot(1.0);
+        assert!((r.aggregate_phase_secs - 3.0).abs() < 1e-9);
+        // Overlapped runs legitimately exceed wall time.
+        assert!(r.aggregate_phase_secs > r.wall_secs);
+    }
+
+    #[test]
+    fn occupancy_is_busy_over_busy_plus_stall() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot(0.0).pipeline_occupancy(), 1.0); // idle run
+        m.add_nanos(Phase::Apply, 3_000_000_000);
+        m.overlap_stall_ns.store(1_000_000_000, Ordering::Relaxed);
+        let r = m.snapshot(1.0);
+        assert!((r.pipeline_occupancy() - 0.75).abs() < 1e-9);
+        // Partition time is offline planning, not a pipeline phase.
+        m.add_nanos(Phase::Partition, 9_000_000_000);
+        let r = m.snapshot(1.0);
+        assert!((r.pipeline_occupancy() - 0.75).abs() < 1e-9);
     }
 
     #[test]

@@ -25,7 +25,9 @@
 use crate::compress::CodecScratch;
 use crate::memory::BlockPayload;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Counting semaphore (Mutex + Condvar; no external deps).
 pub struct Semaphore {
@@ -206,6 +208,372 @@ where
                             *f = Some(e);
                         }
                         return;
+                    }
+                }
+            });
+        }
+    });
+
+    match failed.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Overlapped group chains: the decode → apply → encode software pipeline.
+// ---------------------------------------------------------------------------
+
+/// How long a phase thread dozes between handshake re-checks. Also bounds
+/// how stale an abort flag can go unnoticed.
+const HANDSHAKE_POLL: Duration = Duration::from_micros(500);
+
+/// Slot lifecycle in a worker's scratch ring. Transitions only move
+/// forward (`Free → Decoded → Applied → Free`), each performed by exactly
+/// one of the worker's three phase threads, so the slot's [`Scratch`] is
+/// never touched by two threads at once.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum SlotPhase {
+    Free,
+    Decoded,
+    Applied,
+}
+
+/// Handshake state for one worker's slot ring (next-slot protocol: every
+/// phase walks the ring in order, so FIFO item order is structural).
+struct RingState {
+    status: Vec<SlotPhase>,
+    /// Item id occupying each slot (valid while status != Free).
+    items: Vec<usize>,
+    decode_done: bool,
+    apply_done: bool,
+}
+
+struct RingCtrl {
+    state: Mutex<RingState>,
+    cv: Condvar,
+}
+
+impl RingCtrl {
+    fn new(depth: usize) -> Self {
+        RingCtrl {
+            state: Mutex::new(RingState {
+                status: vec![SlotPhase::Free; depth],
+                items: vec![0; depth],
+                decode_done: false,
+                apply_done: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Unwind-safe phase teardown: marks the phase's done flag — and, when
+/// the thread is panicking, the global abort — on EVERY exit path, so a
+/// panic inside a phase closure (gate kernel assert, codec bug) tears the
+/// pipeline down and propagates through `thread::scope` instead of
+/// leaving sibling phase threads waiting forever on a flag that
+/// straight-line code would never set.
+struct PhaseExit<'a> {
+    ctrl: &'a RingCtrl,
+    abort: &'a AtomicBool,
+    mark: fn(&mut RingState),
+}
+
+impl Drop for PhaseExit<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.abort.store(true, Ordering::Release);
+        }
+        // Phase closures never panic while holding the state lock, so it
+        // cannot be poisoned here.
+        let mut st = self.ctrl.state.lock().unwrap();
+        (self.mark)(&mut st);
+        drop(st);
+        self.ctrl.cv.notify_all();
+    }
+}
+
+/// Per-worker rings of [`Scratch`] slots for the overlapped pipeline.
+/// Like [`ScratchPool`], it outlives individual driver calls so plane /
+/// payload / codec buffers carry over from stage to stage; `depth` slots
+/// per worker bound how many group chains can be in flight per worker
+/// (`depth >= 2` enables decode/apply/encode overlap, 1 degenerates to a
+/// hand-off-serialized chain).
+pub struct RingPool {
+    rings: Vec<Vec<Mutex<Scratch>>>,
+    depth: usize,
+}
+
+impl RingPool {
+    pub fn new(workers: usize, depth: usize) -> Self {
+        let depth = depth.max(1);
+        RingPool {
+            rings: (0..workers.max(1))
+                .map(|_| (0..depth).map(|_| Mutex::new(Scratch::new())).collect())
+                .collect(),
+            depth,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.rings.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Total plane-growth events across every slot of every ring (the
+    /// arena-reuse counter surfaced as `Metrics::scratch_grows`).
+    pub fn total_plane_grows(&self) -> u64 {
+        self.rings
+            .iter()
+            .flatten()
+            .map(|s| s.lock().unwrap().plane_grows)
+            .sum()
+    }
+}
+
+/// Overlap instrumentation filled by [`run_items_overlapped`]: handshake
+/// stall time per phase plus how often the apply phase found its next
+/// group already decoded (the "overhead concealed" signal).
+#[derive(Default)]
+pub struct OverlapStats {
+    /// Apply found the next slot already `Decoded` — zero wait.
+    pub decode_ahead_hits: AtomicU64,
+    /// Decode waited for a `Free` slot (encode back-pressure).
+    pub stall_decode_ns: AtomicU64,
+    /// Apply waited for a `Decoded` slot (fetch/decompress behind).
+    pub stall_apply_ns: AtomicU64,
+    /// Encode waited for an `Applied` slot (apply behind).
+    pub stall_encode_ns: AtomicU64,
+}
+
+impl OverlapStats {
+    pub fn total_stall_ns(&self) -> u64 {
+        self.stall_decode_ns.load(Ordering::Relaxed)
+            + self.stall_apply_ns.load(Ordering::Relaxed)
+            + self.stall_encode_ns.load(Ordering::Relaxed)
+    }
+}
+
+/// Run `0..n` items through a three-phase software pipeline on the
+/// configured workers: per worker, a *decode* thread pulls items from the
+/// shared queue and fills ring slots, an *apply* thread consumes decoded
+/// slots, and an *encode* thread drains applied slots back to `Free` —
+/// so while group *g* is being applied, *g+1* is already being fetched /
+/// decompressed and *g−1* compressed / stored.
+///
+/// Identical results to [`run_items`] running `decode; apply; encode` per
+/// item are structural: each item passes through all three phases in
+/// order on the same `Scratch`, items are disjoint, and slot handoffs are
+/// full memory barriers (mutex). The first phase error aborts all workers
+/// and is returned.
+pub fn run_items_overlapped<E, D, A, S>(
+    cfg: PipelineConfig,
+    n: usize,
+    pool: &RingPool,
+    stats: &OverlapStats,
+    decode: D,
+    apply: A,
+    encode: S,
+) -> Result<(), E>
+where
+    E: Send + std::fmt::Debug,
+    D: Fn(&mut WorkerCtx<'_>, usize) -> Result<(), E> + Sync,
+    A: Fn(&mut WorkerCtx<'_>, usize) -> Result<(), E> + Sync,
+    S: Fn(&mut WorkerCtx<'_>, usize) -> Result<(), E> + Sync,
+{
+    let transfer = Semaphore::new(cfg.transfer_slots);
+    let queue: Mutex<VecDeque<usize>> = Mutex::new((0..n).collect());
+    let failed: Mutex<Option<E>> = Mutex::new(None);
+    let abort = AtomicBool::new(false);
+    let workers = cfg.workers().min(n.max(1)).min(pool.workers());
+    let depth = pool.depth();
+    let ctrls: Vec<RingCtrl> = (0..workers).map(|_| RingCtrl::new(depth)).collect();
+
+    let fail = |e: E| {
+        let mut f = failed.lock().unwrap();
+        if f.is_none() {
+            *f = Some(e);
+        }
+        abort.store(true, Ordering::Release);
+    };
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let ctrl = &ctrls[w];
+            let slots = &pool.rings[w];
+            let queue = &queue;
+            let fail = &fail;
+            let abort = &abort;
+            let transfer = &transfer;
+            let device = w % cfg.devices.max(1);
+            let (decode, apply, encode) = (&decode, &apply, &encode);
+
+            // ---- Decode thread: queue → Free slot → Decoded ----
+            scope.spawn(move || {
+                let _exit =
+                    PhaseExit { ctrl, abort, mark: |st: &mut RingState| st.decode_done = true };
+                let mut slot = 0usize;
+                loop {
+                    if abort.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let item = { queue.lock().unwrap().pop_front() };
+                    let Some(item) = item else { break };
+                    {
+                        let mut st = ctrl.state.lock().unwrap();
+                        if st.status[slot] != SlotPhase::Free {
+                            let t0 = Instant::now();
+                            while st.status[slot] != SlotPhase::Free
+                                && !abort.load(Ordering::Acquire)
+                            {
+                                st = ctrl.cv.wait_timeout(st, HANDSHAKE_POLL).unwrap().0;
+                            }
+                            stats
+                                .stall_decode_ns
+                                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        }
+                        if st.status[slot] != SlotPhase::Free {
+                            break; // aborted while waiting
+                        }
+                    }
+                    let r = {
+                        let mut scratch = slots[slot].lock().unwrap();
+                        let mut ctx = WorkerCtx {
+                            worker: w,
+                            device,
+                            link: TransferLink { sem: transfer },
+                            scratch: &mut *scratch,
+                        };
+                        decode(&mut ctx, item)
+                    };
+                    match r {
+                        Ok(()) => {
+                            let mut st = ctrl.state.lock().unwrap();
+                            st.status[slot] = SlotPhase::Decoded;
+                            st.items[slot] = item;
+                            drop(st);
+                            ctrl.cv.notify_all();
+                            slot = (slot + 1) % depth;
+                        }
+                        Err(e) => {
+                            fail(e);
+                            break;
+                        }
+                    }
+                }
+            });
+
+            // ---- Apply thread: Decoded slot → Applied ----
+            scope.spawn(move || {
+                let _exit =
+                    PhaseExit { ctrl, abort, mark: |st: &mut RingState| st.apply_done = true };
+                let mut slot = 0usize;
+                loop {
+                    let item;
+                    {
+                        let mut st = ctrl.state.lock().unwrap();
+                        if st.status[slot] == SlotPhase::Decoded {
+                            stats.decode_ahead_hits.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            let t0 = Instant::now();
+                            while st.status[slot] != SlotPhase::Decoded
+                                && !st.decode_done
+                                && !abort.load(Ordering::Acquire)
+                            {
+                                st = ctrl.cv.wait_timeout(st, HANDSHAKE_POLL).unwrap().0;
+                            }
+                            stats
+                                .stall_apply_ns
+                                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        }
+                        if st.status[slot] != SlotPhase::Decoded {
+                            break; // decode finished (or abort): ring drained
+                        }
+                        item = st.items[slot];
+                    }
+                    if abort.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let r = {
+                        let mut scratch = slots[slot].lock().unwrap();
+                        let mut ctx = WorkerCtx {
+                            worker: w,
+                            device,
+                            link: TransferLink { sem: transfer },
+                            scratch: &mut *scratch,
+                        };
+                        apply(&mut ctx, item)
+                    };
+                    match r {
+                        Ok(()) => {
+                            let mut st = ctrl.state.lock().unwrap();
+                            st.status[slot] = SlotPhase::Applied;
+                            drop(st);
+                            ctrl.cv.notify_all();
+                            slot = (slot + 1) % depth;
+                        }
+                        Err(e) => {
+                            fail(e);
+                            break;
+                        }
+                    }
+                }
+            });
+
+            // ---- Encode thread: Applied slot → Free ----
+            scope.spawn(move || {
+                let _exit = PhaseExit { ctrl, abort, mark: |_st: &mut RingState| {} };
+                let mut slot = 0usize;
+                loop {
+                    let item;
+                    {
+                        let mut st = ctrl.state.lock().unwrap();
+                        if st.status[slot] != SlotPhase::Applied {
+                            let t0 = Instant::now();
+                            while st.status[slot] != SlotPhase::Applied
+                                && !st.apply_done
+                                && !abort.load(Ordering::Acquire)
+                            {
+                                st = ctrl.cv.wait_timeout(st, HANDSHAKE_POLL).unwrap().0;
+                            }
+                            stats
+                                .stall_encode_ns
+                                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        }
+                        if st.status[slot] != SlotPhase::Applied {
+                            break; // apply finished (or abort): nothing left
+                        }
+                        item = st.items[slot];
+                    }
+                    if abort.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let r = {
+                        let mut scratch = slots[slot].lock().unwrap();
+                        let mut ctx = WorkerCtx {
+                            worker: w,
+                            device,
+                            link: TransferLink { sem: transfer },
+                            scratch: &mut *scratch,
+                        };
+                        encode(&mut ctx, item)
+                    };
+                    match r {
+                        Ok(()) => {
+                            let mut st = ctrl.state.lock().unwrap();
+                            st.status[slot] = SlotPhase::Free;
+                            drop(st);
+                            ctrl.cv.notify_all();
+                            slot = (slot + 1) % depth;
+                        }
+                        Err(e) => {
+                            fail(e);
+                            break;
+                        }
                     }
                 }
             });
@@ -457,6 +825,226 @@ mod tests {
         assert_eq!(s.plane_grows, 1);
         assert!(s.ensure_planes(4096)); // genuinely larger: grows once more
         assert_eq!(s.plane_grows, 2);
+    }
+
+    #[test]
+    fn overlapped_runs_every_item_through_all_three_phases_in_order() {
+        // Each item must see decode -> apply -> encode exactly once, and
+        // the scratch slot must carry state between the phases.
+        for (workers, depth, n) in
+            [(1usize, 1usize, 7usize), (1, 2, 33), (2, 3, 64), (4, 2, 100)]
+        {
+            let cfg = PipelineConfig::new(1, workers);
+            let pool = RingPool::new(cfg.workers(), depth);
+            let stats = OverlapStats::default();
+            let out: Mutex<Vec<(usize, f64)>> = Mutex::new(Vec::new());
+            run_items_overlapped::<(), _, _, _>(
+                cfg,
+                n,
+                &pool,
+                &stats,
+                |ctx, i| {
+                    ctx.scratch.ensure_planes(4);
+                    ctx.scratch.re[0] = i as f64;
+                    Ok(())
+                },
+                |ctx, i| {
+                    assert_eq!(ctx.scratch.re[0], i as f64, "apply saw wrong slot");
+                    ctx.scratch.re[0] *= 10.0;
+                    Ok(())
+                },
+                |ctx, i| {
+                    assert_eq!(ctx.scratch.re[0], 10.0 * i as f64, "encode saw wrong slot");
+                    out.lock().unwrap().push((i, ctx.scratch.re[0]));
+                    Ok(())
+                },
+            )
+            .unwrap();
+            let mut got = out.into_inner().unwrap();
+            assert_eq!(got.len(), n, "workers={workers} depth={depth}");
+            got.sort_unstable_by_key(|&(i, _)| i);
+            for (i, (item, v)) in got.iter().enumerate() {
+                assert_eq!(*item, i);
+                assert_eq!(*v, 10.0 * i as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_phases_actually_overlap() {
+        // With depth 2 and a single worker, decode of item i+1 must be
+        // able to run while apply of item i is still in progress.
+        let cfg = PipelineConfig::sequential();
+        let pool = RingPool::new(1, 2);
+        let stats = OverlapStats::default();
+        let live = AtomicUsize::new(0);
+        let max_live = AtomicUsize::new(0);
+        // Fast decode/encode around a slow apply: decode runs ahead of
+        // apply (so decode-ahead hits accrue) and overlaps it in time.
+        let enter = |micros: u64| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            max_live.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(micros));
+            live.fetch_sub(1, Ordering::SeqCst);
+        };
+        run_items_overlapped::<(), _, _, _>(
+            cfg,
+            24,
+            &pool,
+            &stats,
+            |_ctx, _i| {
+                enter(300);
+                Ok(())
+            },
+            |_ctx, _i| {
+                enter(2000);
+                Ok(())
+            },
+            |_ctx, _i| {
+                enter(300);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert!(
+            max_live.load(Ordering::SeqCst) > 1,
+            "phases never overlapped on a depth-2 ring"
+        );
+        assert!(stats.decode_ahead_hits.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn overlapped_error_in_each_phase_aborts_and_propagates() {
+        for phase in 0..3usize {
+            let cfg = PipelineConfig::new(1, 2);
+            let pool = RingPool::new(cfg.workers(), 2);
+            let stats = OverlapStats::default();
+            let boom = move |p: usize, i: usize| -> Result<(), String> {
+                if p == phase && i == 5 {
+                    Err(format!("boom-{p}"))
+                } else {
+                    Ok(())
+                }
+            };
+            let r = run_items_overlapped::<String, _, _, _>(
+                cfg,
+                200,
+                &pool,
+                &stats,
+                |_ctx, i| boom(0, i),
+                |_ctx, i| boom(1, i),
+                |_ctx, i| boom(2, i),
+            );
+            assert_eq!(r.unwrap_err(), format!("boom-{phase}"));
+        }
+    }
+
+    #[test]
+    fn overlapped_panic_in_a_phase_propagates_instead_of_hanging() {
+        // A panicking phase closure must tear the pipeline down (abort +
+        // done flags via PhaseExit) so thread::scope re-raises the panic;
+        // before the exit guards, sibling phases waited forever.
+        for phase in 0..3usize {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let pool = RingPool::new(1, 2);
+                let stats = OverlapStats::default();
+                let _ = run_items_overlapped::<(), _, _, _>(
+                    PipelineConfig::sequential(),
+                    16,
+                    &pool,
+                    &stats,
+                    |_c, i| {
+                        assert!(!(phase == 0 && i == 3), "kaboom-decode");
+                        Ok(())
+                    },
+                    |_c, i| {
+                        assert!(!(phase == 1 && i == 3), "kaboom-apply");
+                        Ok(())
+                    },
+                    |_c, i| {
+                        assert!(!(phase == 2 && i == 3), "kaboom-encode");
+                        Ok(())
+                    },
+                );
+            }));
+            assert!(caught.is_err(), "phase {phase} panic was swallowed or hung");
+        }
+    }
+
+    #[test]
+    fn overlapped_zero_items_is_fine() {
+        let pool = RingPool::new(2, 2);
+        let stats = OverlapStats::default();
+        run_items_overlapped::<(), _, _, _>(
+            PipelineConfig::new(1, 2),
+            0,
+            &pool,
+            &stats,
+            |_c, _i| Ok(()),
+            |_c, _i| Ok(()),
+            |_c, _i| Ok(()),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn ring_pool_persists_scratch_across_calls() {
+        let pool = RingPool::new(1, 2);
+        let stats = OverlapStats::default();
+        for _round in 0..3 {
+            run_items_overlapped::<(), _, _, _>(
+                PipelineConfig::sequential(),
+                8,
+                &pool,
+                &stats,
+                |ctx, _i| {
+                    ctx.scratch.ensure_planes(1024);
+                    Ok(())
+                },
+                |_c, _i| Ok(()),
+                |_c, _i| Ok(()),
+            )
+            .unwrap();
+        }
+        // Each ring slot grows at most once, ever — not once per round.
+        assert!(pool.total_plane_grows() <= 2);
+        assert!(pool.total_plane_grows() >= 1);
+    }
+
+    #[test]
+    fn overlapped_transfer_sections_respect_slots() {
+        let cfg = PipelineConfig { devices: 1, streams: 4, transfer_slots: 1 };
+        let pool = RingPool::new(cfg.workers(), 2);
+        let stats = OverlapStats::default();
+        let max_live = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        run_items_overlapped::<(), _, _, _>(
+            cfg,
+            32,
+            &pool,
+            &stats,
+            |ctx, _i| {
+                ctx.transfer(|| {
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    max_live.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                });
+                Ok(())
+            },
+            |_c, _i| Ok(()),
+            |ctx, _i| {
+                ctx.transfer(|| {
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    max_live.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                });
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(max_live.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -15,14 +15,16 @@
 //! 4. Blocks live in the two-level [`BlockStore`] (§4.4): primary budget +
 //!    disk spill.
 
-use super::{GateApplier, NativeApplier, SimConfig, SimResult};
+use super::{plan_group_order, GateApplier, NativeApplier, SimConfig, SimResult};
 use crate::circuit::fusion::{fuse_remapped, FusedGate};
 use crate::circuit::{partition_circuit, Circuit};
 use crate::compress::{Codec, CodecScratch};
 use crate::gates::fused;
 use crate::memory::{BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
-use crate::pipeline::{run_items, Scratch, ScratchPool, WorkerCtx};
+use crate::pipeline::{
+    run_items, run_items_overlapped, OverlapStats, RingPool, Scratch, ScratchPool, WorkerCtx,
+};
 use crate::state::{BlockLayout, StateVector};
 use crate::types::{Error, Result};
 use std::sync::atomic::Ordering;
@@ -99,20 +101,33 @@ impl<'a> BmqSim<'a> {
         self.init_blocks(&layout, &codec, &store, &metrics)?;
 
         // ---- Staged, pipelined execution ----
-        // One scratch arena per worker for the WHOLE run: plane buffers,
-        // codec intermediates, and recycled payload bytes carry over from
-        // stage to stage, so steady-state group chains allocate nothing.
-        let pool = ScratchPool::new(self.config.pipeline.workers());
+        // Scratch arenas persist per worker for the WHOLE run: plane
+        // buffers, codec intermediates, and recycled payload bytes carry
+        // over from stage to stage, so steady-state group chains allocate
+        // nothing. Overlapped runs use a ring of `pipeline_depth` slots
+        // per worker instead of a single arena, so a worker can hold
+        // several group chains in flight at once.
+        let workers = self.config.pipeline.workers();
+        let overlap = self.config.overlap;
+        let pool = (!overlap).then(|| ScratchPool::new(workers));
+        let rings = overlap.then(|| RingPool::new(workers, self.config.pipeline_depth));
+        let ostats = OverlapStats::default();
         let use_fusion = self.config.fusion && self.applier.supports_fusion();
         let mut order: Vec<usize> = Vec::with_capacity(layout.num_blocks());
         let mut group_ids: Vec<usize> = Vec::new();
         for stage in &plan.stages {
             let schedule = layout.group_schedule(&stage.inner)?;
-            // Publish the stage's group schedule to the store: eviction
-            // ranks blocks by distance to next use (Belady) and the
-            // prefetcher stages upcoming spilled blocks back into primary.
+            // Spill-aware scheduling: ask the store which groups are
+            // already resident and run those first (the prefetcher then
+            // has the cold groups' chains as warm-up time).
+            let (group_order, moved) =
+                plan_group_order(&schedule, &store, self.config.spill_aware, &mut group_ids);
+            metrics.groups_reordered.fetch_add(moved, Ordering::Relaxed);
+            // Publish the stage's group schedule to the store — in
+            // *processing* order, so Belady eviction ranks and the
+            // prefetch window track what the workers actually do.
             order.clear();
-            for g in 0..schedule.num_groups() {
+            for &g in &group_order {
                 schedule.group_blocks_into(g, &mut group_ids);
                 order.extend_from_slice(&group_ids);
             }
@@ -150,24 +165,58 @@ impl<'a> BmqSim<'a> {
             metrics.plane_sweeps.fetch_add(stage_sweeps, Ordering::Relaxed);
 
             let block_len = layout.block_len();
-            run_items::<Error, _>(self.config.pipeline, schedule.num_groups(), &pool, |ctx, gidx| {
-                self.process_group(
-                    ctx,
-                    &schedule,
-                    gidx,
-                    block_len,
-                    &remapped,
-                    fused_plan.as_ref().map(|(ops, segs)| (ops.as_slice(), segs.as_slice())),
-                    &codec,
-                    &store,
-                    &metrics,
-                )
-            })?;
+            let fused = fused_plan.as_ref().map(|(ops, segs)| (ops.as_slice(), segs.as_slice()));
+            if let Some(pool) = &pool {
+                run_items::<Error, _>(
+                    self.config.pipeline,
+                    schedule.num_groups(),
+                    pool,
+                    |ctx, i| {
+                        self.process_group(
+                            ctx,
+                            &schedule,
+                            group_order[i],
+                            block_len,
+                            &remapped,
+                            fused,
+                            &codec,
+                            &store,
+                            &metrics,
+                        )
+                    },
+                )?;
+            } else {
+                // Overlapped chains: while a worker applies gates to group
+                // g, its decode thread is already fetching/decompressing
+                // g+1 and its encode thread compressing/storing g−1.
+                run_items_overlapped::<Error, _, _, _>(
+                    self.config.pipeline,
+                    schedule.num_groups(),
+                    rings.as_ref().expect("overlap on but no ring pool"),
+                    &ostats,
+                    |ctx, i| {
+                        self.decode_group(
+                            ctx,
+                            &schedule,
+                            group_order[i],
+                            block_len,
+                            &codec,
+                            &store,
+                            &metrics,
+                        )
+                    },
+                    |ctx, _i| self.apply_group(ctx, &remapped, fused, &metrics),
+                    |ctx, _i| self.encode_group(ctx, block_len, &codec, &store, &metrics),
+                )?;
+            }
             metrics
                 .groups_processed
                 .fetch_add(schedule.num_groups() as u64, Ordering::Relaxed);
         }
-        metrics.scratch_grows.store(pool.total_plane_grows(), Ordering::Relaxed);
+        let grows = pool.as_ref().map_or(0, |p| p.total_plane_grows())
+            + rings.as_ref().map_or(0, |r| r.total_plane_grows());
+        metrics.scratch_grows.store(grows, Ordering::Relaxed);
+        metrics.absorb_overlap(&ostats);
 
         // ---- Wrap up ----
         // Drain the write-back queue (and surface any background spill
@@ -231,6 +280,12 @@ impl<'a> BmqSim<'a> {
 
     /// One SV-group chain: fetch → decompress → update → compress → store.
     ///
+    /// The chain is split into the three pipeline phases so the overlapped
+    /// driver can run them on separate threads; the sequential path simply
+    /// composes them in order on one thread — both paths execute the exact
+    /// same code per group, which is what makes byte-identical output a
+    /// structural property rather than a test-enforced one.
+    ///
     /// Zero-copy / zero-allocation (§Perf): decompression writes directly
     /// into the worker's scratch planes (no temp Vec + copy), compression
     /// reuses the fetched payloads' byte buffers, and the planes themselves
@@ -244,6 +299,24 @@ impl<'a> BmqSim<'a> {
         block_len: usize,
         gates: &[(crate::circuit::Gate, Vec<usize>)],
         fused_plan: Option<(&[FusedGate], &[fused::Segment])>,
+        codec: &Codec,
+        store: &BlockStore,
+        metrics: &Metrics,
+    ) -> Result<()> {
+        self.decode_group(ctx, schedule, gidx, block_len, codec, store, metrics)?;
+        self.apply_group(ctx, gates, fused_plan, metrics)?;
+        self.encode_group(ctx, block_len, codec, store, metrics)
+    }
+
+    /// Pipeline phase 1 — fetch the group's payloads (transfer section)
+    /// and decompress them into the slot's gathered group buffer.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_group(
+        &self,
+        ctx: &mut WorkerCtx<'_>,
+        schedule: &crate::state::GroupSchedule,
+        gidx: usize,
+        block_len: usize,
         codec: &Codec,
         store: &BlockStore,
         metrics: &Metrics,
@@ -264,6 +337,10 @@ impl<'a> BmqSim<'a> {
                 Ok(())
             })
         })?;
+        // Advance the *decode-phase* cursor: the prefetch window follows
+        // the fetch frontier, which in an overlapped pipeline runs ahead
+        // of group completion.
+        store.group_fetched();
 
         // Decompress straight into the gathered group buffer.
         metrics.time(Phase::Decompress, || -> Result<()> {
@@ -278,11 +355,21 @@ impl<'a> BmqSim<'a> {
                 metrics.decompressions.fetch_add(2, Ordering::Relaxed);
             }
             Ok(())
-        })?;
+        })
+    }
 
-        // Apply every gate of the stage — ONE (de)compression for all.
-        // Fused-batched path: the whole stage runs in tiled, worker-
-        // parallel sweeps; per-gate path serves non-native appliers.
+    /// Pipeline phase 2 — apply every gate of the stage to the decoded
+    /// group buffer: ONE (de)compression for all. Fused-batched path: the
+    /// whole stage runs in tiled, worker-parallel sweeps; per-gate path
+    /// serves non-native appliers.
+    fn apply_group(
+        &self,
+        ctx: &mut WorkerCtx<'_>,
+        gates: &[(crate::circuit::Gate, Vec<usize>)],
+        fused_plan: Option<(&[FusedGate], &[fused::Segment])>,
+        metrics: &Metrics,
+    ) -> Result<()> {
+        let Scratch { re, im, .. } = &mut *ctx.scratch;
         metrics.time(Phase::Apply, || -> Result<()> {
             match fused_plan {
                 Some((ops, segs)) => {
@@ -302,6 +389,23 @@ impl<'a> BmqSim<'a> {
             }
         })?;
         metrics.gates_applied.fetch_add(gates.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Pipeline phase 3 — recompress the group per block and hand the
+    /// payloads back to the store (transfer section). Under a budget, any
+    /// eviction this triggers lands in the store's *asynchronous*
+    /// write-back queue, so spill-file I/O overlaps the chain too.
+    fn encode_group(
+        &self,
+        ctx: &mut WorkerCtx<'_>,
+        block_len: usize,
+        codec: &Codec,
+        store: &BlockStore,
+        metrics: &Metrics,
+    ) -> Result<()> {
+        let link = ctx.link;
+        let Scratch { re, im, block_ids, payloads, codec: cs, .. } = &mut *ctx.scratch;
 
         // Compress per block, recycling the fetched payloads' byte buffers
         // as outputs (store → worker → store, no fresh allocations).
@@ -418,6 +522,105 @@ mod tests {
             let f = r.state.as_ref().unwrap().fidelity(&base);
             assert!(f > 1.0 - 1e-12, "devices={d} streams={s}: {f}");
         }
+    }
+
+    #[test]
+    fn overlapped_pipeline_is_deterministic_in_state() {
+        // The three-phase overlapped chain must be state-identical to the
+        // sequential chain at every depth/worker shape (groups are
+        // disjoint and each runs the exact same phase code).
+        let c = generators::build("qaoa", 9, 7).unwrap();
+        let base = {
+            let mut config = cfg(4, 2);
+            config.pipeline = PipelineConfig::sequential();
+            BmqSim::new(config).run(&c, true).unwrap()
+        };
+        for (depth, workers) in [(1usize, 1usize), (2, 1), (3, 2), (2, 4)] {
+            let mut config = cfg(4, 2);
+            config.pipeline = PipelineConfig::new(1, workers);
+            config.overlap = true;
+            config.pipeline_depth = depth;
+            let r = BmqSim::new(config).run(&c, true).unwrap();
+            let f = r.state.as_ref().unwrap().fidelity(base.state.as_ref().unwrap());
+            assert!(f > 1.0 - 1e-12, "depth={depth} workers={workers}: {f}");
+            assert_eq!(r.metrics.groups_processed, base.metrics.groups_processed);
+            assert_eq!(r.metrics.decompressions, base.metrics.decompressions);
+            // Overlap instrumentation is live: the apply phase either
+            // found groups pre-decoded or waited for them.
+            assert!(
+                r.metrics.decode_ahead_hits > 0 || r.metrics.overlap_stall_ns > 0,
+                "depth={depth} workers={workers}: no overlap metrics recorded"
+            );
+        }
+        // The sequential run records no overlap activity at all.
+        assert_eq!(base.metrics.decode_ahead_hits, 0);
+        assert_eq!(base.metrics.overlap_stall_ns, 0);
+    }
+
+    #[test]
+    fn overlapped_ring_scratch_is_reused_across_stages() {
+        // Ring arenas must survive stage boundaries like the sequential
+        // pool: growth is bounded by stages x depth, not by group count.
+        let c = generators::qft(12);
+        let mut config = cfg(6, 2);
+        config.pipeline = PipelineConfig::sequential();
+        config.overlap = true;
+        config.pipeline_depth = 2;
+        let r = BmqSim::new(config).run(&c, false).unwrap();
+        assert!(r.metrics.scratch_grows >= 1);
+        assert!(
+            r.metrics.scratch_grows <= 2 * r.stages as u64,
+            "ring scratch grew {} times over {} stages",
+            r.metrics.scratch_grows,
+            r.stages
+        );
+        assert!(r.metrics.groups_processed >= 2 * r.metrics.scratch_grows);
+    }
+
+    #[test]
+    fn overlapped_spill_run_matches_sequential_and_reorders() {
+        // Overlap + budget + spill-aware scheduling together: state must
+        // stay identical to the plain sequential engine, and under a tight
+        // budget later stages find a mixed-residency block set, so the
+        // spill-aware planner actually moves groups forward.
+        let dir = std::env::temp_dir().join("bmqsim-engine-overlap-spill");
+        let c = generators::build("qaoa", 12, 5).unwrap();
+        let ideal = {
+            let mut config = cfg(6, 2);
+            config.codec = Codec::raw();
+            config.pipeline = PipelineConfig::sequential();
+            BmqSim::new(config).run(&c, true).unwrap()
+        };
+        let mut config = cfg(6, 2);
+        config.codec = Codec::raw();
+        config.memory_budget = Some(10 * 1024);
+        config.spill_dir = Some(dir);
+        config.pipeline = PipelineConfig::new(1, 2);
+        config.overlap = true;
+        config.pipeline_depth = 2;
+        let r = BmqSim::new(config).run(&c, true).unwrap();
+        assert!(r.mem.spill_events > 0, "budget never engaged");
+        assert!(r.mem.peak_primary_bytes <= 10 * 1024);
+        let f = r.state.as_ref().unwrap().fidelity(ideal.state.as_ref().unwrap());
+        assert!(f > 1.0 - 1e-12, "overlap+spill changed the state: {f}");
+        assert!(
+            r.metrics.groups_reordered > 0,
+            "spill-aware scheduling never reordered a group"
+        );
+    }
+
+    #[test]
+    fn spill_aware_off_keeps_natural_order() {
+        let dir = std::env::temp_dir().join("bmqsim-engine-no-spill-aware");
+        let c = generators::build("qaoa", 11, 5).unwrap();
+        let mut config = cfg(6, 2);
+        config.codec = Codec::raw(); // incompressible: the budget must bite
+        config.memory_budget = Some(8 * 1024);
+        config.spill_dir = Some(dir);
+        config.spill_aware = false;
+        let r = BmqSim::new(config).run(&c, false).unwrap();
+        assert!(r.mem.spill_events > 0);
+        assert_eq!(r.metrics.groups_reordered, 0);
     }
 
     #[test]

@@ -73,6 +73,28 @@ pub struct SimConfig {
     /// background writer (the pre-refactor behaviour, minus the
     /// I/O-under-lock; baseline knob for the fig09 concurrency study).
     pub sync_spill: bool,
+    /// Overlapped group chains: run each worker's fetch+decompress,
+    /// gate-apply, and compress+store phases on a three-thread software
+    /// pipeline over a ring of scratch slots, so codec time and store I/O
+    /// are concealed behind gate application (§4.2's "pipeline"
+    /// contribution). Off = the strictly sequential per-worker chain
+    /// (identical numbers to the pre-overlap engine; the right call for
+    /// tiny groups, where handshake overhead exceeds codec time).
+    pub overlap: bool,
+    /// Scratch slots per worker ring when `overlap` is on: how many group
+    /// chains may be in flight per worker. 2 = classic double buffering;
+    /// 1 degenerates to a handoff-serialized chain (parity testing).
+    pub pipeline_depth: usize,
+    /// Spill-aware scheduling: reorder each stage's groups so groups
+    /// whose blocks are already primary-resident run first (the store
+    /// knows — [`crate::memory::BlockStore::residency_rank`]), shrinking
+    /// the prefetcher's cold-start window. No-op without a memory budget.
+    pub spill_aware: bool,
+    /// Adapt `prefetch_depth` per stage (AIMD on hit/miss ratio and spill
+    /// stall) instead of holding it fixed; `prefetch_depth` is then only
+    /// the starting depth. The CLI enables this whenever
+    /// `--prefetch-depth` is not given explicitly.
+    pub prefetch_auto: bool,
 }
 
 impl Default for SimConfig {
@@ -94,6 +116,10 @@ impl Default for SimConfig {
             store_shards: 8,
             prefetch_depth: 4,
             sync_spill: false,
+            overlap: false,
+            pipeline_depth: 2,
+            spill_aware: true,
+            prefetch_auto: false,
         }
     }
 }
@@ -112,6 +138,7 @@ impl SimConfig {
             shards: self.store_shards.max(1),
             prefetch_depth: self.prefetch_depth,
             async_spill: !self.sync_spill,
+            auto_depth: self.prefetch_auto,
             ..crate::memory::StoreOptions::default()
         }
     }
@@ -148,9 +175,16 @@ mod tests {
         assert_eq!(c.store_shards, 8);
         assert_eq!(c.prefetch_depth, 4);
         assert!(!c.sync_spill);
+        assert!(!c.overlap, "overlap is opt-in");
+        assert_eq!(c.pipeline_depth, 2);
+        assert!(c.spill_aware);
+        assert!(!c.prefetch_auto);
         let opts = c.store_options();
         assert_eq!(opts.shards, 8);
         assert!(opts.async_spill);
+        assert!(!opts.auto_depth);
+        let auto = SimConfig { prefetch_auto: true, ..SimConfig::default() };
+        assert!(auto.store_options().auto_depth);
     }
 
     #[test]

@@ -13,12 +13,15 @@
 //! (parallel block updates, still per-gate compression, no pipelining —
 //! the paper notes its GPU version doesn't overlap transfers either).
 
-use super::{GateApplier, NativeApplier, SimConfig, SimResult};
+use super::{plan_group_order, GateApplier, NativeApplier, SimConfig, SimResult};
 use crate::circuit::Circuit;
 use crate::compress::CodecScratch;
 use crate::memory::{BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
-use crate::pipeline::{run_items, PipelineConfig, Scratch, ScratchPool};
+use crate::pipeline::{
+    run_items, run_items_overlapped, OverlapStats, PipelineConfig, RingPool, Scratch,
+    ScratchPool, WorkerCtx,
+};
 use crate::state::{BlockLayout, StateVector};
 use crate::types::{Error, Result};
 use std::sync::atomic::Ordering;
@@ -76,11 +79,18 @@ impl<'a> Sc19Sim<'a> {
         // far more frequent chains stay allocation-free in steady state.)
         // No fusion here — per-gate (de)compression is what SC19 *is* —
         // but the plane sweep itself may run worker-parallel
-        // (`apply_workers`), the paper's GPU-thread analogue.
+        // (`apply_workers`), and with `overlap` the per-gate chain gets
+        // the same decode/apply/encode phase pipeline as BMQSIM (the
+        // per-gate frequency problem remains; only codec/transfer time is
+        // concealed).
         let pipe = PipelineConfig::new(1, self.workers);
-        let pool = ScratchPool::new(pipe.workers());
+        let overlap = self.config.overlap;
+        let pool = (!overlap).then(|| ScratchPool::new(pipe.workers()));
+        let rings = overlap.then(|| RingPool::new(pipe.workers(), self.config.pipeline_depth));
+        let ostats = OverlapStats::default();
         let sweep_workers =
             if self.applier.supports_fusion() { self.config.apply_workers.max(1) } else { 1 };
+        let mut ids: Vec<usize> = Vec::new();
         for gate in &circuit.gates {
             let mut globals: Vec<usize> =
                 gate.targets().iter().copied().filter(|&q| q >= b).collect();
@@ -91,25 +101,31 @@ impl<'a> Sc19Sim<'a> {
                 gate.targets().iter().map(|&q| schedule.buffer_bit(q)).collect();
             let block_len = layout.block_len();
 
-            // Publish this gate's group schedule (per-gate sweeps are what
-            // SC19 *is*, so the schedule horizon is one gate).
+            // Spill-aware scheduling, then publish this gate's group
+            // schedule in processing order (per-gate sweeps are what SC19
+            // *is*, so the schedule horizon is one gate).
+            let (group_order, moved) =
+                plan_group_order(&schedule, &store, self.config.spill_aware, &mut ids);
+            metrics.groups_reordered.fetch_add(moved, Ordering::Relaxed);
             {
                 let mut order: Vec<usize> =
                     Vec::with_capacity(schedule.num_groups() * schedule.blocks_per_group());
-                let mut ids: Vec<usize> = Vec::new();
-                for g in 0..schedule.num_groups() {
+                for &g in &group_order {
                     schedule.group_blocks_into(g, &mut ids);
                     order.extend_from_slice(&ids);
                 }
                 store.publish_schedule(&order, schedule.blocks_per_group());
             }
 
-            run_items::<Error, _>(pipe, schedule.num_groups(), &pool, |ctx, gidx| {
+            // The chain's three phases, shared verbatim by the sequential
+            // and overlapped drivers (byte-identical output by structure).
+            let decode = |ctx: &mut WorkerCtx<'_>, i: usize| -> Result<()> {
+                let gidx = group_order[i];
                 let glen = schedule.group_len();
                 ctx.scratch.ensure_planes(glen);
                 schedule.group_blocks_into(gidx, &mut ctx.scratch.block_ids);
-                let Scratch { re, im, block_ids, payloads, codec: cs, .. } = &mut *ctx.scratch;
-
+                let Scratch { re, im, block_ids, payloads, codec: cs, .. } =
+                    &mut *ctx.scratch;
                 metrics.time(Phase::Fetch, || -> Result<()> {
                     payloads.clear();
                     for &id in block_ids.iter() {
@@ -117,6 +133,7 @@ impl<'a> Sc19Sim<'a> {
                     }
                     Ok(())
                 })?;
+                store.group_fetched();
                 metrics.time(Phase::Decompress, || -> Result<()> {
                     for (slot, p) in payloads.iter().enumerate() {
                         let dst = slot * block_len..(slot + 1) * block_len;
@@ -125,7 +142,10 @@ impl<'a> Sc19Sim<'a> {
                         metrics.decompressions.fetch_add(2, Ordering::Relaxed);
                     }
                     Ok(())
-                })?;
+                })
+            };
+            let apply = |ctx: &mut WorkerCtx<'_>, _i: usize| -> Result<()> {
+                let Scratch { re, im, .. } = &mut *ctx.scratch;
                 metrics.time(Phase::Apply, || -> Result<()> {
                     if sweep_workers > 1 {
                         crate::gates::fused::apply_gate_parallel(
@@ -139,7 +159,11 @@ impl<'a> Sc19Sim<'a> {
                     } else {
                         self.applier.apply(re, im, gate, &bits)
                     }
-                })?;
+                })
+            };
+            let encode = |ctx: &mut WorkerCtx<'_>, _i: usize| -> Result<()> {
+                let Scratch { re, im, block_ids, payloads, codec: cs, .. } =
+                    &mut *ctx.scratch;
                 metrics.time(Phase::Compress, || -> Result<()> {
                     for (slot, p) in payloads.iter_mut().enumerate() {
                         let src = slot * block_len..(slot + 1) * block_len;
@@ -163,12 +187,33 @@ impl<'a> Sc19Sim<'a> {
                 })?;
                 store.group_completed();
                 Ok(())
-            })?;
+            };
+
+            if let Some(pool) = &pool {
+                run_items::<Error, _>(pipe, schedule.num_groups(), pool, |ctx, i| {
+                    decode(&mut *ctx, i)?;
+                    apply(&mut *ctx, i)?;
+                    encode(&mut *ctx, i)
+                })?;
+            } else {
+                run_items_overlapped::<Error, _, _, _>(
+                    pipe,
+                    schedule.num_groups(),
+                    rings.as_ref().expect("overlap on but no ring pool"),
+                    &ostats,
+                    &decode,
+                    &apply,
+                    &encode,
+                )?;
+            }
             metrics.gates_applied.fetch_add(1, Ordering::Relaxed);
             // One full state sweep per gate — the frequency problem.
             metrics.plane_sweeps.fetch_add(1, Ordering::Relaxed);
         }
-        metrics.scratch_grows.store(pool.total_plane_grows(), Ordering::Relaxed);
+        let grows = pool.as_ref().map_or(0, |p| p.total_plane_grows())
+            + rings.as_ref().map_or(0, |r| r.total_plane_grows());
+        metrics.scratch_grows.store(grows, Ordering::Relaxed);
+        metrics.absorb_overlap(&ostats);
         store.flush()?;
 
         let wall = t0.elapsed().as_secs_f64();
@@ -283,6 +328,27 @@ mod tests {
             let f = r.state.as_ref().unwrap().fidelity(base.state.as_ref().unwrap());
             assert!(f > 1.0 - 1e-12, "apply_workers={apply_workers}: {f}");
             assert_eq!(r.metrics.plane_sweeps, c.len() as u64);
+        }
+    }
+
+    #[test]
+    fn overlapped_per_gate_chain_matches_sequential() {
+        let c = generators::qft(8);
+        let mut config = SimConfig { block_qubits: 4, ..SimConfig::default() };
+        config.codec = Codec::raw();
+        let base = Sc19Sim::new(config.clone(), 1).run(&c, true).unwrap();
+        assert_eq!(base.metrics.decode_ahead_hits, 0);
+        for (depth, workers) in [(1usize, 1usize), (2, 1), (2, 4)] {
+            let mut oc = config.clone();
+            oc.overlap = true;
+            oc.pipeline_depth = depth;
+            let r = Sc19Sim::new(oc, workers).run(&c, true).unwrap();
+            let f = r.state.as_ref().unwrap().fidelity(base.state.as_ref().unwrap());
+            assert!(f > 1.0 - 1e-12, "depth={depth} workers={workers}: {f}");
+            // Same per-gate frequency signature, overlapped or not.
+            assert_eq!(r.metrics.plane_sweeps, c.len() as u64);
+            assert_eq!(r.metrics.decompressions, base.metrics.decompressions);
+            assert!(r.metrics.decode_ahead_hits > 0 || r.metrics.overlap_stall_ns > 0);
         }
     }
 

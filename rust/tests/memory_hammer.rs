@@ -101,15 +101,25 @@ fn hammer(tag: &str, opts: StoreOptions, budget: usize, threads: usize, rounds: 
 
 #[test]
 fn hammer_sharded_async_store() {
-    let opts =
-        StoreOptions { shards: 8, prefetch_depth: 0, async_spill: true, write_back_cap: 16 };
+    let opts = StoreOptions {
+        shards: 8,
+        prefetch_depth: 0,
+        async_spill: true,
+        write_back_cap: 16,
+        ..Default::default()
+    };
     hammer("async", opts, 4096, 8, 60);
 }
 
 #[test]
 fn hammer_single_shard_sync_store() {
-    let opts =
-        StoreOptions { shards: 1, prefetch_depth: 0, async_spill: false, write_back_cap: 16 };
+    let opts = StoreOptions {
+        shards: 1,
+        prefetch_depth: 0,
+        async_spill: false,
+        write_back_cap: 16,
+        ..Default::default()
+    };
     hammer("sync", opts, 4096, 8, 60);
 }
 
@@ -118,8 +128,13 @@ fn hammer_prefetcher_races_with_churn() {
     // A published schedule keeps the prefetcher promoting blocks 0..35
     // while 4 threads continuously take/rewrite them: exercises the
     // generation checks (stale reads must be discarded, never installed).
-    let opts =
-        StoreOptions { shards: 4, prefetch_depth: 8, async_spill: true, write_back_cap: 8 };
+    let opts = StoreOptions {
+        shards: 4,
+        prefetch_depth: 8,
+        async_spill: true,
+        write_back_cap: 8,
+        ..Default::default()
+    };
     let store =
         Arc::new(BlockStore::with_options(Some(2048), Some(spill_dir("pf")), opts).unwrap());
     let threads = 4usize;

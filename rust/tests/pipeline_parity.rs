@@ -1,0 +1,169 @@
+//! Parity property tests for the overlapped group-chain pipeline (ISSUE 4):
+//! across {pipeline_depth 1/2/3} × {workers 1/4} × {sync/async spill}, the
+//! three-phase decode → apply → encode pipeline must produce terminal
+//! compressed blocks that are **byte-identical** to the sequential chain,
+//! with identical fidelity — overlap may only move *when* work happens,
+//! never *what* it computes. Also exercises spill-aware scheduling and the
+//! prefetch auto-depth controller end-to-end through the engine.
+//!
+//! CI runs this file with `--test-threads` pinned so the race-sensitive
+//! configurations (overlap + async spill + prefetcher churn) actually get
+//! cores to interleave on instead of being serialized by test-runner
+//! oversubscription.
+
+use bmqsim::circuit::{generators, Circuit};
+use bmqsim::memory::BlockPayload;
+use bmqsim::pipeline::PipelineConfig;
+use bmqsim::sim::{BmqSim, SimConfig};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bmqsim-parity-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn base_cfg(block_qubits: usize) -> SimConfig {
+    SimConfig { block_qubits, inner_size: 2, ..SimConfig::default() }
+}
+
+/// Run to completion and read back every terminal compressed block.
+fn terminal_blocks(config: SimConfig, c: &Circuit) -> Vec<BlockPayload> {
+    let (store, layout) = BmqSim::new(config).run_keeping_store(c).unwrap();
+    (0..layout.num_blocks()).map(|id| store.get(id).unwrap()).collect()
+}
+
+#[test]
+fn pipelined_chain_is_byte_identical_across_depths_workers_and_spill_modes() {
+    // Lossy default codec on purpose: parity must hold bit-for-bit even
+    // when the codec itself is lossy (determinism, not accuracy).
+    for (name, n, bq, seed) in [("qaoa", 10usize, 5usize, 3u64), ("qft", 9, 4, 0)] {
+        let c = generators::build(name, n, seed).unwrap();
+        let mut seq = base_cfg(bq);
+        seq.pipeline = PipelineConfig::sequential();
+        let reference = terminal_blocks(seq, &c);
+
+        // Squeeze the budget to a quarter of the compressed peak so the
+        // spilled configurations genuinely exercise both spill modes.
+        let probe = BmqSim::new(base_cfg(bq)).run(&c, false).unwrap();
+        let budget = (probe.peak_bytes / 4).max(512);
+
+        for depth in [1usize, 2, 3] {
+            for workers in [1usize, 4] {
+                for sync_spill in [false, true] {
+                    let mut config = base_cfg(bq);
+                    config.pipeline = PipelineConfig::new(1, workers);
+                    config.overlap = true;
+                    config.pipeline_depth = depth;
+                    config.sync_spill = sync_spill;
+                    config.memory_budget = Some(budget);
+                    config.spill_dir = Some(tmpdir(name));
+                    let got = terminal_blocks(config, &c);
+                    assert_eq!(got.len(), reference.len());
+                    for (id, (a, b)) in reference.iter().zip(&got).enumerate() {
+                        assert!(
+                            a.re == b.re && a.im == b.im,
+                            "{name}: block {id} bytes differ \
+                             (depth={depth} workers={workers} sync_spill={sync_spill})"
+                        );
+                    }
+                }
+            }
+        }
+
+        // The squeezed budget actually spilled (otherwise the sync/async
+        // axis above tested nothing).
+        let mut spilled = base_cfg(bq);
+        spilled.overlap = true;
+        spilled.memory_budget = Some(budget);
+        spilled.spill_dir = Some(tmpdir(name));
+        let r = BmqSim::new(spilled).run(&c, false).unwrap();
+        assert!(r.mem.spill_events > 0, "{name}: budget {budget} never spilled");
+    }
+}
+
+#[test]
+fn pipelined_fidelity_matches_sequential_exactly() {
+    let c = generators::build("ising", 10, 11).unwrap();
+    let mut seq = base_cfg(5);
+    seq.pipeline = PipelineConfig::sequential();
+    let base = BmqSim::new(seq).run(&c, true).unwrap();
+    let mut ovl = base_cfg(5);
+    ovl.pipeline = PipelineConfig::new(1, 4);
+    ovl.overlap = true;
+    ovl.pipeline_depth = 2;
+    let r = BmqSim::new(ovl).run(&c, true).unwrap();
+    let (sa, oa) = (base.state.as_ref().unwrap(), r.state.as_ref().unwrap());
+    assert_eq!(sa.re, oa.re, "real planes differ");
+    assert_eq!(sa.im, oa.im, "imaginary planes differ");
+    let f = oa.fidelity_normalized(sa);
+    assert!(f > 1.0 - 1e-15, "fidelity {f}");
+}
+
+#[test]
+fn spill_aware_ordering_keeps_state_identical_and_reorders_under_budget() {
+    // Belady-rank consistency, end to end: with spill-aware scheduling ON
+    // the engine publishes the REORDERED block order, so eviction ranks
+    // and the prefetch window follow the true processing order — any
+    // inconsistency shows up as corrupted terminal bytes or a store error.
+    let c = generators::build("qaoa", 12, 5).unwrap();
+    let mut seq = base_cfg(6);
+    seq.pipeline = PipelineConfig::sequential();
+    seq.spill_aware = false;
+    let reference = terminal_blocks(seq, &c);
+
+    let probe = BmqSim::new(base_cfg(6)).run(&c, false).unwrap();
+    let budget = (probe.peak_bytes / 4).max(512);
+    for spill_aware in [false, true] {
+        let mut config = base_cfg(6);
+        config.pipeline = PipelineConfig::new(1, 2);
+        config.overlap = true;
+        config.memory_budget = Some(budget);
+        config.spill_dir = Some(tmpdir("order"));
+        config.spill_aware = spill_aware;
+        let got = terminal_blocks(config.clone(), &c);
+        for (id, (a, b)) in reference.iter().zip(&got).enumerate() {
+            assert!(
+                a.re == b.re && a.im == b.im,
+                "block {id} differs (spill_aware={spill_aware})"
+            );
+        }
+        let r = BmqSim::new(config).run(&c, false).unwrap();
+        if spill_aware {
+            assert!(
+                r.metrics.groups_reordered > 0,
+                "spill-aware scheduling never promoted a resident group"
+            );
+        } else {
+            assert_eq!(r.metrics.groups_reordered, 0);
+        }
+    }
+}
+
+#[test]
+fn prefetch_auto_depth_adapts_through_the_engine() {
+    // No --prefetch-depth analogue: prefetch_auto starts at the default
+    // depth and must land somewhere in the controller's [1, 32] band
+    // while leaving results untouched.
+    let c = generators::build("qft", 11, 1).unwrap();
+    let mut seq = base_cfg(5);
+    seq.pipeline = PipelineConfig::sequential();
+    let reference = terminal_blocks(seq, &c);
+
+    let probe = BmqSim::new(base_cfg(5)).run(&c, false).unwrap();
+    let mut config = base_cfg(5);
+    config.overlap = true;
+    config.prefetch_auto = true;
+    config.memory_budget = Some((probe.peak_bytes / 4).max(512));
+    config.spill_dir = Some(tmpdir("auto"));
+    let r = BmqSim::new(config.clone()).run(&c, false).unwrap();
+    assert!(
+        (1usize..=32).contains(&r.mem.prefetch_depth),
+        "auto depth {} outside AIMD band",
+        r.mem.prefetch_depth
+    );
+    let got = terminal_blocks(config, &c);
+    for (id, (a, b)) in reference.iter().zip(&got).enumerate() {
+        assert!(a.re == b.re && a.im == b.im, "block {id} differs under auto-depth");
+    }
+}
