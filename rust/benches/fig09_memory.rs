@@ -31,15 +31,7 @@ fn main() {
         fields = f;
         Ok(vec![t])
     });
-    if !fields.is_empty() {
-        let doc = bench_json::obj(&fields);
-        match std::fs::write("BENCH_memory.json", doc + "\n") {
-            Ok(()) => println!("wrote BENCH_memory.json"),
-            Err(e) => {
-                eprintln!("could not write BENCH_memory.json: {e}");
-                std::process::exit(1);
-            }
-        }
-    }
+    bench_json::require_fields("BENCH_memory.json", &fields);
+    bench_json::write_bench_file("BENCH_memory.json", &fields);
     println!("paper shape: cat/bv/ghz reduce 400-700x; cc ~15x; qft ~10x.");
 }

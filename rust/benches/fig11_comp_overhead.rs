@@ -21,7 +21,8 @@ fn main() {
     });
 
     // Overhead concealment: sequential vs pipelined chains at budget =
-    // peak/4 with >= 4 concurrent workers (ISSUE 4 acceptance geometry).
+    // peak/4 with >= 4 concurrent workers (ISSUE 4 acceptance geometry),
+    // now driven through the persistent phase pool.
     let (n, b, workers, depth) = if smoke { (12, 8, 4, 2) } else { (16, 12, 4, 2) };
     let mut fields: Vec<(String, String)> = Vec::new();
     bench::print_experiment("Fig 11 addendum: sequential vs pipelined chains", || {
@@ -29,19 +30,22 @@ fn main() {
         fields = f;
         Ok(vec![t])
     });
-    if fields.is_empty() {
-        // The study itself failed (print_experiment already reported why);
-        // an acceptance artifact must never go missing silently.
-        eprintln!("overlap study failed; BENCH_overlap.json not written");
-        std::process::exit(1);
-    }
-    let doc = bench_json::obj(&fields);
-    match std::fs::write("BENCH_overlap.json", doc + "\n") {
-        Ok(()) => println!("wrote BENCH_overlap.json"),
-        Err(e) => {
-            eprintln!("could not write BENCH_overlap.json: {e}");
-            std::process::exit(1);
-        }
-    }
+    bench_json::require_fields("BENCH_overlap.json", &fields);
+
+    // Auto-enable crossover: where pipelining breaks even over the group
+    // sizes the block-size knob produces, and which side OverlapMode::Auto
+    // picked at each geometry.
+    let (auto_n, auto_blocks): (usize, Vec<usize>) =
+        if smoke { (12, vec![4, 6, 8]) } else { (16, vec![6, 9, 12, 14]) };
+    let mut auto_fields: Vec<(String, String)> = Vec::new();
+    bench::print_experiment("Fig 11 addendum: overlap auto-enable crossover", || {
+        let (t, f) = bench::fig11_auto_enable("qaoa", auto_n, &auto_blocks)?;
+        auto_fields = f;
+        Ok(vec![t])
+    });
+    bench_json::require_fields("BENCH_overlap.json", &auto_fields);
+    fields.push(("auto_enable".to_string(), bench_json::obj(&auto_fields)));
+
+    bench_json::write_bench_file("BENCH_overlap.json", &fields);
     println!("paper shape: overhead minimal; on high-ratio circuits (cat/bv/ghz)\ncompression WINS (smaller transfers) — paper reports 9% average speedup.\npipelined chains must be byte-identical while concealing codec time.");
 }

@@ -1,8 +1,12 @@
 //! Fig. 12 — impact of pipeline stream count (1/2/4/8), with and without
 //! the overlapped (decode/apply/encode) chain pipeline layered on top.
+//! Emits machine-readable `BENCH_streams.json` (every wall time plus the
+//! per-stream-count overlapped-vs-sequential speedup geomeans) for the
+//! per-PR perf trajectory.
 //!
 //! `BENCH_SMOKE=1` shrinks the sweep so CI exercises it in seconds.
 use bmqsim::bench_harness as bench;
+use bmqsim::bench_harness::bench_json;
 
 fn main() {
     let smoke = bench::bench_smoke();
@@ -11,11 +15,14 @@ fn main() {
     } else {
         (vec!["qft", "qaoa", "ising", "qsvm"], 18)
     };
+    let mut fields: Vec<(String, String)> = Vec::new();
     bench::print_experiment("Fig 12: stream count sweep", || {
-        Ok(vec![
-            bench::fig12_streams(&algos, n, false)?,
-            bench::fig12_streams(&algos, n, true)?,
-        ])
+        let (tables, f) = bench::fig12_streams_study(&algos, n)?;
+        fields = f;
+        Ok(tables)
     });
+    bench_json::require_fields("BENCH_streams.json", &fields);
+    fields.push(("smoke".to_string(), format!("{smoke}")));
+    bench_json::write_bench_file("BENCH_streams.json", &fields);
     println!("paper shape: best around 2 streams; 8 streams loses to context overhead.\noverlapped rows conceal codec time inside each stream's chain.");
 }

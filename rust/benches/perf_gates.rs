@@ -21,7 +21,7 @@ use bmqsim::types::SplitMix64;
 
 /// Stage-shaped deep circuit on an `n`-qubit group plane: a dense body of
 /// block-local gates (low qubits) plus per-layer inner-global traffic on
-/// the top 4 bits — the workload `BmqSim::process_group` actually sees.
+/// the top 4 bits — the workload the engine group chain actually sees.
 fn deep_stage_circuit(n: usize, layers: usize, seed: u64) -> Circuit {
     let mut rng = SplitMix64::new(seed);
     let mut c = Circuit::new(n, "deep_stage");
@@ -156,24 +156,21 @@ fn main() {
     let qft = generators::qft(n);
     let qft_res = run_case("qft", &qft, DEFAULT_TILE_BITS, par_workers, reps);
 
-    let doc = bench_json::obj(&[
-        ("bench".into(), "\"perf_gates\"".into()),
-        ("smoke".into(), format!("{smoke}")),
-        ("deep_stage".into(), deep_res.json.clone()),
-        ("qft".into(), qft_res.json.clone()),
-        (
-            "speedup".into(),
-            bench_json::num(deep_res.headline_speedup),
-        ),
-        ("fidelity".into(), format!("{:.14}", deep_res.fidelity.min(qft_res.fidelity))),
-    ]);
-    match std::fs::write("BENCH_gates.json", doc + "\n") {
-        Ok(()) => println!("\nwrote BENCH_gates.json"),
-        Err(e) => {
-            eprintln!("\ncould not write BENCH_gates.json: {e}");
-            std::process::exit(1);
-        }
-    }
+    println!();
+    bench_json::write_bench_file(
+        "BENCH_gates.json",
+        &[
+            ("bench".into(), "\"perf_gates\"".into()),
+            ("smoke".into(), format!("{smoke}")),
+            ("deep_stage".into(), deep_res.json.clone()),
+            ("qft".into(), qft_res.json.clone()),
+            (
+                "speedup".into(),
+                bench_json::num(deep_res.headline_speedup),
+            ),
+            ("fidelity".into(), format!("{:.14}", deep_res.fidelity.min(qft_res.fidelity))),
+        ],
+    );
     if deep_res.headline_speedup < 2.0 {
         eprintln!(
             "WARNING: fused-batched speedup {:.2}x below the 2x target",

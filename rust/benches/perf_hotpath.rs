@@ -9,9 +9,9 @@
 //! path) and the zero-copy path (`decompress_into_with` + scratch arena),
 //! so the win of the `*_into` APIs is visible where it matters. The
 //! group-chain section runs the full fetch → decompress → apply →
-//! compress → store cycle the way `BmqSim::process_group` does.
+//! compress → store cycle the way the engine group chain does.
 
-use bmqsim::bench_harness::bench_json::{num as jnum, obj as json_obj};
+use bmqsim::bench_harness::bench_json::{num as jnum, obj as json_obj, write_bench_file};
 use bmqsim::bench_harness::{bench_smoke, time_it};
 use bmqsim::circuit::{Gate, GateKind};
 use bmqsim::compress::{Codec, CodecScratch};
@@ -145,7 +145,7 @@ fn main() {
     }
 
     // ---- Full group-chain benchmark: fetch → decompress → apply →
-    // compress → store, the shape of BmqSim::process_group. ----
+    // compress → store, the shape of the engine group chain. ----
     let (cn, cb) = if smoke { (16, 12) } else { (20, 16) };
     println!("\n== group chain (n={cn}, b={cb}: 16 blocks, groups of 4, glen=2^{}) ==", cb + 2);
     let layout = BlockLayout::new(cn, cb).unwrap();
@@ -267,19 +267,16 @@ fn main() {
         ("groups".into(), format!("{}", schedule.num_groups())),
     ]);
 
-    // ---- Machine-readable output ----
-    let doc = json_obj(&[
-        ("bench".into(), "\"perf_hotpath\"".into()),
-        ("smoke".into(), format!("{smoke}")),
-        ("gate_kernels".into(), json_obj(&json_kernels)),
-        ("codecs".into(), json_obj(&json_codecs)),
-        ("group_chain".into(), json_chain),
-    ]);
-    match std::fs::write("BENCH_hotpath.json", doc + "\n") {
-        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
-        Err(e) => {
-            eprintln!("\ncould not write BENCH_hotpath.json: {e}");
-            std::process::exit(1);
-        }
-    }
+    // ---- Machine-readable output (schema-stamped) ----
+    println!();
+    write_bench_file(
+        "BENCH_hotpath.json",
+        &[
+            ("bench".into(), "\"perf_hotpath\"".into()),
+            ("smoke".into(), format!("{smoke}")),
+            ("gate_kernels".into(), json_obj(&json_kernels)),
+            ("codecs".into(), json_obj(&json_codecs)),
+            ("group_chain".into(), json_chain),
+        ],
+    );
 }

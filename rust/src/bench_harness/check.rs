@@ -1,0 +1,362 @@
+//! CI bench-regression gate over the `BENCH_*.json` trajectory.
+//!
+//! Every CI run emits machine-readable bench artifacts, but until this
+//! gate nothing ever *compared* them — the perf trajectory was invisible.
+//! Following SC19's and MEMQSim's observation that compression-overhead
+//! **ratios** (not absolutes) are the quantity to track, the gate pins
+//! only ratio-shaped metrics — into-vs-alloc speedup, fused-vs-unfused
+//! throughput ratio, spill fraction, pipeline occupancy — which are stable
+//! across runner hardware, and ignores the noisy absolute numbers
+//! (GB/s, wall seconds) entirely.
+//!
+//! Committed baselines live in `rust/bench_baselines/`. A fresh smoke-mode
+//! artifact regressing a gated metric by more than [`DEFAULT_TOLERANCE`]
+//! fails the build (`bin/bench_check` exits non-zero). To re-pin after an
+//! intentional perf change, run the smokes and then
+//! `BENCH_BASELINE_REFRESH=1 cargo run --release --bin bench_check`.
+
+use crate::runtime::Json;
+use std::path::{Path, PathBuf};
+
+/// Maximum tolerated relative regression on a gated metric (smoke mode).
+pub const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// What "worse" means for a gated metric. All current gates are
+/// `HigherBetter` floors: each metric is a ratio whose collapse means a
+/// subsystem stopped doing its job (the into-path stopped beating the
+/// allocating path, fusion stopped paying, the spill machinery stopped
+/// engaging, the pipeline stopped overlapping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Fail when `fresh < baseline × (1 − tolerance)`.
+    HigherBetter,
+    /// Fail when `|fresh − baseline| > |baseline| × tolerance`.
+    TwoSided,
+}
+
+/// One gated metric: which artifact, where in it, and which direction
+/// counts as a regression.
+pub struct Rule {
+    pub file: &'static str,
+    pub path: &'static [&'static str],
+    pub direction: Direction,
+}
+
+/// The gated ratio metrics (ISSUE 5): one stable ratio per artifact.
+/// `BENCH_streams.json` is stamped and archived but not gated — its
+/// speedup geomean is too close to 1 in smoke mode to pin.
+pub const RULES: &[Rule] = &[
+    Rule {
+        file: "BENCH_hotpath.json",
+        path: &["group_chain", "speedup"],
+        direction: Direction::HigherBetter,
+    },
+    Rule {
+        file: "BENCH_gates.json",
+        path: &["speedup"],
+        direction: Direction::HigherBetter,
+    },
+    Rule {
+        file: "BENCH_memory.json",
+        path: &["spill_fraction"],
+        direction: Direction::HigherBetter,
+    },
+    Rule {
+        file: "BENCH_overlap.json",
+        path: &["pipeline_occupancy"],
+        direction: Direction::HigherBetter,
+    },
+];
+
+/// Outcome for one gated metric.
+pub struct Finding {
+    pub file: String,
+    pub metric: String,
+    pub baseline: f64,
+    pub fresh: f64,
+    /// Relative change, `(fresh − baseline) / |baseline|`.
+    pub rel: f64,
+    pub failed: bool,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} {}: baseline {:.4}, fresh {:.4} ({:+.1}%) — {}",
+            self.file,
+            self.metric,
+            self.baseline,
+            self.fresh,
+            100.0 * self.rel,
+            if self.failed { "REGRESSED" } else { "ok" }
+        )
+    }
+}
+
+/// Gate configuration: where the fresh artifacts and baselines live,
+/// the tolerance, and which fresh files MUST be present (a required file
+/// the bench failed to emit is itself a failure).
+pub struct CheckConfig {
+    pub fresh_dir: PathBuf,
+    pub baseline_dir: PathBuf,
+    pub tolerance: f64,
+    pub required: Vec<String>,
+}
+
+impl CheckConfig {
+    pub fn new(fresh_dir: impl Into<PathBuf>, baseline_dir: impl Into<PathBuf>) -> Self {
+        CheckConfig {
+            fresh_dir: fresh_dir.into(),
+            baseline_dir: baseline_dir.into(),
+            tolerance: DEFAULT_TOLERANCE,
+            required: Vec::new(),
+        }
+    }
+}
+
+/// Gate result: per-metric findings plus advisory notes (skipped files,
+/// missing baselines).
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub notes: Vec<String>,
+    pub checked_files: usize,
+}
+
+impl Report {
+    pub fn failures(&self) -> usize {
+        self.findings.iter().filter(|f| f.failed).count()
+    }
+}
+
+fn load_json(path: &Path) -> std::result::Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("cannot parse {}: {e}", path.display()))
+}
+
+fn lookup(doc: &Json, path: &[&str]) -> Option<f64> {
+    let mut cur = doc;
+    for key in path {
+        cur = cur.get(key)?;
+    }
+    cur.as_f64()
+}
+
+/// The gate's core comparison, one place for both directions so each can
+/// be unit-tested even while RULES only exercises one of them.
+pub fn regressed(direction: Direction, baseline: f64, fresh: f64, tolerance: f64) -> bool {
+    match direction {
+        Direction::HigherBetter => fresh < baseline * (1.0 - tolerance),
+        Direction::TwoSided => ((fresh - baseline) / baseline.abs()).abs() > tolerance,
+    }
+}
+
+/// Run the gate. Fresh files that don't exist are skipped (each CI matrix
+/// job only produces its own artifact) unless listed in `required`; a
+/// gated file without a committed baseline is an error pointing at the
+/// refresh workflow.
+pub fn run(cfg: &CheckConfig) -> std::result::Result<Report, String> {
+    let mut findings = Vec::new();
+    let mut notes = Vec::new();
+    let mut checked = std::collections::BTreeSet::new();
+
+    for required in &cfg.required {
+        if !cfg.fresh_dir.join(required).is_file() {
+            return Err(format!(
+                "required bench artifact {required} was not emitted (did the bench run?)"
+            ));
+        }
+        if !RULES.iter().any(|r| r.file == required.as_str()) {
+            notes.push(format!("{required}: present but carries no gated metrics"));
+        }
+    }
+
+    for rule in RULES {
+        let fresh_path = cfg.fresh_dir.join(rule.file);
+        if !fresh_path.is_file() {
+            continue; // not produced by this job
+        }
+        let baseline_path = cfg.baseline_dir.join(rule.file);
+        if !baseline_path.is_file() {
+            return Err(format!(
+                "no committed baseline for {} (expected {}); pin one with \
+                 BENCH_BASELINE_REFRESH=1 bench_check",
+                rule.file,
+                baseline_path.display()
+            ));
+        }
+        let fresh_doc = load_json(&fresh_path)?;
+        let baseline_doc = load_json(&baseline_path)?;
+        checked.insert(rule.file);
+        let metric = rule.path.join(".");
+
+        let Some(baseline) = lookup(&baseline_doc, rule.path) else {
+            notes.push(format!(
+                "{}: baseline lacks {metric}; re-pin to start gating it",
+                rule.file
+            ));
+            continue;
+        };
+        if !baseline.is_finite() || baseline == 0.0 {
+            notes.push(format!(
+                "{}: baseline {metric} = {baseline} is not gateable",
+                rule.file
+            ));
+            continue;
+        }
+        let fresh = lookup(&fresh_doc, rule.path);
+        let Some(fresh) = fresh.filter(|v| v.is_finite()) else {
+            findings.push(Finding {
+                file: rule.file.to_string(),
+                metric,
+                baseline,
+                fresh: f64::NAN,
+                rel: f64::NEG_INFINITY,
+                failed: true, // a gated metric vanishing IS a regression
+            });
+            continue;
+        };
+        let rel = (fresh - baseline) / baseline.abs();
+        let failed = regressed(rule.direction, baseline, fresh, cfg.tolerance);
+        findings.push(Finding {
+            file: rule.file.to_string(),
+            metric,
+            baseline,
+            fresh,
+            rel,
+            failed,
+        });
+    }
+
+    Ok(Report { findings, notes, checked_files: checked.len() })
+}
+
+/// Re-pin: copy every gated fresh artifact over its committed baseline.
+/// Returns how many baselines were refreshed.
+pub fn refresh(cfg: &CheckConfig) -> std::result::Result<usize, String> {
+    std::fs::create_dir_all(&cfg.baseline_dir)
+        .map_err(|e| format!("cannot create {}: {e}", cfg.baseline_dir.display()))?;
+    let mut refreshed = 0usize;
+    for rule in RULES {
+        let fresh_path = cfg.fresh_dir.join(rule.file);
+        if !fresh_path.is_file() {
+            continue;
+        }
+        let dst = cfg.baseline_dir.join(rule.file);
+        std::fs::copy(&fresh_path, &dst)
+            .map_err(|e| format!("cannot copy {} -> {}: {e}", fresh_path.display(), dst.display()))?;
+        refreshed += 1;
+    }
+    Ok(refreshed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bmq-bench-check-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write(dir: &Path, name: &str, body: &str) {
+        std::fs::write(dir.join(name), body).unwrap();
+    }
+
+    #[test]
+    fn gate_fires_on_synthetic_regression() {
+        let fresh = tmp("fire-fresh");
+        let base = tmp("fire-base");
+        write(&base, "BENCH_gates.json", r#"{"speedup": 3.0}"#);
+        write(&fresh, "BENCH_gates.json", r#"{"speedup": 2.0}"#); // −33%
+        let report = run(&CheckConfig::new(&fresh, &base)).unwrap();
+        assert_eq!(report.failures(), 1);
+        assert!(report.findings[0].failed);
+        assert!(report.findings[0].rel < -0.25);
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_on_improvement() {
+        let fresh = tmp("pass-fresh");
+        let base = tmp("pass-base");
+        write(&base, "BENCH_gates.json", r#"{"speedup": 3.0}"#);
+        write(&fresh, "BENCH_gates.json", r#"{"speedup": 2.6}"#); // −13%
+        let r = run(&CheckConfig::new(&fresh, &base)).unwrap();
+        assert_eq!(r.failures(), 0);
+        write(&fresh, "BENCH_gates.json", r#"{"speedup": 9.0}"#); // big win
+        let r = run(&CheckConfig::new(&fresh, &base)).unwrap();
+        assert_eq!(r.failures(), 0);
+    }
+
+    #[test]
+    fn nested_path_and_vanished_metric() {
+        let fresh = tmp("nest-fresh");
+        let base = tmp("nest-base");
+        write(&base, "BENCH_hotpath.json", r#"{"group_chain": {"speedup": 1.2}}"#);
+        write(&fresh, "BENCH_hotpath.json", r#"{"group_chain": {"speedup": 1.15}}"#);
+        let r = run(&CheckConfig::new(&fresh, &base)).unwrap();
+        assert_eq!(r.failures(), 0);
+        // The metric disappearing (e.g. rendered as null) is a failure.
+        write(&fresh, "BENCH_hotpath.json", r#"{"group_chain": {"speedup": null}}"#);
+        let r = run(&CheckConfig::new(&fresh, &base)).unwrap();
+        assert_eq!(r.failures(), 1);
+    }
+
+    #[test]
+    fn regressed_covers_both_directions() {
+        // HigherBetter: a floor — only drops beyond tolerance fail.
+        assert!(regressed(Direction::HigherBetter, 2.0, 1.4, 0.25));
+        assert!(!regressed(Direction::HigherBetter, 2.0, 1.6, 0.25));
+        assert!(!regressed(Direction::HigherBetter, 2.0, 9.0, 0.25), "improvement passes");
+        // TwoSided: a band — drift either way beyond tolerance fails
+        // (kept for workload-shape invariants a future rule may pin).
+        assert!(regressed(Direction::TwoSided, 0.4, 0.1, 0.25));
+        assert!(regressed(Direction::TwoSided, 0.4, 0.6, 0.25));
+        assert!(!regressed(Direction::TwoSided, 0.4, 0.45, 0.25));
+    }
+
+    #[test]
+    fn missing_required_artifact_is_an_error() {
+        let fresh = tmp("req-fresh");
+        let base = tmp("req-base");
+        let mut cfg = CheckConfig::new(&fresh, &base);
+        cfg.required = vec!["BENCH_gates.json".to_string()];
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn missing_baseline_is_an_error_with_refresh_hint() {
+        let fresh = tmp("nobase-fresh");
+        let base = tmp("nobase-base");
+        write(&fresh, "BENCH_gates.json", r#"{"speedup": 2.0}"#);
+        let err = run(&CheckConfig::new(&fresh, &base)).unwrap_err();
+        assert!(err.contains("BENCH_BASELINE_REFRESH"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn refresh_repins_and_gate_then_passes() {
+        let fresh = tmp("repin-fresh");
+        let base = tmp("repin-base");
+        write(&base, "BENCH_gates.json", r#"{"speedup": 9.0}"#);
+        write(&fresh, "BENCH_gates.json", r#"{"speedup": 2.0}"#);
+        let cfg = CheckConfig::new(&fresh, &base);
+        assert_eq!(run(&cfg).unwrap().failures(), 1);
+        assert_eq!(refresh(&cfg).unwrap(), 1);
+        assert_eq!(run(&cfg).unwrap().failures(), 0);
+    }
+
+    #[test]
+    fn ungated_file_is_skipped_with_note() {
+        let fresh = tmp("ungated-fresh");
+        let base = tmp("ungated-base");
+        write(&fresh, "BENCH_streams.json", r#"{"n": 12}"#);
+        let mut cfg = CheckConfig::new(&fresh, &base);
+        cfg.required = vec!["BENCH_streams.json".to_string()];
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.failures(), 0);
+        assert!(r.notes.iter().any(|n| n.contains("no gated metrics")));
+    }
+}

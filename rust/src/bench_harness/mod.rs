@@ -10,9 +10,11 @@ use crate::circuit::generators;
 use crate::compress::{Codec, CodecKind};
 use crate::metrics::Table;
 use crate::pipeline::PipelineConfig;
-use crate::sim::{BmqSim, DenseSim, Sc19Sim, SimConfig};
+use crate::sim::{BmqSim, DenseSim, OverlapMode, Sc19Sim, SimConfig, SimResult};
 use crate::types::{fmt_bytes, standard_memory_bytes, Precision, Result, SplitMix64};
 use std::time::Instant;
+
+pub mod check;
 
 /// Default benchmark seed (fixed: experiments are reproducible).
 pub const SEED: u64 = 0xB39_51B;
@@ -39,6 +41,11 @@ pub fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
 /// set has no serde; `runtime::Json` is parse-only). Values are
 /// `(key, already-rendered-JSON-value)` pairs.
 pub mod bench_json {
+    /// Version of the BENCH_*.json envelope. Bump when a gated metric is
+    /// renamed/moved so trajectory joins across PRs can detect the break.
+    /// v2 added the `schema_version`/`git_sha` stamp itself.
+    pub const BENCH_SCHEMA_VERSION: u32 = 2;
+
     /// Render an object from already-rendered value strings.
     pub fn obj(fields: &[(String, String)]) -> String {
         let inner: Vec<String> =
@@ -52,6 +59,56 @@ pub mod bench_json {
             format!("{x:.4}")
         } else {
             "null".to_string()
+        }
+    }
+
+    /// Commit id stamped into every artifact so BENCH trajectories are
+    /// joinable across PRs: `GITHUB_SHA` in CI, `git rev-parse HEAD`
+    /// locally, `"unknown"` outside a checkout.
+    pub fn git_sha() -> String {
+        if let Ok(sha) = std::env::var("GITHUB_SHA") {
+            if !sha.is_empty() {
+                return sha;
+            }
+        }
+        std::process::Command::new("git")
+            .args(["rev-parse", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".to_string())
+    }
+
+    /// Guard for bench mains: a study that failed leaves its field vec
+    /// empty (`print_experiment` already reported why). An acceptance
+    /// artifact must never go missing silently, so die instead of writing
+    /// a hollow file.
+    pub fn require_fields(artifact: &str, fields: &[(String, String)]) {
+        if fields.is_empty() {
+            eprintln!("study failed; {artifact} not written");
+            std::process::exit(1);
+        }
+    }
+
+    /// Stamp (`schema_version`, `git_sha`) and write one `BENCH_*.json`
+    /// artifact. Exits non-zero on write failure — an acceptance artifact
+    /// must never go missing silently.
+    pub fn write_bench_file(path: &str, fields: &[(String, String)]) {
+        let mut all: Vec<(String, String)> = vec![
+            ("schema_version".to_string(), BENCH_SCHEMA_VERSION.to_string()),
+            ("git_sha".to_string(), format!("\"{}\"", git_sha())),
+        ];
+        all.extend_from_slice(fields);
+        let doc = obj(&all);
+        match std::fs::write(path, doc + "\n") {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("could not write {path}: {e}");
+                std::process::exit(1);
+            }
         }
     }
 }
@@ -308,8 +365,9 @@ pub fn overlap_study(
         if budget.is_some() {
             config.spill_dir = Some(spill_dir());
         }
-        config.overlap = overlap;
+        config.overlap = OverlapMode::pinned(overlap);
         config.pipeline_depth = depth;
+        config.pipeline_depth_auto = false; // the study pins its geometry
         config
     };
     // Probe the unconstrained compressed peak, then squeeze the budget to
@@ -378,9 +436,83 @@ pub fn overlap_study(
         ),
         ("groups_reordered".to_string(), ovl.metrics.groups_reordered.to_string()),
         ("prefetch_depth_final".to_string(), ovl.mem.prefetch_depth.to_string()),
+        // Persistent-pool churn accounting: threads spawned ONCE for the
+        // run (3 × workers) vs the stage handoffs that each used to cost a
+        // spawn/join of all of them.
+        (
+            "phase_threads_spawned".to_string(),
+            ovl.metrics.phase_threads_spawned.to_string(),
+        ),
+        (
+            "pool_stage_handoffs".to_string(),
+            ovl.metrics.pool_stage_handoffs.to_string(),
+        ),
+        ("ring_depth_final".to_string(), ovl.metrics.ring_depth_final.to_string()),
         ("state_bitwise_equal".to_string(), bitwise.to_string()),
         ("fidelity_pipelined_vs_seq".to_string(), bench_json::num(fidelity)),
     ];
+    Ok((t, fields))
+}
+
+/// Fig. 11 addendum — the overlap **auto-enable crossover**: sweep the
+/// block size (and with it the group size) at fixed `n`, and for each
+/// geometry run pinned-sequential, pinned-overlapped, and auto. The table
+/// shows where the measured overlap win crosses break-even and which side
+/// the heuristic picked; the JSON feeds the calibration of
+/// [`crate::sim::OVERLAP_AUTO_MIN_CONCEAL_NS`].
+pub fn fig11_auto_enable(
+    name: &str,
+    n: usize,
+    blocks: &[usize],
+) -> Result<(Table, Vec<(String, String)>)> {
+    let c = generators::build(name, n, SEED)?;
+    let mut t = Table::new(&[
+        "block_qubits", "auto on/off stages", "seq groups/s", "overlap groups/s",
+        "overlap speedup", "auto groups/s",
+    ]);
+    let mut fields: Vec<(String, String)> = vec![
+        ("algo".to_string(), format!("\"{name}\"")),
+        ("n".to_string(), n.to_string()),
+    ];
+    for &b in blocks {
+        let mk = |mode: OverlapMode| {
+            let mut config = cfg(b, 2);
+            config.pipeline = PipelineConfig::new(1, 2);
+            config.overlap = mode;
+            config.pipeline_depth = 2;
+            config.pipeline_depth_auto = false;
+            config
+        };
+        let seq = BmqSim::new(mk(OverlapMode::Off)).run(&c, false)?;
+        let ovl = BmqSim::new(mk(OverlapMode::On)).run(&c, false)?;
+        let auto_r = BmqSim::new(mk(OverlapMode::Auto)).run(&c, false)?;
+        let thr = |r: &SimResult| r.metrics.groups_processed as f64 / r.wall_secs;
+        t.row(&[
+            b.to_string(),
+            format!(
+                "{}/{}",
+                auto_r.metrics.auto_overlap_on, auto_r.metrics.auto_overlap_off
+            ),
+            format!("{:.0}", thr(&seq)),
+            format!("{:.0}", thr(&ovl)),
+            format!("{:.2}x", thr(&ovl) / thr(&seq)),
+            format!("{:.0}", thr(&auto_r)),
+        ]);
+        fields.push((
+            format!("b{b}"),
+            bench_json::obj(&[
+                ("auto_on_stages".to_string(), auto_r.metrics.auto_overlap_on.to_string()),
+                (
+                    "auto_off_stages".to_string(),
+                    auto_r.metrics.auto_overlap_off.to_string(),
+                ),
+                ("seq_groups_per_s".to_string(), bench_json::num(thr(&seq))),
+                ("overlap_groups_per_s".to_string(), bench_json::num(thr(&ovl))),
+                ("overlap_speedup".to_string(), bench_json::num(thr(&ovl) / thr(&seq))),
+                ("auto_groups_per_s".to_string(), bench_json::num(thr(&auto_r))),
+            ]),
+        ));
+    }
     Ok((t, fields))
 }
 
@@ -434,21 +566,73 @@ pub fn fig11_comp_overhead(algos: &[&str], ns: &[usize]) -> Result<Table> {
 /// decode/apply/encode pipeline (depth 2), the §4.2 overhead-concealment
 /// knob layered on top of the stream count.
 pub fn fig12_streams(algos: &[&str], n: usize, overlap: bool) -> Result<Table> {
+    Ok(fig12_walls(algos, n, overlap)?.0)
+}
+
+/// The fig12 sweep returning both the printable table and the raw wall
+/// times, keyed `"{algo}_s{streams}"`.
+fn fig12_walls(
+    algos: &[&str],
+    n: usize,
+    overlap: bool,
+) -> Result<(Table, Vec<(String, f64)>)> {
     let label = if overlap { "streams=1 (s, overlapped)" } else { "streams=1 (s)" };
     let mut t = Table::new(&["algorithm", label, "2", "4", "8"]);
+    let mut walls: Vec<(String, f64)> = Vec::new();
     for &name in algos {
         let c = generators::build(name, n, SEED)?;
         let mut cells = vec![name.to_string()];
         for streams in [1usize, 2, 4, 8] {
             let mut config = cfg(n.saturating_sub(6).max(4), 2);
             config.pipeline = PipelineConfig::new(1, streams);
-            config.overlap = overlap;
+            config.overlap = OverlapMode::pinned(overlap);
+            config.pipeline_depth_auto = false;
             let r = BmqSim::new(config).run(&c, false)?;
             cells.push(format!("{:.3}", r.wall_secs));
+            walls.push((format!("{name}_s{streams}"), r.wall_secs));
         }
         t.row(&cells);
     }
-    Ok(t)
+    Ok((t, walls))
+}
+
+/// Fig. 12 study for `BENCH_streams.json`: the stream sweep in both chain
+/// modes, plus the per-PR trajectory fields — every wall time and the
+/// geometric-mean overlapped-vs-sequential speedup at each stream count.
+pub fn fig12_streams_study(
+    algos: &[&str],
+    n: usize,
+) -> Result<(Vec<Table>, Vec<(String, String)>)> {
+    let (seq_t, seq_w) = fig12_walls(algos, n, false)?;
+    let (ovl_t, ovl_w) = fig12_walls(algos, n, true)?;
+    let mut fields: Vec<(String, String)> = vec![
+        ("bench".to_string(), "\"fig12_streams\"".to_string()),
+        ("n".to_string(), n.to_string()),
+    ];
+    for (key, wall) in &seq_w {
+        fields.push((format!("{key}_wall_s"), bench_json::num(*wall)));
+    }
+    for (key, wall) in &ovl_w {
+        fields.push((format!("{key}_overlap_wall_s"), bench_json::num(*wall)));
+    }
+    for streams in [1usize, 2, 4, 8] {
+        let suffix = format!("_s{streams}");
+        let mut log_sum = 0.0f64;
+        let mut count = 0usize;
+        for ((sk, sw), (ok_, ow)) in seq_w.iter().zip(ovl_w.iter()) {
+            debug_assert_eq!(sk, ok_);
+            if sk.ends_with(&suffix) && *sw > 0.0 && *ow > 0.0 {
+                log_sum += (sw / ow).ln();
+                count += 1;
+            }
+        }
+        let geomean = if count > 0 { (log_sum / count as f64).exp() } else { f64::NAN };
+        fields.push((
+            format!("overlap_speedup_geomean_s{streams}"),
+            bench_json::num(geomean),
+        ));
+    }
+    Ok((vec![seq_t, ovl_t], fields))
 }
 
 /// Fig. 13 — multi-device scaling (1/2/4 logical devices).
@@ -646,6 +830,26 @@ mod tests {
     fn fig12_overlap_variant_runs_at_tiny_scale() {
         let t = fig12_streams(&["ghz_state"], 10, true).unwrap();
         assert!(t.to_string().contains("overlapped"));
+    }
+
+    #[test]
+    fn auto_enable_study_reports_decisions_at_tiny_scale() {
+        let (t, fields) = fig11_auto_enable("ghz_state", 10, &[5]).unwrap();
+        assert!(t.to_string().contains("overlap speedup"));
+        let b5 = fields
+            .iter()
+            .find(|(k, _)| k == "b5")
+            .map(|(_, v)| v.clone())
+            .expect("missing b5 field");
+        assert!(b5.contains("auto_on_stages") && b5.contains("overlap_speedup"));
+    }
+
+    #[test]
+    fn bench_json_stamp_has_schema_and_sha() {
+        // git_sha never panics and returns something non-empty.
+        let sha = bench_json::git_sha();
+        assert!(!sha.is_empty());
+        assert!(bench_json::BENCH_SCHEMA_VERSION >= 2);
     }
 
     #[test]

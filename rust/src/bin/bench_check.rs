@@ -1,0 +1,97 @@
+//! CI bench-regression gate CLI (see `bench_harness::check`).
+//!
+//! USAGE:
+//!   bench_check [--baselines <dir>] [--fresh <dir>] [--tolerance <t>] [FILE...]
+//!
+//! Positional FILE arguments are fresh `BENCH_*.json` artifacts that MUST
+//! exist (each CI matrix job passes the artifact its bench emits); gated
+//! files that happen to be present are always checked. Exits non-zero on
+//! any regression beyond the tolerance.
+//!
+//! `BENCH_BASELINE_REFRESH=1 bench_check` re-pins the committed baselines
+//! from the fresh artifacts instead of checking (run the smokes first).
+
+use bmqsim::bench_harness::check::{refresh, run, CheckConfig, DEFAULT_TOLERANCE};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> Result<ExitCode, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = CheckConfig::new(".", "bench_baselines");
+    cfg.tolerance = DEFAULT_TOLERANCE;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--baselines" => {
+                cfg.baseline_dir =
+                    args.get(i + 1).ok_or("missing value for --baselines")?.into();
+                i += 2;
+            }
+            "--fresh" => {
+                cfg.fresh_dir = args.get(i + 1).ok_or("missing value for --fresh")?.into();
+                i += 2;
+            }
+            "--tolerance" => {
+                let v = args.get(i + 1).ok_or("missing value for --tolerance")?;
+                cfg.tolerance =
+                    v.parse().map_err(|_| format!("bad value for --tolerance: {v:?}"))?;
+                i += 2;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "bench_check [--baselines <dir>] [--fresh <dir>] [--tolerance <t>] [FILE...]"
+                );
+                return Ok(ExitCode::SUCCESS);
+            }
+            flag if flag.starts_with("--") => {
+                return Err(format!("unknown flag {flag:?}"));
+            }
+            file => {
+                cfg.required.push(file.to_string());
+                i += 1;
+            }
+        }
+    }
+
+    if matches!(std::env::var("BENCH_BASELINE_REFRESH"), Ok(v) if !v.is_empty() && v != "0") {
+        let n = refresh(&cfg)?;
+        println!(
+            "re-pinned {n} baseline(s) into {} — commit them to move the gate",
+            cfg.baseline_dir.display()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let report = run(&cfg)?;
+    for note in &report.notes {
+        println!("note: {note}");
+    }
+    for finding in &report.findings {
+        println!("{finding}");
+    }
+    let failures = report.failures();
+    if failures > 0 {
+        eprintln!(
+            "bench_check: {failures} gated metric(s) regressed beyond {:.0}% \
+             (intentional? re-pin with BENCH_BASELINE_REFRESH=1)",
+            100.0 * cfg.tolerance
+        );
+        return Ok(ExitCode::FAILURE);
+    }
+    println!(
+        "bench_check: {} artifact(s) checked, {} metric(s) within {:.0}% of baseline",
+        report.checked_files,
+        report.findings.len(),
+        100.0 * cfg.tolerance
+    );
+    Ok(ExitCode::SUCCESS)
+}

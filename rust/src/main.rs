@@ -17,7 +17,7 @@ use bmqsim::compress::Codec;
 use bmqsim::gates::measure;
 use bmqsim::pipeline::PipelineConfig;
 use bmqsim::runtime::XlaApplier;
-use bmqsim::sim::{Backend, BmqSim, DenseSim, Sc19Sim, SimConfig, SimResult};
+use bmqsim::sim::{Backend, BmqSim, DenseSim, OverlapMode, Sc19Sim, SimConfig, SimResult};
 use bmqsim::types::{fmt_bytes, standard_memory_bytes, Precision, SplitMix64};
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -46,9 +46,14 @@ OPTIONS (run/compare/sample):
   --apply-workers <W>   parallel plane-sweep workers per chain     [1]
   --streams <S>         pipeline streams per device                [2]
   --devices <D>         logical devices                            [1]
-  --overlap             overlap decode/apply/encode per worker (3-phase
-                        software pipeline over a scratch-slot ring)
-  --pipeline-depth <K>  scratch slots per worker ring (overlap)       [2]
+  --overlap             always overlap decode/apply/encode per worker on the
+                        persistent 3-phase pipeline; --no-overlap pins it
+                        off. Omitting both auto-decides per stage from
+                        group size x measured codec cost             [auto]
+  --no-overlap          never overlap (strictly sequential worker chains)
+  --pipeline-depth <K>  scratch slots per worker ring (overlap); when
+                        omitted the depth auto-adapts per stage (AIMD on
+                        handshake stall imbalance, band [2, 8])     [auto]
   --no-spill-order      disable spill-aware group ordering (resident
                         groups first) within each stage
   --memory-budget <MB>  primary-tier budget in MiB (enables probing)
@@ -113,7 +118,7 @@ impl Opts {
             let flag = matches!(
                 key.as_str(),
                 "no-compress" | "no-prescan" | "no-fusion" | "sync-spill" | "overlap"
-                    | "no-spill-order"
+                    | "no-overlap" | "no-spill-order"
             );
             if flag {
                 map.insert(key, "true".into());
@@ -202,10 +207,23 @@ fn build_config(opts: &Opts) -> Result<SimConfig, String> {
     if opts.flag("sync-spill") {
         cfg.sync_spill = true;
     }
-    if opts.flag("overlap") {
-        cfg.overlap = true;
+    // --overlap / --no-overlap pin the pipeline; omitting both leaves the
+    // per-stage auto-enable heuristic in charge (the default).
+    cfg.overlap = match (opts.flag("overlap"), opts.flag("no-overlap")) {
+        (true, true) => return Err("--overlap conflicts with --no-overlap".into()),
+        (true, false) => OverlapMode::On,
+        (false, true) => OverlapMode::Off,
+        (false, false) => OverlapMode::Auto,
+    };
+    // Explicit --pipeline-depth pins the ring depth; omitting it engages
+    // the per-stage AIMD controller (ROADMAP "adaptive ring depth").
+    match opts.get("pipeline-depth") {
+        Some(_) => {
+            cfg.pipeline_depth = opts.parse_num("pipeline-depth", cfg.pipeline_depth)?;
+            cfg.pipeline_depth_auto = false;
+        }
+        None => cfg.pipeline_depth_auto = true,
     }
-    cfg.pipeline_depth = opts.parse_num("pipeline-depth", cfg.pipeline_depth)?;
     if opts.flag("no-spill-order") {
         cfg.spill_aware = false;
     }

@@ -98,6 +98,24 @@ pub struct Metrics {
     /// Spill-aware scheduling: groups moved ahead of their natural stage
     /// position because their blocks were already primary-resident.
     pub groups_reordered: AtomicU64,
+    /// Persistent phase pool: total phase threads spawned for the run —
+    /// `3 × workers` exactly once, NOT per stage (the pool-reuse proof;
+    /// 0 when no stage engaged overlap).
+    pub phase_threads_spawned: AtomicU64,
+    /// Persistent phase pool: stages dispatched as work descriptors to
+    /// the already-running phase threads.
+    pub pool_stage_handoffs: AtomicU64,
+    /// Adaptive ring depth: depth in effect after the last stage.
+    pub ring_depth_final: AtomicU64,
+    /// Adaptive ring depth: deepest ring the AIMD controller reached.
+    pub ring_depth_peak: AtomicU64,
+    /// Adaptive ring depth: number of depth changes (trajectory length).
+    pub ring_depth_adjustments: AtomicU64,
+    /// Overlap auto-enable: stages where the heuristic engaged the
+    /// pipeline (0 when the mode is pinned on/off).
+    pub auto_overlap_on: AtomicU64,
+    /// Overlap auto-enable: stages where the heuristic declined.
+    pub auto_overlap_off: AtomicU64,
 }
 
 impl Metrics {
@@ -151,6 +169,13 @@ impl Metrics {
             decode_ahead_hits: self.decode_ahead_hits.load(Ordering::Relaxed),
             overlap_stall_ns: self.overlap_stall_ns.load(Ordering::Relaxed),
             groups_reordered: self.groups_reordered.load(Ordering::Relaxed),
+            phase_threads_spawned: self.phase_threads_spawned.load(Ordering::Relaxed),
+            pool_stage_handoffs: self.pool_stage_handoffs.load(Ordering::Relaxed),
+            ring_depth_final: self.ring_depth_final.load(Ordering::Relaxed),
+            ring_depth_peak: self.ring_depth_peak.load(Ordering::Relaxed),
+            ring_depth_adjustments: self.ring_depth_adjustments.load(Ordering::Relaxed),
+            auto_overlap_on: self.auto_overlap_on.load(Ordering::Relaxed),
+            auto_overlap_off: self.auto_overlap_off.load(Ordering::Relaxed),
         }
     }
 
@@ -172,6 +197,10 @@ impl Metrics {
             Ordering::Relaxed,
         );
         self.overlap_stall_ns.store(o.total_stall_ns(), Ordering::Relaxed);
+        self.pool_stage_handoffs.store(
+            o.stage_handoffs.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
     }
 }
 
@@ -216,6 +245,21 @@ pub struct MetricsReport {
     /// Groups promoted ahead of their natural order by spill-aware
     /// scheduling (their blocks were already primary-resident).
     pub groups_reordered: u64,
+    /// Persistent phase pool: phase threads spawned for the whole run
+    /// (`3 × workers` once, not per stage; 0 = pool never engaged).
+    pub phase_threads_spawned: u64,
+    /// Persistent phase pool: stage work-descriptor handoffs.
+    pub pool_stage_handoffs: u64,
+    /// Adaptive ring depth in effect after the last stage.
+    pub ring_depth_final: u64,
+    /// Deepest adaptive ring depth reached during the run.
+    pub ring_depth_peak: u64,
+    /// Number of adaptive ring-depth changes (trajectory length).
+    pub ring_depth_adjustments: u64,
+    /// Stages where the overlap auto-enable heuristic engaged.
+    pub auto_overlap_on: u64,
+    /// Stages where the overlap auto-enable heuristic declined.
+    pub auto_overlap_off: u64,
 }
 
 impl MetricsReport {
@@ -275,6 +319,24 @@ impl std::fmt::Display for MetricsReport {
                 100.0 * self.pipeline_occupancy(),
                 self.decode_ahead_hits,
                 self.overlap_stall_ns as f64 * 1e-6
+            )?;
+        }
+        if self.pool_stage_handoffs > 0 {
+            writeln!(
+                f,
+                "phase pool       : {:>10} threads spawned once, {} stage handoffs, ring depth {} (peak {}, {} adjusts)",
+                self.phase_threads_spawned,
+                self.pool_stage_handoffs,
+                self.ring_depth_final,
+                self.ring_depth_peak,
+                self.ring_depth_adjustments
+            )?;
+        }
+        if self.auto_overlap_on + self.auto_overlap_off > 0 {
+            writeln!(
+                f,
+                "overlap auto     : {:>10} stages pipelined / {} sequential",
+                self.auto_overlap_on, self.auto_overlap_off
             )?;
         }
         if self.groups_reordered > 0 {

@@ -29,6 +29,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+mod phase_pool;
+pub use phase_pool::{
+    PhasePool, RingDepthController, RING_AIMD_IDLE_NS, RING_AIMD_STALL_STEP_NS, RING_DEPTH_MAX,
+    RING_DEPTH_MIN,
+};
+
 /// Counting semaphore (Mutex + Condvar; no external deps).
 pub struct Semaphore {
     permits: Mutex<usize>,
@@ -266,6 +272,19 @@ impl RingCtrl {
             cv: Condvar::new(),
         }
     }
+
+    /// Re-arm the ring for a fresh stage at (possibly different) `depth`:
+    /// all slots `Free`, done flags cleared. Only called between stages,
+    /// when no phase thread is touching the ring.
+    fn reset(&self, depth: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.status.clear();
+        st.status.resize(depth, SlotPhase::Free);
+        st.items.clear();
+        st.items.resize(depth, 0);
+        st.decode_done = false;
+        st.apply_done = false;
+    }
 }
 
 /// Unwind-safe phase teardown: marks the phase's done flag — and, when
@@ -348,6 +367,10 @@ pub struct OverlapStats {
     pub stall_apply_ns: AtomicU64,
     /// Encode waited for an `Applied` slot (apply behind).
     pub stall_encode_ns: AtomicU64,
+    /// Stages dispatched through a persistent [`PhasePool`] (each one a
+    /// work-descriptor handoff to already-running phase threads, where the
+    /// scoped driver would have spawned and joined 3×workers threads).
+    pub stage_handoffs: AtomicU64,
 }
 
 impl OverlapStats {
@@ -355,6 +378,216 @@ impl OverlapStats {
         self.stall_decode_ns.load(Ordering::Relaxed)
             + self.stall_apply_ns.load(Ordering::Relaxed)
             + self.stall_encode_ns.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared phase-loop bodies. One function per phase, used by BOTH drivers:
+// `run_items_overlapped` runs them on scoped threads spawned per call, the
+// persistent `PhasePool` runs them on long-lived threads fed per-stage work
+// descriptors — so the handshake protocol (and its model-checked behaviour)
+// is a single implementation.
+// ---------------------------------------------------------------------------
+
+/// Everything a phase loop needs that is stable for one stage. `slots` is
+/// already truncated to the stage's effective ring depth.
+pub(crate) struct PhaseEnv<'a> {
+    pub(crate) ctrl: &'a RingCtrl,
+    pub(crate) slots: &'a [Mutex<Scratch>],
+    pub(crate) stats: &'a OverlapStats,
+    pub(crate) abort: &'a AtomicBool,
+    pub(crate) transfer: &'a Semaphore,
+    pub(crate) worker: usize,
+    pub(crate) device: usize,
+}
+
+/// Record the first error and raise the global abort flag.
+pub(crate) fn record_fail<E>(failed: &Mutex<Option<E>>, abort: &AtomicBool, e: E) {
+    let mut f = failed.lock().unwrap();
+    if f.is_none() {
+        *f = Some(e);
+    }
+    drop(f);
+    abort.store(true, Ordering::Release);
+}
+
+/// Decode phase: shared queue → `Free` slot → `Decoded`.
+pub(crate) fn decode_phase_loop<E: Send>(
+    env: &PhaseEnv<'_>,
+    queue: &Mutex<VecDeque<usize>>,
+    failed: &Mutex<Option<E>>,
+    decode: &(dyn Fn(&mut WorkerCtx<'_>, usize) -> Result<(), E> + Sync),
+) {
+    let depth = env.slots.len();
+    let _exit =
+        PhaseExit { ctrl: env.ctrl, abort: env.abort, mark: |st: &mut RingState| st.decode_done = true };
+    let mut slot = 0usize;
+    loop {
+        if env.abort.load(Ordering::Acquire) {
+            break;
+        }
+        let item = { queue.lock().unwrap().pop_front() };
+        let Some(item) = item else { break };
+        {
+            let mut st = env.ctrl.state.lock().unwrap();
+            if st.status[slot] != SlotPhase::Free {
+                let t0 = Instant::now();
+                while st.status[slot] != SlotPhase::Free && !env.abort.load(Ordering::Acquire) {
+                    st = env.ctrl.cv.wait_timeout(st, HANDSHAKE_POLL).unwrap().0;
+                }
+                env.stats
+                    .stall_decode_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            if st.status[slot] != SlotPhase::Free {
+                break; // aborted while waiting
+            }
+        }
+        let r = {
+            let mut scratch = env.slots[slot].lock().unwrap();
+            let mut ctx = WorkerCtx {
+                worker: env.worker,
+                device: env.device,
+                link: TransferLink { sem: env.transfer },
+                scratch: &mut *scratch,
+            };
+            decode(&mut ctx, item)
+        };
+        match r {
+            Ok(()) => {
+                let mut st = env.ctrl.state.lock().unwrap();
+                st.status[slot] = SlotPhase::Decoded;
+                st.items[slot] = item;
+                drop(st);
+                env.ctrl.cv.notify_all();
+                slot = (slot + 1) % depth;
+            }
+            Err(e) => {
+                record_fail(failed, env.abort, e);
+                break;
+            }
+        }
+    }
+}
+
+/// Apply phase: `Decoded` slot → `Applied`.
+pub(crate) fn apply_phase_loop<E: Send>(
+    env: &PhaseEnv<'_>,
+    failed: &Mutex<Option<E>>,
+    apply: &(dyn Fn(&mut WorkerCtx<'_>, usize) -> Result<(), E> + Sync),
+) {
+    let depth = env.slots.len();
+    let _exit =
+        PhaseExit { ctrl: env.ctrl, abort: env.abort, mark: |st: &mut RingState| st.apply_done = true };
+    let mut slot = 0usize;
+    loop {
+        let item;
+        {
+            let mut st = env.ctrl.state.lock().unwrap();
+            if st.status[slot] == SlotPhase::Decoded {
+                env.stats.decode_ahead_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                let t0 = Instant::now();
+                while st.status[slot] != SlotPhase::Decoded
+                    && !st.decode_done
+                    && !env.abort.load(Ordering::Acquire)
+                {
+                    st = env.ctrl.cv.wait_timeout(st, HANDSHAKE_POLL).unwrap().0;
+                }
+                env.stats
+                    .stall_apply_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            if st.status[slot] != SlotPhase::Decoded {
+                break; // decode finished (or abort): ring drained
+            }
+            item = st.items[slot];
+        }
+        if env.abort.load(Ordering::Acquire) {
+            break;
+        }
+        let r = {
+            let mut scratch = env.slots[slot].lock().unwrap();
+            let mut ctx = WorkerCtx {
+                worker: env.worker,
+                device: env.device,
+                link: TransferLink { sem: env.transfer },
+                scratch: &mut *scratch,
+            };
+            apply(&mut ctx, item)
+        };
+        match r {
+            Ok(()) => {
+                let mut st = env.ctrl.state.lock().unwrap();
+                st.status[slot] = SlotPhase::Applied;
+                drop(st);
+                env.ctrl.cv.notify_all();
+                slot = (slot + 1) % depth;
+            }
+            Err(e) => {
+                record_fail(failed, env.abort, e);
+                break;
+            }
+        }
+    }
+}
+
+/// Encode phase: `Applied` slot → `Free`.
+pub(crate) fn encode_phase_loop<E: Send>(
+    env: &PhaseEnv<'_>,
+    failed: &Mutex<Option<E>>,
+    encode: &(dyn Fn(&mut WorkerCtx<'_>, usize) -> Result<(), E> + Sync),
+) {
+    let depth = env.slots.len();
+    let _exit = PhaseExit { ctrl: env.ctrl, abort: env.abort, mark: |_st: &mut RingState| {} };
+    let mut slot = 0usize;
+    loop {
+        let item;
+        {
+            let mut st = env.ctrl.state.lock().unwrap();
+            if st.status[slot] != SlotPhase::Applied {
+                let t0 = Instant::now();
+                while st.status[slot] != SlotPhase::Applied
+                    && !st.apply_done
+                    && !env.abort.load(Ordering::Acquire)
+                {
+                    st = env.ctrl.cv.wait_timeout(st, HANDSHAKE_POLL).unwrap().0;
+                }
+                env.stats
+                    .stall_encode_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            if st.status[slot] != SlotPhase::Applied {
+                break; // apply finished (or abort): nothing left
+            }
+            item = st.items[slot];
+        }
+        if env.abort.load(Ordering::Acquire) {
+            break;
+        }
+        let r = {
+            let mut scratch = env.slots[slot].lock().unwrap();
+            let mut ctx = WorkerCtx {
+                worker: env.worker,
+                device: env.device,
+                link: TransferLink { sem: env.transfer },
+                scratch: &mut *scratch,
+            };
+            encode(&mut ctx, item)
+        };
+        match r {
+            Ok(()) => {
+                let mut st = env.ctrl.state.lock().unwrap();
+                st.status[slot] = SlotPhase::Free;
+                drop(st);
+                env.ctrl.cv.notify_all();
+                slot = (slot + 1) % depth;
+            }
+            Err(e) => {
+                record_fail(failed, env.abort, e);
+                break;
+            }
+        }
     }
 }
 
@@ -393,20 +626,12 @@ where
     let depth = pool.depth();
     let ctrls: Vec<RingCtrl> = (0..workers).map(|_| RingCtrl::new(depth)).collect();
 
-    let fail = |e: E| {
-        let mut f = failed.lock().unwrap();
-        if f.is_none() {
-            *f = Some(e);
-        }
-        abort.store(true, Ordering::Release);
-    };
-
     std::thread::scope(|scope| {
         for w in 0..workers {
             let ctrl = &ctrls[w];
             let slots = &pool.rings[w];
             let queue = &queue;
-            let fail = &fail;
+            let failed = &failed;
             let abort = &abort;
             let transfer = &transfer;
             let device = w % cfg.devices.max(1);
@@ -414,168 +639,44 @@ where
 
             // ---- Decode thread: queue → Free slot → Decoded ----
             scope.spawn(move || {
-                let _exit =
-                    PhaseExit { ctrl, abort, mark: |st: &mut RingState| st.decode_done = true };
-                let mut slot = 0usize;
-                loop {
-                    if abort.load(Ordering::Acquire) {
-                        break;
-                    }
-                    let item = { queue.lock().unwrap().pop_front() };
-                    let Some(item) = item else { break };
-                    {
-                        let mut st = ctrl.state.lock().unwrap();
-                        if st.status[slot] != SlotPhase::Free {
-                            let t0 = Instant::now();
-                            while st.status[slot] != SlotPhase::Free
-                                && !abort.load(Ordering::Acquire)
-                            {
-                                st = ctrl.cv.wait_timeout(st, HANDSHAKE_POLL).unwrap().0;
-                            }
-                            stats
-                                .stall_decode_ns
-                                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        }
-                        if st.status[slot] != SlotPhase::Free {
-                            break; // aborted while waiting
-                        }
-                    }
-                    let r = {
-                        let mut scratch = slots[slot].lock().unwrap();
-                        let mut ctx = WorkerCtx {
-                            worker: w,
-                            device,
-                            link: TransferLink { sem: transfer },
-                            scratch: &mut *scratch,
-                        };
-                        decode(&mut ctx, item)
-                    };
-                    match r {
-                        Ok(()) => {
-                            let mut st = ctrl.state.lock().unwrap();
-                            st.status[slot] = SlotPhase::Decoded;
-                            st.items[slot] = item;
-                            drop(st);
-                            ctrl.cv.notify_all();
-                            slot = (slot + 1) % depth;
-                        }
-                        Err(e) => {
-                            fail(e);
-                            break;
-                        }
-                    }
-                }
+                let env = PhaseEnv {
+                    ctrl,
+                    slots: &slots[..depth],
+                    stats,
+                    abort,
+                    transfer,
+                    worker: w,
+                    device,
+                };
+                decode_phase_loop(&env, queue, failed, decode);
             });
 
             // ---- Apply thread: Decoded slot → Applied ----
             scope.spawn(move || {
-                let _exit =
-                    PhaseExit { ctrl, abort, mark: |st: &mut RingState| st.apply_done = true };
-                let mut slot = 0usize;
-                loop {
-                    let item;
-                    {
-                        let mut st = ctrl.state.lock().unwrap();
-                        if st.status[slot] == SlotPhase::Decoded {
-                            stats.decode_ahead_hits.fetch_add(1, Ordering::Relaxed);
-                        } else {
-                            let t0 = Instant::now();
-                            while st.status[slot] != SlotPhase::Decoded
-                                && !st.decode_done
-                                && !abort.load(Ordering::Acquire)
-                            {
-                                st = ctrl.cv.wait_timeout(st, HANDSHAKE_POLL).unwrap().0;
-                            }
-                            stats
-                                .stall_apply_ns
-                                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        }
-                        if st.status[slot] != SlotPhase::Decoded {
-                            break; // decode finished (or abort): ring drained
-                        }
-                        item = st.items[slot];
-                    }
-                    if abort.load(Ordering::Acquire) {
-                        break;
-                    }
-                    let r = {
-                        let mut scratch = slots[slot].lock().unwrap();
-                        let mut ctx = WorkerCtx {
-                            worker: w,
-                            device,
-                            link: TransferLink { sem: transfer },
-                            scratch: &mut *scratch,
-                        };
-                        apply(&mut ctx, item)
-                    };
-                    match r {
-                        Ok(()) => {
-                            let mut st = ctrl.state.lock().unwrap();
-                            st.status[slot] = SlotPhase::Applied;
-                            drop(st);
-                            ctrl.cv.notify_all();
-                            slot = (slot + 1) % depth;
-                        }
-                        Err(e) => {
-                            fail(e);
-                            break;
-                        }
-                    }
-                }
+                let env = PhaseEnv {
+                    ctrl,
+                    slots: &slots[..depth],
+                    stats,
+                    abort,
+                    transfer,
+                    worker: w,
+                    device,
+                };
+                apply_phase_loop(&env, failed, apply);
             });
 
             // ---- Encode thread: Applied slot → Free ----
             scope.spawn(move || {
-                let _exit = PhaseExit { ctrl, abort, mark: |_st: &mut RingState| {} };
-                let mut slot = 0usize;
-                loop {
-                    let item;
-                    {
-                        let mut st = ctrl.state.lock().unwrap();
-                        if st.status[slot] != SlotPhase::Applied {
-                            let t0 = Instant::now();
-                            while st.status[slot] != SlotPhase::Applied
-                                && !st.apply_done
-                                && !abort.load(Ordering::Acquire)
-                            {
-                                st = ctrl.cv.wait_timeout(st, HANDSHAKE_POLL).unwrap().0;
-                            }
-                            stats
-                                .stall_encode_ns
-                                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        }
-                        if st.status[slot] != SlotPhase::Applied {
-                            break; // apply finished (or abort): nothing left
-                        }
-                        item = st.items[slot];
-                    }
-                    if abort.load(Ordering::Acquire) {
-                        break;
-                    }
-                    let r = {
-                        let mut scratch = slots[slot].lock().unwrap();
-                        let mut ctx = WorkerCtx {
-                            worker: w,
-                            device,
-                            link: TransferLink { sem: transfer },
-                            scratch: &mut *scratch,
-                        };
-                        encode(&mut ctx, item)
-                    };
-                    match r {
-                        Ok(()) => {
-                            let mut st = ctrl.state.lock().unwrap();
-                            st.status[slot] = SlotPhase::Free;
-                            drop(st);
-                            ctrl.cv.notify_all();
-                            slot = (slot + 1) % depth;
-                        }
-                        Err(e) => {
-                            fail(e);
-                            break;
-                        }
-                    }
-                }
+                let env = PhaseEnv {
+                    ctrl,
+                    slots: &slots[..depth],
+                    stats,
+                    abort,
+                    transfer,
+                    worker: w,
+                    device,
+                };
+                encode_phase_loop(&env, failed, encode);
             });
         }
     });

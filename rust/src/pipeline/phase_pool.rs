@@ -1,0 +1,589 @@
+//! Persistent phase-worker runtime (ROADMAP "persistent phase workers").
+//!
+//! [`super::run_items_overlapped`] spawns and joins `3 × workers` phase
+//! threads *per stage*. At paper scale a run has hundreds of stages, so the
+//! engines pay thread churn plus a full pipeline fill/drain on every stage
+//! boundary. [`PhasePool`] removes that: it is created **once per
+//! simulation run**, keeps the decode/apply/encode threads (and their
+//! scratch [`RingPool`]) alive for the whole run, and feeds each stage to
+//! them as a *work descriptor* — three phase closures plus an item count —
+//! over an epoch-stamped control channel. A stage handoff is one condvar
+//! broadcast instead of `3 × workers` spawns and joins.
+//!
+//! The phase threads execute the exact same loop bodies as the scoped
+//! driver (`decode_phase_loop` / `apply_phase_loop` / `encode_phase_loop`),
+//! so the slot handshake protocol — and the byte-identical-output property
+//! it guarantees — is shared, not duplicated.
+//!
+//! ## Lifetime erasure
+//!
+//! Stage closures borrow stage-local state (the group schedule, the fused
+//! plan, the store, metrics). Persistent threads are `'static`, so
+//! [`PhasePool::run_stage`] erases the closure lifetimes behind raw trait
+//! object pointers — the same trick scoped-thread libraries use — and
+//! makes it sound by **blocking until every phase thread has finished the
+//! stage** before returning: the pointers are never dereferenced after the
+//! borrows they came from end. The `unsafe` is confined to two small,
+//! documented sites (`erase` and the dereference in `run_phase`).
+//!
+//! ## Unwind safety
+//!
+//! A panic inside a phase closure is caught on the phase thread
+//! (`catch_unwind`), recorded, and re-raised on the *caller* by
+//! `run_stage` — preserving the scoped driver's behaviour where
+//! `thread::scope` re-raises. The in-ring `PhaseExit` guards still run
+//! during the unwind, raising the abort flag and marking the phase's done
+//! flag so sibling phases drain instead of wedging; the pool's threads
+//! survive (they caught the unwind) and are joined by `Drop`.
+
+use super::{
+    apply_phase_loop, decode_phase_loop, encode_phase_loop, OverlapStats, PhaseEnv,
+    PipelineConfig, RingCtrl, RingPool, Semaphore,
+};
+use crate::types::Error;
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Ring-depth bounds for the AIMD controller (CLI `--pipeline-depth`
+/// omitted). Depth 2 is classic double buffering — the floor below which
+/// the ring cannot absorb any phase-time variance; 8 slots per worker is
+/// the allocation cap (unused slots are empty `Scratch` arenas, so the cap
+/// costs nothing until a slot is actually warmed).
+pub const RING_DEPTH_MIN: usize = 2;
+pub const RING_DEPTH_MAX: usize = 8;
+
+/// AIMD thresholds, per stage: handshake stall growing by more than this
+/// since the last stage means a phase ran dry (additive increase); growth
+/// below the idle floor means the current depth already conceals the
+/// imbalance (multiplicative decrease — cheap to re-grow). Same shape as
+/// the prefetch auto-depth controller in `memory`.
+pub const RING_AIMD_STALL_STEP_NS: u64 = 500_000;
+pub const RING_AIMD_IDLE_NS: u64 = 50_000;
+
+/// Per-stage AIMD controller for the scratch-ring depth, driven by the
+/// cumulative [`OverlapStats`] stall counter (ROADMAP "adaptive ring
+/// depth"). With `auto` off it pins the configured depth. The first stage
+/// primes the stall snapshot — no history must not read as "idle" and
+/// shrink the ring during exactly the fill the depth exists to cover.
+pub struct RingDepthController {
+    auto: bool,
+    cur: usize,
+    cap: usize,
+    last_stall_ns: u64,
+    primed: bool,
+    adjustments: u64,
+    peak: usize,
+}
+
+impl RingDepthController {
+    pub fn new(start: usize, auto: bool, cap: usize) -> Self {
+        let cap = cap.max(1);
+        let cur = start.clamp(1, cap);
+        RingDepthController {
+            auto,
+            cur,
+            cap,
+            last_stall_ns: 0,
+            primed: false,
+            adjustments: 0,
+            peak: cur,
+        }
+    }
+
+    /// Depth the controller currently recommends.
+    pub fn current(&self) -> usize {
+        self.cur
+    }
+
+    /// Deepest ring the controller has recommended so far.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// How many times the depth actually changed (the trajectory length).
+    pub fn adjustments(&self) -> u64 {
+        self.adjustments
+    }
+
+    /// One step, called before each stage with the run's *cumulative*
+    /// handshake stall time; returns the depth to use for this stage.
+    pub fn stage_depth(&mut self, total_stall_ns: u64) -> usize {
+        if !self.auto {
+            return self.cur;
+        }
+        let delta = total_stall_ns.saturating_sub(self.last_stall_ns);
+        self.last_stall_ns = total_stall_ns;
+        if !self.primed {
+            self.primed = true;
+            return self.cur;
+        }
+        let floor = RING_DEPTH_MIN.min(self.cap);
+        let next = if delta > RING_AIMD_STALL_STEP_NS {
+            (self.cur + 1).min(self.cap)
+        } else if delta < RING_AIMD_IDLE_NS {
+            (self.cur / 2).max(floor)
+        } else {
+            self.cur
+        };
+        if next != self.cur {
+            self.adjustments += 1;
+            self.cur = next;
+            self.peak = self.peak.max(next);
+        }
+        self.cur
+    }
+}
+
+/// The phase-closure trait object the pool executes. Fixed to the crate
+/// error type: the pool exists for the engines' hot path, and a concrete
+/// `E` is what makes the type-erased stage descriptor possible.
+type Phase<'a> = dyn Fn(&mut super::WorkerCtx<'_>, usize) -> Result<(), Error> + Sync + 'a;
+
+/// Lifetime-erased pointer to a phase closure.
+///
+/// SAFETY invariant (maintained by `run_stage`): the pointee outlives the
+/// stage — `run_stage` does not return until every phase thread has
+/// reported the stage done, and threads never touch a spec after that.
+#[derive(Clone, Copy)]
+struct RawPhase(*const Phase<'static>);
+
+// SAFETY: the pointee is `Sync` (required by `Phase`) and the RawPhase is
+// only dereferenced while the originating borrow is provably live (the
+// stage barrier in `run_stage`).
+unsafe impl Send for RawPhase {}
+unsafe impl Sync for RawPhase {}
+
+fn erase(f: &Phase<'_>) -> RawPhase {
+    // SAFETY: pure lifetime extension of a fat reference; see RawPhase.
+    RawPhase(unsafe { std::mem::transmute::<*const Phase<'_>, *const Phase<'static>>(f) })
+}
+
+/// One stage's work descriptor, published to all phase threads at once.
+#[derive(Clone, Copy)]
+struct StageSpec {
+    depth: usize,
+    decode: RawPhase,
+    apply: RawPhase,
+    encode: RawPhase,
+}
+
+/// Epoch-stamped control state. `epoch` increments once per stage;
+/// threads run the stage whose epoch exceeds the last one they completed,
+/// then bump `done`. `run_stage` waits for `done == 3 × workers`.
+struct PoolCtl {
+    epoch: u64,
+    shutdown: bool,
+    spec: Option<StageSpec>,
+    done: usize,
+}
+
+struct PoolInner {
+    ctl: Mutex<PoolCtl>,
+    cv: Condvar,
+    queue: Mutex<VecDeque<usize>>,
+    ctrls: Vec<RingCtrl>,
+    rings: RingPool,
+    transfer: Semaphore,
+    abort: AtomicBool,
+    failed: Mutex<Option<Error>>,
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+    stats: OverlapStats,
+    devices: usize,
+}
+
+#[derive(Clone, Copy)]
+enum Role {
+    Decode,
+    Apply,
+    Encode,
+}
+
+impl Role {
+    fn name(self) -> &'static str {
+        match self {
+            Role::Decode => "decode",
+            Role::Apply => "apply",
+            Role::Encode => "encode",
+        }
+    }
+}
+
+/// The persistent phase-worker runtime: `3 × workers` long-lived
+/// decode/apply/encode threads over a persistent scratch [`RingPool`],
+/// fed one [`StageSpec`] per [`PhasePool::run_stage`] call.
+pub struct PhasePool {
+    inner: Arc<PoolInner>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    depth_cap: usize,
+}
+
+impl PhasePool {
+    /// Spawn the pool's phase threads — the only thread creation the pool
+    /// ever performs. `depth_cap` bounds the per-stage ring depth (the
+    /// rings are allocated at the cap; unwarmed slots cost nothing).
+    pub fn new(cfg: PipelineConfig, depth_cap: usize) -> Self {
+        let workers = cfg.workers().max(1);
+        let depth_cap = depth_cap.max(1);
+        let inner = Arc::new(PoolInner {
+            ctl: Mutex::new(PoolCtl { epoch: 0, shutdown: false, spec: None, done: 0 }),
+            cv: Condvar::new(),
+            queue: Mutex::new(VecDeque::new()),
+            ctrls: (0..workers).map(|_| RingCtrl::new(depth_cap)).collect(),
+            rings: RingPool::new(workers, depth_cap),
+            transfer: Semaphore::new(cfg.transfer_slots),
+            abort: AtomicBool::new(false),
+            failed: Mutex::new(None),
+            panic_payload: Mutex::new(None),
+            stats: OverlapStats::default(),
+            devices: cfg.devices.max(1),
+        });
+        let mut handles = Vec::with_capacity(3 * workers);
+        for w in 0..workers {
+            for role in [Role::Decode, Role::Apply, Role::Encode] {
+                let inner = Arc::clone(&inner);
+                let handle = std::thread::Builder::new()
+                    .name(format!("bmq-{}-{w}", role.name()))
+                    .spawn(move || phase_main(inner, w, role))
+                    .expect("spawn phase-pool worker");
+                handles.push(handle);
+            }
+        }
+        PhasePool { inner, handles, workers, depth_cap }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn depth_cap(&self) -> usize {
+        self.depth_cap
+    }
+
+    /// Total phase threads this pool has EVER spawned — `3 × workers`,
+    /// fixed at construction. Engines surface it as
+    /// `Metrics::phase_threads_spawned`; a multi-stage run keeping it at
+    /// `3 × workers` is the proof that stages reuse threads instead of
+    /// re-spawning them (`tests/phase_pool.rs`).
+    pub fn threads_spawned(&self) -> u64 {
+        (3 * self.workers) as u64
+    }
+
+    /// Run-cumulative overlap instrumentation (stalls, decode-ahead hits,
+    /// stage handoffs).
+    pub fn stats(&self) -> &OverlapStats {
+        &self.inner.stats
+    }
+
+    /// Plane-growth events across the pool's scratch rings (the
+    /// arena-reuse counter surfaced as `Metrics::scratch_grows`).
+    pub fn total_plane_grows(&self) -> u64 {
+        self.inner.rings.total_plane_grows()
+    }
+
+    /// Run items `0..n` through the three-phase pipeline on the persistent
+    /// threads at ring depth `depth` (clamped to `1..=depth_cap`). Blocks
+    /// until the stage fully completes. The first phase error aborts the
+    /// stage and is returned; a phase panic is re-raised here. The pool
+    /// remains reusable after an `Err` (per-stage state is re-armed on the
+    /// next call); after a re-raised panic the scratch slot the panic
+    /// poisoned makes further stages unusable — drop the pool.
+    ///
+    /// Takes `&mut self` deliberately: exclusivity is what guarantees no
+    /// second `run_stage` can re-arm the per-stage state (queue, rings,
+    /// done counter) while this stage's lifetime-erased closures are still
+    /// running — a concurrent caller through `&self` could otherwise
+    /// release the barrier early and dangle the erased borrows.
+    pub fn run_stage(
+        &mut self,
+        n: usize,
+        depth: usize,
+        decode: &Phase<'_>,
+        apply: &Phase<'_>,
+        encode: &Phase<'_>,
+    ) -> Result<(), Error> {
+        let inner = &*self.inner;
+        let depth = depth.clamp(1, self.depth_cap);
+        // Re-arm per-stage state. No phase thread is running (previous
+        // stage's barrier completed), so plain stores are race-free.
+        inner.abort.store(false, Ordering::Release);
+        *inner.failed.lock().unwrap() = None;
+        {
+            let mut q = inner.queue.lock().unwrap();
+            q.clear();
+            q.extend(0..n);
+        }
+        for ctrl in &inner.ctrls {
+            ctrl.reset(depth);
+        }
+        inner.stats.stage_handoffs.fetch_add(1, Ordering::Relaxed);
+
+        // Publish the stage and wake everyone.
+        let threads = 3 * self.workers;
+        {
+            let mut ctl = inner.ctl.lock().unwrap();
+            ctl.spec = Some(StageSpec {
+                depth,
+                decode: erase(decode),
+                apply: erase(apply),
+                encode: erase(encode),
+            });
+            ctl.done = 0;
+            ctl.epoch += 1;
+        }
+        inner.cv.notify_all();
+
+        // Stage barrier: wait until every phase thread finished this
+        // epoch. This is what makes the lifetime erasure sound — the
+        // closure borrows are live until this loop exits.
+        {
+            let mut ctl = inner.ctl.lock().unwrap();
+            while ctl.done < threads {
+                ctl = inner.cv.wait(ctl).unwrap();
+            }
+            ctl.spec = None; // drop the raw pointers before borrows end
+        }
+
+        if let Some(payload) = inner.panic_payload.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+        match inner.failed.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for PhasePool {
+    fn drop(&mut self) {
+        {
+            let mut ctl = self.inner.ctl.lock().unwrap();
+            ctl.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Long-lived phase-thread main: park on the control condvar until a new
+/// epoch (or shutdown), run this thread's phase loop for the stage,
+/// report done, repeat.
+fn phase_main(inner: Arc<PoolInner>, w: usize, role: Role) {
+    let mut seen = 0u64;
+    loop {
+        let spec = {
+            let mut ctl = inner.ctl.lock().unwrap();
+            loop {
+                if ctl.shutdown {
+                    return;
+                }
+                if ctl.epoch > seen {
+                    break;
+                }
+                ctl = inner.cv.wait(ctl).unwrap();
+            }
+            seen = ctl.epoch;
+            ctl.spec.expect("epoch advanced without a stage spec")
+        };
+        // Catch a phase-closure panic so the thread survives for the next
+        // stage teardown path; the in-loop PhaseExit guard already ran
+        // during the unwind (abort + done flags), so siblings drain.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_phase(&inner, w, role, &spec);
+        }));
+        if let Err(payload) = outcome {
+            let mut slot = inner.panic_payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let mut ctl = inner.ctl.lock().unwrap();
+        ctl.done += 1;
+        drop(ctl);
+        inner.cv.notify_all();
+    }
+}
+
+fn run_phase(inner: &PoolInner, w: usize, role: Role, spec: &StageSpec) {
+    let env = PhaseEnv {
+        ctrl: &inner.ctrls[w],
+        slots: &inner.rings.rings[w][..spec.depth],
+        stats: &inner.stats,
+        abort: &inner.abort,
+        transfer: &inner.transfer,
+        worker: w,
+        device: w % inner.devices,
+    };
+    // SAFETY: `run_stage` holds the stage barrier open until this thread
+    // reports done, so the erased closure borrows are live here.
+    match role {
+        Role::Decode => {
+            let f = unsafe { &*spec.decode.0 };
+            decode_phase_loop(&env, &inner.queue, &inner.failed, f);
+        }
+        Role::Apply => {
+            let f = unsafe { &*spec.apply.0 };
+            apply_phase_loop(&env, &inner.failed, f);
+        }
+        Role::Encode => {
+            let f = unsafe { &*spec.encode.0 };
+            encode_phase_loop(&env, &inner.failed, f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn ok_phase() -> impl Fn(&mut super::super::WorkerCtx<'_>, usize) -> Result<(), Error> + Sync
+    {
+        |_ctx, _i| Ok(())
+    }
+
+    #[test]
+    fn pool_runs_items_through_all_phases_in_order() {
+        let mut pool = PhasePool::new(PipelineConfig::new(1, 2), 3);
+        for _stage in 0..3 {
+            let n = 40;
+            let out: Mutex<Vec<(usize, f64)>> = Mutex::new(Vec::new());
+            pool.run_stage(
+                n,
+                2,
+                &|ctx, i| {
+                    ctx.scratch.ensure_planes(4);
+                    ctx.scratch.re[0] = i as f64;
+                    Ok(())
+                },
+                &|ctx, i| {
+                    assert_eq!(ctx.scratch.re[0], i as f64, "apply saw wrong slot");
+                    ctx.scratch.re[0] *= 10.0;
+                    Ok(())
+                },
+                &|ctx, i| {
+                    out.lock().unwrap().push((i, ctx.scratch.re[0]));
+                    Ok(())
+                },
+            )
+            .unwrap();
+            let mut got = out.into_inner().unwrap();
+            assert_eq!(got.len(), n);
+            got.sort_unstable_by_key(|&(i, _)| i);
+            for (i, (item, v)) in got.iter().enumerate() {
+                assert_eq!(*item, i);
+                assert_eq!(*v, 10.0 * i as f64);
+            }
+        }
+        assert_eq!(pool.threads_spawned(), 6);
+        assert_eq!(pool.stats().stage_handoffs.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn pool_error_aborts_stage_and_pool_stays_usable() {
+        let mut pool = PhasePool::new(PipelineConfig::new(1, 1), 2);
+        let r = pool.run_stage(
+            100,
+            2,
+            &|_c, i| {
+                if i == 5 {
+                    Err(Error::Codec("boom".into()))
+                } else {
+                    Ok(())
+                }
+            },
+            &ok_phase(),
+            &ok_phase(),
+        );
+        assert!(matches!(r, Err(Error::Codec(_))));
+        // The next stage runs clean on the same threads.
+        let done = AtomicUsize::new(0);
+        pool.run_stage(
+            16,
+            2,
+            &ok_phase(),
+            &ok_phase(),
+            &|_c, _i| {
+                done.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(done.load(Ordering::Relaxed), 16);
+        assert_eq!(pool.threads_spawned(), 3);
+    }
+
+    #[test]
+    fn pool_zero_items_and_depth_clamp() {
+        let mut pool = PhasePool::new(PipelineConfig::new(1, 2), 2);
+        // depth 99 clamps to the cap; zero items completes immediately.
+        pool.run_stage(0, 99, &ok_phase(), &ok_phase(), &ok_phase()).unwrap();
+        pool.run_stage(4, 0, &ok_phase(), &ok_phase(), &ok_phase()).unwrap();
+    }
+
+    #[test]
+    fn pool_panic_propagates_to_caller_and_teardown_joins() {
+        for phase in 0..3usize {
+            let mut pool = PhasePool::new(PipelineConfig::new(1, 1), 2);
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = pool.run_stage(
+                    16,
+                    2,
+                    &move |_c, i| {
+                        assert!(!(phase == 0 && i == 3), "kaboom-decode");
+                        Ok(())
+                    },
+                    &move |_c, i| {
+                        assert!(!(phase == 1 && i == 3), "kaboom-apply");
+                        Ok(())
+                    },
+                    &move |_c, i| {
+                        assert!(!(phase == 2 && i == 3), "kaboom-encode");
+                        Ok(())
+                    },
+                );
+            }));
+            assert!(caught.is_err(), "phase {phase} panic was swallowed or hung");
+            drop(pool); // must join, not hang, after a panicked stage
+        }
+    }
+
+    #[test]
+    fn ring_depth_controller_aimd_trajectory() {
+        let mut ctl = RingDepthController::new(2, true, 8);
+        assert_eq!(ctl.stage_depth(0), 2, "first stage primes, never moves");
+        // Growing stall → additive increase.
+        assert_eq!(ctl.stage_depth(10_000_000), 3);
+        assert_eq!(ctl.stage_depth(25_000_000), 4);
+        // Stall flat (delta 0) → multiplicative decrease to the floor.
+        assert_eq!(ctl.stage_depth(25_000_000), 2);
+        assert_eq!(ctl.stage_depth(25_000_000), 2, "floor holds");
+        // Moderate growth between thresholds → hold.
+        assert_eq!(ctl.stage_depth(25_000_000 + RING_AIMD_IDLE_NS + 1), 2);
+        assert_eq!(ctl.peak(), 4);
+        assert_eq!(ctl.adjustments(), 3);
+    }
+
+    #[test]
+    fn ring_depth_controller_caps_and_pins() {
+        let mut ctl = RingDepthController::new(2, true, 4);
+        let mut stall = 0u64;
+        ctl.stage_depth(stall); // prime
+        for _ in 0..10 {
+            stall += 2 * RING_AIMD_STALL_STEP_NS;
+            ctl.stage_depth(stall);
+        }
+        assert_eq!(ctl.current(), 4, "depth exceeded its cap");
+        // Pinned controller never moves regardless of stall history.
+        let mut pinned = RingDepthController::new(3, false, 8);
+        for s in [0u64, 1_000_000_000, 1_000_000_000] {
+            assert_eq!(pinned.stage_depth(s), 3);
+        }
+        assert_eq!(pinned.adjustments(), 0);
+    }
+}

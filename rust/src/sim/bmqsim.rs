@@ -15,16 +15,14 @@
 //! 4. Blocks live in the two-level [`BlockStore`] (§4.4): primary budget +
 //!    disk spill.
 
-use super::{plan_group_order, GateApplier, NativeApplier, SimConfig, SimResult};
+use super::{plan_group_order, GateApplier, NativeApplier, PoolDriver, SimConfig, SimResult};
 use crate::circuit::fusion::{fuse_remapped, FusedGate};
 use crate::circuit::{partition_circuit, Circuit};
 use crate::compress::{Codec, CodecScratch};
 use crate::gates::fused;
 use crate::memory::{BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
-use crate::pipeline::{
-    run_items, run_items_overlapped, OverlapStats, RingPool, Scratch, ScratchPool, WorkerCtx,
-};
+use crate::pipeline::{Scratch, WorkerCtx};
 use crate::state::{BlockLayout, StateVector};
 use crate::types::{Error, Result};
 use std::sync::atomic::Ordering;
@@ -98,20 +96,20 @@ impl<'a> BmqSim<'a> {
             self.config.spill_dir.clone(),
             self.config.store_options(),
         )?;
-        self.init_blocks(&layout, &codec, &store, &metrics)?;
+        // Initialization also calibrates the codec (ns per amplitude) for
+        // the per-stage overlap auto-enable heuristic.
+        let codec_ns_per_amp = self.init_blocks(&layout, &codec, &store, &metrics)?;
 
         // ---- Staged, pipelined execution ----
         // Scratch arenas persist per worker for the WHOLE run: plane
         // buffers, codec intermediates, and recycled payload bytes carry
         // over from stage to stage, so steady-state group chains allocate
-        // nothing. Overlapped runs use a ring of `pipeline_depth` slots
-        // per worker instead of a single arena, so a worker can hold
-        // several group chains in flight at once.
-        let workers = self.config.pipeline.workers();
-        let overlap = self.config.overlap;
-        let pool = (!overlap).then(|| ScratchPool::new(workers));
-        let rings = overlap.then(|| RingPool::new(workers, self.config.pipeline_depth));
-        let ostats = OverlapStats::default();
+        // nothing. Overlapped stages run on the persistent `PhasePool` —
+        // 3×workers decode/apply/encode threads spawned once for the run
+        // and fed per-stage work descriptors, each worker holding up to
+        // ring-depth group chains in flight; `PoolDriver` owns both chain
+        // drivers and the per-stage overlap/ring-depth decisions.
+        let mut pools = PoolDriver::new(&self.config, self.config.pipeline, codec_ns_per_amp);
         let use_fusion = self.config.fusion && self.applier.supports_fusion();
         let mut order: Vec<usize> = Vec::with_capacity(layout.num_blocks());
         let mut group_ids: Vec<usize> = Vec::new();
@@ -166,57 +164,44 @@ impl<'a> BmqSim<'a> {
 
             let block_len = layout.block_len();
             let fused = fused_plan.as_ref().map(|(ops, segs)| (ops.as_slice(), segs.as_slice()));
-            if let Some(pool) = &pool {
-                run_items::<Error, _>(
-                    self.config.pipeline,
-                    schedule.num_groups(),
-                    pool,
-                    |ctx, i| {
-                        self.process_group(
-                            ctx,
-                            &schedule,
-                            group_order[i],
-                            block_len,
-                            &remapped,
-                            fused,
-                            &codec,
-                            &store,
-                            &metrics,
-                        )
-                    },
-                )?;
-            } else {
-                // Overlapped chains: while a worker applies gates to group
-                // g, its decode thread is already fetching/decompressing
-                // g+1 and its encode thread compressing/storing g−1.
-                run_items_overlapped::<Error, _, _, _>(
-                    self.config.pipeline,
-                    schedule.num_groups(),
-                    rings.as_ref().expect("overlap on but no ring pool"),
-                    &ostats,
-                    |ctx, i| {
-                        self.decode_group(
-                            ctx,
-                            &schedule,
-                            group_order[i],
-                            block_len,
-                            &codec,
-                            &store,
-                            &metrics,
-                        )
-                    },
-                    |ctx, _i| self.apply_group(ctx, &remapped, fused, &metrics),
-                    |ctx, _i| self.encode_group(ctx, block_len, &codec, &store, &metrics),
-                )?;
-            }
+
+            // The chain's three phases; the driver decides per stage
+            // (overlap auto-enable + adaptive ring depth) whether they run
+            // on the persistent phase pool — while a worker applies gates
+            // to group g, its decode thread is already
+            // fetching/decompressing g+1 and its encode thread
+            // compressing/storing g−1 — or composed sequentially per
+            // worker.
+            let decode_fn = |ctx: &mut WorkerCtx<'_>, i: usize| -> Result<()> {
+                self.decode_group(
+                    ctx,
+                    &schedule,
+                    group_order[i],
+                    block_len,
+                    &codec,
+                    &store,
+                    &metrics,
+                )
+            };
+            let apply_fn = |ctx: &mut WorkerCtx<'_>, _i: usize| -> Result<()> {
+                self.apply_group(ctx, &remapped, fused, &metrics)
+            };
+            let encode_fn = |ctx: &mut WorkerCtx<'_>, _i: usize| -> Result<()> {
+                self.encode_group(ctx, block_len, &codec, &store, &metrics)
+            };
+            pools.run_stage(
+                schedule.group_len(),
+                schedule.num_groups(),
+                &metrics,
+                &decode_fn,
+                &apply_fn,
+                &encode_fn,
+            )?;
             metrics
                 .groups_processed
                 .fetch_add(schedule.num_groups() as u64, Ordering::Relaxed);
         }
-        let grows = pool.as_ref().map_or(0, |p| p.total_plane_grows())
-            + rings.as_ref().map_or(0, |r| r.total_plane_grows());
-        metrics.scratch_grows.store(grows, Ordering::Relaxed);
-        metrics.absorb_overlap(&ostats);
+        pools.finish(&metrics);
 
         // ---- Wrap up ----
         // Drain the write-back queue (and surface any background spill
@@ -246,13 +231,19 @@ impl<'a> BmqSim<'a> {
 
     /// Compress block 0 (`amp[0] = 1`) and one all-zero block; clone the
     /// zero payload into every other slot.
+    ///
+    /// Returns the measured codec cost in **ns per amplitude** (the two
+    /// initial plane compressions, timed), which the overlap auto-enable
+    /// heuristic multiplies by group size at stage-plan time. The init
+    /// planes are sparse, so the estimate is a *floor* on real codec cost —
+    /// biasing auto-overlap toward the safe sequential side.
     fn init_blocks(
         &self,
         layout: &BlockLayout,
         codec: &Codec,
         store: &BlockStore,
         metrics: &Metrics,
-    ) -> Result<()> {
+    ) -> Result<f64> {
         let len = layout.block_len();
         let zero_plane = vec![0.0f64; len];
         let mut first_re = vec![0.0f64; len];
@@ -268,48 +259,34 @@ impl<'a> BmqSim<'a> {
             Ok(out)
         };
 
+        let t0 = Instant::now();
         let zero_bytes = compress_plane(&zero_plane)?;
         let first = BlockPayload { re: compress_plane(&first_re)?, im: zero_bytes.clone() };
+        let codec_ns_per_amp = t0.elapsed().as_nanos() as f64 / (2.0 * len as f64);
         store.put(0, first)?;
         // §4.2: "copy the compressed SV block with all zeros multiple times".
         for id in 1..layout.num_blocks() {
             store.put(id, BlockPayload { re: zero_bytes.clone(), im: zero_bytes.clone() })?;
         }
-        Ok(())
+        Ok(codec_ns_per_amp)
     }
 
-    /// One SV-group chain: fetch → decompress → update → compress → store.
+    /// Pipeline phase 1 of the SV-group chain
+    /// (fetch → decompress → update → compress → store): fetch the group's
+    /// payloads (transfer section) and decompress them into the slot's
+    /// gathered group buffer.
     ///
     /// The chain is split into the three pipeline phases so the overlapped
     /// driver can run them on separate threads; the sequential path simply
-    /// composes them in order on one thread — both paths execute the exact
-    /// same code per group, which is what makes byte-identical output a
-    /// structural property rather than a test-enforced one.
+    /// composes them in order on one thread (`PoolDriver::run_stage`) —
+    /// both paths execute the exact same code per group, which is what
+    /// makes byte-identical output a structural property rather than a
+    /// test-enforced one.
     ///
     /// Zero-copy / zero-allocation (§Perf): decompression writes directly
     /// into the worker's scratch planes (no temp Vec + copy), compression
     /// reuses the fetched payloads' byte buffers, and the planes themselves
     /// are reused across groups and stages via the scratch arena.
-    #[allow(clippy::too_many_arguments)]
-    fn process_group(
-        &self,
-        ctx: &mut WorkerCtx<'_>,
-        schedule: &crate::state::GroupSchedule,
-        gidx: usize,
-        block_len: usize,
-        gates: &[(crate::circuit::Gate, Vec<usize>)],
-        fused_plan: Option<(&[FusedGate], &[fused::Segment])>,
-        codec: &Codec,
-        store: &BlockStore,
-        metrics: &Metrics,
-    ) -> Result<()> {
-        self.decode_group(ctx, schedule, gidx, block_len, codec, store, metrics)?;
-        self.apply_group(ctx, gates, fused_plan, metrics)?;
-        self.encode_group(ctx, block_len, codec, store, metrics)
-    }
-
-    /// Pipeline phase 1 — fetch the group's payloads (transfer section)
-    /// and decompress them into the slot's gathered group buffer.
     #[allow(clippy::too_many_arguments)]
     fn decode_group(
         &self,
@@ -463,7 +440,7 @@ mod tests {
     use crate::circuit::generators;
     use crate::compress::Codec;
     use crate::pipeline::PipelineConfig;
-    use crate::sim::DenseSim;
+    use crate::sim::{DenseSim, OverlapMode};
 
     fn cfg(block_qubits: usize, inner: usize) -> SimConfig {
         SimConfig { block_qubits, inner_size: inner, ..SimConfig::default() }
@@ -533,13 +510,15 @@ mod tests {
         let base = {
             let mut config = cfg(4, 2);
             config.pipeline = PipelineConfig::sequential();
+            config.overlap = OverlapMode::Off;
             BmqSim::new(config).run(&c, true).unwrap()
         };
         for (depth, workers) in [(1usize, 1usize), (2, 1), (3, 2), (2, 4)] {
             let mut config = cfg(4, 2);
             config.pipeline = PipelineConfig::new(1, workers);
-            config.overlap = true;
+            config.overlap = OverlapMode::On;
             config.pipeline_depth = depth;
+            config.pipeline_depth_auto = false;
             let r = BmqSim::new(config).run(&c, true).unwrap();
             let f = r.state.as_ref().unwrap().fidelity(base.state.as_ref().unwrap());
             assert!(f > 1.0 - 1e-12, "depth={depth} workers={workers}: {f}");
@@ -564,10 +543,15 @@ mod tests {
         let c = generators::qft(12);
         let mut config = cfg(6, 2);
         config.pipeline = PipelineConfig::sequential();
-        config.overlap = true;
+        config.overlap = OverlapMode::On;
         config.pipeline_depth = 2;
+        config.pipeline_depth_auto = false;
         let r = BmqSim::new(config).run(&c, false).unwrap();
         assert!(r.metrics.scratch_grows >= 1);
+        // Persistent pool: phase threads spawned once for the run, one
+        // handoff per stage.
+        assert_eq!(r.metrics.phase_threads_spawned, 3);
+        assert_eq!(r.metrics.pool_stage_handoffs, r.stages as u64);
         assert!(
             r.metrics.scratch_grows <= 2 * r.stages as u64,
             "ring scratch grew {} times over {} stages",
@@ -575,6 +559,37 @@ mod tests {
             r.stages
         );
         assert!(r.metrics.groups_processed >= 2 * r.metrics.scratch_grows);
+    }
+
+    #[test]
+    fn auto_overlap_decides_every_stage_and_stays_correct() {
+        let c = generators::build("qaoa", 10, 3).unwrap();
+        let pinned_off = {
+            let mut config = cfg(5, 2);
+            config.overlap = OverlapMode::Off;
+            BmqSim::new(config).run(&c, true).unwrap()
+        };
+        let mut config = cfg(5, 2);
+        config.overlap = OverlapMode::Auto;
+        let r = BmqSim::new(config).run(&c, true).unwrap();
+        assert_eq!(
+            r.metrics.auto_overlap_on + r.metrics.auto_overlap_off,
+            r.stages as u64,
+            "auto mode must decide every stage"
+        );
+        // Whatever auto decided, the state is identical to the pinned
+        // sequential run (overlap moves when work happens, never what).
+        let f = r
+            .state
+            .as_ref()
+            .unwrap()
+            .fidelity(pinned_off.state.as_ref().unwrap());
+        assert!(f > 1.0 - 1e-12, "auto overlap changed the state: {f}");
+        // Pinned modes never touch the auto counters.
+        assert_eq!(
+            pinned_off.metrics.auto_overlap_on + pinned_off.metrics.auto_overlap_off,
+            0
+        );
     }
 
     #[test]
@@ -596,8 +611,9 @@ mod tests {
         config.memory_budget = Some(10 * 1024);
         config.spill_dir = Some(dir);
         config.pipeline = PipelineConfig::new(1, 2);
-        config.overlap = true;
+        config.overlap = OverlapMode::On;
         config.pipeline_depth = 2;
+        config.pipeline_depth_auto = false;
         let r = BmqSim::new(config).run(&c, true).unwrap();
         assert!(r.mem.spill_events > 0, "budget never engaged");
         assert!(r.mem.peak_primary_bytes <= 10 * 1024);
@@ -806,6 +822,7 @@ mod tests {
         let c = generators::qft(12);
         let mut config = cfg(6, 2);
         config.pipeline = PipelineConfig::sequential();
+        config.overlap = OverlapMode::Off; // the bound below is arena-per-worker
         let r = BmqSim::new(config).run(&c, false).unwrap();
         assert!(r.metrics.scratch_grows >= 1, "arena never warmed");
         assert!(

@@ -26,6 +26,75 @@ impl std::str::FromStr for Backend {
     }
 }
 
+/// Whether the engines run each worker's group chain on the overlapped
+/// decode/apply/encode phase pipeline (§4.2 overhead concealment).
+///
+/// `Auto` — the default since the persistent-pool refactor — decides *per
+/// stage* at plan time from [`auto_overlap`]: group size × the codec cost
+/// measured during block initialization. `On`/`Off` (CLI `--overlap` /
+/// `--no-overlap`) pin the choice for every stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    /// Per-stage heuristic (the default).
+    #[default]
+    Auto,
+    /// Always pipeline (the old `--overlap` opt-in).
+    On,
+    /// Always sequential per-worker chains.
+    Off,
+}
+
+impl OverlapMode {
+    /// The pinned mode for an explicit on/off choice.
+    pub fn pinned(on: bool) -> Self {
+        if on {
+            OverlapMode::On
+        } else {
+            OverlapMode::Off
+        }
+    }
+
+    /// Resolve the mode against the heuristic's verdict for one stage.
+    pub fn engaged(self, heuristic: bool) -> bool {
+        match self {
+            OverlapMode::On => true,
+            OverlapMode::Off => false,
+            OverlapMode::Auto => heuristic,
+        }
+    }
+
+    pub fn is_auto(self) -> bool {
+        matches!(self, OverlapMode::Auto)
+    }
+}
+
+/// Auto-enable threshold: estimated concealable codec time per group chain
+/// below which the overlapped pipeline is declined. Calibrated against the
+/// fig11 overlap study: at the study's smoke geometry (2^14-amplitude
+/// groups, point-wise codec at single-digit ns/amp) a chain conceals
+/// ≈0.5–1.5 ms — an order of magnitude above this floor — while the
+/// handshake machinery (condvar wakeups, worst-case 500 µs poll) makes
+/// chains concealing ≲150 µs a net loss. See `fig11_auto_enable` for the
+/// measured crossover.
+pub const OVERLAP_AUTO_MIN_CONCEAL_NS: f64 = 150_000.0;
+
+/// The stage-plan-time overlap heuristic (ROADMAP "overlap auto-enable"):
+/// estimate the codec time a chain could conceal — `group_len` amplitudes
+/// × 2 planes × (decompress + compress) ≈ `4 × group_len ×
+/// codec_ns_per_amp` — and engage the pipeline only when it clears
+/// [`OVERLAP_AUTO_MIN_CONCEAL_NS`]. A stage with fewer than two groups has
+/// nothing to pipeline (the ring never holds two chains) and always
+/// declines. `codec_ns_per_amp` is measured by the engines while
+/// compressing the initial blocks, so a raw (pass-through) codec or a fast
+/// machine genuinely lowers the estimate.
+pub fn auto_overlap(group_len: usize, num_groups: usize, codec_ns_per_amp: f64) -> bool {
+    if num_groups < 2 {
+        return false;
+    }
+    let concealable_ns = 4.0 * group_len as f64 * codec_ns_per_amp;
+    concealable_ns >= OVERLAP_AUTO_MIN_CONCEAL_NS
+}
+
 /// Full engine configuration. `Default` reproduces the paper's settings
 /// (point-wise relative 1e-3, pre-scan on, pipelined).
 #[derive(Debug, Clone)]
@@ -74,17 +143,25 @@ pub struct SimConfig {
     /// I/O-under-lock; baseline knob for the fig09 concurrency study).
     pub sync_spill: bool,
     /// Overlapped group chains: run each worker's fetch+decompress,
-    /// gate-apply, and compress+store phases on a three-thread software
-    /// pipeline over a ring of scratch slots, so codec time and store I/O
-    /// are concealed behind gate application (§4.2's "pipeline"
-    /// contribution). Off = the strictly sequential per-worker chain
+    /// gate-apply, and compress+store phases on the persistent three-thread
+    /// phase pipeline ([`crate::pipeline::PhasePool`]) over a ring of
+    /// scratch slots, so codec time and store I/O are concealed behind gate
+    /// application (§4.2's "pipeline" contribution). `Auto` (default)
+    /// decides per stage from group size × measured codec cost
+    /// ([`auto_overlap`]); `Off` = the strictly sequential per-worker chain
     /// (identical numbers to the pre-overlap engine; the right call for
     /// tiny groups, where handshake overhead exceeds codec time).
-    pub overlap: bool,
-    /// Scratch slots per worker ring when `overlap` is on: how many group
+    pub overlap: OverlapMode,
+    /// Scratch slots per worker ring when overlap engages: how many group
     /// chains may be in flight per worker. 2 = classic double buffering;
-    /// 1 degenerates to a handoff-serialized chain (parity testing).
+    /// 1 degenerates to a handoff-serialized chain (parity testing). With
+    /// `pipeline_depth_auto` this is only the *starting* depth.
     pub pipeline_depth: usize,
+    /// Adapt `pipeline_depth` per stage from observed handshake-stall
+    /// imbalance (AIMD, [`crate::pipeline::RingDepthController`]) instead
+    /// of holding it fixed. The CLI enables this whenever
+    /// `--pipeline-depth` is not given explicitly.
+    pub pipeline_depth_auto: bool,
     /// Spill-aware scheduling: reorder each stage's groups so groups
     /// whose blocks are already primary-resident run first (the store
     /// knows — [`crate::memory::BlockStore::residency_rank`]), shrinking
@@ -116,8 +193,9 @@ impl Default for SimConfig {
             store_shards: 8,
             prefetch_depth: 4,
             sync_spill: false,
-            overlap: false,
+            overlap: OverlapMode::Auto,
             pipeline_depth: 2,
+            pipeline_depth_auto: true,
             spill_aware: true,
             prefetch_auto: false,
         }
@@ -175,8 +253,9 @@ mod tests {
         assert_eq!(c.store_shards, 8);
         assert_eq!(c.prefetch_depth, 4);
         assert!(!c.sync_spill);
-        assert!(!c.overlap, "overlap is opt-in");
+        assert_eq!(c.overlap, OverlapMode::Auto, "overlap defaults to the heuristic");
         assert_eq!(c.pipeline_depth, 2);
+        assert!(c.pipeline_depth_auto, "ring depth adapts unless pinned");
         assert!(c.spill_aware);
         assert!(!c.prefetch_auto);
         let opts = c.store_options();
@@ -207,5 +286,34 @@ mod tests {
         assert!(c.validate(20).is_ok());
         assert!(c.validate(0).is_err());
         assert!(c.validate(99).is_err());
+    }
+
+    #[test]
+    fn overlap_mode_resolution() {
+        assert!(OverlapMode::On.engaged(false));
+        assert!(!OverlapMode::Off.engaged(true));
+        assert!(OverlapMode::Auto.engaged(true));
+        assert!(!OverlapMode::Auto.engaged(false));
+        assert_eq!(OverlapMode::pinned(true), OverlapMode::On);
+        assert_eq!(OverlapMode::pinned(false), OverlapMode::Off);
+        assert!(OverlapMode::Auto.is_auto() && !OverlapMode::On.is_auto());
+    }
+
+    #[test]
+    fn auto_overlap_boundaries() {
+        // Tiny groups never clear the concealment floor.
+        assert!(!auto_overlap(1 << 6, 16, 10.0));
+        // Codec-heavy large groups do.
+        assert!(auto_overlap(1 << 14, 16, 10.0));
+        // A single group has nothing to pipeline, whatever the codec cost.
+        assert!(!auto_overlap(1 << 20, 1, 1000.0));
+        assert!(!auto_overlap(1 << 20, 0, 1000.0));
+        // Exact threshold: `>=` engages; a hair below declines.
+        let glen = 1usize << 12;
+        let ns = OVERLAP_AUTO_MIN_CONCEAL_NS / (4.0 * glen as f64);
+        assert!(auto_overlap(glen, 2, ns));
+        assert!(!auto_overlap(glen, 2, ns * 0.99));
+        // A free codec (raw passthrough measuring ~0) always declines.
+        assert!(!auto_overlap(1 << 20, 64, 0.0));
     }
 }

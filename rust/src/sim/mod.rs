@@ -14,16 +14,130 @@ pub mod observable;
 pub mod sc19;
 
 pub use bmqsim::BmqSim;
-pub use config::{Backend, SimConfig};
+pub use config::{auto_overlap, Backend, OverlapMode, SimConfig, OVERLAP_AUTO_MIN_CONCEAL_NS};
 pub use dense::DenseSim;
 pub use sc19::Sc19Sim;
 
 use crate::circuit::Gate;
 use crate::gates::apply_gate_remapped;
 use crate::memory::{BlockStore, MemStats};
-use crate::metrics::MetricsReport;
+use crate::metrics::{Metrics, MetricsReport};
+use crate::pipeline::{
+    run_items, PhasePool, PipelineConfig, RingDepthController, ScratchPool, WorkerCtx,
+    RING_DEPTH_MAX,
+};
 use crate::state::{GroupSchedule, StateVector};
-use crate::types::Result;
+use crate::types::{Error, Result};
+use std::sync::atomic::Ordering;
+
+/// A borrowed phase closure as the engines hand it to [`PoolDriver`]:
+/// one third of a group chain (decode / apply / encode), callable on any
+/// worker.
+pub(crate) type PhaseFn<'a> = &'a (dyn Fn(&mut WorkerCtx<'_>, usize) -> Result<()> + Sync);
+
+/// Shared chain-driver plumbing for both engines: the lazily-built
+/// sequential [`ScratchPool`] and persistent [`PhasePool`], the adaptive
+/// ring-depth controller, and the per-stage overlap auto-enable decision.
+/// One instance lives per engine run; `run_stage` is called once per
+/// stage (per gate in SC19), `finish` once before the metrics snapshot.
+pub(crate) struct PoolDriver {
+    pipe: PipelineConfig,
+    overlap: OverlapMode,
+    depth_cap: usize,
+    codec_ns_per_amp: f64,
+    seq_pool: Option<ScratchPool>,
+    phase_pool: Option<PhasePool>,
+    depth_ctl: RingDepthController,
+}
+
+impl PoolDriver {
+    /// `codec_ns_per_amp` is the engine's init-time codec calibration (see
+    /// [`auto_overlap`]); `pipe` is the worker shape the engine actually
+    /// drives (BMQSIM: `config.pipeline`; SC19: one device × its workers).
+    pub(crate) fn new(config: &SimConfig, pipe: PipelineConfig, codec_ns_per_amp: f64) -> Self {
+        let depth_cap = if config.pipeline_depth_auto {
+            RING_DEPTH_MAX
+        } else {
+            config.pipeline_depth.max(1)
+        };
+        PoolDriver {
+            pipe,
+            overlap: config.overlap,
+            depth_cap,
+            codec_ns_per_amp,
+            seq_pool: None,
+            phase_pool: None,
+            depth_ctl: RingDepthController::new(
+                config.pipeline_depth,
+                config.pipeline_depth_auto,
+                depth_cap,
+            ),
+        }
+    }
+
+    /// Run one stage of `num_groups` disjoint group chains, deciding per
+    /// stage (unless pinned) whether to overlap: engaged stages go to the
+    /// persistent phase pool at the controller's ring depth, declined
+    /// stages run the same three closures composed sequentially per
+    /// worker. Both pools are built on first use, so a run whose stages
+    /// all resolve one way never pays for the other.
+    pub(crate) fn run_stage(
+        &mut self,
+        group_len: usize,
+        num_groups: usize,
+        metrics: &Metrics,
+        decode: PhaseFn<'_>,
+        apply: PhaseFn<'_>,
+        encode: PhaseFn<'_>,
+    ) -> Result<()> {
+        let heuristic = auto_overlap(group_len, num_groups, self.codec_ns_per_amp);
+        let use_overlap = self.overlap.engaged(heuristic);
+        if self.overlap.is_auto() {
+            if use_overlap {
+                metrics.auto_overlap_on.fetch_add(1, Ordering::Relaxed);
+            } else {
+                metrics.auto_overlap_off.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let pipe = self.pipe;
+        if use_overlap {
+            let depth_cap = self.depth_cap;
+            let pool =
+                self.phase_pool.get_or_insert_with(|| PhasePool::new(pipe, depth_cap));
+            let depth = self.depth_ctl.stage_depth(pool.stats().total_stall_ns());
+            pool.run_stage(num_groups, depth, decode, apply, encode)
+        } else {
+            let pool =
+                self.seq_pool.get_or_insert_with(|| ScratchPool::new(pipe.workers()));
+            run_items::<Error, _>(pipe, num_groups, pool, |ctx, i| {
+                decode(&mut *ctx, i)?;
+                apply(&mut *ctx, i)?;
+                encode(&mut *ctx, i)
+            })
+        }
+    }
+
+    /// End-of-run accounting: arena growth across both pools, the
+    /// overlap/pool counters, and the ring-depth trajectory.
+    pub(crate) fn finish(&self, metrics: &Metrics) {
+        let grows = self.seq_pool.as_ref().map_or(0, |p| p.total_plane_grows())
+            + self.phase_pool.as_ref().map_or(0, |p| p.total_plane_grows());
+        metrics.scratch_grows.store(grows, Ordering::Relaxed);
+        if let Some(pool) = &self.phase_pool {
+            metrics.absorb_overlap(pool.stats());
+            metrics
+                .phase_threads_spawned
+                .store(pool.threads_spawned(), Ordering::Relaxed);
+            metrics
+                .ring_depth_final
+                .store(self.depth_ctl.current() as u64, Ordering::Relaxed);
+            metrics.ring_depth_peak.store(self.depth_ctl.peak() as u64, Ordering::Relaxed);
+            metrics
+                .ring_depth_adjustments
+                .store(self.depth_ctl.adjustments(), Ordering::Relaxed);
+        }
+    }
+}
 
 /// Spill-aware scheduling (ROADMAP): order a stage's groups so the ones
 /// whose blocks are already primary-resident run first, deferring groups

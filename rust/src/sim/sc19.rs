@@ -13,17 +13,14 @@
 //! (parallel block updates, still per-gate compression, no pipelining —
 //! the paper notes its GPU version doesn't overlap transfers either).
 
-use super::{plan_group_order, GateApplier, NativeApplier, SimConfig, SimResult};
+use super::{plan_group_order, GateApplier, NativeApplier, PoolDriver, SimConfig, SimResult};
 use crate::circuit::Circuit;
 use crate::compress::CodecScratch;
 use crate::memory::{BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
-use crate::pipeline::{
-    run_items, run_items_overlapped, OverlapStats, PipelineConfig, RingPool, Scratch,
-    ScratchPool, WorkerCtx,
-};
+use crate::pipeline::{PipelineConfig, Scratch, WorkerCtx};
 use crate::state::{BlockLayout, StateVector};
-use crate::types::{Error, Result};
+use crate::types::Result;
 use std::sync::atomic::Ordering;
 use std::time::Instant;
 
@@ -59,35 +56,39 @@ impl<'a> Sc19Sim<'a> {
         )?;
 
         // Initial compression of every block (SC19 compresses the whole
-        // initial state; we reuse the zero-clone trick for fairness).
-        {
+        // initial state; we reuse the zero-clone trick for fairness). The
+        // two timed compressions also calibrate the codec cost (ns/amp)
+        // for the per-gate overlap auto-enable heuristic.
+        let codec_ns_per_amp = {
             let len = layout.block_len();
             let zero = vec![0.0f64; len];
             let mut first = vec![0.0f64; len];
             first[0] = 1.0;
+            let t0 = Instant::now();
             let z = metrics.time(Phase::Compress, || codec.compress(&zero))?;
             let f = metrics.time(Phase::Compress, || codec.compress(&first))?;
+            let per_amp = t0.elapsed().as_nanos() as f64 / (2.0 * len as f64);
             metrics.compressions.fetch_add(2, Ordering::Relaxed);
             store.put(0, BlockPayload { re: f, im: z.clone() })?;
             for id in 1..layout.num_blocks() {
                 store.put(id, BlockPayload { re: z.clone(), im: z.clone() })?;
             }
-        }
+            per_amp
+        };
 
         // Per-gate sweep: the defining behaviour of the basic solution.
         // (The scratch arenas persist across gates, so even this engine's
         // far more frequent chains stay allocation-free in steady state.)
         // No fusion here — per-gate (de)compression is what SC19 *is* —
         // but the plane sweep itself may run worker-parallel
-        // (`apply_workers`), and with `overlap` the per-gate chain gets
-        // the same decode/apply/encode phase pipeline as BMQSIM (the
-        // per-gate frequency problem remains; only codec/transfer time is
-        // concealed).
+        // (`apply_workers`), and when overlap engages the per-gate chain
+        // runs on the same persistent decode/apply/encode phase pool as
+        // BMQSIM (the per-gate frequency problem remains; only
+        // codec/transfer time is concealed). The pool pays off even more
+        // here: the schedule horizon is one gate, so the scoped driver
+        // would churn 3×workers threads per *gate*.
         let pipe = PipelineConfig::new(1, self.workers);
-        let overlap = self.config.overlap;
-        let pool = (!overlap).then(|| ScratchPool::new(pipe.workers()));
-        let rings = overlap.then(|| RingPool::new(pipe.workers(), self.config.pipeline_depth));
-        let ostats = OverlapStats::default();
+        let mut pools = PoolDriver::new(&self.config, pipe, codec_ns_per_amp);
         let sweep_workers =
             if self.applier.supports_fusion() { self.config.apply_workers.max(1) } else { 1 };
         let mut ids: Vec<usize> = Vec::new();
@@ -189,31 +190,22 @@ impl<'a> Sc19Sim<'a> {
                 Ok(())
             };
 
-            if let Some(pool) = &pool {
-                run_items::<Error, _>(pipe, schedule.num_groups(), pool, |ctx, i| {
-                    decode(&mut *ctx, i)?;
-                    apply(&mut *ctx, i)?;
-                    encode(&mut *ctx, i)
-                })?;
-            } else {
-                run_items_overlapped::<Error, _, _, _>(
-                    pipe,
-                    schedule.num_groups(),
-                    rings.as_ref().expect("overlap on but no ring pool"),
-                    &ostats,
-                    &decode,
-                    &apply,
-                    &encode,
-                )?;
-            }
+            // The driver decides per gate (the SC19 "stage" horizon)
+            // whether the chain overlaps on the persistent pool or runs
+            // sequentially — same heuristic as the staged engine.
+            pools.run_stage(
+                schedule.group_len(),
+                schedule.num_groups(),
+                &metrics,
+                &decode,
+                &apply,
+                &encode,
+            )?;
             metrics.gates_applied.fetch_add(1, Ordering::Relaxed);
             // One full state sweep per gate — the frequency problem.
             metrics.plane_sweeps.fetch_add(1, Ordering::Relaxed);
         }
-        let grows = pool.as_ref().map_or(0, |p| p.total_plane_grows())
-            + rings.as_ref().map_or(0, |r| r.total_plane_grows());
-        metrics.scratch_grows.store(grows, Ordering::Relaxed);
-        metrics.absorb_overlap(&ostats);
+        pools.finish(&metrics);
         store.flush()?;
 
         let wall = t0.elapsed().as_secs_f64();
@@ -336,12 +328,15 @@ mod tests {
         let c = generators::qft(8);
         let mut config = SimConfig { block_qubits: 4, ..SimConfig::default() };
         config.codec = Codec::raw();
+        config.overlap = crate::sim::OverlapMode::Off;
         let base = Sc19Sim::new(config.clone(), 1).run(&c, true).unwrap();
         assert_eq!(base.metrics.decode_ahead_hits, 0);
+        assert_eq!(base.metrics.phase_threads_spawned, 0, "no pool without overlap");
         for (depth, workers) in [(1usize, 1usize), (2, 1), (2, 4)] {
             let mut oc = config.clone();
-            oc.overlap = true;
+            oc.overlap = crate::sim::OverlapMode::On;
             oc.pipeline_depth = depth;
+            oc.pipeline_depth_auto = false;
             let r = Sc19Sim::new(oc, workers).run(&c, true).unwrap();
             let f = r.state.as_ref().unwrap().fidelity(base.state.as_ref().unwrap());
             assert!(f > 1.0 - 1e-12, "depth={depth} workers={workers}: {f}");
@@ -349,6 +344,9 @@ mod tests {
             assert_eq!(r.metrics.plane_sweeps, c.len() as u64);
             assert_eq!(r.metrics.decompressions, base.metrics.decompressions);
             assert!(r.metrics.decode_ahead_hits > 0 || r.metrics.overlap_stall_ns > 0);
+            // Persistent pool: one handoff per gate, threads spawned once.
+            assert_eq!(r.metrics.pool_stage_handoffs, c.len() as u64);
+            assert_eq!(r.metrics.phase_threads_spawned, 3 * workers as u64);
         }
     }
 

@@ -1,0 +1,109 @@
+//! End-to-end tests for the CI bench-regression gate: the `bench_check`
+//! binary must exit non-zero when fed a synthetically regressed
+//! `BENCH_*.json` (ISSUE 5 acceptance) and zero on healthy artifacts.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn bench_check_exe() -> &'static str {
+    env!("CARGO_BIN_EXE_bench_check")
+}
+
+fn setup(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bmq-check-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("bench_baselines")).unwrap();
+    dir
+}
+
+fn write(dir: &Path, rel: &str, body: &str) {
+    std::fs::write(dir.join(rel), body).unwrap();
+}
+
+fn run_in(dir: &Path, args: &[&str]) -> std::process::Output {
+    Command::new(bench_check_exe())
+        .current_dir(dir)
+        .env_remove("BENCH_BASELINE_REFRESH")
+        .args(args)
+        .output()
+        .expect("spawn bench_check")
+}
+
+#[test]
+fn regressed_artifact_exits_nonzero() {
+    let dir = setup("regress");
+    write(&dir, "bench_baselines/BENCH_gates.json", r#"{"speedup": 3.0}"#);
+    // 2.0 vs 3.0 = −33%, beyond the 25% gate.
+    write(&dir, "BENCH_gates.json", r#"{"speedup": 2.0}"#);
+    let out = run_in(&dir, &["BENCH_gates.json"]);
+    assert!(
+        !out.status.success(),
+        "gate did not fire: stdout={} stderr={}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("REGRESSED"), "no finding printed: {stdout}");
+}
+
+#[test]
+fn healthy_artifact_exits_zero() {
+    let dir = setup("healthy");
+    write(&dir, "bench_baselines/BENCH_gates.json", r#"{"speedup": 3.0}"#);
+    write(&dir, "BENCH_gates.json", r#"{"speedup": 2.9}"#);
+    let out = run_in(&dir, &["BENCH_gates.json"]);
+    assert!(
+        out.status.success(),
+        "gate fired spuriously: stdout={} stderr={}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn missing_required_artifact_exits_nonzero() {
+    let dir = setup("missing");
+    let out = run_in(&dir, &["BENCH_gates.json"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("BENCH_gates.json"), "unhelpful error: {stderr}");
+}
+
+#[test]
+fn refresh_env_repins_then_gate_passes() {
+    let dir = setup("refresh");
+    write(&dir, "bench_baselines/BENCH_gates.json", r#"{"speedup": 9.0}"#);
+    write(&dir, "BENCH_gates.json", r#"{"speedup": 2.0}"#);
+    // Gate fires against the stale pin…
+    assert!(!run_in(&dir, &["BENCH_gates.json"]).status.success());
+    // …refresh re-pins…
+    let out = Command::new(bench_check_exe())
+        .current_dir(&dir)
+        .env("BENCH_BASELINE_REFRESH", "1")
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    // …and the same artifact now passes.
+    assert!(run_in(&dir, &["BENCH_gates.json"]).status.success());
+}
+
+#[test]
+fn committed_baselines_cover_every_gated_artifact() {
+    // The real bench_baselines/ directory ships a pin for each gated file,
+    // so CI never hits the missing-baseline error on a fresh clone.
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_baselines");
+    for rule in bmqsim::bench_harness::check::RULES {
+        let pin = manifest.join(rule.file);
+        assert!(pin.is_file(), "missing committed baseline {}", pin.display());
+        // And the gated metric is actually present in the pin.
+        let text = std::fs::read_to_string(&pin).unwrap();
+        let doc = bmqsim::runtime::Json::parse(&text).unwrap();
+        let mut cur = &doc;
+        for key in rule.path {
+            cur = cur.get(key).unwrap_or_else(|| {
+                panic!("baseline {} lacks gated path {:?}", rule.file, rule.path)
+            });
+        }
+        assert!(cur.as_f64().is_some(), "{}: gated metric not numeric", rule.file);
+    }
+}

@@ -1,0 +1,248 @@
+//! Persistent phase-worker runtime tests (ISSUE 5 acceptance):
+//!
+//! * pool reuse across stages — the thread-spawn counter is `3 × workers`
+//!   after a multi-stage run, NOT `3 × workers × stages`;
+//! * the AIMD ring-depth trajectory under synthetic stall imbalance;
+//! * panic-in-phase teardown through the persistent pool;
+//! * auto-enable heuristic boundary cases (tiny groups → off,
+//!   codec-heavy groups → on).
+
+use bmqsim::circuit::generators;
+use bmqsim::pipeline::{
+    PhasePool, PipelineConfig, RingDepthController, RING_AIMD_STALL_STEP_NS, RING_DEPTH_MAX,
+};
+use bmqsim::sim::{auto_overlap, BmqSim, OverlapMode, SimConfig, OVERLAP_AUTO_MIN_CONCEAL_NS};
+use bmqsim::types::Error;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+// ---------------------------------------------------------------------------
+// Pool reuse across stages
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_spawns_phase_threads_once_per_run_not_per_stage() {
+    // Multi-stage circuit, overlap pinned on: the persistent pool must
+    // report one thread set for the whole run and one handoff per stage.
+    let c = generators::qft(10);
+    let mut config = SimConfig { block_qubits: 5, inner_size: 2, ..SimConfig::default() };
+    config.pipeline = PipelineConfig::new(1, 2);
+    config.overlap = OverlapMode::On;
+    config.pipeline_depth = 2;
+    config.pipeline_depth_auto = false;
+    let r = BmqSim::new(config).run(&c, false).unwrap();
+    assert!(r.stages > 1, "need a multi-stage circuit to prove reuse");
+    assert_eq!(
+        r.metrics.phase_threads_spawned, 6,
+        "3 threads x 2 workers, spawned once for the run"
+    );
+    assert_eq!(
+        r.metrics.pool_stage_handoffs, r.stages as u64,
+        "each stage is a descriptor handoff, not a spawn/join cycle"
+    );
+    // The old scoped driver's cost model for comparison: it would have
+    // spawned 3 * workers * stages threads.
+    assert!(r.metrics.phase_threads_spawned < 3 * 2 * r.stages as u64);
+}
+
+#[test]
+fn pool_processes_every_item_across_many_stages_on_the_same_threads() {
+    let mut pool = PhasePool::new(PipelineConfig::new(1, 4), 3);
+    let stages = 5usize;
+    for stage in 0..stages {
+        let n = 64;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let order: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        pool.run_stage(
+            n,
+            2,
+            &|ctx, i| {
+                ctx.scratch.ensure_planes(8);
+                ctx.scratch.re[0] = (stage * 1000 + i) as f64;
+                Ok(())
+            },
+            &|ctx, i| {
+                assert_eq!(ctx.scratch.re[0], (stage * 1000 + i) as f64);
+                hits[i].fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            },
+            &|_ctx, i| {
+                order.lock().unwrap().push(i);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "stage {stage}");
+        assert_eq!(order.into_inner().unwrap().len(), n);
+    }
+    assert_eq!(pool.threads_spawned(), 12, "4 workers x 3 phases, once");
+    assert_eq!(pool.stats().stage_handoffs.load(Ordering::Relaxed), stages as u64);
+    // Ring arenas persisted: each warmed slot grew at most once, ever.
+    assert!(pool.total_plane_grows() <= (4 * 2) as u64);
+    assert!(pool.total_plane_grows() >= 1);
+}
+
+// ---------------------------------------------------------------------------
+// AIMD ring-depth trajectory
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_depth_grows_under_stall_imbalance_and_shrinks_when_idle() {
+    let mut ctl = RingDepthController::new(2, true, RING_DEPTH_MAX);
+    let mut stall = 0u64;
+    // Stage 1 primes the snapshot — depth must not move on no-history.
+    assert_eq!(ctl.stage_depth(stall), 2);
+    // Sustained phase imbalance: additive increase, one slot per stage,
+    // capped at RING_DEPTH_MAX.
+    let mut seen = vec![];
+    for _ in 0..10 {
+        stall += 2 * RING_AIMD_STALL_STEP_NS;
+        seen.push(ctl.stage_depth(stall));
+    }
+    assert_eq!(seen[..6], [3, 4, 5, 6, 7, 8]);
+    assert!(seen.iter().all(|&d| d <= RING_DEPTH_MAX));
+    assert_eq!(ctl.current(), RING_DEPTH_MAX);
+    assert_eq!(ctl.peak(), RING_DEPTH_MAX);
+    // Imbalance gone: multiplicative decrease back toward the floor.
+    assert_eq!(ctl.stage_depth(stall), 4);
+    assert_eq!(ctl.stage_depth(stall), 2);
+    assert_eq!(ctl.stage_depth(stall), 2, "floor holds at depth 2");
+    assert!(ctl.adjustments() >= 8);
+}
+
+#[test]
+fn pinned_depth_ignores_stall_history() {
+    let mut ctl = RingDepthController::new(3, false, RING_DEPTH_MAX);
+    for stall in [0u64, 10_000_000, 10_000_000, 500_000_000] {
+        assert_eq!(ctl.stage_depth(stall), 3);
+    }
+    assert_eq!(ctl.adjustments(), 0);
+    assert_eq!(ctl.peak(), 3);
+}
+
+#[test]
+fn adaptive_depth_lands_in_band_through_the_engine() {
+    let c = generators::qft(11);
+    let mut config = SimConfig { block_qubits: 5, inner_size: 2, ..SimConfig::default() };
+    config.overlap = OverlapMode::On;
+    config.pipeline_depth_auto = true; // CLI default: --pipeline-depth omitted
+    let r = BmqSim::new(config).run(&c, false).unwrap();
+    let d = r.metrics.ring_depth_final;
+    assert!(
+        (1..=RING_DEPTH_MAX as u64).contains(&d),
+        "adaptive ring depth {d} outside its band"
+    );
+    assert!(r.metrics.ring_depth_peak >= d.min(2));
+}
+
+// ---------------------------------------------------------------------------
+// Panic-in-phase teardown through the persistent pool
+// ---------------------------------------------------------------------------
+
+#[test]
+fn phase_panic_tears_down_through_the_persistent_pool() {
+    for phase in 0..3usize {
+        let mut pool = PhasePool::new(PipelineConfig::new(1, 2), 2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = pool.run_stage(
+                32,
+                2,
+                &move |_c, i| {
+                    assert!(!(phase == 0 && i == 7), "kaboom-decode");
+                    Ok(())
+                },
+                &move |_c, i| {
+                    assert!(!(phase == 1 && i == 7), "kaboom-apply");
+                    Ok(())
+                },
+                &move |_c, i| {
+                    assert!(!(phase == 2 && i == 7), "kaboom-encode");
+                    Ok(())
+                },
+            );
+        }));
+        assert!(
+            caught.is_err(),
+            "phase {phase} panic was swallowed instead of re-raised by run_stage"
+        );
+        // Teardown joins the still-alive phase threads without hanging.
+        drop(pool);
+    }
+}
+
+#[test]
+fn phase_error_aborts_stage_but_pool_remains_usable() {
+    let mut pool = PhasePool::new(PipelineConfig::new(1, 2), 2);
+    let r = pool.run_stage(
+        200,
+        2,
+        &|_c, i| {
+            if i == 11 {
+                Err(Error::Codec("synthetic decode failure".into()))
+            } else {
+                Ok(())
+            }
+        },
+        &|_c, _i| Ok(()),
+        &|_c, _i| Ok(()),
+    );
+    assert!(matches!(r, Err(Error::Codec(_))));
+    // Same pool, next stage: clean run, same thread set.
+    let done = AtomicUsize::new(0);
+    pool.run_stage(
+        50,
+        2,
+        &|_c, _i| Ok(()),
+        &|_c, _i| Ok(()),
+        &|_c, _i| {
+            done.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        },
+    )
+    .unwrap();
+    assert_eq!(done.load(Ordering::Relaxed), 50);
+    assert_eq!(pool.threads_spawned(), 6);
+}
+
+// ---------------------------------------------------------------------------
+// Overlap auto-enable boundary cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn auto_enable_declines_tiny_groups_and_engages_codec_heavy_ones() {
+    // Tiny groups: even an expensive codec cannot amortize the handshake.
+    assert!(!auto_overlap(64, 32, 20.0));
+    assert!(!auto_overlap(256, 32, 10.0));
+    // Codec-heavy big groups: engage.
+    assert!(auto_overlap(1 << 14, 8, 10.0));
+    assert!(auto_overlap(1 << 16, 4, 3.0));
+    // One group = nothing to pipeline, regardless of cost.
+    assert!(!auto_overlap(1 << 20, 1, 1_000.0));
+    // Free codec (raw passthrough on a fast machine): decline.
+    assert!(!auto_overlap(1 << 16, 32, 0.0));
+    // Exact threshold boundary: >= engages.
+    let glen = 1usize << 12;
+    let exactly = OVERLAP_AUTO_MIN_CONCEAL_NS / (4.0 * glen as f64);
+    assert!(auto_overlap(glen, 2, exactly));
+    assert!(!auto_overlap(glen, 2, exactly * 0.99));
+}
+
+#[test]
+fn auto_mode_decides_each_stage_and_pinned_modes_do_not() {
+    let c = generators::build("qaoa", 10, 5).unwrap();
+    let mk = |mode: OverlapMode| {
+        let mut config =
+            SimConfig { block_qubits: 5, inner_size: 2, ..SimConfig::default() };
+        config.overlap = mode;
+        config
+    };
+    let auto_r = BmqSim::new(mk(OverlapMode::Auto)).run(&c, false).unwrap();
+    assert_eq!(
+        auto_r.metrics.auto_overlap_on + auto_r.metrics.auto_overlap_off,
+        auto_r.stages as u64
+    );
+    for mode in [OverlapMode::On, OverlapMode::Off] {
+        let r = BmqSim::new(mk(mode)).run(&c, false).unwrap();
+        assert_eq!(r.metrics.auto_overlap_on + r.metrics.auto_overlap_off, 0);
+    }
+}

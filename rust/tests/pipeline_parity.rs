@@ -1,10 +1,12 @@
-//! Parity property tests for the overlapped group-chain pipeline (ISSUE 4):
-//! across {pipeline_depth 1/2/3} × {workers 1/4} × {sync/async spill}, the
-//! three-phase decode → apply → encode pipeline must produce terminal
-//! compressed blocks that are **byte-identical** to the sequential chain,
-//! with identical fidelity — overlap may only move *when* work happens,
-//! never *what* it computes. Also exercises spill-aware scheduling and the
-//! prefetch auto-depth controller end-to-end through the engine.
+//! Parity property tests for the overlapped group-chain pipeline (ISSUE 4,
+//! persistent pool since ISSUE 5): across {pipeline_depth auto/1/2/3} ×
+//! {workers 1/4} × {sync/async spill}, the three-phase decode → apply →
+//! encode pipeline — now running on the persistent `PhasePool` — must
+//! produce terminal compressed blocks that are **byte-identical** to the
+//! sequential chain, with identical fidelity — overlap may only move
+//! *when* work happens, never *what* it computes. Also exercises
+//! spill-aware scheduling and the prefetch auto-depth controller
+//! end-to-end through the engine.
 //!
 //! CI runs this file with `--test-threads` pinned so the race-sensitive
 //! configurations (overlap + async spill + prefetcher churn) actually get
@@ -14,7 +16,7 @@
 use bmqsim::circuit::{generators, Circuit};
 use bmqsim::memory::BlockPayload;
 use bmqsim::pipeline::PipelineConfig;
-use bmqsim::sim::{BmqSim, SimConfig};
+use bmqsim::sim::{BmqSim, OverlapMode, SimConfig};
 use std::path::PathBuf;
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -41,6 +43,7 @@ fn pipelined_chain_is_byte_identical_across_depths_workers_and_spill_modes() {
         let c = generators::build(name, n, seed).unwrap();
         let mut seq = base_cfg(bq);
         seq.pipeline = PipelineConfig::sequential();
+        seq.overlap = OverlapMode::Off;
         let reference = terminal_blocks(seq, &c);
 
         // Squeeze the budget to a quarter of the compressed peak so the
@@ -48,13 +51,20 @@ fn pipelined_chain_is_byte_identical_across_depths_workers_and_spill_modes() {
         let probe = BmqSim::new(base_cfg(bq)).run(&c, false).unwrap();
         let budget = (probe.peak_bytes / 4).max(512);
 
-        for depth in [1usize, 2, 3] {
+        // `None` = adaptive ring depth (the AIMD controller drives it).
+        for depth in [None, Some(1usize), Some(2), Some(3)] {
             for workers in [1usize, 4] {
                 for sync_spill in [false, true] {
                     let mut config = base_cfg(bq);
                     config.pipeline = PipelineConfig::new(1, workers);
-                    config.overlap = true;
-                    config.pipeline_depth = depth;
+                    config.overlap = OverlapMode::On;
+                    match depth {
+                        Some(d) => {
+                            config.pipeline_depth = d;
+                            config.pipeline_depth_auto = false;
+                        }
+                        None => config.pipeline_depth_auto = true,
+                    }
                     config.sync_spill = sync_spill;
                     config.memory_budget = Some(budget);
                     config.spill_dir = Some(tmpdir(name));
@@ -64,7 +74,7 @@ fn pipelined_chain_is_byte_identical_across_depths_workers_and_spill_modes() {
                         assert!(
                             a.re == b.re && a.im == b.im,
                             "{name}: block {id} bytes differ \
-                             (depth={depth} workers={workers} sync_spill={sync_spill})"
+                             (depth={depth:?} workers={workers} sync_spill={sync_spill})"
                         );
                     }
                 }
@@ -74,11 +84,15 @@ fn pipelined_chain_is_byte_identical_across_depths_workers_and_spill_modes() {
         // The squeezed budget actually spilled (otherwise the sync/async
         // axis above tested nothing).
         let mut spilled = base_cfg(bq);
-        spilled.overlap = true;
+        spilled.overlap = OverlapMode::On;
         spilled.memory_budget = Some(budget);
         spilled.spill_dir = Some(tmpdir(name));
         let r = BmqSim::new(spilled).run(&c, false).unwrap();
         assert!(r.mem.spill_events > 0, "{name}: budget {budget} never spilled");
+        // …and the overlapped configurations really ran on the persistent
+        // pool: threads spawned once, one handoff per stage.
+        assert_eq!(r.metrics.phase_threads_spawned, 3 * 2);
+        assert_eq!(r.metrics.pool_stage_handoffs, r.stages as u64);
     }
 }
 
@@ -87,11 +101,13 @@ fn pipelined_fidelity_matches_sequential_exactly() {
     let c = generators::build("ising", 10, 11).unwrap();
     let mut seq = base_cfg(5);
     seq.pipeline = PipelineConfig::sequential();
+    seq.overlap = OverlapMode::Off;
     let base = BmqSim::new(seq).run(&c, true).unwrap();
     let mut ovl = base_cfg(5);
     ovl.pipeline = PipelineConfig::new(1, 4);
-    ovl.overlap = true;
+    ovl.overlap = OverlapMode::On;
     ovl.pipeline_depth = 2;
+    ovl.pipeline_depth_auto = false;
     let r = BmqSim::new(ovl).run(&c, true).unwrap();
     let (sa, oa) = (base.state.as_ref().unwrap(), r.state.as_ref().unwrap());
     assert_eq!(sa.re, oa.re, "real planes differ");
@@ -109,6 +125,7 @@ fn spill_aware_ordering_keeps_state_identical_and_reorders_under_budget() {
     let c = generators::build("qaoa", 12, 5).unwrap();
     let mut seq = base_cfg(6);
     seq.pipeline = PipelineConfig::sequential();
+    seq.overlap = OverlapMode::Off;
     seq.spill_aware = false;
     let reference = terminal_blocks(seq, &c);
 
@@ -117,7 +134,7 @@ fn spill_aware_ordering_keeps_state_identical_and_reorders_under_budget() {
     for spill_aware in [false, true] {
         let mut config = base_cfg(6);
         config.pipeline = PipelineConfig::new(1, 2);
-        config.overlap = true;
+        config.overlap = OverlapMode::On;
         config.memory_budget = Some(budget);
         config.spill_dir = Some(tmpdir("order"));
         config.spill_aware = spill_aware;
@@ -148,11 +165,12 @@ fn prefetch_auto_depth_adapts_through_the_engine() {
     let c = generators::build("qft", 11, 1).unwrap();
     let mut seq = base_cfg(5);
     seq.pipeline = PipelineConfig::sequential();
+    seq.overlap = OverlapMode::Off;
     let reference = terminal_blocks(seq, &c);
 
     let probe = BmqSim::new(base_cfg(5)).run(&c, false).unwrap();
     let mut config = base_cfg(5);
-    config.overlap = true;
+    config.overlap = OverlapMode::On;
     config.prefetch_auto = true;
     config.memory_budget = Some((probe.peak_bytes / 4).max(512));
     config.spill_dir = Some(tmpdir("auto"));
