@@ -13,6 +13,10 @@ pub mod bench_harness;
 pub mod circuit;
 pub mod compress;
 pub mod gates;
+// The store's locking/recovery layer bans bare `unwrap()` (a panicking
+// worker must never wedge siblings): CI runs clippy with this lint as an
+// error for the whole `memory` subtree. Tests opt back in locally.
+#[deny(clippy::unwrap_used)]
 pub mod memory;
 pub mod metrics;
 pub mod pipeline;

@@ -63,6 +63,11 @@ OPTIONS (run/compare/sample):
                         omitted the depth auto-adapts per stage (AIMD
                         on hit/miss ratio + stall time)             [auto]
   --sync-spill          spill inline on workers (no background writer)
+  --spill-fallback-dir <path>  overflow stripe for ENOSPC graceful
+                        degradation (ideally a different filesystem)
+  --fault-plan <spec>   inject spill-layer I/O faults for resilience
+                        testing, e.g. "seed=7,eio=0.05,bitflip=0.02" or
+                        scripted "eio@write:1" (env: BMQSIM_FAULT_PLAN)
   --artifacts <dir>     AOT artifact directory                     [artifacts]
   --seed <s>            circuit/sampling seed                      [42]
 
@@ -194,6 +199,12 @@ fn build_config(opts: &Opts) -> Result<SimConfig, String> {
     if let Some(dir) = opts.get("spill-dir") {
         cfg.spill_dir = Some(dir.into());
     }
+    if let Some(dir) = opts.get("spill-fallback-dir") {
+        cfg.spill_fallback_dir = Some(dir.into());
+    }
+    if let Some(spec) = opts.get("fault-plan") {
+        cfg.fault_plan = Some(bmqsim::memory::FaultPlan::parse(spec).map_err(|e| e.to_string())?);
+    }
     cfg.store_shards = opts.parse_num("store-shards", cfg.store_shards)?;
     // Explicit --prefetch-depth pins the depth; omitting it engages the
     // per-stage AIMD auto-depth controller (ROADMAP "prefetch auto-depth").
@@ -302,6 +313,20 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
             "prefetch depth   : {:>10}{}",
             r.mem.prefetch_depth,
             if cfg.prefetch_auto { "  (auto-adapted)" } else { "" }
+        );
+    }
+    let recovered = r.mem.io_retries
+        + r.mem.checksum_failures
+        + r.mem.frames_recovered
+        + r.mem.enospc_fallbacks;
+    if recovered > 0 {
+        println!(
+            "spill recovery   : {:>10}  ({} I/O retries, {} checksum failures, {} frames recovered, {} ENOSPC fallbacks)",
+            recovered,
+            r.mem.io_retries,
+            r.mem.checksum_failures,
+            r.mem.frames_recovered,
+            r.mem.enospc_fallbacks,
         );
     }
     Ok(())

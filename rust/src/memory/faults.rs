@@ -1,0 +1,594 @@
+//! Deterministic fault-injection harness for the two-level store.
+//!
+//! A [`FaultPlan`] describes *where the disk misbehaves*: scripted fault
+//! points ("the 3rd write fails with EIO") and seeded-probabilistic rates
+//! ("2% of reads are torn"). The store compiles the plan into a
+//! [`FaultInjector`] that every `SpillFile` read/write and every
+//! write-back-queue transition consults, so the recovery machinery
+//! (checksummed frames, retry/backoff, the write-back retention ring, the
+//! ENOSPC degradation ladder, writer self-healing) can be exercised
+//! deterministically in tests and at low rates in CI.
+//!
+//! Plans reach the store through [`super::StoreOptions::fault_plan`] /
+//! `SimConfig::fault_plan` (`--fault-plan` on the CLI) or, for CI runs
+//! that cannot touch the config, the `BMQSIM_FAULT_PLAN` environment
+//! variable (see [`FaultPlan::from_env`]).
+//!
+//! The module also carries the dependency-free xxhash64 implementation
+//! used for spill-frame checksums (the build environment vendors no
+//! `xxhash-rust`; see DESIGN.md substitutions).
+
+use crate::types::{Error, Result, SplitMix64};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// xxhash64 (XXH64, Collet) — spill-frame checksum.
+// ---------------------------------------------------------------------------
+
+const PRIME64_1: u64 = 0x9E37_79B1_85EB_CA87;
+const PRIME64_2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const PRIME64_3: u64 = 0x1656_67B1_9E37_79F9;
+const PRIME64_4: u64 = 0x85EB_CA77_C2B2_AE63;
+const PRIME64_5: u64 = 0x27D4_EB2F_1656_67C5;
+
+#[inline]
+fn xxh_round(acc: u64, input: u64) -> u64 {
+    acc.wrapping_add(input.wrapping_mul(PRIME64_2))
+        .rotate_left(31)
+        .wrapping_mul(PRIME64_1)
+}
+
+#[inline]
+fn xxh_merge(acc: u64, val: u64) -> u64 {
+    (acc ^ xxh_round(0, val)).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4)
+}
+
+#[inline]
+fn read_u64(b: &[u8]) -> u64 {
+    let mut w = [0u8; 8];
+    w.copy_from_slice(&b[..8]);
+    u64::from_le_bytes(w)
+}
+
+#[inline]
+fn read_u32(b: &[u8]) -> u32 {
+    let mut w = [0u8; 4];
+    w.copy_from_slice(&b[..4]);
+    u32::from_le_bytes(w)
+}
+
+/// XXH64 over `data` with `seed` — the spill-frame checksum.
+pub fn xxh64(data: &[u8], seed: u64) -> u64 {
+    let len = data.len() as u64;
+    let mut rest = data;
+    let mut h: u64 = if rest.len() >= 32 {
+        let mut v1 = seed.wrapping_add(PRIME64_1).wrapping_add(PRIME64_2);
+        let mut v2 = seed.wrapping_add(PRIME64_2);
+        let mut v3 = seed;
+        let mut v4 = seed.wrapping_sub(PRIME64_1);
+        while rest.len() >= 32 {
+            v1 = xxh_round(v1, read_u64(rest));
+            v2 = xxh_round(v2, read_u64(&rest[8..]));
+            v3 = xxh_round(v3, read_u64(&rest[16..]));
+            v4 = xxh_round(v4, read_u64(&rest[24..]));
+            rest = &rest[32..];
+        }
+        let mut h = v1
+            .rotate_left(1)
+            .wrapping_add(v2.rotate_left(7))
+            .wrapping_add(v3.rotate_left(12))
+            .wrapping_add(v4.rotate_left(18));
+        h = xxh_merge(h, v1);
+        h = xxh_merge(h, v2);
+        h = xxh_merge(h, v3);
+        xxh_merge(h, v4)
+    } else {
+        seed.wrapping_add(PRIME64_5)
+    };
+    h = h.wrapping_add(len);
+    while rest.len() >= 8 {
+        h = (h ^ xxh_round(0, read_u64(rest))).rotate_left(27).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4);
+        rest = &rest[8..];
+    }
+    if rest.len() >= 4 {
+        h = (h ^ u64::from(read_u32(rest)).wrapping_mul(PRIME64_1))
+            .rotate_left(23)
+            .wrapping_mul(PRIME64_2)
+            .wrapping_add(PRIME64_3);
+        rest = &rest[4..];
+    }
+    for &b in rest {
+        h = (h ^ u64::from(b).wrapping_mul(PRIME64_5)).rotate_left(11).wrapping_mul(PRIME64_1);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(PRIME64_2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(PRIME64_3);
+    h ^ (h >> 32)
+}
+
+// ---------------------------------------------------------------------------
+// Fault plan
+// ---------------------------------------------------------------------------
+
+/// What goes wrong at a fault point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Transient I/O error (EIO) — retryable with backoff.
+    Eio,
+    /// Torn write: only a prefix of the frame reaches the disk before the
+    /// op errors (the retry rewrites the whole frame).
+    ShortWrite,
+    /// Torn read: the tail of the extent comes back as zeros (caught by
+    /// the frame checksum, healed by a re-read).
+    ShortRead,
+    /// One bit of the read buffer flips (transient — a re-read is clean).
+    BitFlip,
+    /// The extent itself is corrupt: every read of the faulted offset
+    /// flips a bit (re-reads don't help; only the write-back retention
+    /// ring can recover the bytes).
+    StickyFlip,
+    /// Disk full (ENOSPC) on write — engages the degradation ladder.
+    Enospc,
+    /// The writer thread stalls for `FaultPlan::stall_ms` before a job.
+    Stall,
+    /// The writer thread exits ("dies") after requeueing its current job.
+    WriterDeath,
+}
+
+/// Which I/O site a scripted fault intercepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOp {
+    Read,
+    Write,
+}
+
+/// A scripted fault point: the `nth` (1-based) op of type `op` fails with
+/// `kind`. Ops count *attempts*, so a retried write consumes fresh
+/// indices — `eio@write:3` faults exactly one attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScriptedFault {
+    pub op: FaultOp,
+    pub nth: u64,
+    pub kind: FaultKind,
+}
+
+/// Scripted + seeded-probabilistic fault schedule for one store.
+///
+/// Parseable from a compact spec (CLI `--fault-plan`, env
+/// `BMQSIM_FAULT_PLAN`): comma-separated tokens, either rates/knobs
+/// (`seed=42`, `eio=0.02`, `short_read=0.01`, `short_write=0.01`,
+/// `bitflip=0.05`, `stall=0.1`, `stall_ms=20`, `enospc_after=4096`,
+/// `writer_death_after=3`) or scripted points `KIND@OP:N`
+/// (`eio@write:3`, `short@read:2`, `bitflip@read:1`,
+/// `stickyflip@read:4`, `enospc@write:5`, `stall@write:2`).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Seed for the probabilistic draws (fully deterministic per seed).
+    pub seed: u64,
+    /// Per-op probability of a transient EIO (reads and writes).
+    pub p_eio: f64,
+    /// Per-read probability of a torn read (zeroed tail).
+    pub p_short_read: f64,
+    /// Per-write probability of a torn write (prefix lands, op errors).
+    pub p_short_write: f64,
+    /// Per-read probability of a one-shot bit flip in the buffer.
+    pub p_bitflip: f64,
+    /// Per-writer-job probability of a stall of `stall_ms`.
+    pub p_stall: f64,
+    /// Stall duration for `Stall` faults (default 10 ms).
+    pub stall_ms: u64,
+    /// Primary spill file reports ENOSPC once this many bytes landed.
+    pub enospc_after_bytes: Option<u64>,
+    /// Writer thread dies after claiming this many jobs (1-based).
+    pub writer_death_after: Option<u64>,
+    /// Scripted fault points (see [`ScriptedFault`]).
+    pub scripted: Vec<ScriptedFault>,
+}
+
+impl FaultPlan {
+    /// Parse the compact spec format (see the type docs). Empty specs are
+    /// rejected — an empty plan injects nothing and hides typos.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan { stall_ms: 10, ..FaultPlan::default() };
+        let bad = |tok: &str, why: &str| {
+            Err(Error::Config(format!("fault-plan token {tok:?}: {why}")))
+        };
+        let mut any = false;
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            any = true;
+            if let Some((kind, rest)) = tok.split_once('@') {
+                // Scripted: KIND@OP:N
+                let Some((op, nth)) = rest.split_once(':') else {
+                    return bad(tok, "expected KIND@OP:N");
+                };
+                let op = match op {
+                    "read" => FaultOp::Read,
+                    "write" => FaultOp::Write,
+                    _ => return bad(tok, "op must be read|write"),
+                };
+                let kind = match (kind, op) {
+                    ("eio", _) => FaultKind::Eio,
+                    ("short", FaultOp::Read) => FaultKind::ShortRead,
+                    ("short", FaultOp::Write) => FaultKind::ShortWrite,
+                    ("bitflip", FaultOp::Read) => FaultKind::BitFlip,
+                    ("stickyflip", FaultOp::Read) => FaultKind::StickyFlip,
+                    ("enospc", FaultOp::Write) => FaultKind::Enospc,
+                    ("stall", FaultOp::Write) => FaultKind::Stall,
+                    _ => return bad(tok, "unknown kind or kind/op mismatch"),
+                };
+                let Ok(nth) = nth.parse::<u64>() else {
+                    return bad(tok, "N must be a positive integer");
+                };
+                if nth == 0 {
+                    return bad(tok, "N is 1-based");
+                }
+                plan.scripted.push(ScriptedFault { op, nth, kind });
+                continue;
+            }
+            let Some((key, val)) = tok.split_once('=') else {
+                return bad(tok, "expected key=value or KIND@OP:N");
+            };
+            let prob = |v: &str| -> Result<f64> {
+                match v.parse::<f64>() {
+                    Ok(p) if (0.0..=1.0).contains(&p) => Ok(p),
+                    _ => Err(Error::Config(format!(
+                        "fault-plan {key}={v}: probability must be in [0, 1]"
+                    ))),
+                }
+            };
+            match key {
+                "seed" => match val.parse() {
+                    Ok(s) => plan.seed = s,
+                    Err(_) => return bad(tok, "seed must be a u64"),
+                },
+                "eio" => plan.p_eio = prob(val)?,
+                "short_read" => plan.p_short_read = prob(val)?,
+                "short_write" => plan.p_short_write = prob(val)?,
+                "bitflip" => plan.p_bitflip = prob(val)?,
+                "stall" => plan.p_stall = prob(val)?,
+                "stall_ms" => match val.parse() {
+                    Ok(ms) => plan.stall_ms = ms,
+                    Err(_) => return bad(tok, "stall_ms must be a u64"),
+                },
+                "enospc_after" => match val.parse() {
+                    Ok(b) => plan.enospc_after_bytes = Some(b),
+                    Err(_) => return bad(tok, "enospc_after must be bytes (u64)"),
+                },
+                "writer_death_after" => match val.parse() {
+                    Ok(n) => plan.writer_death_after = Some(n),
+                    Err(_) => return bad(tok, "writer_death_after must be a u64"),
+                },
+                _ => return bad(tok, "unknown key"),
+            }
+        }
+        if !any {
+            return Err(Error::Config("empty fault-plan spec".into()));
+        }
+        Ok(plan)
+    }
+
+    /// CI hook: read a plan from `BMQSIM_FAULT_PLAN`. A malformed spec is
+    /// reported on stderr and ignored (a CI smoke must not abort on a
+    /// typo'd env var — the recovery-counter assertions catch the no-op).
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("BMQSIM_FAULT_PLAN").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("warning: ignoring BMQSIM_FAULT_PLAN: {e}");
+                None
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime injector
+// ---------------------------------------------------------------------------
+
+/// Which spill file an I/O op targets. The fallback stripe is exempt from
+/// ENOSPC injection (it models a separate device), every other fault kind
+/// applies to both tiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SpillTier {
+    Primary,
+    Fallback,
+}
+
+/// Injected outcome for one write attempt.
+pub(crate) enum WriteFault {
+    /// Fail with a transient io::Error (retryable).
+    Transient(std::io::Error),
+    /// Write only the first `n` bytes, then fail transiently.
+    Short(usize),
+    /// Fail with ENOSPC (not retryable — degradation ladder).
+    Enospc,
+}
+
+/// Injected outcome for one read attempt.
+pub(crate) enum ReadFault {
+    /// Fail with a transient io::Error before reading (retryable).
+    Transient(std::io::Error),
+    /// Zero the buffer past byte `n` (torn read — checksum catches it).
+    Short(usize),
+    /// Flip one bit of the returned buffer.
+    BitFlip,
+}
+
+/// Injected outcome for one writer-thread job.
+pub(crate) enum WriterFault {
+    Stall(Duration),
+    Die,
+}
+
+pub(crate) fn eio() -> std::io::Error {
+    std::io::Error::from_raw_os_error(5) // EIO
+}
+
+pub(crate) fn enospc() -> std::io::Error {
+    std::io::Error::from_raw_os_error(28) // ENOSPC
+}
+
+/// Compiled [`FaultPlan`]: thread-safe decision engine shared by the
+/// primary/fallback spill files and the writer loop.
+pub(crate) struct FaultInjector {
+    plan: FaultPlan,
+    rng: Mutex<SplitMix64>,
+    reads: AtomicU64,
+    writes: AtomicU64,
+    jobs: AtomicU64,
+    /// Bytes successfully written to the primary tier (ENOSPC trigger).
+    primary_written: AtomicU64,
+    /// Offsets whose extents are persistently corrupt (StickyFlip).
+    sticky: Mutex<Vec<u64>>,
+    /// Total faults injected (test/CI visibility).
+    pub(crate) injected: AtomicU64,
+}
+
+impl FaultInjector {
+    pub(crate) fn new(plan: FaultPlan) -> Self {
+        let seed = plan.seed;
+        FaultInjector {
+            plan,
+            rng: Mutex::new(SplitMix64::new(seed ^ 0xFA17_0000)),
+            reads: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            jobs: AtomicU64::new(0),
+            primary_written: AtomicU64::new(0),
+            sticky: Mutex::new(Vec::new()),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    fn scripted(&self, op: FaultOp, nth: u64) -> Option<FaultKind> {
+        self.plan.scripted.iter().find(|s| s.op == op && s.nth == nth).map(|s| s.kind)
+    }
+
+    fn draw(&self) -> f64 {
+        self.rng.lock().unwrap_or_else(std::sync::PoisonError::into_inner).next_f64()
+    }
+
+    fn hit(&self) {
+        self.injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Decide the fate of one write attempt of `len` bytes to `tier`.
+    pub(crate) fn on_write(&self, tier: SpillTier, len: usize) -> Option<WriteFault> {
+        let nth = self.writes.fetch_add(1, Ordering::Relaxed) + 1;
+        if tier == SpillTier::Primary {
+            if let Some(cap) = self.plan.enospc_after_bytes {
+                if self.primary_written.load(Ordering::Relaxed) + len as u64 > cap {
+                    self.hit();
+                    return Some(WriteFault::Enospc);
+                }
+            }
+        }
+        let fault = match self.scripted(FaultOp::Write, nth) {
+            Some(FaultKind::Eio) => Some(WriteFault::Transient(eio())),
+            Some(FaultKind::ShortWrite) => Some(WriteFault::Short(len / 2)),
+            Some(FaultKind::Enospc) if tier == SpillTier::Primary => Some(WriteFault::Enospc),
+            _ => {
+                let r = self.draw();
+                if r < self.plan.p_eio {
+                    Some(WriteFault::Transient(eio()))
+                } else if r < self.plan.p_eio + self.plan.p_short_write {
+                    Some(WriteFault::Short(len / 2))
+                } else {
+                    None
+                }
+            }
+        };
+        match fault {
+            Some(f) => {
+                self.hit();
+                Some(f)
+            }
+            None => {
+                if tier == SpillTier::Primary {
+                    self.primary_written.fetch_add(len as u64, Ordering::Relaxed);
+                }
+                None
+            }
+        }
+    }
+
+    /// Decide the fate of one read attempt at `offset`.
+    pub(crate) fn on_read(&self, offset: u64, len: usize) -> Option<ReadFault> {
+        let nth = self.reads.fetch_add(1, Ordering::Relaxed) + 1;
+        {
+            let sticky = self.sticky.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if sticky.contains(&offset) {
+                self.hit();
+                return Some(ReadFault::BitFlip);
+            }
+        }
+        let fault = match self.scripted(FaultOp::Read, nth) {
+            Some(FaultKind::Eio) => Some(ReadFault::Transient(eio())),
+            Some(FaultKind::ShortRead) => Some(ReadFault::Short(len / 2)),
+            Some(FaultKind::BitFlip) => Some(ReadFault::BitFlip),
+            Some(FaultKind::StickyFlip) => {
+                self.sticky
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .push(offset);
+                Some(ReadFault::BitFlip)
+            }
+            _ => {
+                let r = self.draw();
+                if r < self.plan.p_eio {
+                    Some(ReadFault::Transient(eio()))
+                } else if r < self.plan.p_eio + self.plan.p_short_read {
+                    Some(ReadFault::Short(len / 2))
+                } else if r < self.plan.p_eio + self.plan.p_short_read + self.plan.p_bitflip {
+                    Some(ReadFault::BitFlip)
+                } else {
+                    None
+                }
+            }
+        };
+        if fault.is_some() {
+            self.hit();
+        }
+        fault
+    }
+
+    /// Decide the fate of one writer-thread job (stall / death).
+    pub(crate) fn on_writer_job(&self) -> Option<WriterFault> {
+        let nth = self.jobs.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(after) = self.plan.writer_death_after {
+            if nth >= after {
+                self.hit();
+                return Some(WriterFault::Die);
+            }
+        }
+        let stall = matches!(
+            self.scripted(FaultOp::Write, nth),
+            Some(FaultKind::Stall)
+        ) || (self.plan.p_stall > 0.0 && self.draw() < self.plan.p_stall);
+        if stall {
+            self.hit();
+            return Some(WriterFault::Stall(Duration::from_millis(self.plan.stall_ms.max(1))));
+        }
+        None
+    }
+
+    /// Apply a bit flip to `buf` (deterministic position: middle byte).
+    pub(crate) fn flip_bit(buf: &mut [u8]) {
+        if !buf.is_empty() {
+            let i = buf.len() / 2;
+            buf[i] ^= 0x01;
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xxh64_known_vector_and_properties() {
+        // The canonical empty-input vector (xxHash reference, seed 0).
+        assert_eq!(xxh64(b"", 0), 0xEF46_DB37_51D8_E999);
+        // Determinism + sensitivity across the stripe/tail code paths.
+        for len in [1usize, 3, 4, 7, 8, 15, 31, 32, 33, 64, 100] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 37 + 11) as u8).collect();
+            let h = xxh64(&data, 7);
+            assert_eq!(h, xxh64(&data, 7), "len {len}: not deterministic");
+            assert_ne!(h, xxh64(&data, 8), "len {len}: seed-insensitive");
+            let mut flipped = data.clone();
+            flipped[len / 2] ^= 0x01;
+            assert_ne!(h, xxh64(&flipped, 7), "len {len}: bit-flip-insensitive");
+        }
+    }
+
+    #[test]
+    fn plan_parses_rates_and_scripts() {
+        let p = FaultPlan::parse(
+            "seed=9,eio=0.25,bitflip=0.5,stall_ms=3,enospc_after=4096,\
+             eio@write:3,short@read:2,stickyflip@read:4,writer_death_after=2",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.p_eio, 0.25);
+        assert_eq!(p.p_bitflip, 0.5);
+        assert_eq!(p.stall_ms, 3);
+        assert_eq!(p.enospc_after_bytes, Some(4096));
+        assert_eq!(p.writer_death_after, Some(2));
+        assert_eq!(p.scripted.len(), 3);
+        assert!(p
+            .scripted
+            .contains(&ScriptedFault { op: FaultOp::Write, nth: 3, kind: FaultKind::Eio }));
+        assert!(p
+            .scripted
+            .contains(&ScriptedFault { op: FaultOp::Read, nth: 2, kind: FaultKind::ShortRead }));
+    }
+
+    #[test]
+    fn plan_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("eio=1.5").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("eio@write").is_err());
+        assert!(FaultPlan::parse("eio@flush:1").is_err());
+        assert!(FaultPlan::parse("bitflip@write:1").is_err());
+        assert!(FaultPlan::parse("eio@write:0").is_err());
+    }
+
+    #[test]
+    fn scripted_write_fault_fires_exactly_once() {
+        let inj = FaultInjector::new(FaultPlan::parse("eio@write:2").unwrap());
+        assert!(inj.on_write(SpillTier::Primary, 64).is_none());
+        assert!(matches!(inj.on_write(SpillTier::Primary, 64), Some(WriteFault::Transient(_))));
+        assert!(inj.on_write(SpillTier::Primary, 64).is_none());
+        assert_eq!(inj.injected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn probabilistic_faults_are_seed_deterministic() {
+        let run = |seed: u64| -> Vec<bool> {
+            let inj = FaultInjector::new(FaultPlan {
+                seed,
+                p_eio: 0.3,
+                ..FaultPlan::default()
+            });
+            (0..64).map(|_| inj.on_read(0, 64).is_some()).collect()
+        };
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1), run(2));
+        assert!(run(1).iter().any(|&f| f), "p=0.3 over 64 ops injected nothing");
+    }
+
+    #[test]
+    fn enospc_after_bytes_spares_the_fallback_tier() {
+        let inj =
+            FaultInjector::new(FaultPlan { enospc_after_bytes: Some(100), ..Default::default() });
+        assert!(inj.on_write(SpillTier::Primary, 80).is_none());
+        assert!(matches!(inj.on_write(SpillTier::Primary, 80), Some(WriteFault::Enospc)));
+        assert!(inj.on_write(SpillTier::Fallback, 80).is_none(), "fallback is a separate device");
+    }
+
+    #[test]
+    fn sticky_flip_corrupts_every_reread() {
+        let inj = FaultInjector::new(FaultPlan::parse("stickyflip@read:1").unwrap());
+        assert!(matches!(inj.on_read(128, 64), Some(ReadFault::BitFlip)));
+        // Same offset: corrupt forever. Different offset: clean.
+        assert!(matches!(inj.on_read(128, 64), Some(ReadFault::BitFlip)));
+        assert!(inj.on_read(256, 64).is_none());
+    }
+
+    #[test]
+    fn writer_death_after_n_jobs() {
+        let inj =
+            FaultInjector::new(FaultPlan { writer_death_after: Some(3), ..Default::default() });
+        assert!(inj.on_writer_job().is_none());
+        assert!(inj.on_writer_job().is_none());
+        assert!(matches!(inj.on_writer_job(), Some(WriterFault::Die)));
+    }
+}

@@ -27,17 +27,54 @@
 //!
 //! The store also keeps the statistics behind Fig. 9 (peak footprint),
 //! §5.4's spill fractions, and the new eviction/prefetch/stall counters.
+//!
+//! **Failure domains** (DESIGN.md "Failure domains & recovery"): spilled
+//! frames carry checksummed headers verified on every read; transient I/O
+//! is retried with backoff; corrupt frames are healed from a small
+//! retention ring of recently written payloads; ENOSPC degrades
+//! gracefully (fallback stripe → budget renegotiation) instead of
+//! erroring; and a dead or panicked spill writer is survived by draining
+//! the write-back queue inline. All locking is poison-recovering
+//! ([`plock`]): one panicked worker can never wedge the store. A
+//! [`FaultPlan`] makes every one of those paths deterministically
+//! testable.
 
+mod faults;
 mod prefetch;
 mod spill;
 
+pub use faults::{xxh64, FaultKind, FaultOp, FaultPlan, ScriptedFault};
+
 use crate::types::{Error, Result};
-use spill::SpillFile;
+use faults::{FaultInjector, SpillTier};
+use spill::{RecoveryCounters, SpillFile};
 use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+/// Poison-recovering lock: a thread that panicked while holding a store
+/// mutex must not wedge every sibling. All store state is kept consistent
+/// *across* lock sections (atomics + verify-after-reacquire protocols),
+/// so the data under a poisoned guard is safe to keep using; failures the
+/// panicking thread caused surface through `Shared::failure` instead.
+pub(crate) fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-recovering `Condvar::wait_timeout` (timeout result discarded —
+/// every caller re-checks its predicate in a loop).
+pub(crate) fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, _)) => g,
+        Err(p) => p.into_inner().0,
+    }
+}
 
 /// One compressed block's payload: both planes, length-framed.
 ///
@@ -74,8 +111,8 @@ impl BlockPayload {
         if bytes.len() < 16 {
             return Err(Error::Codec("block payload truncated".into()));
         }
-        let re_len = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
-        let im_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let re_len = u64::from_le_bytes(bytes[0..8].try_into().expect("8-byte slice")) as usize;
+        let im_len = u64::from_le_bytes(bytes[8..16].try_into().expect("8-byte slice")) as usize;
         if bytes.len() != 16 + re_len + im_len {
             return Err(Error::Codec("block payload length mismatch".into()));
         }
@@ -88,6 +125,42 @@ impl BlockPayload {
 
 /// Framing overhead of [`BlockPayload::to_bytes`] (two u64 lengths).
 const FRAME_BYTES: usize = 16;
+
+/// Total per-block overhead on the secondary tier: the in-RAM payload
+/// framing plus the on-disk frame header (magic + length + xxh64). Extent
+/// lengths and `secondary_bytes` include both.
+pub const SECONDARY_FRAME_BYTES: usize = FRAME_BYTES + spill::HEADER_BYTES;
+
+/// Payloads retained after their spill write completes, so a frame that
+/// later fails verification can be healed without touching the disk.
+/// Bounded: corruption recovery is best-effort beyond the last
+/// `RECOVERY_RING_CAP` spills (older corrupt frames surface as typed
+/// [`Error::Corruption`], never as silent damage).
+const RECOVERY_RING_CAP: usize = 8;
+
+#[derive(Default)]
+struct RecoveryRing {
+    entries: VecDeque<(usize, u64, BlockPayload)>,
+}
+
+impl RecoveryRing {
+    fn insert(&mut self, id: usize, gen: u64, payload: BlockPayload) {
+        self.entries.retain(|(i, _, _)| *i != id);
+        if self.entries.len() >= RECOVERY_RING_CAP {
+            self.entries.pop_front();
+        }
+        self.entries.push_back((id, gen, payload));
+    }
+
+    fn remove(&mut self, id: usize, gen: u64) -> Option<BlockPayload> {
+        let idx = self.entries.iter().position(|(i, g, _)| *i == id && *g == gen)?;
+        self.entries.remove(idx).map(|(_, _, p)| p)
+    }
+
+    fn drop_entry(&mut self, id: usize, gen: u64) {
+        self.entries.retain(|(i, g, _)| !(*i == id && *g == gen));
+    }
+}
 
 /// Next-use rank for blocks already processed this stage (next use is the
 /// following stage at the earliest — prime eviction candidates).
@@ -105,9 +178,10 @@ enum Slot {
     /// (interceptable) or is being written by the spill writer (waiters
     /// block until the slot flips to `Spilled`).
     Evicting { epoch: u64 },
-    /// On disk. `gen` guards lock-free readers: any slot transition bumps
-    /// it, invalidating reads that raced with an extent reuse.
-    Spilled { offset: u64, len: usize, gen: u64 },
+    /// On disk (on `tier`). `gen` guards lock-free readers: any slot
+    /// transition bumps it, invalidating reads that raced with an extent
+    /// reuse.
+    Spilled { tier: SpillTier, offset: u64, len: usize, gen: u64 },
 }
 
 /// Write-back entry state: queued payloads are interceptable; in-flight
@@ -148,9 +222,17 @@ struct ScheduleState {
     blocks_per_group: usize,
 }
 
+/// First background-spill failure, recorded where it happened and
+/// re-surfaced as a typed [`Error::Spill`] (with the originating
+/// `io::Error` reconstructed as `source()`) on every subsequent store op.
+struct FailureRecord {
+    msg: String,
+    io: Option<(std::io::ErrorKind, Option<i32>, String)>,
+}
+
 /// Store tuning knobs (see `SimConfig::{store_shards, prefetch_depth,
 /// sync_spill}` and the corresponding CLI flags).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct StoreOptions {
     /// Lock shards (rounded up to a power of two).
     pub shards: usize,
@@ -166,6 +248,12 @@ pub struct StoreOptions {
     /// ratio and spill stall time) instead of holding `prefetch_depth`
     /// fixed. See [`Shared::auto_depth_step`].
     pub auto_depth: bool,
+    /// Deterministic fault schedule for the spill I/O paths (tests / CI
+    /// chaos runs; `None` in production).
+    pub fault_plan: Option<FaultPlan>,
+    /// Second spill stripe used when the primary spill device reports
+    /// ENOSPC (the degradation ladder's middle rung).
+    pub fallback_dir: Option<PathBuf>,
 }
 
 impl Default for StoreOptions {
@@ -176,6 +264,8 @@ impl Default for StoreOptions {
             async_spill: true,
             write_back_cap: 64,
             auto_depth: false,
+            fault_plan: None,
+            fallback_dir: None,
         }
     }
 }
@@ -225,6 +315,15 @@ pub struct MemStats {
     /// Prefetch depth at snapshot time (tracks the AIMD controller when
     /// `StoreOptions::auto_depth` is set, else the configured constant).
     pub prefetch_depth: usize,
+    /// Transient-I/O attempts that were retried with backoff.
+    pub io_retries: u64,
+    /// Spill-frame reads that failed header/checksum verification.
+    pub checksum_failures: u64,
+    /// Corrupt frames healed from the write-back retention ring.
+    pub frames_recovered: u64,
+    /// ENOSPC degradations: fallback-stripe writes + budget
+    /// renegotiations (the store kept running instead of erroring).
+    pub enospc_fallbacks: u64,
 }
 
 impl MemStats {
@@ -264,7 +363,7 @@ enum Peek {
     Missing,
     Prim,
     Evict(u64),
-    Spill { offset: u64, len: usize, gen: u64 },
+    Spill { tier: SpillTier, offset: u64, len: usize, gen: u64 },
 }
 
 fn peek(slots: &HashMap<usize, Slot>, id: usize) -> Peek {
@@ -272,7 +371,7 @@ fn peek(slots: &HashMap<usize, Slot>, id: usize) -> Peek {
         None => Peek::Missing,
         Some(Slot::Primary { .. }) => Peek::Prim,
         Some(Slot::Evicting { epoch }) => Peek::Evict(*epoch),
-        Some(&Slot::Spilled { offset, len, gen }) => Peek::Spill { offset, len, gen },
+        Some(&Slot::Spilled { tier, offset, len, gen }) => Peek::Spill { tier, offset, len, gen },
     }
 }
 
@@ -287,6 +386,24 @@ pub(crate) struct Shared {
     shard_mask: usize,
     policy: Mutex<Policy>,
     spill: Option<SpillFile>,
+    /// Second spill stripe for ENOSPC degradation (eagerly created when
+    /// `StoreOptions::fallback_dir` is configured and spilling is on).
+    fallback: Option<SpillFile>,
+    /// Compiled fault schedule (tests / CI chaos runs).
+    pub(crate) injector: Option<Arc<FaultInjector>>,
+    /// Recovery telemetry shared with both spill files.
+    counters: Arc<RecoveryCounters>,
+    /// Recently spilled payloads retained for corruption recovery.
+    recovery: Mutex<RecoveryRing>,
+    /// Set when the primary spill device hit ENOSPC with no usable
+    /// fallback: eviction stops (it can't go anywhere) and the primary
+    /// budget is renegotiated instead.
+    evict_halted: AtomicBool,
+    /// Renegotiated budget headroom granted by the ENOSPC ladder.
+    budget_bump: AtomicUsize,
+    /// False once the background writer died (injected death or panic);
+    /// the store then spills inline and drains the queue itself.
+    pub(crate) writer_alive: AtomicBool,
     pub(crate) wb: Mutex<WriteBack>,
     pub(crate) wb_cv: Condvar,
     pub(crate) sched: Mutex<ScheduleState>,
@@ -305,7 +422,7 @@ pub(crate) struct Shared {
     /// Source for eviction epochs and spill generations.
     epoch_counter: AtomicU64,
     /// First spill-writer failure, surfaced on the next store op.
-    failure: Mutex<Option<String>>,
+    failure: Mutex<Option<FailureRecord>>,
 
     primary_bytes: AtomicUsize,
     peak_primary: AtomicUsize,
@@ -334,16 +451,36 @@ impl Shared {
         self.epoch_counter.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    fn record_failure(&self, e: &Error) {
-        let mut f = self.failure.lock().unwrap();
+    pub(crate) fn record_failure(&self, e: &Error) {
+        let mut f = plock(&self.failure);
         if f.is_none() {
-            *f = Some(e.to_string());
+            let io = match e {
+                Error::Io(io) | Error::Spill { source: Some(io), .. } => {
+                    Some((io.kind(), io.raw_os_error(), io.to_string()))
+                }
+                _ => None,
+            };
+            let msg = match e {
+                // Avoid double-wrapping: check_failure re-prefixes.
+                Error::Spill { msg, .. } => msg.clone(),
+                other => other.to_string(),
+            };
+            *f = Some(FailureRecord { msg, io });
         }
     }
 
     fn check_failure(&self) -> Result<()> {
-        match self.failure.lock().unwrap().as_ref() {
-            Some(m) => Err(Error::OutOfMemory(format!("spill writer failed: {m}"))),
+        match plock(&self.failure).as_ref() {
+            Some(r) => {
+                let source = r.io.as_ref().map(|(kind, raw, msg)| match raw {
+                    Some(errno) => std::io::Error::from_raw_os_error(*errno),
+                    None => std::io::Error::new(*kind, msg.clone()),
+                });
+                Err(Error::Spill {
+                    msg: format!("spill writer failed: {}", r.msg),
+                    source,
+                })
+            }
             None => Ok(()),
         }
     }
@@ -361,11 +498,17 @@ impl Shared {
         self.peak_total.fetch_max(p + s + w, Ordering::Relaxed);
     }
 
+    /// Effective primary budget: the configured ceiling plus any headroom
+    /// the ENOSPC ladder renegotiated (payloads that had nowhere to go).
+    fn effective_budget(&self) -> Option<usize> {
+        self.budget.map(|b| b + self.budget_bump.load(Ordering::Relaxed))
+    }
+
     /// Reserve `len` bytes of primary budget. With a budget this is a CAS
     /// loop that never lets `primary_bytes` exceed it; without one it
     /// always succeeds.
     fn try_reserve(&self, len: usize) -> bool {
-        match self.budget {
+        match self.effective_budget() {
             None => {
                 self.primary_bytes.fetch_add(len, Ordering::Relaxed);
                 true
@@ -394,10 +537,33 @@ impl Shared {
         self.primary_bytes.fetch_sub(len, Ordering::Relaxed);
     }
 
+    /// The spill file serving `tier`. Callers only hold a tier they read
+    /// out of an installed `Spilled` slot, so the file must exist.
+    fn file_for(&self, tier: SpillTier) -> &SpillFile {
+        let f = match tier {
+            SpillTier::Primary => self.spill.as_ref(),
+            SpillTier::Fallback => self.fallback.as_ref(),
+        };
+        f.expect("spilled slot without a spill file for its tier")
+    }
+
+    /// Heal a corrupt frame from the retention ring (consuming the entry).
+    fn recover_frame(&self, id: usize, gen: u64) -> Option<BlockPayload> {
+        let p = plock(&self.recovery).remove(id, gen)?;
+        self.counters.frames_recovered.fetch_add(1, Ordering::Relaxed);
+        Some(p)
+    }
+
+    /// The extent for (id, gen) was freed after a clean read: its ring
+    /// entry (if any) can never be needed again.
+    fn recovery_drop(&self, id: usize, gen: u64) {
+        plock(&self.recovery).drop_entry(id, gen);
+    }
+
     // ---- Belady policy index (metadata only; no I/O under this lock) ----
 
     fn policy_insert(&self, id: usize) {
-        let mut p = self.policy.lock().unwrap();
+        let mut p = plock(&self.policy);
         let r = *p.rank.get(&id).unwrap_or(&NO_USE);
         if let Some(old) = p.resident_rank.insert(id, r) {
             p.resident.remove(&(old, id));
@@ -406,7 +572,7 @@ impl Shared {
     }
 
     fn policy_remove(&self, id: usize) {
-        let mut p = self.policy.lock().unwrap();
+        let mut p = plock(&self.policy);
         if let Some(old) = p.resident_rank.remove(&id) {
             p.resident.remove(&(old, id));
         }
@@ -415,7 +581,7 @@ impl Shared {
     /// The block was consumed this stage: its next use is next stage at
     /// the earliest, so a subsequent `put` files it as a prime victim.
     fn policy_mark_done(&self, id: usize) {
-        let mut p = self.policy.lock().unwrap();
+        let mut p = plock(&self.policy);
         p.done_seq += 1;
         let r = DONE_BASE + p.done_seq;
         p.rank.insert(id, r);
@@ -426,7 +592,7 @@ impl Shared {
 
     /// Pop the farthest-next-use resident candidate (rank >= `min_rank`).
     fn policy_pick_victim(&self, min_rank: u64) -> Option<usize> {
-        let mut p = self.policy.lock().unwrap();
+        let mut p = plock(&self.policy);
         let &(rank, id) = p.resident.iter().next_back()?;
         if rank < min_rank {
             return None;
@@ -441,7 +607,7 @@ impl Shared {
     fn scan_for_victim(&self, min_rank: u64) -> Option<usize> {
         let mut candidates: Vec<usize> = Vec::new();
         for shard in &self.shards {
-            let sg = shard.lock().unwrap();
+            let sg = plock(shard);
             candidates.extend(
                 sg.iter()
                     .filter(|(_, s)| matches!(s, Slot::Primary { .. }))
@@ -451,7 +617,7 @@ impl Shared {
         if candidates.is_empty() {
             return None;
         }
-        let p = self.policy.lock().unwrap();
+        let p = plock(&self.policy);
         let mut best: Option<(u64, usize)> = None;
         for id in candidates {
             let r = *p.rank.get(&id).unwrap_or(&NO_USE);
@@ -478,6 +644,12 @@ impl Shared {
     /// `min_rank`) into the write-back pipeline. Returns false when no
     /// eligible victim exists.
     fn evict_one(&self, min_rank: u64) -> Result<bool> {
+        if self.evict_halted.load(Ordering::Relaxed) {
+            // ENOSPC ladder bottom rung: the spill devices are full, so
+            // eviction has nowhere to go — callers renegotiate the budget
+            // instead of churning the write-back pipeline.
+            return Ok(false);
+        }
         for _ in 0..64 {
             let victim = match self.policy_pick_victim(min_rank) {
                 Some(v) => Some(v),
@@ -486,7 +658,7 @@ impl Shared {
             let Some(victim) = victim else { return Ok(false) };
             let epoch = self.next_epoch();
             let payload = {
-                let mut sg = self.shard(victim).lock().unwrap();
+                let mut sg = plock(self.shard(victim));
                 if matches!(sg.get(&victim), Some(Slot::Primary { .. })) {
                     let Some(Slot::Primary { payload, .. }) =
                         sg.insert(victim, Slot::Evicting { epoch })
@@ -514,10 +686,11 @@ impl Shared {
     }
 
     /// Route an `Evicting` payload to disk: enqueue for the background
-    /// writer, or (sync mode) write inline on the calling thread.
+    /// writer, or write inline on the calling thread (sync mode, or
+    /// self-healing after the writer died).
     fn dispatch_spill(&self, id: usize, epoch: u64, payload: BlockPayload) {
-        if self.opts.async_spill {
-            let mut wg = self.wb.lock().unwrap();
+        if self.opts.async_spill && self.writer_alive.load(Ordering::Acquire) {
+            let mut wg = plock(&self.wb);
             wg.map.insert(id, WbEntry { epoch, state: WbState::Queued(payload) });
             wg.queue.push_back((id, epoch));
             drop(wg);
@@ -527,11 +700,84 @@ impl Shared {
         }
     }
 
+    /// Pop the oldest claimable write-back job (stale entries skipped),
+    /// flipping it `Queued` → `InFlight`. Shared by the writer thread and
+    /// the inline drain path.
+    pub(crate) fn claim_next(wb: &mut WriteBack) -> Option<(usize, u64, BlockPayload)> {
+        while let Some((id, epoch)) = wb.queue.pop_front() {
+            let take = matches!(
+                wb.map.get(&id),
+                Some(e) if e.epoch == epoch && matches!(e.state, WbState::Queued(_))
+            );
+            if take {
+                let entry = wb.map.get_mut(&id).expect("claimable entry vanished");
+                let state = std::mem::replace(&mut entry.state, WbState::InFlight);
+                let WbState::Queued(payload) = state else { unreachable!() };
+                return Some((id, epoch, payload));
+            }
+        }
+        None
+    }
+
+    /// Put a claimed-but-unwritten job back at the head of the queue
+    /// (writer death mid-claim: nothing may be lost).
+    pub(crate) fn requeue_job(&self, id: usize, epoch: u64, payload: BlockPayload) {
+        let mut wg = plock(&self.wb);
+        if matches!(wg.map.get(&id), Some(e) if e.epoch == epoch) {
+            if let Some(e) = wg.map.get_mut(&id) {
+                e.state = WbState::Queued(payload);
+            }
+            wg.queue.push_front((id, epoch));
+        }
+        drop(wg);
+        self.wb_cv.notify_all();
+    }
+
+    /// Self-healing drain: with the background writer dead, foreground
+    /// threads (flush, back-pressured put) claim and write the remaining
+    /// queue entries themselves. Bounded — a job another thread holds
+    /// in flight must finish or the wait surfaces as a typed error.
+    fn drain_wb_inline(&self) -> Result<()> {
+        let mut spins = 0u32;
+        while self.wb_blocks.load(Ordering::Relaxed) > 0 {
+            if self.shutdown.load(Ordering::Acquire) {
+                return Ok(());
+            }
+            self.check_failure()?;
+            let claimed = {
+                let mut wg = plock(&self.wb);
+                Self::claim_next(&mut wg)
+            };
+            match claimed {
+                Some((id, epoch, payload)) => {
+                    self.spill_block_now(id, epoch, payload);
+                    spins = 0;
+                }
+                None => {
+                    // Nothing claimable but blocks still counted: another
+                    // drainer's write is in flight — wait it out.
+                    let wg = plock(&self.wb);
+                    if self.wb_blocks.load(Ordering::Relaxed) == 0 {
+                        return Ok(());
+                    }
+                    drop(pwait_timeout(&self.wb_cv, wg, Duration::from_millis(1)));
+                    spins += 1;
+                    if spins > 120_000 {
+                        return Err(Error::spill(
+                            "write-back queue never drained after spill-writer death",
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// A block that cannot fit the primary tier at all bypasses it
     /// (paper: "directly save this chunk to the storage via GDS").
     fn spill_incoming(&self, id: usize, payload: BlockPayload) -> Result<()> {
         let epoch = self.next_epoch();
-        self.shard(id).lock().unwrap().insert(id, Slot::Evicting { epoch });
+        plock(self.shard(id)).insert(id, Slot::Evicting { epoch });
         self.wb_bytes.fetch_add(payload.len(), Ordering::Relaxed);
         self.wb_blocks.fetch_add(1, Ordering::Relaxed);
         self.spill_events.fetch_add(1, Ordering::Relaxed);
@@ -541,21 +787,35 @@ impl Shared {
     }
 
     /// Serialize → write → install `Spilled`, entirely outside shard
-    /// locks. Called by the writer thread (async) or inline (sync).
+    /// locks. Called by the writer thread (async) or inline (sync /
+    /// writer-dead drain). ENOSPC walks the degradation ladder: primary
+    /// stripe → fallback stripe → reinstate in primary with a
+    /// renegotiated budget. Only non-ENOSPC hard failures poison the
+    /// store (`record_failure`).
     pub(crate) fn spill_block_now(&self, id: usize, epoch: u64, payload: BlockPayload) {
         let plen = payload.len();
-        let written: Result<(u64, usize)> = match self.spill.as_ref() {
-            Some(spill) => spill.write(&payload.to_bytes()),
-            None => Err(Error::OutOfMemory("spill file missing".into())),
+        let bytes = payload.to_bytes();
+        let mut tier = SpillTier::Primary;
+        let mut written: Result<(u64, usize)> = match self.spill.as_ref() {
+            Some(spill) => spill.write(&bytes),
+            None => Err(Error::spill("spill file missing")),
         };
+        if matches!(&written, Err(e) if spill::error_is_enospc(e)) {
+            // Ladder rung 2: the fallback stripe (a different device).
+            if let Some(fb) = self.fallback.as_ref() {
+                self.counters.enospc_fallbacks.fetch_add(1, Ordering::Relaxed);
+                tier = SpillTier::Fallback;
+                written = fb.write(&bytes);
+            }
+        }
         match written {
             Ok((offset, stored)) => {
                 let gen = self.next_epoch();
                 let installed = {
-                    let mut sg = self.shard(id).lock().unwrap();
+                    let mut sg = plock(self.shard(id));
                     match sg.get(&id) {
                         Some(Slot::Evicting { epoch: e }) if *e == epoch => {
-                            sg.insert(id, Slot::Spilled { offset, len: stored, gen });
+                            sg.insert(id, Slot::Spilled { tier, offset, len: stored, gen });
                             true
                         }
                         _ => false,
@@ -564,10 +824,13 @@ impl Shared {
                 if installed {
                     self.secondary_bytes.fetch_add(stored, Ordering::Relaxed);
                     self.blocks_secondary.fetch_add(1, Ordering::Relaxed);
+                    // Retain the payload for corruption recovery: a frame
+                    // that fails its checksum on read heals from here.
+                    plock(&self.recovery).insert(id, gen, payload);
                 } else {
                     // Unreachable by protocol (interceptors wait on
                     // in-flight writes); defensively drop the disk copy.
-                    self.spill.as_ref().unwrap().free_extent(offset, stored);
+                    self.file_for(tier).free_extent(offset, stored);
                 }
                 // Write-back accounting is released only now, AFTER the
                 // Spilled slot is installed: flush()/stats() never observe
@@ -578,9 +841,9 @@ impl Shared {
             }
             Err(e) => {
                 // Never lose data: reinstate the payload in primary (even
-                // over budget) and surface the failure on the next op.
+                // over budget).
                 {
-                    let mut sg = self.shard(id).lock().unwrap();
+                    let mut sg = plock(self.shard(id));
                     if matches!(sg.get(&id), Some(Slot::Evicting { epoch: ep }) if *ep == epoch) {
                         sg.insert(id, Slot::Primary { payload, prefetched: false });
                         self.primary_bytes.fetch_add(plen, Ordering::Relaxed);
@@ -592,10 +855,21 @@ impl Shared {
                 if self.budget.is_some() {
                     self.policy_insert(id);
                 }
-                self.record_failure(&e);
+                if spill::error_is_enospc(&e) {
+                    // Ladder rung 3, graceful: every spill device is full,
+                    // so stop evicting and renegotiate the primary budget
+                    // by the stranded payload's size. The simulation keeps
+                    // running with a larger RAM footprint instead of
+                    // dying on a full disk.
+                    self.evict_halted.store(true, Ordering::Relaxed);
+                    self.budget_bump.fetch_add(plen, Ordering::Relaxed);
+                    self.counters.enospc_fallbacks.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.record_failure(&e);
+                }
             }
         }
-        let mut wg = self.wb.lock().unwrap();
+        let mut wg = plock(&self.wb);
         if matches!(wg.map.get(&id), Some(en) if en.epoch == epoch) {
             wg.map.remove(&id);
         }
@@ -608,7 +882,7 @@ impl Shared {
     fn clear_slot(&self, id: usize) -> Result<()> {
         let mut spins = 0u32;
         loop {
-            let mut sg = self.shard(id).lock().unwrap();
+            let mut sg = plock(self.shard(id));
             match peek(&sg, id) {
                 Peek::Missing => return Ok(()),
                 Peek::Prim => {
@@ -624,13 +898,13 @@ impl Shared {
                     return Ok(());
                 }
                 Peek::Evict(epoch) => {
-                    let mut wg = self.wb.lock().unwrap();
+                    let mut wg = plock(&self.wb);
                     let queued = matches!(
                         wg.map.get(&id),
                         Some(e) if e.epoch == epoch && matches!(e.state, WbState::Queued(_))
                     );
                     if queued {
-                        let entry = wg.map.remove(&id).unwrap();
+                        let entry = wg.map.remove(&id).expect("queued entry vanished");
                         let WbState::Queued(payload) = entry.state else { unreachable!() };
                         sg.remove(&id);
                         drop(wg);
@@ -642,26 +916,23 @@ impl Shared {
                     }
                     drop(sg);
                     let t0 = Instant::now();
-                    let (wg, _) =
-                        self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
-                    drop(wg);
+                    drop(pwait_timeout(&self.wb_cv, wg, Duration::from_millis(1)));
                     self.stall(t0);
                     spins += 1;
                     if spins > 120_000 {
-                        return Err(Error::OutOfMemory(format!(
+                        return Err(Error::spill(format!(
                             "block {id}: spill write never completed"
                         )));
                     }
                     self.check_failure()?;
                 }
-                Peek::Spill { offset, len, .. } => {
+                Peek::Spill { tier, offset, len, gen } => {
                     sg.remove(&id);
                     drop(sg);
                     self.secondary_bytes.fetch_sub(len, Ordering::Relaxed);
                     self.blocks_secondary.fetch_sub(1, Ordering::Relaxed);
-                    if let Some(spill) = self.spill.as_ref() {
-                        spill.free_extent(offset, len);
-                    }
+                    self.file_for(tier).free_extent(offset, len);
+                    self.recovery_drop(id, gen);
                     return Ok(());
                 }
             }
@@ -690,14 +961,19 @@ impl Shared {
             if self.opts.async_spill
                 && self.wb_blocks.load(Ordering::Relaxed) >= self.opts.write_back_cap
             {
+                if !self.writer_alive.load(Ordering::Acquire) {
+                    // The writer died with a full queue: self-heal by
+                    // draining it on this thread.
+                    self.drain_wb_inline()?;
+                    continue;
+                }
                 let t0 = Instant::now();
-                let wg = self.wb.lock().unwrap();
-                let (wg, _) = self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
-                drop(wg);
+                let wg = plock(&self.wb);
+                drop(pwait_timeout(&self.wb_cv, wg, Duration::from_millis(1)));
                 self.stall(t0);
                 waits += 1;
                 if waits > 120_000 {
-                    return Err(Error::OutOfMemory(format!(
+                    return Err(Error::spill(format!(
                         "block {id}: write-back queue never drained"
                     )));
                 }
@@ -708,10 +984,7 @@ impl Shared {
                 return self.spill_incoming(id, payload);
             }
         }
-        self.shard(id)
-            .lock()
-            .unwrap()
-            .insert(id, Slot::Primary { payload, prefetched: false });
+        plock(self.shard(id)).insert(id, Slot::Primary { payload, prefetched: false });
         self.blocks_primary.fetch_add(1, Ordering::Relaxed);
         if self.budget.is_some() {
             self.policy_insert(id);
@@ -724,7 +997,7 @@ impl Shared {
         self.check_failure()?;
         let mut spins = 0u32;
         loop {
-            let mut sg = self.shard(id).lock().unwrap();
+            let mut sg = plock(self.shard(id));
             match peek(&sg, id) {
                 Peek::Missing => {
                     return Err(Error::OutOfMemory(format!("block {id} not resident")))
@@ -745,14 +1018,14 @@ impl Shared {
                     return Ok(payload);
                 }
                 Peek::Evict(epoch) => {
-                    let mut wg = self.wb.lock().unwrap();
+                    let mut wg = plock(&self.wb);
                     let queued = matches!(
                         wg.map.get(&id),
                         Some(e) if e.epoch == epoch && matches!(e.state, WbState::Queued(_))
                     );
                     if queued {
                         // Intercept the block before it hits disk.
-                        let entry = wg.map.remove(&id).unwrap();
+                        let entry = wg.map.remove(&id).expect("queued entry vanished");
                         let WbState::Queued(payload) = entry.state else { unreachable!() };
                         sg.remove(&id);
                         drop(wg);
@@ -769,19 +1042,17 @@ impl Shared {
                     // the Spilled transition, then retry.
                     drop(sg);
                     let t0 = Instant::now();
-                    let (wg, _) =
-                        self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
-                    drop(wg);
+                    drop(pwait_timeout(&self.wb_cv, wg, Duration::from_millis(1)));
                     self.stall(t0);
                     spins += 1;
                     if spins > 120_000 {
-                        return Err(Error::OutOfMemory(format!(
+                        return Err(Error::spill(format!(
                             "block {id}: spill write never completed"
                         )));
                     }
                     self.check_failure()?;
                 }
-                Peek::Spill { offset, len, .. } => {
+                Peek::Spill { tier, offset, len, gen } => {
                     sg.remove(&id);
                     drop(sg);
                     self.secondary_bytes.fetch_sub(len, Ordering::Relaxed);
@@ -795,17 +1066,30 @@ impl Shared {
                     }
                     // The extent is unreachable (slot removed) until we
                     // free it below, so the read races with nothing.
-                    let spill =
-                        self.spill.as_ref().expect("spilled slot without spill file");
+                    let spill = self.file_for(tier);
                     let t0 = Instant::now();
                     let mut buf = Vec::new();
-                    let read = spill.read_into(offset, len, &mut buf);
+                    let read = spill.read_frame(offset, len, &mut buf);
                     // The slot is already gone either way: release the
                     // extent even on a read error (no one references it).
                     spill.free_extent(offset, len);
                     self.stall(t0);
-                    read?;
-                    return BlockPayload::from_bytes(&buf);
+                    return match read {
+                        Ok(()) => {
+                            self.recovery_drop(id, gen);
+                            BlockPayload::from_bytes(&buf)
+                        }
+                        Err(e @ Error::Corruption(_)) => {
+                            // The frame is damaged on disk — heal from the
+                            // write-back retention ring if it still holds
+                            // this exact spill's payload.
+                            match self.recover_frame(id, gen) {
+                                Some(p) => Ok(p),
+                                None => Err(e),
+                            }
+                        }
+                        Err(e) => Err(e),
+                    };
                 }
             }
         }
@@ -815,7 +1099,7 @@ impl Shared {
         self.check_failure()?;
         let mut spins = 0u32;
         loop {
-            let sg = self.shard(id).lock().unwrap();
+            let sg = plock(self.shard(id));
             match peek(&sg, id) {
                 Peek::Missing => {
                     return Err(Error::OutOfMemory(format!("block {id} not resident")))
@@ -827,7 +1111,7 @@ impl Shared {
                     return Ok(payload.clone());
                 }
                 Peek::Evict(epoch) => {
-                    let wg = self.wb.lock().unwrap();
+                    let wg = plock(&self.wb);
                     if let Some(e) = wg.map.get(&id) {
                         if e.epoch == epoch {
                             if let WbState::Queued(p) = &e.state {
@@ -839,28 +1123,24 @@ impl Shared {
                     }
                     drop(sg);
                     let t0 = Instant::now();
-                    let (wg, _) =
-                        self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
-                    drop(wg);
+                    drop(pwait_timeout(&self.wb_cv, wg, Duration::from_millis(1)));
                     self.stall(t0);
                     spins += 1;
                     if spins > 120_000 {
-                        return Err(Error::OutOfMemory(format!(
+                        return Err(Error::spill(format!(
                             "block {id}: spill write never completed"
                         )));
                     }
                     self.check_failure()?;
                 }
-                Peek::Spill { offset, len, gen } => {
+                Peek::Spill { tier, offset, len, gen } => {
                     drop(sg);
-                    let spill =
-                        self.spill.as_ref().expect("spilled slot without spill file");
+                    let spill = self.file_for(tier);
                     let t0 = Instant::now();
                     let mut buf = Vec::new();
-                    spill.read_into(offset, len, &mut buf)?;
+                    let read = spill.read_frame(offset, len, &mut buf);
                     self.stall(t0);
-                    let parsed = BlockPayload::from_bytes(&buf);
-                    let mut sg = self.shard(id).lock().unwrap();
+                    let mut sg = plock(self.shard(id));
                     let unchanged =
                         matches!(sg.get(&id), Some(&Slot::Spilled { gen: g, .. }) if g == gen);
                     if !unchanged {
@@ -869,16 +1149,36 @@ impl Shared {
                         drop(sg);
                         spins += 1;
                         if spins > 120_000 {
-                            return Err(Error::OutOfMemory(format!(
+                            return Err(Error::spill(format!(
                                 "block {id}: unstable under concurrent churn"
                             )));
                         }
                         continue;
                     }
                     // Generation verified: the extent was stable for the
-                    // whole read, so parse failures are real corruption.
-                    let payload = match parsed {
-                        Ok(p) => p,
+                    // whole read, so a corrupt frame is real disk damage —
+                    // heal it from the retention ring (clone: the extent
+                    // stays installed) or surface the typed error.
+                    let payload = match read {
+                        Ok(()) => BlockPayload::from_bytes(&buf)?,
+                        Err(e @ Error::Corruption(_)) => {
+                            let ring = plock(&self.recovery);
+                            let found = ring
+                                .entries
+                                .iter()
+                                .find(|(i, g, _)| *i == id && *g == gen)
+                                .map(|(_, _, p)| p.clone());
+                            drop(ring);
+                            match found {
+                                Some(p) => {
+                                    self.counters
+                                        .frames_recovered
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    p
+                                }
+                                None => return Err(e),
+                            }
+                        }
                         Err(e) => return Err(e),
                     };
                     self.fetch_secondary.fetch_add(1, Ordering::Relaxed);
@@ -895,6 +1195,7 @@ impl Shared {
                         self.secondary_bytes.fetch_sub(len, Ordering::Relaxed);
                         self.blocks_secondary.fetch_sub(1, Ordering::Relaxed);
                         spill.free_extent(offset, len);
+                        self.recovery_drop(id, gen);
                         if self.budget.is_some() {
                             self.policy_insert(id);
                         }
@@ -916,14 +1217,14 @@ impl Shared {
         mark_prefetched: bool,
         buf: &mut Vec<u8>,
     ) -> bool {
-        let (offset, len, gen) = {
-            let sg = self.shard(id).lock().unwrap();
+        let (tier, offset, len, gen) = {
+            let sg = plock(self.shard(id));
             match sg.get(&id) {
-                Some(&Slot::Spilled { offset, len, gen }) => (offset, len, gen),
+                Some(&Slot::Spilled { tier, offset, len, gen }) => (tier, offset, len, gen),
                 _ => return false,
             }
         };
-        let plen = len.saturating_sub(FRAME_BYTES);
+        let plen = len.saturating_sub(SECONDARY_FRAME_BYTES);
         let mut guard = 0u32;
         while !self.try_reserve(plen) {
             guard += 1;
@@ -931,16 +1232,15 @@ impl Shared {
                 return false;
             }
         }
-        let Some(spill) = self.spill.as_ref() else {
-            self.unreserve(plen);
-            return false;
-        };
-        if spill.read_into(offset, len, buf).is_err() {
+        let spill = self.file_for(tier);
+        if spill.read_frame(offset, len, buf).is_err() {
+            // Corrupt or unreadable: leave it for the foreground take(),
+            // which can heal from the retention ring.
             self.unreserve(plen);
             return false;
         }
         let parsed = BlockPayload::from_bytes(buf);
-        let mut sg = self.shard(id).lock().unwrap();
+        let mut sg = plock(self.shard(id));
         let unchanged = matches!(sg.get(&id), Some(&Slot::Spilled { gen: g, .. }) if g == gen);
         let payload = match (unchanged, parsed) {
             (true, Ok(p)) => p,
@@ -956,6 +1256,7 @@ impl Shared {
         self.secondary_bytes.fetch_sub(len, Ordering::Relaxed);
         self.blocks_secondary.fetch_sub(1, Ordering::Relaxed);
         spill.free_extent(offset, len);
+        self.recovery_drop(id, gen);
         if self.budget.is_some() {
             self.policy_insert(id);
         }
@@ -972,7 +1273,7 @@ impl Shared {
     fn residency_rank(&self, ids: &[usize]) -> usize {
         ids.iter()
             .filter(|&&id| {
-                let sg = self.shard(id).lock().unwrap();
+                let sg = plock(self.shard(id));
                 matches!(peek(&sg, id), Peek::Spill { .. } | Peek::Missing)
             })
             .count()
@@ -993,7 +1294,7 @@ impl Shared {
         let hits = self.prefetch_hits.load(Ordering::Relaxed);
         let misses = self.prefetch_misses.load(Ordering::Relaxed);
         let stall = self.spill_stall_ns.load(Ordering::Relaxed);
-        let mut last = self.auto_state.lock().unwrap();
+        let mut last = plock(&self.auto_state);
         let primed = last.primed;
         let hit_d = hits.saturating_sub(last.hits);
         let miss_d = misses.saturating_sub(last.misses);
@@ -1022,7 +1323,7 @@ impl Shared {
     fn publish_schedule(&self, order: &[usize], blocks_per_group: usize) {
         let bpg = blocks_per_group.max(1);
         {
-            let mut s = self.sched.lock().unwrap();
+            let mut s = plock(&self.sched);
             s.order = Arc::new(order.to_vec());
             s.blocks_per_group = bpg;
         }
@@ -1034,7 +1335,7 @@ impl Shared {
         self.fetch_cursor.store(0, Ordering::Release);
         if self.budget.is_some() {
             {
-                let mut p = self.policy.lock().unwrap();
+                let mut p = plock(&self.policy);
                 p.rank.clear();
                 p.done_seq = 0;
                 for (i, &id) in order.iter().enumerate() {
@@ -1045,7 +1346,7 @@ impl Shared {
             // shard (entries for ids that move mid-rebuild self-heal via
             // the victim verify-and-skip loop).
             for shard in &self.shards {
-                let sg = shard.lock().unwrap();
+                let sg = plock(shard);
                 let ids: Vec<usize> = sg
                     .iter()
                     .filter(|(_, s)| matches!(s, Slot::Primary { .. }))
@@ -1066,15 +1367,27 @@ impl Shared {
     }
 
     fn flush(&self) -> Result<()> {
-        let mut wg = self.wb.lock().unwrap();
+        let mut spins = 0u32;
         while self.wb_blocks.load(Ordering::Relaxed) > 0 {
             if self.shutdown.load(Ordering::Acquire) {
                 break;
             }
-            let (g, _) = self.wb_cv.wait_timeout(wg, Duration::from_millis(1)).unwrap();
-            wg = g;
+            self.check_failure()?;
+            if self.opts.async_spill && !self.writer_alive.load(Ordering::Acquire) {
+                // Writer died: drain its queue on this thread.
+                self.drain_wb_inline()?;
+                continue;
+            }
+            let wg = plock(&self.wb);
+            if self.wb_blocks.load(Ordering::Relaxed) == 0 {
+                break;
+            }
+            drop(pwait_timeout(&self.wb_cv, wg, Duration::from_millis(1)));
+            spins += 1;
+            if spins > 120_000 {
+                return Err(Error::spill("write-back queue never drained in flush"));
+            }
         }
-        drop(wg);
         self.check_failure()
     }
 
@@ -1095,6 +1408,10 @@ impl Shared {
             prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
             spill_stall_ns: self.spill_stall_ns.load(Ordering::Relaxed),
             prefetch_depth: self.dyn_depth.load(Ordering::Relaxed),
+            io_retries: self.counters.io_retries.load(Ordering::Relaxed),
+            checksum_failures: self.counters.checksum_failures.load(Ordering::Relaxed),
+            frames_recovered: self.counters.frames_recovered.load(Ordering::Relaxed),
+            enospc_fallbacks: self.counters.enospc_fallbacks.load(Ordering::Relaxed),
         }
     }
 }
@@ -1121,8 +1438,30 @@ impl BlockStore {
         spill_dir: Option<PathBuf>,
         opts: StoreOptions,
     ) -> Result<Self> {
+        // Hoisted before `opts` moves into Shared.
+        let async_spill = opts.async_spill;
+        let prefetch_depth = opts.prefetch_depth;
+        let auto_depth = opts.auto_depth;
+        let injector = opts.fault_plan.clone().map(|p| Arc::new(FaultInjector::new(p)));
+        let counters = Arc::new(RecoveryCounters::default());
         let spill = match (&budget, &spill_dir) {
-            (Some(_), Some(dir)) => Some(SpillFile::create(dir)?),
+            (Some(_), Some(dir)) => Some(SpillFile::create(
+                dir,
+                SpillTier::Primary,
+                injector.clone(),
+                Arc::clone(&counters),
+            )?),
+            _ => None,
+        };
+        // The ENOSPC fallback stripe is created eagerly: a full disk is
+        // the worst moment to discover the fallback dir isn't writable.
+        let fallback = match (&spill, &opts.fallback_dir) {
+            (Some(_), Some(dir)) => Some(SpillFile::create(
+                dir,
+                SpillTier::Fallback,
+                injector.clone(),
+                Arc::clone(&counters),
+            )?),
             _ => None,
         };
         let nshards = opts.shards.max(1).next_power_of_two();
@@ -1133,13 +1472,20 @@ impl BlockStore {
             shard_mask: nshards - 1,
             policy: Mutex::new(Policy::default()),
             spill,
+            fallback,
+            injector,
+            counters,
+            recovery: Mutex::new(RecoveryRing::default()),
+            evict_halted: AtomicBool::new(false),
+            budget_bump: AtomicUsize::new(0),
+            writer_alive: AtomicBool::new(true),
             wb: Mutex::new(WriteBack::default()),
             wb_cv: Condvar::new(),
             sched: Mutex::new(ScheduleState::default()),
             sched_cv: Condvar::new(),
             progress: AtomicUsize::new(0),
             fetch_cursor: AtomicUsize::new(0),
-            dyn_depth: AtomicUsize::new(opts.prefetch_depth.max(usize::from(opts.auto_depth))),
+            dyn_depth: AtomicUsize::new(prefetch_depth.max(usize::from(auto_depth))),
             auto_state: Mutex::new(AutoDepthState::default()),
             shutdown: AtomicBool::new(false),
             epoch_counter: AtomicU64::new(0),
@@ -1163,7 +1509,7 @@ impl BlockStore {
         });
         let mut store = BlockStore { shared, prefetcher: None, writer: None };
         if store.shared.spill.is_some() {
-            if opts.async_spill {
+            if async_spill {
                 let s = Arc::clone(&store.shared);
                 store.writer = Some(
                     std::thread::Builder::new()
@@ -1172,7 +1518,7 @@ impl BlockStore {
                         .map_err(Error::Io)?,
                 );
             }
-            if opts.prefetch_depth > 0 || opts.auto_depth {
+            if prefetch_depth > 0 || auto_depth {
                 let s = Arc::clone(&store.shared);
                 store.prefetcher = Some(
                     std::thread::Builder::new()
@@ -1212,7 +1558,7 @@ impl BlockStore {
     }
 
     pub fn contains(&self, id: usize) -> bool {
-        self.shared.shard(id).lock().unwrap().contains_key(&id)
+        plock(self.shared.shard(id)).contains_key(&id)
     }
 
     /// Publish a stage's group schedule: `order` lists block ids in group
@@ -1299,6 +1645,7 @@ impl Drop for BlockStore {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -1438,7 +1785,7 @@ mod tests {
         }
         // All extents freed and reused: spill file shouldn't have grown 5x.
         let tail = s.spill_tail_bytes();
-        assert!(tail <= 4 * (64 * 2 + 16) as u64 * 2, "tail {tail}");
+        assert!(tail <= 4 * (64 * 2 + SECONDARY_FRAME_BYTES) as u64 * 2, "tail {tail}");
     }
 
     #[test]
@@ -1699,5 +2046,140 @@ mod tests {
         assert_eq!(p.re, q.re);
         assert_eq!(p.im, q.im);
         assert!(BlockPayload::from_bytes(&bytes[..10]).is_err());
+    }
+
+    // ---- Fault injection & recovery ----
+
+    fn faulted_sync_opts(spec: &str) -> StoreOptions {
+        StoreOptions { fault_plan: Some(FaultPlan::parse(spec).unwrap()), ..sync_opts() }
+    }
+
+    #[test]
+    fn transient_eviction_write_eio_is_retried_transparently() {
+        let s = BlockStore::with_options(
+            Some(250),
+            Some(tmpdir()),
+            faulted_sync_opts("eio@write:1"),
+        )
+        .unwrap();
+        s.put(0, payload(100, 3)).unwrap();
+        // Eviction write attempt 1 fails with EIO; the retry lands and the
+        // caller never notices.
+        s.put(1, payload(100, 4)).unwrap();
+        assert_eq!(s.take(0).unwrap().re, vec![3u8; 100]);
+        assert_eq!(s.take(1).unwrap().re, vec![4u8; 100]);
+        let st = s.stats();
+        assert!(st.io_retries >= 1, "retry counter not bumped: {st:?}");
+        assert_eq!(st.checksum_failures, 0);
+    }
+
+    #[test]
+    fn sticky_corruption_heals_from_retention_ring() {
+        // The extent is persistently corrupt: re-reads never verify, so
+        // take() must fall back to the write-back retention ring and
+        // return byte-identical data.
+        let s = BlockStore::with_options(
+            Some(250),
+            Some(tmpdir()),
+            faulted_sync_opts("stickyflip@read:1"),
+        )
+        .unwrap();
+        s.put(0, payload(100, 1)).unwrap();
+        s.put(1, payload(100, 2)).unwrap(); // evicts block 0 to disk
+        assert_eq!(s.stats().blocks_secondary, 1);
+        let p = s.take(0).unwrap();
+        assert_eq!(p.re, vec![1u8; 100]);
+        assert_eq!(p.im, vec![2u8; 100]);
+        let st = s.stats();
+        assert_eq!(st.frames_recovered, 1, "ring recovery not used: {st:?}");
+        assert!(st.checksum_failures >= 1);
+    }
+
+    #[test]
+    fn enospc_retargets_the_fallback_stripe() {
+        let fb = tmpdir().join("fallback-stripe");
+        let opts = StoreOptions {
+            fallback_dir: Some(fb),
+            ..faulted_sync_opts("enospc_after=0")
+        };
+        let s = BlockStore::with_options(Some(250), Some(tmpdir()), opts).unwrap();
+        s.put(0, payload(100, 5)).unwrap();
+        s.put(1, payload(100, 6)).unwrap(); // primary stripe full -> fallback
+        let st = s.stats();
+        assert!(st.enospc_fallbacks >= 1, "ladder never engaged: {st:?}");
+        assert_eq!(st.blocks_secondary, 1);
+        assert_eq!(s.take(0).unwrap().re, vec![5u8; 100]);
+        assert_eq!(s.take(1).unwrap().re, vec![6u8; 100]);
+    }
+
+    #[test]
+    fn enospc_without_fallback_renegotiates_the_budget() {
+        // Every spill device is full and there is no fallback: the ladder's
+        // bottom rung halts eviction and grows the primary budget instead
+        // of erroring — the run completes with a larger RAM footprint.
+        let s = BlockStore::with_options(
+            Some(250),
+            Some(tmpdir()),
+            faulted_sync_opts("enospc_after=0"),
+        )
+        .unwrap();
+        s.put(0, payload(100, 7)).unwrap();
+        s.put(1, payload(100, 8)).unwrap(); // eviction hits ENOSPC: reinstate + bump
+        let st = s.stats();
+        assert!(st.enospc_fallbacks >= 1);
+        assert_eq!(st.blocks_secondary, 0, "nothing could reach a disk");
+        assert_eq!(st.blocks_primary, 2, "stranded payload reinstated over budget");
+        assert_eq!(s.take(0).unwrap().re, vec![7u8; 100]);
+        assert_eq!(s.take(1).unwrap().re, vec![8u8; 100]);
+        s.put(2, payload(100, 9)).unwrap();
+        assert_eq!(s.take(2).unwrap().re, vec![9u8; 100]);
+    }
+
+    #[test]
+    fn writer_death_drains_inline_and_loses_nothing() {
+        let opts = StoreOptions {
+            async_spill: true,
+            prefetch_depth: 0,
+            fault_plan: Some(FaultPlan::parse("writer_death_after=1").unwrap()),
+            ..StoreOptions::default()
+        };
+        let s = BlockStore::with_options(Some(250), Some(tmpdir()), opts).unwrap();
+        for id in 0..6usize {
+            s.put(id, payload(100, id as u8)).unwrap();
+        }
+        // The writer died on its first claimed job (requeueing it); flush
+        // must self-heal by draining the queue on this thread.
+        s.flush().unwrap();
+        assert!(!s.shared.writer_alive.load(Ordering::Relaxed));
+        for id in 0..6usize {
+            assert_eq!(s.take(id).unwrap().re, vec![id as u8; 100], "block {id}");
+        }
+    }
+
+    #[test]
+    fn poisoned_locks_never_wedge_the_store() {
+        let s = BlockStore::with_options(Some(250), Some(tmpdir()), sync_opts()).unwrap();
+        s.put(0, payload(100, 1)).unwrap();
+        s.put(1, payload(100, 2)).unwrap(); // spills block 0
+        // Panic while holding the write-back and policy locks, the way a
+        // crashing pipeline worker would.
+        let _ = std::thread::scope(|sc| {
+            sc.spawn(|| {
+                let _wb = s.shared.wb.lock();
+                let _po = s.shared.policy.lock();
+                panic!("injected worker panic");
+            })
+            .join()
+        });
+        // Poison the spill file's extent allocator too.
+        s.shared.spill.as_ref().unwrap().poison_alloc_for_test();
+        // Every store op still works across all the poisoned mutexes:
+        // put (evicts through the wb lock), flush, take (disk read +
+        // extent free under the allocator lock).
+        s.put(2, payload(50, 3)).unwrap();
+        s.flush().unwrap();
+        assert_eq!(s.take(0).unwrap().re, vec![1u8; 100]);
+        assert_eq!(s.take(1).unwrap().re, vec![2u8; 100]);
+        assert_eq!(s.take(2).unwrap().re, vec![3u8; 50]);
     }
 }

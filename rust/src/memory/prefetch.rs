@@ -12,6 +12,7 @@
 //! blocks whose next use lies *beyond* its prefetch window, preserving the
 //! Belady ordering.
 
+use super::{plock, pwait_timeout};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
@@ -24,7 +25,7 @@ pub(crate) fn prefetch_loop(shared: Arc<super::Shared>) {
         }
         // Snapshot the current schedule (cheap: Arc clone of the order).
         let (order, bpg) = {
-            let s = shared.sched.lock().unwrap();
+            let s = plock(&shared.sched);
             (s.order.clone(), s.blocks_per_group.max(1))
         };
         let mut did_work = false;
@@ -59,11 +60,8 @@ pub(crate) fn prefetch_loop(shared: Arc<super::Shared>) {
         if !did_work {
             // Nothing promotable right now: doze until the engine publishes
             // a schedule / finishes a group (or the timeout re-polls).
-            let guard = shared.sched.lock().unwrap();
-            let _ = shared
-                .sched_cv
-                .wait_timeout(guard, Duration::from_millis(2))
-                .unwrap();
+            let guard = plock(&shared.sched);
+            drop(pwait_timeout(&shared.sched_cv, guard, Duration::from_millis(2)));
         }
     }
 }

@@ -1,5 +1,6 @@
-//! Secondary-tier spill file: extent allocation + positioned I/O, and the
-//! background spill-writer thread.
+//! Secondary-tier spill file: extent allocation + positioned I/O with
+//! checksummed frames, bounded retry, and the background spill-writer
+//! thread.
 //!
 //! All file I/O in the memory subsystem goes through [`SpillFile`], which
 //! uses positioned reads/writes (`pread`/`pwrite` via
@@ -9,16 +10,37 @@
 //! file lock. Only the *extent allocator* (tail pointer + free list) is
 //! mutex-protected, and its critical sections are pure bookkeeping.
 //!
+//! Failure domains (DESIGN.md "Failure domains & recovery"):
+//!
+//! * Every extent is a **frame**: a 16-byte header (magic, payload length,
+//!   xxh64 over the payload) ahead of the serialized block. Every disk
+//!   read re-verifies the header before bytes reach a decoder, so torn
+//!   reads and bit flips surface as [`Error::Corruption`] at the I/O
+//!   boundary instead of as garbage amplitudes downstream.
+//! * Transient I/O errors (EIO, interrupted, torn writes) are retried up
+//!   to [`MAX_IO_ATTEMPTS`] with exponential backoff; `pwrite` of a full
+//!   frame is idempotent, so a short write is healed by simply rewriting.
+//! * ENOSPC is **not** retried — it propagates to the store's degradation
+//!   ladder (fallback stripe, then budget renegotiation).
+//! * A [`FaultInjector`] (when configured) intercepts every read/write
+//!   attempt and writer-queue transition, making all of the above
+//!   deterministically testable.
+//!
 //! The writer thread ([`writer_loop`]) drains the store's write-back
 //! queue: eviction candidates accumulate as `Queued` payloads that
 //! `take`/`get`/`put` can still intercept; once the writer claims one it
 //! becomes `InFlight` (interceptors wait), is written outside all shard
-//! locks, and the slot flips to `Spilled`. See `memory::Shared` for the
-//! state machine and DESIGN.md "Two-level memory" for the ownership rules.
+//! locks, and the slot flips to `Spilled`. A writer panic or injected
+//! death marks the writer dead (`Shared::writer_alive`) and the store
+//! self-heals by draining the queue inline. See `memory::Shared` for the
+//! state machine and DESIGN.md "Two-level memory" for ownership rules.
 
+use super::faults::{xxh64, FaultInjector, ReadFault, SpillTier, WriteFault, WriterFault};
+use super::{plock, pwait_timeout};
 use crate::types::{Error, Result};
 use std::fs::File;
 use std::os::unix::fs::FileExt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -30,22 +52,126 @@ use std::time::Duration;
 /// can be reused across stores and clobber a live spill file.)
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// On-disk frame header: `[magic "BQSF" (4)][payload_len u32 LE][xxh64
+/// (payload, seed = payload_len) u64 LE]`, followed by the payload.
+pub(crate) const HEADER_BYTES: usize = 16;
+const FRAME_MAGIC: [u8; 4] = *b"BQSF";
+
+/// Transient-I/O retry budget: 1 initial attempt + 4 retries.
+pub(crate) const MAX_IO_ATTEMPTS: u32 = 5;
+
+/// Exponential backoff before retry `attempt` (1-based): 200 µs, 400 µs,
+/// 800 µs, 1.6 ms.
+fn backoff(attempt: u32) -> Duration {
+    Duration::from_micros((100u64 << attempt.min(6)).min(6_400))
+}
+
+/// Transient (retry-worthy) I/O errors: EINTR-style kinds plus raw EIO,
+/// which on real disks is routinely a one-off (media retry, path flap).
+fn is_transient(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::UnexpectedEof
+            | std::io::ErrorKind::WriteZero
+            | std::io::ErrorKind::TimedOut
+    ) || e.raw_os_error() == Some(5)
+}
+
+fn is_enospc(e: &std::io::Error) -> bool {
+    e.raw_os_error() == Some(28)
+}
+
+/// Does this crate error carry ENOSPC? (The store's degradation ladder
+/// keys off this; `io::ErrorKind::StorageFull` is not stable on our
+/// toolchain, hence the raw errno check.)
+pub(crate) fn error_is_enospc(e: &Error) -> bool {
+    match e {
+        Error::Io(io) => is_enospc(io),
+        Error::Spill { source: Some(io), .. } => is_enospc(io),
+        _ => false,
+    }
+}
+
+/// Per-store recovery telemetry, shared by both spill tiers and surfaced
+/// through `MemStats` → `Metrics`.
+#[derive(Default)]
+pub(crate) struct RecoveryCounters {
+    /// Transient-I/O attempts that were retried (reads and writes).
+    pub(crate) io_retries: AtomicU64,
+    /// Frame reads that failed header/checksum verification.
+    pub(crate) checksum_failures: AtomicU64,
+    /// Corrupt frames healed from the write-back retention ring.
+    pub(crate) frames_recovered: AtomicU64,
+    /// ENOSPC degradations (fallback-stripe writes + budget bumps).
+    pub(crate) enospc_fallbacks: AtomicU64,
+}
+
+fn frame_encode(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&xxh64(payload, payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Verify a frame's header against its payload; returns the payload
+/// length on success.
+fn frame_check(frame: &[u8], offset: u64) -> Result<usize> {
+    if frame.len() < HEADER_BYTES {
+        return Err(Error::Corruption(format!(
+            "frame at {offset}: {} B is shorter than the {HEADER_BYTES} B header",
+            frame.len()
+        )));
+    }
+    if frame[0..4] != FRAME_MAGIC {
+        return Err(Error::Corruption(format!("frame at {offset}: bad magic")));
+    }
+    let plen = u32::from_le_bytes(
+        frame[4..8].try_into().expect("4-byte slice"),
+    ) as usize;
+    if plen != frame.len() - HEADER_BYTES {
+        return Err(Error::Corruption(format!(
+            "frame at {offset}: header says {plen} B payload, extent holds {}",
+            frame.len() - HEADER_BYTES
+        )));
+    }
+    let want = u64::from_le_bytes(frame[8..16].try_into().expect("8-byte slice"));
+    let got = xxh64(&frame[HEADER_BYTES..], plen as u64);
+    if want != got {
+        return Err(Error::Corruption(format!(
+            "frame at {offset}: xxh64 mismatch (stored {want:016x}, computed {got:016x})"
+        )));
+    }
+    Ok(plen)
+}
+
 struct ExtentAlloc {
     tail: u64,
     /// Reusable holes (offset, capacity) from freed block extents.
     free: Vec<(u64, usize)>,
 }
 
-/// The secondary-tier file: positioned I/O + first-fit extent reuse.
+/// One secondary-tier file: positioned I/O + first-fit extent reuse,
+/// frame checksums, retry with backoff, and fault interception.
 pub(crate) struct SpillFile {
     file: File,
     path: PathBuf,
+    tier: SpillTier,
+    injector: Option<Arc<FaultInjector>>,
+    counters: Arc<RecoveryCounters>,
     alloc: Mutex<ExtentAlloc>,
 }
 
 impl SpillFile {
     /// Create a fresh, uniquely named spill file inside `dir`.
-    pub(crate) fn create(dir: &Path) -> Result<Self> {
+    pub(crate) fn create(
+        dir: &Path,
+        tier: SpillTier,
+        injector: Option<Arc<FaultInjector>>,
+        counters: Arc<RecoveryCounters>,
+    ) -> Result<Self> {
         std::fs::create_dir_all(dir)?;
         let unique = format!(
             "bmqsim-spill-{}-{}.bin",
@@ -59,13 +185,20 @@ impl SpillFile {
             .write(true)
             .truncate(true)
             .open(&path)?;
-        Ok(SpillFile { file, path, alloc: Mutex::new(ExtentAlloc { tail: 0, free: Vec::new() }) })
+        Ok(SpillFile {
+            file,
+            path,
+            tier,
+            injector,
+            counters,
+            alloc: Mutex::new(ExtentAlloc { tail: 0, free: Vec::new() }),
+        })
     }
 
     /// Reserve an extent of `len` bytes (first-fit over freed holes, else
     /// the tail). Pure bookkeeping — no I/O.
     fn alloc_extent(&self, len: usize) -> u64 {
-        let mut a = self.alloc.lock().unwrap();
+        let mut a = plock(&self.alloc);
         for i in 0..a.free.len() {
             if a.free[i].1 >= len {
                 let (off, cap) = a.free.swap_remove(i);
@@ -83,30 +216,139 @@ impl SpillFile {
     /// Return an extent to the free list. No I/O; safe under shard locks,
     /// though callers free after releasing them anyway.
     pub(crate) fn free_extent(&self, offset: u64, len: usize) {
-        self.alloc.lock().unwrap().free.push((offset, len));
+        plock(&self.alloc).free.push((offset, len));
     }
 
-    /// Allocate an extent and write `bytes` into it (pwrite; no allocator
-    /// lock held during the write).
-    pub(crate) fn write(&self, bytes: &[u8]) -> Result<(u64, usize)> {
-        let offset = self.alloc_extent(bytes.len());
-        if let Err(e) = self.file.write_all_at(bytes, offset) {
-            self.free_extent(offset, bytes.len());
-            return Err(Error::Io(e));
+    /// Allocate an extent and write `payload` into it as a checksummed
+    /// frame (pwrite; no allocator lock held during the write). Transient
+    /// errors are retried with backoff; ENOSPC and exhausted retries free
+    /// the extent and surface as [`Error::Spill`] with the `io::Error`
+    /// preserved.
+    pub(crate) fn write(&self, payload: &[u8]) -> Result<(u64, usize)> {
+        let frame = frame_encode(payload);
+        let offset = self.alloc_extent(frame.len());
+        match self.write_with_retry(offset, &frame) {
+            Ok(()) => Ok((offset, frame.len())),
+            Err(e) => {
+                self.free_extent(offset, frame.len());
+                Err(e)
+            }
         }
-        Ok((offset, bytes.len()))
     }
 
-    /// Positioned read of a whole extent into `buf` (resized to `len`).
-    pub(crate) fn read_into(&self, offset: u64, len: usize, buf: &mut Vec<u8>) -> Result<()> {
-        buf.clear();
-        buf.resize(len, 0);
-        self.file.read_exact_at(buf, offset).map_err(Error::Io)
+    fn write_with_retry(&self, offset: u64, frame: &[u8]) -> Result<()> {
+        let mut attempt = 0u32;
+        loop {
+            let injected =
+                self.injector.as_ref().and_then(|i| i.on_write(self.tier, frame.len()));
+            let res: std::io::Result<()> = match injected {
+                Some(WriteFault::Enospc) => Err(super::faults::enospc()),
+                Some(WriteFault::Transient(e)) => Err(e),
+                Some(WriteFault::Short(n)) => {
+                    // A torn write: a prefix lands, then the op errors.
+                    // pwrite of the full frame is idempotent, so the retry
+                    // below simply rewrites over the torn bytes.
+                    let _ = self.file.write_all_at(&frame[..n.min(frame.len())], offset);
+                    Err(super::faults::eio())
+                }
+                None => self.file.write_all_at(frame, offset),
+            };
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) if is_transient(&e) && attempt + 1 < MAX_IO_ATTEMPTS => {
+                    attempt += 1;
+                    self.counters.io_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(backoff(attempt));
+                }
+                Err(e) => {
+                    return Err(Error::spill_io(
+                        format!(
+                            "write of {} B frame at offset {offset} failed after {} attempt(s)",
+                            frame.len(),
+                            attempt + 1
+                        ),
+                        e,
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Positioned read of a whole frame extent; on success `buf` holds the
+    /// *verified payload* (header stripped). Transient errors and failed
+    /// verifications are retried (a re-read heals in-transit damage);
+    /// persistent mismatches surface as [`Error::Corruption`] for the
+    /// store's retention-ring recovery.
+    pub(crate) fn read_frame(&self, offset: u64, len: usize, buf: &mut Vec<u8>) -> Result<()> {
+        let mut attempt = 0u32;
+        loop {
+            buf.clear();
+            buf.resize(len, 0);
+            let injected = self.injector.as_ref().and_then(|i| i.on_read(offset, len));
+            let res: std::io::Result<()> = match injected {
+                Some(ReadFault::Transient(e)) => Err(e),
+                Some(ReadFault::Short(n)) => {
+                    let r = self.file.read_exact_at(buf, offset);
+                    for b in &mut buf[n.min(len)..] {
+                        *b = 0;
+                    }
+                    r
+                }
+                Some(ReadFault::BitFlip) => {
+                    let r = self.file.read_exact_at(buf, offset);
+                    FaultInjector::flip_bit(buf);
+                    r
+                }
+                None => self.file.read_exact_at(buf, offset),
+            };
+            let err = match res {
+                Ok(()) => match frame_check(buf, offset) {
+                    Ok(plen) => {
+                        buf.copy_within(HEADER_BYTES..HEADER_BYTES + plen, 0);
+                        buf.truncate(plen);
+                        return Ok(());
+                    }
+                    Err(e) => {
+                        self.counters.checksum_failures.fetch_add(1, Ordering::Relaxed);
+                        e
+                    }
+                },
+                Err(e) if is_transient(&e) => Error::spill_io(
+                    format!("read of {len} B frame at offset {offset} failed"),
+                    e,
+                ),
+                Err(e) => {
+                    return Err(Error::spill_io(
+                        format!("read of {len} B frame at offset {offset} failed"),
+                        e,
+                    ))
+                }
+            };
+            attempt += 1;
+            if attempt >= MAX_IO_ATTEMPTS {
+                return Err(err);
+            }
+            self.counters.io_retries.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(backoff(attempt));
+        }
     }
 
     /// Current tail (diagnostics/tests: bounds file growth under reuse).
     pub(crate) fn tail(&self) -> u64 {
-        self.alloc.lock().unwrap().tail
+        plock(&self.alloc).tail
+    }
+
+    /// Test hook: poison the allocator mutex the way a panicking worker
+    /// would, to prove `plock` recovery keeps the file usable.
+    #[cfg(test)]
+    pub(crate) fn poison_alloc_for_test(&self) {
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = self.alloc.lock();
+                panic!("injected allocator panic");
+            })
+            .join()
+        });
     }
 }
 
@@ -118,42 +360,207 @@ impl Drop for SpillFile {
 
 /// Background spill writer: claims queued eviction candidates from the
 /// write-back queue and performs the serialize→write→install sequence
-/// outside every shard lock. Exits when the store shuts down.
+/// outside every shard lock. Exits when the store shuts down — or when a
+/// fault (injected death, panic) kills it, in which case it flags
+/// `Shared::writer_alive` so the store drains the queue inline instead of
+/// hanging on a thread that no longer exists.
 pub(crate) fn writer_loop(shared: Arc<super::Shared>) {
     loop {
         let job = {
-            let mut wb = shared.wb.lock().unwrap();
+            let mut wb = plock(&shared.wb);
             loop {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
-                // Pop the oldest queue entry whose epoch is still current;
-                // stale entries (intercepted or re-evicted ids) are skipped.
-                let mut claimed = None;
-                while let Some((id, epoch)) = wb.queue.pop_front() {
-                    let take = matches!(
-                        wb.map.get(&id),
-                        Some(e) if e.epoch == epoch && matches!(e.state, super::WbState::Queued(_))
-                    );
-                    if take {
-                        let entry = wb.map.get_mut(&id).unwrap();
-                        let state = std::mem::replace(&mut entry.state, super::WbState::InFlight);
-                        let super::WbState::Queued(payload) = state else { unreachable!() };
-                        claimed = Some((id, epoch, payload));
-                        break;
-                    }
-                }
-                if let Some(job) = claimed {
+                if let Some(job) = super::Shared::claim_next(&mut wb) {
                     break job;
                 }
-                let (guard, _) = shared
-                    .wb_cv
-                    .wait_timeout(wb, Duration::from_millis(5))
-                    .unwrap();
-                wb = guard;
+                wb = pwait_timeout(&shared.wb_cv, wb, Duration::from_millis(5));
             }
         };
         let (id, epoch, payload) = job;
-        shared.spill_block_now(id, epoch, payload);
+        if let Some(inj) = shared.injector.as_ref() {
+            match inj.on_writer_job() {
+                Some(WriterFault::Stall(d)) => std::thread::sleep(d),
+                Some(WriterFault::Die) => {
+                    // Requeue the claimed job (nothing is lost), then die.
+                    shared.requeue_job(id, epoch, payload);
+                    shared.writer_alive.store(false, Ordering::Release);
+                    shared.wb_cv.notify_all();
+                    return;
+                }
+                None => {}
+            }
+        }
+        // A panic anywhere in the spill path must not take down the queue:
+        // record it, mark the writer dead, and let foreground threads
+        // drain inline / surface the typed failure.
+        let ok = catch_unwind(AssertUnwindSafe(|| shared.spill_block_now(id, epoch, payload)));
+        if ok.is_err() {
+            shared.record_failure(&Error::spill(format!(
+                "spill writer panicked while writing block {id}"
+            )));
+            {
+                let mut wg = plock(&shared.wb);
+                if matches!(wg.map.get(&id), Some(en) if en.epoch == epoch) {
+                    wg.map.remove(&id);
+                }
+            }
+            shared.writer_alive.store(false, Ordering::Release);
+            shared.wb_cv.notify_all();
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bmqsim-spillfile-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn plain(tier: SpillTier) -> SpillFile {
+        SpillFile::create(&tmpdir(), tier, None, Arc::new(RecoveryCounters::default())).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrip_and_overhead() {
+        let f = plain(SpillTier::Primary);
+        let payload: Vec<u8> = (0..200u16).map(|i| (i % 251) as u8).collect();
+        let (off, len) = f.write(&payload).unwrap();
+        assert_eq!(len, payload.len() + HEADER_BYTES);
+        let mut buf = Vec::new();
+        f.read_frame(off, len, &mut buf).unwrap();
+        assert_eq!(buf, payload);
+    }
+
+    #[test]
+    fn frame_check_catches_each_field() {
+        let payload = vec![7u8; 64];
+        let mut frame = frame_encode(&payload);
+        assert!(frame_check(&frame, 0).is_ok());
+        let good = frame.clone();
+        frame[0] = b'X'; // magic
+        assert!(matches!(frame_check(&frame, 0), Err(Error::Corruption(_))));
+        frame = good.clone();
+        frame[4] ^= 0x01; // length
+        assert!(matches!(frame_check(&frame, 0), Err(Error::Corruption(_))));
+        frame = good.clone();
+        frame[HEADER_BYTES + 10] ^= 0x01; // payload bit
+        assert!(matches!(frame_check(&frame, 0), Err(Error::Corruption(_))));
+        assert!(matches!(frame_check(&good[..8], 0), Err(Error::Corruption(_))));
+    }
+
+    #[test]
+    fn transient_write_faults_are_retried() {
+        let plan = super::super::FaultPlan::parse("eio@write:1,short@write:2").unwrap();
+        let counters = Arc::new(RecoveryCounters::default());
+        let f = SpillFile::create(
+            &tmpdir(),
+            SpillTier::Primary,
+            Some(Arc::new(FaultInjector::new(plan))),
+            counters.clone(),
+        )
+        .unwrap();
+        // Attempt 1 EIO, attempt 2 torn: the third rewrite lands clean.
+        let payload = vec![42u8; 100];
+        let (off, len) = f.write(&payload).unwrap();
+        assert_eq!(counters.io_retries.load(Ordering::Relaxed), 2);
+        let mut buf = Vec::new();
+        f.read_frame(off, len, &mut buf).unwrap();
+        assert_eq!(buf, payload);
+    }
+
+    #[test]
+    fn transient_read_corruption_heals_on_reread() {
+        let plan = super::super::FaultPlan::parse("bitflip@read:1,short@read:2").unwrap();
+        let counters = Arc::new(RecoveryCounters::default());
+        let f = SpillFile::create(
+            &tmpdir(),
+            SpillTier::Primary,
+            Some(Arc::new(FaultInjector::new(plan))),
+            counters.clone(),
+        )
+        .unwrap();
+        let payload = vec![9u8; 80];
+        let (off, len) = f.write(&payload).unwrap();
+        let mut buf = Vec::new();
+        f.read_frame(off, len, &mut buf).unwrap();
+        assert_eq!(buf, payload, "re-reads must heal in-transit damage");
+        assert_eq!(counters.checksum_failures.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn persistent_corruption_is_typed_not_silent() {
+        // Sticky corruption: every re-read is damaged; after the retry
+        // budget the caller gets Error::Corruption, never bad bytes.
+        let plan = super::super::FaultPlan::parse("stickyflip@read:1").unwrap();
+        let counters = Arc::new(RecoveryCounters::default());
+        let f = SpillFile::create(
+            &tmpdir(),
+            SpillTier::Primary,
+            Some(Arc::new(FaultInjector::new(plan))),
+            counters.clone(),
+        )
+        .unwrap();
+        let (off, len) = f.write(&vec![1u8; 64]).unwrap();
+        let mut buf = Vec::new();
+        match f.read_frame(off, len, &mut buf) {
+            Err(Error::Corruption(m)) => assert!(m.contains("xxh64")),
+            other => panic!("expected Corruption, got {other:?}"),
+        }
+        assert_eq!(
+            counters.checksum_failures.load(Ordering::Relaxed),
+            u64::from(MAX_IO_ATTEMPTS)
+        );
+    }
+
+    #[test]
+    fn exhausted_write_retries_preserve_the_io_source() {
+        use std::error::Error as _;
+        let plan = super::super::FaultPlan::parse("seed=1,eio=1.0").unwrap();
+        let f = SpillFile::create(
+            &tmpdir(),
+            SpillTier::Primary,
+            Some(Arc::new(FaultInjector::new(plan))),
+            Arc::new(RecoveryCounters::default()),
+        )
+        .unwrap();
+        let err = f.write(&[0u8; 32]).unwrap_err();
+        assert!(matches!(err, Error::Spill { .. }));
+        assert!(err.source().is_some(), "io source must be preserved");
+        // The failed extent was freed: the next write reuses offset 0.
+        assert_eq!(f.tail(), (32 + HEADER_BYTES) as u64);
+    }
+
+    #[test]
+    fn enospc_is_not_retried() {
+        let plan = super::super::FaultPlan::parse("enospc_after=0").unwrap();
+        let counters = Arc::new(RecoveryCounters::default());
+        let f = SpillFile::create(
+            &tmpdir(),
+            SpillTier::Primary,
+            Some(Arc::new(FaultInjector::new(plan))),
+            counters.clone(),
+        )
+        .unwrap();
+        let err = f.write(&[0u8; 32]).unwrap_err();
+        assert!(error_is_enospc(&err), "got {err:?}");
+        assert_eq!(counters.io_retries.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn poisoned_allocator_recovers() {
+        let f = plain(SpillTier::Primary);
+        f.poison_alloc_for_test();
+        let (off, len) = f.write(&[3u8; 16]).unwrap();
+        let mut buf = Vec::new();
+        f.read_frame(off, len, &mut buf).unwrap();
+        assert_eq!(buf, vec![3u8; 16]);
     }
 }

@@ -116,6 +116,18 @@ pub struct Metrics {
     pub auto_overlap_on: AtomicU64,
     /// Overlap auto-enable: stages where the heuristic declined.
     pub auto_overlap_off: AtomicU64,
+    /// Spill recovery: transient I/O errors retried transparently
+    /// (bounded exponential backoff; copied from `MemStats`).
+    pub io_retries: AtomicU64,
+    /// Spill recovery: frame reads whose xxh64 verification failed
+    /// (corrupt or short data caught before it reached a worker).
+    pub checksum_failures: AtomicU64,
+    /// Spill recovery: frames re-served from the retention ring or the
+    /// write-back queue after persistent on-disk corruption.
+    pub frames_recovered: AtomicU64,
+    /// Spill recovery: ENOSPC degradations — evictions re-targeted at the
+    /// fallback stripe, or budget renegotiations when no stripe exists.
+    pub enospc_fallbacks: AtomicU64,
 }
 
 impl Metrics {
@@ -176,6 +188,10 @@ impl Metrics {
             ring_depth_adjustments: self.ring_depth_adjustments.load(Ordering::Relaxed),
             auto_overlap_on: self.auto_overlap_on.load(Ordering::Relaxed),
             auto_overlap_off: self.auto_overlap_off.load(Ordering::Relaxed),
+            io_retries: self.io_retries.load(Ordering::Relaxed),
+            checksum_failures: self.checksum_failures.load(Ordering::Relaxed),
+            frames_recovered: self.frames_recovered.load(Ordering::Relaxed),
+            enospc_fallbacks: self.enospc_fallbacks.load(Ordering::Relaxed),
         }
     }
 
@@ -186,6 +202,10 @@ impl Metrics {
         self.prefetch_hits.store(mem.prefetch_hits, Ordering::Relaxed);
         self.prefetch_misses.store(mem.prefetch_misses, Ordering::Relaxed);
         self.spill_stall_ns.store(mem.spill_stall_ns, Ordering::Relaxed);
+        self.io_retries.store(mem.io_retries, Ordering::Relaxed);
+        self.checksum_failures.store(mem.checksum_failures, Ordering::Relaxed);
+        self.frames_recovered.store(mem.frames_recovered, Ordering::Relaxed);
+        self.enospc_fallbacks.store(mem.enospc_fallbacks, Ordering::Relaxed);
     }
 
     /// Copy the overlapped-pipeline counters out of a run's accumulated
@@ -260,6 +280,15 @@ pub struct MetricsReport {
     pub auto_overlap_on: u64,
     /// Stages where the overlap auto-enable heuristic declined.
     pub auto_overlap_off: u64,
+    /// Transient spill I/O errors retried transparently.
+    pub io_retries: u64,
+    /// Spill-frame reads that failed xxh64 verification.
+    pub checksum_failures: u64,
+    /// Frames re-served from the retention ring / write-back queue after
+    /// persistent corruption.
+    pub frames_recovered: u64,
+    /// ENOSPC degradations (fallback-stripe writes + budget renegotiations).
+    pub enospc_fallbacks: u64,
 }
 
 impl MetricsReport {
@@ -357,6 +386,18 @@ impl std::fmt::Display for MetricsReport {
                 self.prefetch_hits,
                 self.prefetch_misses,
                 self.spill_stall_ns as f64 * 1e-6
+            )?;
+        }
+        if self.io_retries + self.checksum_failures + self.frames_recovered + self.enospc_fallbacks
+            > 0
+        {
+            writeln!(
+                f,
+                "spill recovery   : {:>10} retries, {} checksum failures, {} frames recovered, {} ENOSPC fallbacks",
+                self.io_retries,
+                self.checksum_failures,
+                self.frames_recovered,
+                self.enospc_fallbacks
             )?;
         }
         writeln!(

@@ -519,6 +519,55 @@ mod tests {
     }
 
     #[test]
+    fn pool_spill_error_mid_stage_drains_and_pool_stays_usable() {
+        // The failure-domain contract for the memory tier: a worker hitting
+        // an unrecoverable spill fault mid-stage (e.g. retry exhaustion in
+        // `BlockStore::take`) must surface the typed `Error::Spill` to the
+        // caller, with every sibling phase draining instead of wedging —
+        // and the pool must run further stages afterwards. Injected in the
+        // *apply* phase so both an upstream (decode) and downstream
+        // (encode) sibling have in-flight slots to drain.
+        let mut pool = PhasePool::new(PipelineConfig::new(1, 2), 3);
+        let r = pool.run_stage(
+            64,
+            3,
+            &ok_phase(),
+            &|_c, i| {
+                if i == 9 {
+                    Err(Error::spill_io(
+                        "take(9): read_frame retries exhausted",
+                        std::io::Error::from_raw_os_error(5),
+                    ))
+                } else {
+                    Ok(())
+                }
+            },
+            &ok_phase(),
+        );
+        match r {
+            Err(Error::Spill { source: Some(io), .. }) => {
+                assert_eq!(io.raw_os_error(), Some(5), "io source lost in transit");
+            }
+            other => panic!("expected typed Error::Spill with io source, got {other:?}"),
+        }
+        // Same threads, clean stage: the pool recovered from the fault.
+        let done = AtomicUsize::new(0);
+        pool.run_stage(
+            32,
+            3,
+            &ok_phase(),
+            &ok_phase(),
+            &|_c, _i| {
+                done.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(done.load(Ordering::Relaxed), 32);
+        assert_eq!(pool.threads_spawned(), 6, "recovery must not respawn threads");
+    }
+
+    #[test]
     fn pool_zero_items_and_depth_clamp() {
         let mut pool = PhasePool::new(PipelineConfig::new(1, 2), 2);
         // depth 99 clamps to the cap; zero items completes immediately.

@@ -796,6 +796,68 @@ mod tests {
     }
 
     #[test]
+    fn fatal_fault_plan_surfaces_typed_spill_error() {
+        // Every spill write fails on every attempt: retries exhaust and
+        // the run must carry the typed `Error::Spill` out through the
+        // engine — not a panic, not a hang, not `OutOfMemory`.
+        let dir = std::env::temp_dir().join("bmqsim-engine-fatal-fault");
+        let c = generators::build("ising", 10, 3).unwrap();
+        let mut config = cfg(6, 2);
+        config.memory_budget = Some(2048);
+        config.spill_dir = Some(dir.clone());
+        config.sync_spill = true; // fail on the evicting put, deterministically
+        config.fault_plan =
+            Some(crate::memory::FaultPlan::parse("seed=1,eio=1.0").unwrap());
+        let err = BmqSim::new(config).run(&c, false);
+        assert!(
+            matches!(&err, Err(Error::Spill { .. })),
+            "total-EIO plan must fail with Error::Spill, got {err:?}",
+        );
+        // A fresh fault-free engine over the same spill dir runs clean:
+        // the failure left nothing poisoned behind.
+        let mut clean = cfg(6, 2);
+        clean.memory_budget = Some(2048);
+        clean.spill_dir = Some(dir);
+        let r = BmqSim::new(clean).run(&c, false).unwrap();
+        assert!(r.mem.spill_events > 0);
+    }
+
+    #[test]
+    fn recoverable_fault_plan_is_invisible_in_the_state() {
+        // Low-rate transient EIO + bit flips on the spill tier: the retry +
+        // checksum machinery must absorb every fault, leaving the terminal
+        // state byte-identical to the fault-free run while the recovery
+        // counters prove the plan actually engaged.
+        let dir = std::env::temp_dir().join("bmqsim-engine-recoverable-fault");
+        let c = generators::build("ising", 10, 3).unwrap();
+        let base = {
+            let mut config = cfg(6, 2);
+            config.memory_budget = Some(2048);
+            config.spill_dir = Some(dir.clone());
+            BmqSim::new(config).run(&c, true).unwrap()
+        };
+        assert!(base.mem.spill_events > 0, "baseline never spilled");
+        assert_eq!(base.mem.io_retries + base.mem.checksum_failures, 0);
+        let mut config = cfg(6, 2);
+        config.memory_budget = Some(2048);
+        config.spill_dir = Some(dir);
+        // The scripted first-write fault makes counter engagement
+        // deterministic even if the probabilistic draws all miss at this
+        // small scale.
+        config.fault_plan = Some(
+            crate::memory::FaultPlan::parse("seed=2,eio@write:1,eio=0.03,bitflip=0.03").unwrap(),
+        );
+        let r = BmqSim::new(config).run(&c, true).unwrap();
+        let f = r.state.as_ref().unwrap().fidelity(base.state.as_ref().unwrap());
+        assert!(f > 1.0 - 1e-12, "recovered run diverged from fault-free: {f}");
+        let engaged = r.mem.io_retries + r.mem.checksum_failures + r.mem.frames_recovered;
+        assert!(engaged > 0, "fault plan never engaged the recovery machinery");
+        // The engine report carries the counters (absorb_mem plumbing).
+        assert_eq!(r.metrics.io_retries, r.mem.io_retries);
+        assert_eq!(r.metrics.checksum_failures, r.mem.checksum_failures);
+    }
+
+    #[test]
     fn sparse_circuits_have_huge_ratios() {
         // Fig. 9 shape: sparse states (cat/ghz/bv) compress far harder
         // than dense, phase-rich ones (qaoa). (QFT of |0..0> ends uniform,

@@ -1,6 +1,7 @@
 //! Simulation configuration shared by all engines.
 
 use crate::compress::Codec;
+use crate::memory::FaultPlan;
 use crate::pipeline::PipelineConfig;
 use crate::types::{Error, Precision, Result};
 use std::path::PathBuf;
@@ -172,6 +173,14 @@ pub struct SimConfig {
     /// the starting depth. The CLI enables this whenever
     /// `--prefetch-depth` is not given explicitly.
     pub prefetch_auto: bool,
+    /// Fault-injection plan for the spill/store layer (CLI `--fault-plan`,
+    /// env `BMQSIM_FAULT_PLAN`): scripted and seeded-probabilistic I/O
+    /// faults exercising the recovery machinery. `None` = no injection.
+    pub fault_plan: Option<FaultPlan>,
+    /// Overflow stripe for ENOSPC graceful degradation: when the primary
+    /// spill file's device fills, eviction retargets this directory
+    /// (ideally a different filesystem) before renegotiating the budget.
+    pub spill_fallback_dir: Option<PathBuf>,
 }
 
 impl Default for SimConfig {
@@ -198,6 +207,8 @@ impl Default for SimConfig {
             pipeline_depth_auto: true,
             spill_aware: true,
             prefetch_auto: false,
+            fault_plan: None,
+            spill_fallback_dir: None,
         }
     }
 }
@@ -217,6 +228,8 @@ impl SimConfig {
             prefetch_depth: self.prefetch_depth,
             async_spill: !self.sync_spill,
             auto_depth: self.prefetch_auto,
+            fault_plan: self.fault_plan.clone().or_else(FaultPlan::from_env),
+            fallback_dir: self.spill_fallback_dir.clone(),
             ..crate::memory::StoreOptions::default()
         }
     }
@@ -258,6 +271,8 @@ mod tests {
         assert!(c.pipeline_depth_auto, "ring depth adapts unless pinned");
         assert!(c.spill_aware);
         assert!(!c.prefetch_auto);
+        assert!(c.fault_plan.is_none(), "no fault injection by default");
+        assert!(c.spill_fallback_dir.is_none());
         let opts = c.store_options();
         assert_eq!(opts.shards, 8);
         assert!(opts.async_spill);

@@ -21,6 +21,19 @@ pub enum Error {
     /// The two-level memory manager ran out of both tiers.
     OutOfMemory(String),
 
+    /// Spill / write-back machinery failure: secondary-tier I/O that
+    /// exhausted its retries, a dead or wedged spill writer, a write-back
+    /// queue that never drained. Distinct from [`Error::OutOfMemory`]
+    /// (genuine budget exhaustion) — a disk hiccup is not an OOM. The
+    /// originating `io::Error`, when one exists, is preserved as
+    /// [`std::error::Error::source`].
+    Spill { msg: String, source: Option<std::io::Error> },
+
+    /// A spilled frame failed its integrity check on read (xxh64 /
+    /// magic / length mismatch) and could not be recovered from the
+    /// write-back retention ring — the on-disk bytes are corrupt.
+    Corruption(String),
+
     /// Secondary-tier (disk spill) I/O failure.
     Io(std::io::Error),
 
@@ -39,6 +52,11 @@ impl std::fmt::Display for Error {
             Error::Qasm { line, msg } => write!(f, "qasm parse error at line {line}: {msg}"),
             Error::Codec(m) => write!(f, "codec error: {m}"),
             Error::OutOfMemory(m) => write!(f, "out of memory: {m}"),
+            Error::Spill { msg, source } => match source {
+                Some(e) => write!(f, "spill error: {msg} ({e})"),
+                None => write!(f, "spill error: {msg}"),
+            },
+            Error::Corruption(m) => write!(f, "corruption: {m}"),
             Error::Io(e) => write!(f, "spill i/o error: {e}"),
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
@@ -46,10 +64,25 @@ impl std::fmt::Display for Error {
     }
 }
 
+impl Error {
+    /// Spill failure without an underlying `io::Error` (wedged queue,
+    /// dead writer, missing spill file).
+    pub fn spill(msg: impl Into<String>) -> Self {
+        Error::Spill { msg: msg.into(), source: None }
+    }
+
+    /// Spill failure caused by a concrete `io::Error` (kept as
+    /// [`std::error::Error::source`]).
+    pub fn spill_io(msg: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Spill { msg: msg.into(), source: Some(source) }
+    }
+}
+
 impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Error::Io(e) => Some(e),
+            Error::Spill { source: Some(e), .. } => Some(e),
             _ => None,
         }
     }
@@ -88,5 +121,25 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn spill_preserves_io_source() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::Interrupted, "EIO");
+        let e = Error::spill_io("write of block 7 failed", io);
+        assert!(e.to_string().starts_with("spill error: write of block 7 failed"));
+        let src = e.source().expect("source must be preserved");
+        assert!(src.to_string().contains("EIO"));
+        let bare = Error::spill("write-back queue wedged");
+        assert!(bare.source().is_none());
+        assert_eq!(bare.to_string(), "spill error: write-back queue wedged");
+    }
+
+    #[test]
+    fn corruption_displays() {
+        let e = Error::Corruption("frame at 128: xxh64 mismatch".into());
+        assert!(e.to_string().contains("corruption"));
+        assert!(e.to_string().contains("xxh64"));
     }
 }

@@ -7,8 +7,16 @@
 //!     peak counter),
 //!   * `MemStats` accounting (bytes + block counts per tier) is exactly
 //!     consistent at every quiescent point.
+//!
+//! The fault-matrix tests re-run the same churn under a seeded
+//! [`FaultPlan`] ({transient EIO, torn read, bit flip, ENOSPC, writer
+//! death} × {sync, async}), asserting the recovery contract: every store
+//! op either succeeds with byte-identical data or returns a *typed*
+//! `Error::Spill`/`Error::Corruption` — never a panic, a hang, or silent
+//! corruption.
 
-use bmqsim::memory::{BlockPayload, BlockStore, StoreOptions};
+use bmqsim::memory::{BlockPayload, BlockStore, FaultPlan, StoreOptions, SECONDARY_FRAME_BYTES};
+use bmqsim::types::Error;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -85,12 +93,13 @@ fn hammer(tag: &str, opts: StoreOptions, budget: usize, threads: usize, rounds: 
         }
     }
     // get() may have promoted blocks; the re-snapshot must still balance:
-    // primary bytes count raw payloads, secondary extents add 16 B framing.
+    // primary bytes count raw payloads, secondary extents add the payload
+    // framing plus the checksummed on-disk frame header.
     let st = store.stats();
     assert_eq!(st.blocks_primary + st.blocks_secondary, threads * IDS_PER_THREAD);
     assert_eq!(
         st.primary_bytes + st.secondary_bytes,
-        total_payload + 16 * st.blocks_secondary,
+        total_payload + SECONDARY_FRAME_BYTES * st.blocks_secondary,
         "byte accounting drifted (primary {} secondary {} over {} blocks)",
         st.primary_bytes,
         st.secondary_bytes,
@@ -121,6 +130,144 @@ fn hammer_single_shard_sync_store() {
         ..Default::default()
     };
     hammer("sync", opts, 4096, 8, 60);
+}
+
+/// The recovery contract: a store op under fault injection may fail, but
+/// only with the typed spill/corruption taxonomy — anything else (panic,
+/// OOM misclassification, codec garbage) is a bug.
+fn assert_typed(e: &Error) {
+    assert!(
+        matches!(e, Error::Spill { .. } | Error::Corruption(_)),
+        "untyped failure under fault injection: {e:?}"
+    );
+}
+
+/// Re-run the hammer churn under a fault plan. Every op must either
+/// succeed with byte-identical data (`check`) or return a typed error,
+/// after which the thread stops cleanly. With `expect_complete` the plan
+/// is fully recoverable (transient faults, graceful ENOSPC): no op may
+/// fail at all and the final contents must be exact.
+///
+/// No budget/peak assertions here: the ENOSPC ladder renegotiates the
+/// primary budget by design.
+fn fault_hammer(tag: &str, spec: &str, async_spill: bool, fallback: bool, expect_complete: bool) {
+    let opts = StoreOptions {
+        shards: 4,
+        prefetch_depth: 0,
+        async_spill,
+        write_back_cap: 16,
+        fault_plan: Some(FaultPlan::parse(spec).unwrap()),
+        fallback_dir: fallback.then(|| spill_dir(&format!("{tag}-fb"))),
+        ..Default::default()
+    };
+    let store =
+        Arc::new(BlockStore::with_options(Some(4096), Some(spill_dir(tag)), opts).unwrap());
+    let threads = 4usize;
+    let rounds = 30usize;
+    let failed = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let store = store.clone();
+            let failed = failed.clone();
+            scope.spawn(move || {
+                let ids: Vec<usize> = (0..IDS_PER_THREAD).map(|k| t * 64 + k).collect();
+                let fail = |e: &Error| {
+                    assert_typed(e);
+                    failed.store(true, Ordering::Relaxed);
+                };
+                for round in 0..rounds {
+                    for &id in &ids {
+                        if let Err(e) = store.put(id, payload_for(id, round)) {
+                            return fail(&e);
+                        }
+                    }
+                    for &id in &ids {
+                        match store.take(id) {
+                            Ok(p) => {
+                                check(&p, id, round);
+                                if let Err(e) = store.put(id, p) {
+                                    return fail(&e);
+                                }
+                            }
+                            Err(e) => return fail(&e),
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let flush = store.flush();
+    if let Err(e) = &flush {
+        assert_typed(e);
+    }
+    let st = store.stats();
+    let injected =
+        st.io_retries + st.checksum_failures + st.frames_recovered + st.enospc_fallbacks;
+    assert!(injected > 0, "{tag}: the fault plan {spec:?} never engaged the recovery machinery");
+    if expect_complete {
+        assert!(
+            !failed.load(Ordering::Relaxed),
+            "{tag}: plan {spec:?} must be fully recoverable, but an op failed"
+        );
+        flush.expect("flush after recoverable faults");
+        for t in 0..threads {
+            for k in 0..IDS_PER_THREAD {
+                let id = t * 64 + k;
+                check(&store.get(id).unwrap(), id, rounds - 1);
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_hammer_transient_eio_sync() {
+    fault_hammer("feio-s", "seed=3,eio=0.03", false, false, true);
+}
+
+#[test]
+fn fault_hammer_transient_eio_async() {
+    fault_hammer("feio-a", "seed=4,eio=0.03", true, false, true);
+}
+
+#[test]
+fn fault_hammer_torn_read_sync() {
+    fault_hammer("fsr-s", "seed=5,short_read=0.03", false, false, true);
+}
+
+#[test]
+fn fault_hammer_torn_read_async() {
+    fault_hammer("fsr-a", "seed=6,short_read=0.03", true, false, true);
+}
+
+#[test]
+fn fault_hammer_bitflip_sync() {
+    fault_hammer("fbf-s", "seed=7,bitflip=0.03", false, false, true);
+}
+
+#[test]
+fn fault_hammer_bitflip_async() {
+    fault_hammer("fbf-a", "seed=8,bitflip=0.03", true, false, true);
+}
+
+#[test]
+fn fault_hammer_enospc_sync_with_fallback_stripe() {
+    // Primary stripe fills after 2 KiB; evictions retarget the fallback.
+    fault_hammer("fen-s", "enospc_after=2048", false, true, true);
+}
+
+#[test]
+fn fault_hammer_enospc_async_renegotiates_budget() {
+    // No fallback stripe: the ladder's bottom rung halts eviction and
+    // grows the primary budget — the churn still completes exactly.
+    fault_hammer("fen-a", "enospc_after=2048", true, false, true);
+}
+
+#[test]
+fn fault_hammer_writer_death_self_heals() {
+    // The writer dies after 5 claimed jobs; the store spills inline from
+    // then on. The low EIO rate keeps exercising retry on the inline path
+    // (writer death itself bumps no recovery counter).
+    fault_hammer("fwd-a", "seed=9,writer_death_after=5,eio=0.02", true, false, true);
 }
 
 #[test]
