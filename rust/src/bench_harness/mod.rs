@@ -26,15 +26,24 @@ pub fn bench_smoke() -> bool {
     matches!(std::env::var("BENCH_SMOKE"), Ok(v) if !v.is_empty() && v != "0")
 }
 
-/// Shared stopwatch for the self-timed perf benches: one warmup call,
-/// then the mean of `reps` timed calls.
+/// Shared stopwatch for the self-timed perf benches: warmup calls (one,
+/// plus a second when `reps > 1` so branch predictors and the allocator
+/// settle), then the *minimum* of `reps` individually-timed calls. Min-of-N
+/// is the standard noise filter for throughput benches: external
+/// interference only ever adds time, so the minimum is the best estimate
+/// of the true cost.
 pub fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
     f();
-    let t0 = Instant::now();
-    for _ in 0..reps {
+    if reps > 1 {
         f();
     }
-    t0.elapsed().as_secs_f64() / reps as f64
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
 }
 
 /// Minimal JSON writers shared by the self-timed perf benches (the vendor
@@ -43,8 +52,9 @@ pub fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
 pub mod bench_json {
     /// Version of the BENCH_*.json envelope. Bump when a gated metric is
     /// renamed/moved so trajectory joins across PRs can detect the break.
-    /// v2 added the `schema_version`/`git_sha` stamp itself.
-    pub const BENCH_SCHEMA_VERSION: u32 = 2;
+    /// v2 added the `schema_version`/`git_sha` stamp itself; v3 switched
+    /// `time_it` to min-of-N timing and added `simd_kernels_used`.
+    pub const BENCH_SCHEMA_VERSION: u32 = 3;
 
     /// Render an object from already-rendered value strings.
     pub fn obj(fields: &[(String, String)]) -> String {
@@ -100,6 +110,7 @@ pub mod bench_json {
         let mut all: Vec<(String, String)> = vec![
             ("schema_version".to_string(), BENCH_SCHEMA_VERSION.to_string()),
             ("git_sha".to_string(), format!("\"{}\"", git_sha())),
+            ("simd_kernels_used".to_string(), crate::simd::kernels_used().to_string()),
         ];
         all.extend_from_slice(fields);
         let doc = obj(&all);

@@ -137,6 +137,45 @@ pub fn decode_into(bytes: &[u8], out: &mut Vec<u8>) -> Result<()> {
         }
     }
 
+    // Multi-symbol fast path (vectorized-decode analogue): a second LUT
+    // mapping each 11-bit window to up to 4 already-decoded symbols, built
+    // by simulating consecutive single-LUT probes inside the window. Valid
+    // because a single-LUT entry is a function of its low `len` bits only
+    // (canonical codes stride the table at `1 << len`), so the zero-padded
+    // simulation agrees with the real bit stream whenever the cumulative
+    // code lengths fit in the window. Short payloads skip the table build
+    // (it costs 2048 probes); the `huffman_multi` dispatch flag keeps the
+    // scalar oracle path reachable for differential tests.
+    #[derive(Clone, Copy)]
+    struct MEntry {
+        syms: [u8; 4],
+        count: u8,
+        bits: u8,
+    }
+    let multi = crate::simd::dispatch().huffman_multi() && n_out >= 1024;
+    let mut mlut: Vec<MEntry> = Vec::new();
+    if multi {
+        mlut = vec![MEntry { syms: [0; 4], count: 0, bits: 0 }; 1usize << LUT_BITS];
+        for (w, entry) in mlut.iter_mut().enumerate() {
+            let mut syms = [0u8; 4];
+            let mut count = 0u8;
+            let mut used = 0usize;
+            while count < 4 {
+                let (s, l) = lut[(w >> used) & ((1usize << LUT_BITS) - 1)];
+                if l == 0 || used + l as usize > LUT_BITS as usize {
+                    break;
+                }
+                syms[count as usize] = s;
+                count += 1;
+                used += l as usize;
+            }
+            if count >= 2 {
+                *entry = MEntry { syms, count, bits: used as u8 };
+            }
+        }
+        crate::simd::note_kernels(1);
+    }
+
     let payload = &bytes[pos..];
     let total_bits = payload.len() * 8;
     out.reserve(n_out);
@@ -159,8 +198,22 @@ pub fn decode_into(bytes: &[u8], out: &mut Vec<u8>) -> Result<()> {
         }
     };
 
-    for _ in 0..n_out {
+    while out.len() < n_out {
         let window = peek(bitpos);
+        if multi {
+            let e = mlut[(window & ((1 << LUT_BITS) - 1)) as usize];
+            // Every guard that fails here drops to the single-symbol steps
+            // below, which decode the identical prefix — output equality
+            // does not depend on when the multi entry applies.
+            if e.count > 0
+                && out.len() + e.count as usize <= n_out
+                && bitpos + e.bits as usize <= total_bits
+            {
+                out.extend_from_slice(&e.syms[..e.count as usize]);
+                bitpos += e.bits as usize;
+                continue;
+            }
+        }
         let (sym, l) = lut[(window & ((1 << LUT_BITS) - 1)) as usize];
         if l != 0 && bitpos + l as usize <= total_bits {
             out.push(sym);

@@ -15,8 +15,10 @@ use super::{residual, CodecScratch, MODE_ABS};
 use crate::types::{Error, Result};
 
 /// Quantized codes above this magnitude go to the outlier table (guards
-/// both i64 overflow and precision loss in `code * 2eb`).
-const MAX_CODE: f64 = 4.0e15;
+/// both i64 overflow and precision loss in `code * 2eb`). Shared with
+/// the SIMD quantizer, whose exact-conversion trick also relies on
+/// codes staying below 2^52.
+pub(crate) const MAX_CODE: f64 = 4.0e15;
 
 pub fn compress(data: &[f64], eb: f64) -> Result<Vec<u8>> {
     let mut out = Vec::new();
@@ -37,72 +39,30 @@ pub fn compress_into_with(
         return Err(Error::Codec(format!("absolute codec needs eb > 0, got {eb}")));
     }
     let twoeb = 2.0 * eb;
-    let codes = &mut s.codes;
-    let outliers = &mut s.outliers;
-    codes.clear();
-    codes.reserve(data.len());
-    outliers.clear();
-    for (i, &x) in data.iter().enumerate() {
-        let q = x / twoeb;
-        if !x.is_finite() || q.abs() > MAX_CODE {
-            outliers.push((i, x));
-            codes.push(0);
-        } else {
-            // See pointwise.rs: round-half-away via signed-0.5 + as-cast.
-            codes.push((q + 0.5f64.copysign(q)) as i64);
-        }
-    }
+    let simd = s.simd;
+    simd.quant_abs(data, twoeb, &mut s.codes, &mut s.outliers);
 
     out.clear();
     out.push(MODE_ABS);
     out.extend_from_slice(&eb.to_le_bytes());
-    varint::write_u64(out, outliers.len() as u64);
+    varint::write_u64(out, s.outliers.len() as u64);
     let mut prev = 0usize;
-    for &(idx, x) in outliers.iter() {
+    for &(idx, x) in s.outliers.iter() {
         varint::write_u64(out, (idx - prev) as u64);
         out.extend_from_slice(&x.to_le_bytes());
         prev = idx;
     }
-    residual::encode_into(codes, out, &mut s.buf_a, &mut s.buf_b);
+    residual::encode_into(&s.codes, out, &mut s.buf_a, &mut s.buf_b, &mut s.delta, simd);
     Ok(())
-}
-
-/// Parse the fixed header + outlier table; returns the scan position of
-/// the residual body. `outliers` (when given) receives the side table.
-fn parse_header(bytes: &[u8], mut outliers: Option<&mut Vec<(usize, f64)>>) -> Result<(f64, usize)> {
-    if bytes.first() != Some(&MODE_ABS) {
-        return Err(Error::Codec("not an absolute-mode payload".into()));
-    }
-    let mut pos = 1usize;
-    if bytes.len() < pos + 8 {
-        return Err(Error::Codec("abs: truncated header".into()));
-    }
-    let eb = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
-    pos += 8;
-    let n_out = varint::read_u64(bytes, &mut pos)? as usize;
-    if let Some(o) = outliers.as_mut() {
-        o.clear();
-        o.reserve(n_out);
-    }
-    let mut prev = 0usize;
-    for _ in 0..n_out {
-        let d = varint::read_u64(bytes, &mut pos)? as usize;
-        if bytes.len() < pos + 8 {
-            return Err(Error::Codec("abs: truncated outlier".into()));
-        }
-        let x = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
-        pos += 8;
-        prev += d;
-        if let Some(o) = outliers.as_mut() {
-            o.push((prev, x));
-        }
-    }
-    Ok((eb, pos))
 }
 
 /// Decoded element count — header peek only (no residual decode).
 pub fn decoded_len(bytes: &[u8]) -> Result<usize> {
-    let (_, pos) = parse_header(bytes, None)?;
+    if bytes.first() != Some(&MODE_ABS) {
+        return Err(Error::Codec("not an absolute-mode payload".into()));
+    }
+    let (_, mut pos) = super::parse_mode_param(bytes, "abs")?;
+    super::parse_outliers(bytes, &mut pos, None, "abs")?;
     residual::encoded_count(&bytes[pos..])
 }
 
@@ -115,7 +75,11 @@ pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
 /// [`decompress`] directly into `out`, which must hold exactly
 /// [`decoded_len`] elements; every slot is overwritten.
 pub fn decompress_into_with(bytes: &[u8], out: &mut [f64], s: &mut CodecScratch) -> Result<()> {
-    let (eb, pos) = parse_header(bytes, Some(&mut s.outliers))?;
+    if bytes.first() != Some(&MODE_ABS) {
+        return Err(Error::Codec("not an absolute-mode payload".into()));
+    }
+    let (eb, mut pos) = super::parse_mode_param(bytes, "abs")?;
+    super::parse_outliers(bytes, &mut pos, Some(&mut s.outliers), "abs")?;
     residual::decode_into(&bytes[pos..], &mut s.codes, &mut s.buf_a)?;
     if out.len() != s.codes.len() {
         return Err(Error::Codec(format!(
@@ -125,9 +89,7 @@ pub fn decompress_into_with(bytes: &[u8], out: &mut [f64], s: &mut CodecScratch)
         )));
     }
     let twoeb = 2.0 * eb;
-    for (slot, &c) in out.iter_mut().zip(s.codes.iter()) {
-        *slot = c as f64 * twoeb;
-    }
+    s.simd.dequant_abs(&s.codes, twoeb, out);
     for &(idx, x) in &s.outliers {
         *out.get_mut(idx)
             .ok_or_else(|| Error::Codec("abs: outlier index out of range".into()))? = x;

@@ -55,7 +55,7 @@ pub enum CodecKind {
 /// Reusable intermediate buffers for the codec hot path. One per pipeline
 /// worker (owned by `pipeline::Scratch`); creation is allocation-free, the
 /// buffers grow on first use and are recycled afterwards.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct CodecScratch {
     /// Quantized integer codes (sized from the zero-bitmap popcount).
     codes: Vec<i64>,
@@ -69,11 +69,40 @@ pub struct CodecScratch {
     buf_a: Vec<u8>,
     buf_b: Vec<u8>,
     buf_c: Vec<u8>,
+    /// Zigzag-delta scratch for the residual coder's SIMD stage 1.
+    delta: Vec<u64>,
+    /// SIMD dispatch table captured at construction; every codec kernel
+    /// invocation routes through it (the kill switch therefore applies to
+    /// scratches built after it was thrown).
+    simd: &'static crate::simd::SimdOps,
+}
+
+impl Default for CodecScratch {
+    fn default() -> Self {
+        Self::with_ops(crate::simd::dispatch())
+    }
 }
 
 impl CodecScratch {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Scratch pinned to an explicit dispatch table — differential tests
+    /// pass `simd::scalar_ops()` to force the oracle path regardless of
+    /// what the host CPU supports.
+    pub fn with_ops(ops: &'static crate::simd::SimdOps) -> Self {
+        CodecScratch {
+            codes: Vec::new(),
+            outliers: Vec::new(),
+            sign_words: Vec::new(),
+            zero_words: Vec::new(),
+            buf_a: Vec::new(),
+            buf_b: Vec::new(),
+            buf_c: Vec::new(),
+            delta: Vec::new(),
+            simd: ops,
+        }
     }
 }
 
@@ -187,15 +216,89 @@ fn raw_compress_into(data: &[f64], out: &mut Vec<u8>) {
     }
 }
 
-fn raw_decoded_len(bytes: &[u8]) -> Result<usize> {
-    let mut pos = 1usize;
-    let n = lossless::varint::read_u64(bytes, &mut pos)? as usize;
-    // Validate before anyone allocates n elements from a corrupt header
-    // (division avoids overflow on absurd n).
-    if n > (bytes.len() - pos) / 8 {
-        return Err(Error::Codec("raw: truncated".into()));
+/// Parsed wire-format prefix — the one shared header walk behind every
+/// `decoded_len` peek and decode entry point (previously each mode
+/// re-implemented its own, drifting in validation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum PlanePrefix {
+    /// Raw passthrough: `n` elements follow (length already validated).
+    Raw { n: usize },
+    /// Absolute mode: bound + scan position of the residual body (the
+    /// outlier table has been walked past, not collected).
+    Abs { eb: f64, residual_pos: usize },
+    /// Pointwise mode: bound, element count, and the scan position right
+    /// after the count (bitmaps/outliers/residual follow).
+    Pointwise { b_r: f64, n: usize, after_n: usize },
+}
+
+/// Parse the fixed `[mode][param: f64 LE]` prefix shared by the lossy
+/// modes. The caller has already matched the mode byte; returns the
+/// parameter and the scan position after it.
+pub(crate) fn parse_mode_param(bytes: &[u8], what: &str) -> Result<(f64, usize)> {
+    if bytes.len() < 9 {
+        return Err(Error::Codec(format!("{what}: truncated header")));
     }
-    Ok(n)
+    let param = f64::from_le_bytes(bytes[1..9].try_into().unwrap());
+    Ok((param, 9))
+}
+
+/// Walk the outlier side table (`count` varint, then delta-varint index +
+/// 8 exact bytes per entry), advancing `pos` past it. When `outliers` is
+/// given it receives the decoded `(index, bits)` pairs; `None` just
+/// validates and skips (the `decoded_len` peeks).
+pub(crate) fn parse_outliers(
+    bytes: &[u8],
+    pos: &mut usize,
+    mut outliers: Option<&mut Vec<(usize, f64)>>,
+    what: &str,
+) -> Result<()> {
+    let n_out = lossless::varint::read_u64(bytes, pos)? as usize;
+    if let Some(o) = outliers.as_mut() {
+        o.clear();
+        o.reserve(n_out);
+    }
+    let mut prev = 0usize;
+    for _ in 0..n_out {
+        let d = lossless::varint::read_u64(bytes, pos)? as usize;
+        if bytes.len() < *pos + 8 {
+            return Err(Error::Codec(format!("{what}: truncated outlier")));
+        }
+        let x = f64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+        *pos += 8;
+        prev += d;
+        if let Some(o) = outliers.as_mut() {
+            o.push((prev, x));
+        }
+    }
+    Ok(())
+}
+
+/// Parse and validate the self-describing plane prefix for any mode.
+pub(crate) fn parse_prefix(bytes: &[u8]) -> Result<PlanePrefix> {
+    match bytes.first() {
+        Some(&MODE_RAW) => {
+            let mut pos = 1usize;
+            let n = lossless::varint::read_u64(bytes, &mut pos)? as usize;
+            // Validate before anyone allocates n elements from a corrupt
+            // header (division avoids overflow on absurd n).
+            if n > (bytes.len() - pos) / 8 {
+                return Err(Error::Codec("raw: truncated".into()));
+            }
+            Ok(PlanePrefix::Raw { n })
+        }
+        Some(&MODE_ABS) => {
+            let (eb, mut pos) = parse_mode_param(bytes, "abs")?;
+            parse_outliers(bytes, &mut pos, None, "abs")?;
+            Ok(PlanePrefix::Abs { eb, residual_pos: pos })
+        }
+        Some(&MODE_POINTWISE) => {
+            let (b_r, mut pos) = parse_mode_param(bytes, "pointwise")?;
+            let n = lossless::varint::read_u64(bytes, &mut pos)? as usize;
+            Ok(PlanePrefix::Pointwise { b_r, n, after_n: pos })
+        }
+        Some(&m) => Err(Error::Codec(format!("unknown mode byte {m:#x}"))),
+        None => Err(Error::Codec("empty payload".into())),
+    }
 }
 
 fn raw_decompress_into(bytes: &[u8], out: &mut [f64]) -> Result<()> {
@@ -219,12 +322,10 @@ fn raw_decompress_into(bytes: &[u8], out: &mut [f64]) -> Result<()> {
 /// Number of `f64` elements a compressed plane decodes to — a cheap header
 /// peek (no payload decode) used to size destination buffers.
 pub fn decoded_len(bytes: &[u8]) -> Result<usize> {
-    match bytes.first() {
-        Some(&MODE_RAW) => raw_decoded_len(bytes),
-        Some(&MODE_ABS) => lossy::decoded_len(bytes),
-        Some(&MODE_POINTWISE) => pointwise::decoded_len(bytes),
-        Some(&m) => Err(Error::Codec(format!("unknown mode byte {m:#x}"))),
-        None => Err(Error::Codec("empty payload".into())),
+    match parse_prefix(bytes)? {
+        PlanePrefix::Raw { n } => Ok(n),
+        PlanePrefix::Abs { residual_pos, .. } => residual::encoded_count(&bytes[residual_pos..]),
+        PlanePrefix::Pointwise { n, .. } => Ok(n),
     }
 }
 

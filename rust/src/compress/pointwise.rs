@@ -53,14 +53,17 @@ pub fn compress_into_with(
     let inv_twoba = 1.0 / (2.0 * b_a);
 
     let n = data.len();
-    let CodecScratch { codes, outliers, sign_words, zero_words, buf_a, buf_b, buf_c } = s;
-    bitmap::pack_bits_into(data.iter().map(|&x| x.is_sign_negative() && x != 0.0), sign_words);
-    bitmap::pack_bits_into(data.iter().map(|&x| x == 0.0), zero_words);
+    let CodecScratch { codes, outliers, sign_words, zero_words, buf_a, buf_b, buf_c, delta, simd } =
+        s;
+    let simd: &'static crate::simd::SimdOps = *simd;
+    simd.pack_sign_bits(data, sign_words);
+    simd.pack_zero_bits(data, zero_words);
 
     // Quantize nonzero magnitudes in log2 space. The code stream is sized
     // from the zero-bitmap popcount, not `n`: zeros carry no code, and
-    // state vectors are typically zero-dominated.
-    let zeros: usize = zero_words.iter().map(|w| w.count_ones() as usize).sum();
+    // state vectors are typically zero-dominated. (The log2/exp2 transform
+    // itself stays scalar — it is the oracle-policy libm boundary.)
+    let zeros = simd.popcount_words(zero_words);
     codes.clear();
     codes.reserve(n - zeros);
     outliers.clear();
@@ -103,7 +106,7 @@ pub fn compress_into_with(
         out.extend_from_slice(&x.to_le_bytes());
         prev = idx;
     }
-    residual::encode_into(codes, out, buf_a, buf_b);
+    residual::encode_into(codes, out, buf_a, buf_b, delta, simd);
     Ok(())
 }
 
@@ -112,11 +115,7 @@ pub fn decoded_len(bytes: &[u8]) -> Result<usize> {
     if bytes.first() != Some(&MODE_POINTWISE) {
         return Err(Error::Codec("not a pointwise-mode payload".into()));
     }
-    let mut pos = 1usize;
-    if bytes.len() < pos + 8 {
-        return Err(Error::Codec("pointwise: truncated header".into()));
-    }
-    pos += 8;
+    let (_, mut pos) = super::parse_mode_param(bytes, "pointwise")?;
     Ok(varint::read_u64(bytes, &mut pos)? as usize)
 }
 
@@ -133,12 +132,7 @@ pub fn decompress_into_with(bytes: &[u8], out: &mut [f64], s: &mut CodecScratch)
     if bytes.first() != Some(&MODE_POINTWISE) {
         return Err(Error::Codec("not a pointwise-mode payload".into()));
     }
-    let mut pos = 1usize;
-    if bytes.len() < pos + 8 {
-        return Err(Error::Codec("pointwise: truncated header".into()));
-    }
-    let b_r = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
-    pos += 8;
+    let (b_r, mut pos) = super::parse_mode_param(bytes, "pointwise")?;
     let n = varint::read_u64(bytes, &mut pos)? as usize;
     if out.len() != n {
         return Err(Error::Codec(format!(
@@ -171,20 +165,7 @@ pub fn decompress_into_with(bytes: &[u8], out: &mut [f64], s: &mut CodecScratch)
         return Err(Error::Codec("pointwise: bitmap length mismatch".into()));
     }
 
-    let n_out = varint::read_u64(bytes, &mut pos)? as usize;
-    outliers.clear();
-    outliers.reserve(n_out);
-    let mut prev = 0usize;
-    for _ in 0..n_out {
-        let d = varint::read_u64(bytes, &mut pos)? as usize;
-        if bytes.len() < pos + 8 {
-            return Err(Error::Codec("pointwise: truncated outlier".into()));
-        }
-        let x = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
-        pos += 8;
-        prev += d;
-        outliers.push((prev, x));
-    }
+    super::parse_outliers(bytes, &mut pos, Some(&mut *outliers), "pointwise")?;
 
     residual::decode_into(&bytes[pos..], codes, buf_a)?;
     let b_a = (1.0 + b_r).log2();

@@ -15,24 +15,36 @@ const FLAG_HUFFMAN: u8 = 1;
 pub fn encode(codes: &[i64]) -> Vec<u8> {
     let mut out = Vec::with_capacity(codes.len() + 10);
     let (mut sa, mut sb) = (Vec::new(), Vec::new());
-    encode_into(codes, &mut out, &mut sa, &mut sb);
+    let mut zz = Vec::new();
+    encode_into(codes, &mut out, &mut sa, &mut sb, &mut zz, crate::simd::dispatch());
     out
 }
 
 /// [`encode`] *appending* to `out` (callers frame the stream themselves),
-/// with two reusable scratch buffers for the delta body and its Huffman
-/// pass. Emits the identical byte stream as [`encode`].
-pub fn encode_into(codes: &[i64], out: &mut Vec<u8>, sa: &mut Vec<u8>, sb: &mut Vec<u8>) {
+/// with reusable scratch buffers for the delta body, its Huffman pass and
+/// the zigzag-delta stage. Emits the identical byte stream as [`encode`].
+///
+/// Split into two stages so the data-parallel part vectorizes: stage 1
+/// computes `zigzag(code_i - code_{i-1})` for the whole stream (SIMD);
+/// stage 2 is the inherently serial run/varint emitter. `zz[i] == 0` iff
+/// `delta_i == 0` (zigzag is a bijection fixing 0), so the zero-run scan
+/// reads the transformed stream directly.
+pub fn encode_into(
+    codes: &[i64],
+    out: &mut Vec<u8>,
+    sa: &mut Vec<u8>,
+    sb: &mut Vec<u8>,
+    zz: &mut Vec<u64>,
+    simd: &crate::simd::SimdOps,
+) {
     sa.clear();
-    let mut prev = 0i64;
+    simd.zigzag_deltas(codes, zz);
     let mut i = 0usize;
     while i < codes.len() {
-        let delta = codes[i].wrapping_sub(prev);
-        prev = codes[i];
-        if delta == 0 {
+        if zz[i] == 0 {
             // Count the zero-delta run (constant stretch).
             let mut run = 1usize;
-            while i + run < codes.len() && codes[i + run] == prev {
+            while i + run < codes.len() && zz[i + run] == 0 {
                 run += 1;
             }
             varint::write_u64(sa, 0);
@@ -41,7 +53,7 @@ pub fn encode_into(codes: &[i64], out: &mut Vec<u8>, sa: &mut Vec<u8>, sb: &mut 
         } else {
             // zigzag(delta) == 0 iff delta == 0, which the run branch owns,
             // so nonzero deltas never collide with the run marker 0.
-            varint::write_u64(sa, varint::zigzag(delta));
+            varint::write_u64(sa, zz[i]);
             i += 1;
         }
     }

@@ -186,6 +186,21 @@ fn apply_fused_kq(re: &mut [f64], im: &mut [f64], op: &FusedGate) {
             mi[r][c] = m[r * dim + c].im;
         }
     }
+    // Vector quad path: when the lowest support bit is >= 2, every run of 4
+    // consecutive bases is memory-contiguous at every site offset (the low
+    // 2 index bits sit below the whole support), so the lane-parallel quad
+    // kernel applies. `subspace_bases` yields bases in ascending order and
+    // `len >> k >= 4` whenever the plane closes over a support with
+    // `bits[0] >= 2`, so stepping by 4 covers the plane exactly.
+    let ops = crate::simd::dispatch();
+    if ops.vectorized() && bits[0] >= 2 {
+        ops.mark_used();
+        let quad = ops.fused_kq_quad_fn();
+        for base in subspace_bases(len, bits).step_by(4) {
+            quad(re, im, base, &offs, &mr, &mi, dim);
+        }
+        return;
+    }
     let mut vr = [0f64; 8];
     let mut vi = [0f64; 8];
     for base in subspace_bases(len, bits) {

@@ -35,24 +35,11 @@ use crate::types::Complex;
 #[inline]
 pub(crate) fn dense_1q(m: &[Complex], re: &mut [f64], im: &mut [f64], bit: usize) {
     debug_assert!(m.len() >= 4);
-    let len = re.len();
-    let (m00r, m00i) = (m[0].re, m[0].im);
-    let (m01r, m01i) = (m[1].re, m[1].im);
-    let (m10r, m10i) = (m[2].re, m[2].im);
-    let (m11r, m11i) = (m[3].re, m[3].im);
-    let mut base = 0usize;
-    while base < len {
-        for i0 in base..base + bit {
-            let i1 = i0 | bit;
-            let (r0, v0) = (re[i0], im[i0]);
-            let (r1, v1) = (re[i1], im[i1]);
-            re[i0] = m00r * r0 - m00i * v0 + m01r * r1 - m01i * v1;
-            im[i0] = m00r * v0 + m00i * r0 + m01r * v1 + m01i * r1;
-            re[i1] = m10r * r0 - m10i * v0 + m11r * r1 - m11i * v1;
-            im[i1] = m10r * v0 + m10i * r0 + m11r * v1 + m11i * r1;
-        }
-        base += bit << 1;
-    }
+    // Flatten to the interleaved (re, im) form the SIMD tables take; the
+    // selected kernel is bit-identical to the historical scalar loop (the
+    // oracle lives in `simd::scalar::dense_1q`).
+    let mf = [m[0].re, m[0].im, m[1].re, m[1].im, m[2].re, m[2].im, m[3].re, m[3].im];
+    crate::simd::dispatch().dense_1q(&mf, re, im, bit);
 }
 
 /// Iterate amplitude-pair base indices for target bit `t` in a buffer of

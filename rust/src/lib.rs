@@ -22,5 +22,6 @@ pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
 pub mod sim;
+pub mod simd;
 pub mod state;
 pub mod types;

@@ -41,6 +41,9 @@ OPTIONS (run/compare/sample):
   --no-compress         disable compression (raw blocks)
   --no-prescan          disable the sign-bitmap pre-scan
   --no-fusion           disable gate fusion (per-gate application)
+  --no-simd             pin the scalar codec/gate kernels (vector and
+                        scalar paths are byte-identical; diagnostic knob.
+                        env: BMQSIM_NO_SIMD pins it process-wide)
   --max-fuse <K>        fused-unitary width cap (1..=3)            [3]
   --tile-bits <T>       log2 amplitudes per cache tile             [15]
   --apply-workers <W>   parallel plane-sweep workers per chain     [1]
@@ -122,8 +125,8 @@ impl Opts {
             let key = a.trim_start_matches("--").to_string();
             let flag = matches!(
                 key.as_str(),
-                "no-compress" | "no-prescan" | "no-fusion" | "sync-spill" | "overlap"
-                    | "no-overlap" | "no-spill-order"
+                "no-compress" | "no-prescan" | "no-fusion" | "no-simd" | "sync-spill"
+                    | "overlap" | "no-overlap" | "no-spill-order"
             );
             if flag {
                 map.insert(key, "true".into());
@@ -188,6 +191,9 @@ fn build_config(opts: &Opts) -> Result<SimConfig, String> {
     );
     if opts.flag("no-fusion") {
         cfg.fusion = false;
+    }
+    if opts.flag("no-simd") {
+        cfg.no_simd = true;
     }
     cfg.max_fuse_qubits = opts.parse_num("max-fuse", cfg.max_fuse_qubits)?;
     cfg.tile_bits = opts.parse_num("tile-bits", cfg.tile_bits)?;

@@ -128,6 +128,11 @@ pub struct Metrics {
     /// Spill recovery: ENOSPC degradations — evictions re-targeted at the
     /// fallback stripe, or budget renegotiations when no stripe exists.
     pub enospc_fallbacks: AtomicU64,
+    /// Vector (SIMD) kernel invocations attributed to this run: the delta
+    /// of the process-wide `simd::kernels_used` counter across the run.
+    /// 0 under `--no-simd` / `BMQSIM_NO_SIMD` or on scalar-only hosts.
+    /// Best-effort: concurrent runs in one process share the counter.
+    pub simd_kernels_used: AtomicU64,
 }
 
 impl Metrics {
@@ -192,6 +197,7 @@ impl Metrics {
             checksum_failures: self.checksum_failures.load(Ordering::Relaxed),
             frames_recovered: self.frames_recovered.load(Ordering::Relaxed),
             enospc_fallbacks: self.enospc_fallbacks.load(Ordering::Relaxed),
+            simd_kernels_used: self.simd_kernels_used.load(Ordering::Relaxed),
         }
     }
 
@@ -289,6 +295,9 @@ pub struct MetricsReport {
     pub frames_recovered: u64,
     /// ENOSPC degradations (fallback-stripe writes + budget renegotiations).
     pub enospc_fallbacks: u64,
+    /// Vector (SIMD) kernel invocations attributed to this run (0 when
+    /// the scalar oracle was pinned or the host has no vector tier).
+    pub simd_kernels_used: u64,
 }
 
 impl MetricsReport {
@@ -398,6 +407,14 @@ impl std::fmt::Display for MetricsReport {
                 self.checksum_failures,
                 self.frames_recovered,
                 self.enospc_fallbacks
+            )?;
+        }
+        if self.simd_kernels_used > 0 {
+            writeln!(
+                f,
+                "simd kernels     : {:>10} vector invocations ({})",
+                self.simd_kernels_used,
+                crate::simd::active_level().name()
             )?;
         }
         writeln!(

@@ -114,10 +114,11 @@ impl PipelineConfig {
 /// store → worker → store without fresh allocations.
 #[derive(Default)]
 pub struct Scratch {
-    /// Gathered group plane, real part.
-    pub re: Vec<f64>,
+    /// Gathered group plane, real part (cache-line-aligned backing so
+    /// vector loads over the plane start aligned; derefs to `[f64]`).
+    pub re: crate::simd::AlignedF64,
     /// Gathered group plane, imaginary part.
-    pub im: Vec<f64>,
+    pub im: crate::simd::AlignedF64,
     /// Block ids of the current group (gather order).
     pub block_ids: Vec<usize>,
     /// Fetched payloads; their byte buffers are reused as compression
@@ -144,6 +145,11 @@ impl Scratch {
         }
         self.re.resize(len, 0.0);
         self.im.resize(len, 0.0);
+        debug_assert!(
+            crate::simd::is_aligned_64(self.re.as_slice().as_ptr())
+                && crate::simd::is_aligned_64(self.im.as_slice().as_ptr()),
+            "scratch planes must stay cache-line aligned"
+        );
         grew
     }
 }

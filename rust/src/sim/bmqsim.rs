@@ -78,6 +78,8 @@ impl<'a> BmqSim<'a> {
         materialize: bool,
     ) -> Result<(SimResult, crate::memory::BlockStore, BlockLayout)> {
         self.config.validate(circuit.n_qubits)?;
+        let _simd_guard = crate::simd::disable_scope(self.config.no_simd);
+        let simd_kernels_at_start = crate::simd::kernels_used();
         let metrics = Metrics::new();
         let t0 = Instant::now();
 
@@ -215,6 +217,10 @@ impl<'a> BmqSim<'a> {
         };
         let mem = store.stats();
         metrics.absorb_mem(&mem);
+        metrics.simd_kernels_used.store(
+            crate::simd::kernels_used().saturating_sub(simd_kernels_at_start),
+            Ordering::Relaxed,
+        );
         let result = SimResult {
             engine: "bmqsim",
             circuit_name: circuit.name.clone(),

@@ -181,6 +181,11 @@ pub struct SimConfig {
     /// spill file's device fills, eviction retargets this directory
     /// (ideally a different filesystem) before renegotiating the budget.
     pub spill_fallback_dir: Option<PathBuf>,
+    /// Pin the codec/gate kernels to the scalar oracle for this run (CLI
+    /// `--no-simd`; the `BMQSIM_NO_SIMD` env var does the same
+    /// process-wide). Vector and scalar kernels are byte-identical, so
+    /// this is a diagnostic/benchmark knob, never a correctness one.
+    pub no_simd: bool,
 }
 
 impl Default for SimConfig {
@@ -209,6 +214,7 @@ impl Default for SimConfig {
             prefetch_auto: false,
             fault_plan: None,
             spill_fallback_dir: None,
+            no_simd: false,
         }
     }
 }
@@ -273,6 +279,7 @@ mod tests {
         assert!(!c.prefetch_auto);
         assert!(c.fault_plan.is_none(), "no fault injection by default");
         assert!(c.spill_fallback_dir.is_none());
+        assert!(!c.no_simd, "vector kernels on by default");
         let opts = c.store_options();
         assert_eq!(opts.shards, 8);
         assert!(opts.async_spill);

@@ -29,6 +29,8 @@ impl<'a> DenseSim<'a> {
     /// Run the circuit and return the final state + metrics.
     pub fn run(&self, circuit: &Circuit) -> Result<SimResult> {
         self.config.validate(circuit.n_qubits)?;
+        let _simd_guard = crate::simd::disable_scope(self.config.no_simd);
+        let simd_kernels_at_start = crate::simd::kernels_used();
         let metrics = Metrics::new();
         let t0 = Instant::now();
         let mut state = StateVector::zero_state(circuit.n_qubits)?;
@@ -41,6 +43,10 @@ impl<'a> DenseSim<'a> {
             metrics.gates_applied.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
         let wall = t0.elapsed().as_secs_f64();
+        metrics.simd_kernels_used.store(
+            crate::simd::kernels_used().saturating_sub(simd_kernels_at_start),
+            std::sync::atomic::Ordering::Relaxed,
+        );
         let peak = state.len() * self.config.precision.amp_bytes();
         Ok(SimResult {
             engine: "dense",

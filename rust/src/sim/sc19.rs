@@ -43,6 +43,8 @@ impl<'a> Sc19Sim<'a> {
 
     pub fn run(&self, circuit: &Circuit, materialize: bool) -> Result<SimResult> {
         self.config.validate(circuit.n_qubits)?;
+        let _simd_guard = crate::simd::disable_scope(self.config.no_simd);
+        let simd_kernels_at_start = crate::simd::kernels_used();
         let metrics = Metrics::new();
         let t0 = Instant::now();
 
@@ -234,6 +236,10 @@ impl<'a> Sc19Sim<'a> {
         };
         let mem = store.stats();
         metrics.absorb_mem(&mem);
+        metrics.simd_kernels_used.store(
+            crate::simd::kernels_used().saturating_sub(simd_kernels_at_start),
+            Ordering::Relaxed,
+        );
         Ok(SimResult {
             engine: if self.workers == 1 { "sc19-cpu" } else { "sc19-gpu" },
             circuit_name: circuit.name.clone(),

@@ -1,0 +1,154 @@
+//! Cache-line-aligned f64 plane storage for the pipeline scratch arenas.
+//!
+//! `Vec<f64>` only guarantees 8-byte alignment, so a 256-bit (or future
+//! 512-bit) vector load over a plane may straddle cache lines at the
+//! very first element. [`AlignedF64`] stores the plane as 64-byte
+//! chunks, guaranteeing every SIMD load that starts at a multiple of 8
+//! elements is cache-line aligned, while `Deref`-ing to `[f64]` so all
+//! existing slice-based call sites (gate kernels, codec entry points,
+//! range indexing) work unchanged.
+
+/// One cache line of plane data; the alignment carrier.
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+struct Chunk([f64; 8]);
+
+const CHUNK: usize = 8;
+
+/// A growable f64 buffer with 64-byte-aligned backing storage and
+/// `Vec`-like `resize`/`capacity` semantics (shrinking keeps capacity;
+/// `resize` zero-fills or value-fills exactly like `Vec::resize`).
+#[derive(Default)]
+pub struct AlignedF64 {
+    chunks: Vec<Chunk>,
+    len: usize,
+}
+
+impl AlignedF64 {
+    pub fn new() -> Self {
+        AlignedF64 { chunks: Vec::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Element capacity (whole chunks, like `Vec::capacity` in spirit:
+    /// how many elements fit without reallocating).
+    pub fn capacity(&self) -> usize {
+        self.chunks.capacity() * CHUNK
+    }
+
+    /// `Vec::resize` semantics: grow with `value`, shrink by truncating.
+    pub fn resize(&mut self, new_len: usize, value: f64) {
+        let old_len = self.len;
+        let need = new_len.div_ceil(CHUNK);
+        if need > self.chunks.len() {
+            self.chunks.resize(need, Chunk([0.0; CHUNK]));
+        }
+        self.len = new_len;
+        if new_len > old_len {
+            // Overwrite the grown range explicitly: recycled chunk slots
+            // may hold stale data from a previous larger resize.
+            self.as_mut_slice()[old_len..].fill(value);
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        // SAFETY: `chunks` owns `chunks.len() * CHUNK >= len` contiguous,
+        // initialized f64s (Chunk is repr(C) over [f64; 8]).
+        unsafe { std::slice::from_raw_parts(self.chunks.as_ptr() as *const f64, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        // SAFETY: as above, and `&mut self` gives unique access.
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr() as *mut f64, self.len) }
+    }
+}
+
+impl std::ops::Deref for AlignedF64 {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for AlignedF64 {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        self.as_mut_slice()
+    }
+}
+
+impl std::fmt::Debug for AlignedF64 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice().iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::is_aligned_64;
+
+    #[test]
+    fn backing_storage_is_cache_line_aligned() {
+        let mut a = AlignedF64::new();
+        assert!(is_aligned_64(a.as_slice().as_ptr()), "empty buffer dangling ptr is aligned");
+        for len in [1usize, 7, 8, 9, 1024, 4097] {
+            a.resize(len, 0.0);
+            assert!(is_aligned_64(a.as_slice().as_ptr()), "len={len}");
+        }
+    }
+
+    #[test]
+    fn resize_matches_vec_semantics() {
+        let mut a = AlignedF64::new();
+        let mut v: Vec<f64> = Vec::new();
+        for &(len, fill) in
+            &[(10usize, 1.0f64), (3, 2.0), (17, 3.0), (17, 4.0), (0, 5.0), (100, 6.0)]
+        {
+            a.resize(len, fill);
+            v.resize(len, fill);
+            assert_eq!(&a[..], &v[..], "len={len}");
+        }
+    }
+
+    #[test]
+    fn shrink_keeps_capacity_grow_within_does_not_realloc() {
+        let mut a = AlignedF64::new();
+        a.resize(1024, 0.0);
+        let cap = a.capacity();
+        assert!(cap >= 1024);
+        a.resize(512, 0.0);
+        assert_eq!(a.capacity(), cap, "shrink keeps storage");
+        a.resize(1024, 0.0);
+        assert_eq!(a.capacity(), cap, "regrow within capacity");
+        assert_eq!(a.len(), 1024);
+    }
+
+    #[test]
+    fn stale_chunk_tail_is_refilled_on_regrow() {
+        let mut a = AlignedF64::new();
+        a.resize(16, 9.0);
+        a.resize(4, 0.0);
+        a.resize(16, 0.0);
+        assert!(a[4..].iter().all(|&x| x == 0.0), "stale 9.0s must be overwritten");
+        assert!(a[..4].iter().all(|&x| x == 9.0), "surviving prefix untouched");
+    }
+
+    #[test]
+    fn deref_supports_slice_ops() {
+        let mut a = AlignedF64::new();
+        a.resize(8, 0.0);
+        a[3] = 42.0;
+        assert_eq!(a[3], 42.0);
+        assert_eq!(a.iter().sum::<f64>(), 42.0);
+        let sub: &mut [f64] = &mut a[2..6];
+        sub[0] = 7.0;
+        assert_eq!(a[2], 7.0);
+    }
+}

@@ -1,0 +1,364 @@
+//! AVX2 4-lane f64 kernels, bit-identical to [`super::scalar`].
+//!
+//! Every kernel reproduces the scalar operation order exactly — no FMA
+//! (contraction changes rounding), identical add/sub/mul association
+//! trees, identical truncation semantics. The integer↔double conversion
+//! recipes avoid `vcvttpd2qq` (AVX-512 only):
+//!
+//! - f64→i64 (`quant_abs`): round toward zero with `vroundpd`, then the
+//!   2^52 magic-bias trick on the absolute value (exact for |v| < 2^52 —
+//!   guaranteed because quantized codes are clamped to `MAX_CODE` = 4e15),
+//!   then two's-complement negate the negative lanes.
+//! - i64→f64 (`dequant_abs`): the split lo32/hi32 magic-constant method
+//!   (exact over the full i64 range; the single rounding happens in the
+//!   final add, matching the scalar `c as f64` round-to-nearest-even).
+//!
+//! Safety: every `#[target_feature]` function here is only reachable
+//! through the AVX2 dispatch table, which `detect()` selects after
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("popcnt")`.
+
+#![allow(unsafe_code)]
+
+use super::scalar;
+use crate::compress::lossless::varint;
+use crate::compress::lossy::MAX_CODE;
+use std::arch::x86_64::*;
+
+const SIGN_BIT: f64 = -0.0;
+/// Bit pattern of 2^52: the magic bias for exact f64↔i64 in [0, 2^52).
+const MAGIC_LO: i64 = 0x4330000000000000;
+/// High-half magic for the full-range i64→f64 conversion.
+const MAGIC_HI32: i64 = 0x4530000080000000u64 as i64;
+/// Combined magic (2^84 + 2^63 + 2^52) subtracted once from the hi part.
+const MAGIC_ALL: i64 = 0x4530000080100000u64 as i64;
+
+pub(super) fn quant_abs(
+    data: &[f64],
+    twoeb: f64,
+    codes: &mut Vec<i64>,
+    outliers: &mut Vec<(usize, f64)>,
+) {
+    // SAFETY: table only selected after AVX2 detection (module doc).
+    unsafe { quant_abs_impl(data, twoeb, codes, outliers) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn quant_abs_impl(
+    data: &[f64],
+    twoeb: f64,
+    codes: &mut Vec<i64>,
+    outliers: &mut Vec<(usize, f64)>,
+) {
+    let n = data.len();
+    codes.clear();
+    codes.resize(n, 0);
+    outliers.clear();
+    let sign = _mm256_set1_pd(SIGN_BIT);
+    let half = _mm256_set1_pd(0.5);
+    let vtwoeb = _mm256_set1_pd(twoeb);
+    let inf = _mm256_set1_pd(f64::INFINITY);
+    let vmax = _mm256_set1_pd(MAX_CODE);
+    let magic = _mm256_set1_epi64x(MAGIC_LO);
+    let cp = codes.as_mut_ptr();
+    let dp = data.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let x = _mm256_loadu_pd(dp.add(i));
+        let q = _mm256_div_pd(x, vtwoeb);
+        let abs_x = _mm256_andnot_pd(sign, x);
+        let abs_q = _mm256_andnot_pd(sign, q);
+        // Escape lanes: !x.is_finite() (|x| >= inf or NaN, via NLT_UQ)
+        // or |q| > MAX_CODE. Any escape sends the whole chunk through the
+        // scalar path so the outlier push order matches the oracle.
+        let nonfinite = _mm256_cmp_pd::<_CMP_NLT_UQ>(abs_x, inf);
+        let overrange = _mm256_cmp_pd::<_CMP_GT_OQ>(abs_q, vmax);
+        if _mm256_movemask_pd(_mm256_or_pd(nonfinite, overrange)) != 0 {
+            for lane in 0..4 {
+                let xv = *data.get_unchecked(i + lane);
+                let qv = xv / twoeb;
+                if !xv.is_finite() || qv.abs() > MAX_CODE {
+                    outliers.push((i + lane, xv));
+                } else {
+                    *cp.add(i + lane) = (qv + 0.5f64.copysign(qv)) as i64;
+                }
+            }
+        } else {
+            // Scalar: (q + copysign(0.5, q)) as i64  — add then truncate.
+            let signed_half = _mm256_or_pd(half, _mm256_and_pd(q, sign));
+            let t = _mm256_round_pd::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(
+                _mm256_add_pd(q, signed_half),
+            );
+            let abs_t = _mm256_andnot_pd(sign, t);
+            // |t| <= MAX_CODE + 1 < 2^52, so abs_t + 2^52 is exact and its
+            // mantissa bits are the integer value.
+            let k = _mm256_sub_epi64(
+                _mm256_castpd_si256(_mm256_add_pd(abs_t, _mm256_castsi256_pd(magic))),
+                magic,
+            );
+            // Negate lanes where t < 0 (t = -0.0 has k = 0, so the mask
+            // being false there is fine).
+            let neg = _mm256_castpd_si256(_mm256_cmp_pd::<_CMP_LT_OQ>(t, _mm256_setzero_pd()));
+            let v = _mm256_sub_epi64(_mm256_xor_si256(k, neg), neg);
+            _mm256_storeu_si256(cp.add(i) as *mut __m256i, v);
+        }
+        i += 4;
+    }
+    while i < n {
+        let xv = *data.get_unchecked(i);
+        let qv = xv / twoeb;
+        if !xv.is_finite() || qv.abs() > MAX_CODE {
+            outliers.push((i, xv));
+        } else {
+            *cp.add(i) = (qv + 0.5f64.copysign(qv)) as i64;
+        }
+        i += 1;
+    }
+}
+
+pub(super) fn dequant_abs(codes: &[i64], twoeb: f64, out: &mut [f64]) {
+    // SAFETY: table only selected after AVX2 detection (module doc).
+    unsafe { dequant_abs_impl(codes, twoeb, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_abs_impl(codes: &[i64], twoeb: f64, out: &mut [f64]) {
+    let n = out.len().min(codes.len());
+    let magic_lo = _mm256_set1_epi64x(MAGIC_LO);
+    let magic_hi = _mm256_set1_epi64x(MAGIC_HI32);
+    let magic_all = _mm256_castsi256_pd(_mm256_set1_epi64x(MAGIC_ALL));
+    let lo_mask = _mm256_set1_epi64x(0xFFFF_FFFFi64);
+    let vtwoeb = _mm256_set1_pd(twoeb);
+    let cp = codes.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let v = _mm256_loadu_si256(cp.add(i) as *const __m256i);
+        // Full-range exact i64→f64: low 32 bits biased by 2^52, high 32
+        // bits biased by 2^84+2^63; the final add performs the single
+        // round-to-nearest step, matching scalar `c as f64`.
+        let v_lo = _mm256_or_si256(_mm256_and_si256(v, lo_mask), magic_lo);
+        let v_hi = _mm256_xor_si256(_mm256_srli_epi64::<32>(v), magic_hi);
+        let f = _mm256_add_pd(
+            _mm256_sub_pd(_mm256_castsi256_pd(v_hi), magic_all),
+            _mm256_castsi256_pd(v_lo),
+        );
+        _mm256_storeu_pd(op.add(i), _mm256_mul_pd(f, vtwoeb));
+        i += 4;
+    }
+    while i < n {
+        *op.add(i) = *cp.add(i) as f64 * twoeb;
+        i += 1;
+    }
+}
+
+pub(super) fn pack_sign_bits(data: &[f64], words: &mut Vec<u64>) -> usize {
+    // SAFETY: table only selected after AVX2 detection (module doc).
+    unsafe { pack_bits_impl::<true>(data, words) }
+}
+
+pub(super) fn pack_zero_bits(data: &[f64], words: &mut Vec<u64>) -> usize {
+    // SAFETY: table only selected after AVX2 detection (module doc).
+    unsafe { pack_bits_impl::<false>(data, words) }
+}
+
+/// Shared bitmap builder: `SIGN` packs `is_sign_negative() && x != 0.0`,
+/// otherwise `x == 0.0`. 16 four-lane groups fill one u64 word.
+#[target_feature(enable = "avx2")]
+unsafe fn pack_bits_impl<const SIGN: bool>(data: &[f64], words: &mut Vec<u64>) -> usize {
+    let n = data.len();
+    words.clear();
+    words.reserve(n.div_ceil(64));
+    let zero = _mm256_setzero_pd();
+    let dp = data.as_ptr();
+    let mut i = 0usize;
+    while i + 64 <= n {
+        let mut w = 0u64;
+        for g in 0..16 {
+            let x = _mm256_loadu_pd(dp.add(i + g * 4));
+            let bits = if SIGN {
+                // Sign bit set AND x != 0.0 (NEQ_UQ: true for NaN, false
+                // for -0.0) — matches the scalar predicate exactly.
+                (_mm256_movemask_pd(x) & _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_NEQ_UQ>(x, zero)))
+                    as u64
+            } else {
+                _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_EQ_OQ>(x, zero)) as u64
+            };
+            w |= (bits & 0xF) << (g * 4);
+        }
+        words.push(w);
+        i += 64;
+    }
+    if i < n {
+        let mut w = 0u64;
+        for (fill, &x) in data[i..].iter().enumerate() {
+            let bit = if SIGN { x.is_sign_negative() && x != 0.0 } else { x == 0.0 };
+            w |= (bit as u64) << fill;
+        }
+        words.push(w);
+    }
+    n
+}
+
+pub(super) fn popcount_words(words: &[u64]) -> usize {
+    // SAFETY: table only selected after AVX2+POPCNT detection (module doc).
+    unsafe { popcount_words_impl(words) }
+}
+
+#[target_feature(enable = "popcnt")]
+unsafe fn popcount_words_impl(words: &[u64]) -> usize {
+    words.iter().map(|w| w.count_ones() as usize).sum()
+}
+
+pub(super) fn zigzag_deltas(codes: &[i64], out: &mut Vec<u64>) {
+    // SAFETY: table only selected after AVX2 detection (module doc).
+    unsafe { zigzag_deltas_impl(codes, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn zigzag_deltas_impl(codes: &[i64], out: &mut Vec<u64>) {
+    let n = codes.len();
+    out.clear();
+    out.resize(n, 0);
+    if n == 0 {
+        return;
+    }
+    out[0] = varint::zigzag(codes[0]);
+    let cp = codes.as_ptr();
+    let op = out.as_mut_ptr();
+    let zero = _mm256_setzero_si256();
+    let mut j = 1usize;
+    while j + 4 <= n {
+        let cur = _mm256_loadu_si256(cp.add(j) as *const __m256i);
+        let prev = _mm256_loadu_si256(cp.add(j - 1) as *const __m256i);
+        let d = _mm256_sub_epi64(cur, prev);
+        // zigzag(d) = (d << 1) ^ (d >> 63); arithmetic 63-shift emulated
+        // by the signed compare against zero (all-ones iff d < 0).
+        let m = _mm256_cmpgt_epi64(zero, d);
+        let zz = _mm256_xor_si256(_mm256_slli_epi64::<1>(d), m);
+        _mm256_storeu_si256(op.add(j) as *mut __m256i, zz);
+        j += 4;
+    }
+    while j < n {
+        *op.add(j) = varint::zigzag((*cp.add(j)).wrapping_sub(*cp.add(j - 1)));
+        j += 1;
+    }
+}
+
+pub(super) fn dense_1q(m: &[f64; 8], re: &mut [f64], im: &mut [f64], bit: usize) {
+    if bit < 4 {
+        // 4-lane loads would straddle the (i, i|bit) pair boundary.
+        return scalar::dense_1q(m, re, im, bit);
+    }
+    // SAFETY: table only selected after AVX2 detection (module doc).
+    unsafe { dense_1q_impl(m, re, im, bit) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dense_1q_impl(m: &[f64; 8], re: &mut [f64], im: &mut [f64], bit: usize) {
+    let m00r = _mm256_set1_pd(m[0]);
+    let m00i = _mm256_set1_pd(m[1]);
+    let m01r = _mm256_set1_pd(m[2]);
+    let m01i = _mm256_set1_pd(m[3]);
+    let m10r = _mm256_set1_pd(m[4]);
+    let m10i = _mm256_set1_pd(m[5]);
+    let m11r = _mm256_set1_pd(m[6]);
+    let m11i = _mm256_set1_pd(m[7]);
+    let len = re.len();
+    let rp = re.as_mut_ptr();
+    let ip = im.as_mut_ptr();
+    let mut base = 0usize;
+    while base < len {
+        let mut i0 = base;
+        while i0 < base + bit {
+            let i1 = i0 | bit;
+            let r0 = _mm256_loadu_pd(rp.add(i0));
+            let v0 = _mm256_loadu_pd(ip.add(i0));
+            let r1 = _mm256_loadu_pd(rp.add(i1));
+            let v1 = _mm256_loadu_pd(ip.add(i1));
+            // Scalar association tree: ((a*x - b*y) + c*z) - d*w, etc.
+            let nr0 = _mm256_sub_pd(
+                _mm256_add_pd(
+                    _mm256_sub_pd(_mm256_mul_pd(m00r, r0), _mm256_mul_pd(m00i, v0)),
+                    _mm256_mul_pd(m01r, r1),
+                ),
+                _mm256_mul_pd(m01i, v1),
+            );
+            let ni0 = _mm256_add_pd(
+                _mm256_add_pd(
+                    _mm256_add_pd(_mm256_mul_pd(m00r, v0), _mm256_mul_pd(m00i, r0)),
+                    _mm256_mul_pd(m01r, v1),
+                ),
+                _mm256_mul_pd(m01i, r1),
+            );
+            let nr1 = _mm256_sub_pd(
+                _mm256_add_pd(
+                    _mm256_sub_pd(_mm256_mul_pd(m10r, r0), _mm256_mul_pd(m10i, v0)),
+                    _mm256_mul_pd(m11r, r1),
+                ),
+                _mm256_mul_pd(m11i, v1),
+            );
+            let ni1 = _mm256_add_pd(
+                _mm256_add_pd(
+                    _mm256_add_pd(_mm256_mul_pd(m10r, v0), _mm256_mul_pd(m10i, r0)),
+                    _mm256_mul_pd(m11r, v1),
+                ),
+                _mm256_mul_pd(m11i, r1),
+            );
+            _mm256_storeu_pd(rp.add(i0), nr0);
+            _mm256_storeu_pd(ip.add(i0), ni0);
+            _mm256_storeu_pd(rp.add(i1), nr1);
+            _mm256_storeu_pd(ip.add(i1), ni1);
+            i0 += 4;
+        }
+        base += bit << 1;
+    }
+}
+
+pub(super) fn fused_kq_quad(
+    re: &mut [f64],
+    im: &mut [f64],
+    base: usize,
+    offs: &[usize; 8],
+    mr: &[[f64; 8]; 8],
+    mi: &[[f64; 8]; 8],
+    dim: usize,
+) {
+    // SAFETY: table only selected after AVX2 detection (module doc);
+    // caller guarantees the quad contract (see `FusedKqQuadFn`).
+    unsafe { fused_kq_quad_impl(re, im, base, offs, mr, mi, dim) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn fused_kq_quad_impl(
+    re: &mut [f64],
+    im: &mut [f64],
+    base: usize,
+    offs: &[usize; 8],
+    mr: &[[f64; 8]; 8],
+    mi: &[[f64; 8]; 8],
+    dim: usize,
+) {
+    let rp = re.as_mut_ptr();
+    let ip = im.as_mut_ptr();
+    let mut vr = [_mm256_setzero_pd(); 8];
+    let mut vi = [_mm256_setzero_pd(); 8];
+    for s in 0..dim {
+        let ix = base | offs[s];
+        vr[s] = _mm256_loadu_pd(rp.add(ix));
+        vi[s] = _mm256_loadu_pd(ip.add(ix));
+    }
+    for r in 0..dim {
+        let mut ar = _mm256_setzero_pd();
+        let mut ai = _mm256_setzero_pd();
+        for s in 0..dim {
+            let mre = _mm256_set1_pd(mr[r][s]);
+            let mim = _mm256_set1_pd(mi[r][s]);
+            // Scalar order: ar += m*vr - i*vi; ai += m*vi + i*vr.
+            ar = _mm256_add_pd(ar, _mm256_sub_pd(_mm256_mul_pd(mre, vr[s]), _mm256_mul_pd(mim, vi[s])));
+            ai = _mm256_add_pd(ai, _mm256_add_pd(_mm256_mul_pd(mre, vi[s]), _mm256_mul_pd(mim, vr[s])));
+        }
+        let ix = base | offs[r];
+        _mm256_storeu_pd(rp.add(ix), ar);
+        _mm256_storeu_pd(ip.add(ix), ai);
+    }
+}

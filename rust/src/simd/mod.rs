@@ -1,0 +1,427 @@
+//! Runtime-dispatched SIMD kernels for the codec and gate hot loops.
+//!
+//! The paper's performance claim is that (de)compression runs at
+//! memory-bandwidth speed so it can hide inside the decode/apply/encode
+//! pipeline; on the CPU backend the scalar inner loops (quantization,
+//! zero-bitmap build, residual zigzag packing, Huffman byte decode, and
+//! the k≤3 fused unitary kernels) are the throughput floor. This module
+//! lifts them with `std::arch` intrinsics behind a **one-time runtime
+//! dispatch**:
+//!
+//! - [`detect`]-time feature probing (`is_x86_feature_detected!`) picks a
+//!   [`SimdLevel`] once per process and caches it; the choice
+//!   materializes as a `&'static` [`SimdOps`] function-pointer table.
+//! - The scalar implementations in [`scalar`] are the **parity oracle**:
+//!   always compiled, always reachable (non-x86 targets, the
+//!   `BMQSIM_NO_SIMD` env kill switch, the `--no-simd` CLI flag), and the
+//!   reference every vector kernel must match **bit-for-bit**. The
+//!   byte-identical suites (`codec_into`, `fusion_parity`,
+//!   `pipeline_parity`, `simd_parity`) enforce this.
+//! - Vector kernels therefore never use FMA and reproduce the scalar
+//!   operation order exactly (same rounding at every step); kernels whose
+//!   scalar form is not bit-reproducible lane-wise (the `log2`/`exp2`
+//!   pointwise transform) intentionally stay scalar.
+//!
+//! Tables are threaded through `CodecScratch` (captured at construction)
+//! and consulted via [`dispatch`] in the gate kernels. Every plane-level
+//! kernel invocation that routes through a non-scalar table bumps a
+//! process-wide counter surfaced as `Metrics::simd_kernels_used`.
+
+pub mod aligned;
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod sse2;
+
+pub use aligned::AlignedF64;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Instruction-set tier selected by [`detect`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar oracle (also the `BMQSIM_NO_SIMD` fallback).
+    Scalar,
+    /// x86-64 baseline 2-lane f64 kernels (always available on x86-64).
+    Sse2,
+    /// 4-lane f64 kernels; requires `avx2` **and** `popcnt`.
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Human-readable tier name (used by `--no-simd` reporting and tests).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Signature of the absolute-mode quantizer kernel: fills `codes` (one
+/// i64 per input) and pushes `(index, value)` outliers in input order.
+pub type QuantAbsFn = fn(&[f64], f64, &mut Vec<i64>, &mut Vec<(usize, f64)>);
+/// Signature of the absolute-mode dequantizer: `out[i] = codes[i] as f64 * twoeb`.
+pub type DequantAbsFn = fn(&[i64], f64, &mut [f64]);
+/// Signature of the bitmap builders: packs one predicate bit per f64 into
+/// LSB-first u64 words and returns the number of bits produced.
+pub type PackBitsFn = fn(&[f64], &mut Vec<u64>) -> usize;
+/// Signature of the bitmap popcount.
+pub type PopcountFn = fn(&[u64]) -> usize;
+/// Signature of the residual stage-1 kernel: `out[i] = zigzag(c[i] - c[i-1])`
+/// with `c[-1] == 0`.
+pub type ZigzagDeltasFn = fn(&[i64], &mut Vec<u64>);
+/// Signature of the single-qubit dense kernel over split re/im planes.
+/// The matrix is flattened `[m00r, m00i, m01r, m01i, m10r, m10i, m11r, m11i]`.
+pub type Dense1qFn = fn(&[f64; 8], &mut [f64], &mut [f64], usize);
+/// Signature of the fused k≤3 quad kernel: applies the dense `dim × dim`
+/// unitary to the 4 consecutive subspace bases starting at `base`.
+/// Caller guarantees `base % 4 == 0`, `bits[0] >= 2` (so the 4 bases are
+/// memory-contiguous at every site offset) and in-bounds indices.
+pub type FusedKqQuadFn =
+    fn(&mut [f64], &mut [f64], usize, &[usize; 8], &[[f64; 8]; 8], &[[f64; 8]; 8], usize);
+
+/// One dispatch table: the kernel set for a [`SimdLevel`], selected once
+/// by [`dispatch`]. Fields are private so every call routes through the
+/// counting methods; the raw quad pointer is exposed separately for
+/// per-quad inner loops (counted once per plane by [`SimdOps::mark_used`]).
+pub struct SimdOps {
+    level: SimdLevel,
+    quant_abs: QuantAbsFn,
+    dequant_abs: DequantAbsFn,
+    pack_sign_bits: PackBitsFn,
+    pack_zero_bits: PackBitsFn,
+    popcount_words: PopcountFn,
+    zigzag_deltas: ZigzagDeltasFn,
+    dense_1q: Dense1qFn,
+    fused_kq_quad: FusedKqQuadFn,
+    huffman_multi: bool,
+}
+
+impl std::fmt::Debug for SimdOps {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimdOps").field("level", &self.level).finish()
+    }
+}
+
+impl SimdOps {
+    /// Tier this table implements.
+    pub fn level(&self) -> SimdLevel {
+        self.level
+    }
+
+    /// True when this table is a vector tier (kernel invocations through
+    /// it are counted in `Metrics::simd_kernels_used`).
+    pub fn vectorized(&self) -> bool {
+        self.level != SimdLevel::Scalar
+    }
+
+    fn note(&self) {
+        if self.level != SimdLevel::Scalar {
+            KERNELS_USED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one plane-level kernel invocation that bypassed the counting
+    /// methods (per-quad inner loops using [`SimdOps::fused_kq_quad_fn`]).
+    pub fn mark_used(&self) {
+        self.note();
+    }
+
+    /// Absolute-mode quantization with error-bound clamp + outlier escape.
+    pub fn quant_abs(
+        &self,
+        data: &[f64],
+        twoeb: f64,
+        codes: &mut Vec<i64>,
+        outliers: &mut Vec<(usize, f64)>,
+    ) {
+        self.note();
+        (self.quant_abs)(data, twoeb, codes, outliers)
+    }
+
+    /// Absolute-mode dequantization (`codes.len()` must equal `out.len()`).
+    pub fn dequant_abs(&self, codes: &[i64], twoeb: f64, out: &mut [f64]) {
+        self.note();
+        (self.dequant_abs)(codes, twoeb, out)
+    }
+
+    /// Build the strict-negative sign bitmap directly from an f64 plane.
+    pub fn pack_sign_bits(&self, data: &[f64], words: &mut Vec<u64>) -> usize {
+        self.note();
+        (self.pack_sign_bits)(data, words)
+    }
+
+    /// Build the exact-zero bitmap directly from an f64 plane.
+    pub fn pack_zero_bits(&self, data: &[f64], words: &mut Vec<u64>) -> usize {
+        self.note();
+        (self.pack_zero_bits)(data, words)
+    }
+
+    /// Population count over bitmap words.
+    pub fn popcount_words(&self, words: &[u64]) -> usize {
+        self.note();
+        (self.popcount_words)(words)
+    }
+
+    /// Residual stage 1: zigzag-encoded adjacent deltas of the code plane.
+    pub fn zigzag_deltas(&self, codes: &[i64], out: &mut Vec<u64>) {
+        self.note();
+        (self.zigzag_deltas)(codes, out)
+    }
+
+    /// Dense single-qubit sweep over split planes.
+    pub fn dense_1q(&self, m: &[f64; 8], re: &mut [f64], im: &mut [f64], bit: usize) {
+        self.note();
+        (self.dense_1q)(m, re, im, bit)
+    }
+
+    /// Raw fused-quad kernel pointer for per-quad inner loops; call
+    /// [`SimdOps::mark_used`] once per plane-level sweep instead of per quad.
+    pub fn fused_kq_quad_fn(&self) -> FusedKqQuadFn {
+        self.fused_kq_quad
+    }
+
+    /// Whether the Huffman decoder should build the multi-symbol LUT.
+    pub fn huffman_multi(&self) -> bool {
+        self.huffman_multi
+    }
+}
+
+static SCALAR_OPS: SimdOps = SimdOps {
+    level: SimdLevel::Scalar,
+    quant_abs: scalar::quant_abs,
+    dequant_abs: scalar::dequant_abs,
+    pack_sign_bits: scalar::pack_sign_bits,
+    pack_zero_bits: scalar::pack_zero_bits,
+    popcount_words: scalar::popcount_words,
+    zigzag_deltas: scalar::zigzag_deltas,
+    dense_1q: scalar::dense_1q,
+    fused_kq_quad: scalar::fused_kq_quad,
+    huffman_multi: false,
+};
+
+// SSE2 is part of the x86-64 baseline, so this tier needs no runtime
+// probe — it is the floor on any x86-64 host. Kernels whose bit-exact
+// recipe needs later ISAs keep the scalar oracle (quantize needs
+// SSE4.1 `roundpd`; popcount needs the POPCNT flag).
+#[cfg(target_arch = "x86_64")]
+static SSE2_OPS: SimdOps = SimdOps {
+    level: SimdLevel::Sse2,
+    quant_abs: scalar::quant_abs,
+    dequant_abs: sse2::dequant_abs,
+    pack_sign_bits: sse2::pack_sign_bits,
+    pack_zero_bits: sse2::pack_zero_bits,
+    popcount_words: scalar::popcount_words,
+    zigzag_deltas: sse2::zigzag_deltas,
+    dense_1q: sse2::dense_1q,
+    fused_kq_quad: sse2::fused_kq_quad,
+    huffman_multi: true,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_OPS: SimdOps = SimdOps {
+    level: SimdLevel::Avx2,
+    quant_abs: avx2::quant_abs,
+    dequant_abs: avx2::dequant_abs,
+    pack_sign_bits: avx2::pack_sign_bits,
+    pack_zero_bits: avx2::pack_zero_bits,
+    popcount_words: avx2::popcount_words,
+    zigzag_deltas: avx2::zigzag_deltas,
+    dense_1q: avx2::dense_1q,
+    fused_kq_quad: avx2::fused_kq_quad,
+    huffman_multi: true,
+};
+
+static DETECTED: OnceLock<SimdLevel> = OnceLock::new();
+/// Runtime kill switch (`--no-simd`, [`disable_scope`]); independent of
+/// the cached detection result so it can be toggled per engine run.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+/// Process-wide count of kernel invocations routed through a vector table.
+static KERNELS_USED: AtomicU64 = AtomicU64::new(0);
+
+fn no_simd_env() -> bool {
+    matches!(std::env::var("BMQSIM_NO_SIMD"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// Probe CPU features once and cache the result for the process lifetime.
+/// `BMQSIM_NO_SIMD=1` pins the scalar oracle regardless of hardware.
+pub fn detect() -> SimdLevel {
+    *DETECTED.get_or_init(|| {
+        if no_simd_env() {
+            return SimdLevel::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("popcnt")
+            {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Sse2
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            SimdLevel::Scalar
+        }
+    })
+}
+
+/// Current runtime-enable state of the vector tiers.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Toggle the vector tiers at runtime. Prefer [`disable_scope`], which
+/// restores the previous state on drop.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// RAII kill switch used by the engines for `SimConfig::no_simd`: when
+/// `disable` is true the vector tiers are switched off until the guard
+/// drops (process-wide — concurrent runs in the same process fall back
+/// to the scalar oracle for the duration, which is always byte-safe).
+#[must_use = "the guard re-enables SIMD on drop"]
+pub struct SimdGuard {
+    restore: Option<bool>,
+}
+
+pub fn disable_scope(disable: bool) -> SimdGuard {
+    if disable {
+        let prev = ENABLED.swap(false, Ordering::Relaxed);
+        SimdGuard { restore: Some(prev) }
+    } else {
+        SimdGuard { restore: None }
+    }
+}
+
+impl Drop for SimdGuard {
+    fn drop(&mut self) {
+        if let Some(prev) = self.restore {
+            ENABLED.store(prev, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The active dispatch table: the detected tier, unless the runtime kill
+/// switch is engaged (then the scalar oracle).
+pub fn dispatch() -> &'static SimdOps {
+    if !enabled() {
+        return &SCALAR_OPS;
+    }
+    match detect() {
+        SimdLevel::Scalar => &SCALAR_OPS,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => &SSE2_OPS,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => &AVX2_OPS,
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => &SCALAR_OPS,
+    }
+}
+
+/// The scalar oracle table, regardless of detection (differential tests
+/// compare [`dispatch`] against this).
+pub fn scalar_ops() -> &'static SimdOps {
+    &SCALAR_OPS
+}
+
+/// Tier the next [`dispatch`] call would route to.
+pub fn active_level() -> SimdLevel {
+    dispatch().level
+}
+
+/// Monotonic count of vector-kernel invocations since process start.
+/// Engines snapshot this around a run to fill `Metrics::simd_kernels_used`
+/// (best-effort: the counter is process-wide, so concurrent runs share it).
+pub fn kernels_used() -> u64 {
+    KERNELS_USED.load(Ordering::Relaxed)
+}
+
+/// Credit `n` kernel invocations from call sites that cannot route
+/// through a table method (the Huffman multi-symbol decode).
+pub(crate) fn note_kernels(n: u64) {
+    KERNELS_USED.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Alignment probe backing the scratch-arena debug_asserts: cache-line
+/// (64-byte) aligned pointers keep every vector load/store on the fast
+/// aligned path even though the kernels use unaligned load instructions.
+pub fn is_aligned_64<T>(p: *const T) -> bool {
+    (p as usize) % 64 == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detection_is_cached_and_coherent() {
+        let first = detect();
+        assert_eq!(detect(), first, "detection must be stable");
+        if no_simd_env() {
+            assert_eq!(first, SimdLevel::Scalar);
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(first, SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn dispatch_honors_kill_switch() {
+        // Serialize against other toggling tests via the guard API itself.
+        let guard = disable_scope(true);
+        assert_eq!(dispatch().level(), SimdLevel::Scalar);
+        assert_eq!(active_level(), SimdLevel::Scalar);
+        drop(guard);
+        assert_eq!(dispatch().level(), detect());
+    }
+
+    #[test]
+    fn guard_restores_previous_state() {
+        let outer = disable_scope(false);
+        let was = enabled();
+        {
+            let _inner = disable_scope(true);
+            assert!(!enabled());
+        }
+        assert_eq!(enabled(), was);
+        drop(outer);
+    }
+
+    #[test]
+    fn counter_counts_only_vector_tables() {
+        let before = kernels_used();
+        let mut words = Vec::new();
+        scalar_ops().pack_zero_bits(&[0.0; 128], &mut words);
+        assert_eq!(kernels_used(), before, "scalar table must not count");
+        let ops = dispatch();
+        ops.popcount_words(&words);
+        let after = kernels_used();
+        if ops.vectorized() {
+            assert!(after > before);
+        }
+        assert!(kernels_used() >= after, "counter is monotonic");
+    }
+
+    #[test]
+    fn level_names_are_stable() {
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert_eq!(SimdLevel::Sse2.name(), "sse2");
+        assert_eq!(SimdLevel::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn alignment_probe() {
+        #[repr(align(64))]
+        struct A([u8; 64]);
+        let a = A([0; 64]);
+        assert!(is_aligned_64(a.0.as_ptr()));
+        assert!(!is_aligned_64(unsafe { a.0.as_ptr().add(8) }));
+    }
+}

@@ -1,0 +1,121 @@
+//! Scalar reference kernels — the **parity oracle**.
+//!
+//! These are the exact loops the codec and gate paths ran before the
+//! vector tiers existed; every vector kernel must reproduce them
+//! bit-for-bit (same rounding at every intermediate step, same outlier
+//! push order, same bit layout). They are always compiled: they back the
+//! `Scalar` table, the non-x86 build, the `BMQSIM_NO_SIMD` kill switch,
+//! and the slots of the SSE2 table that have no bit-exact SSE2 recipe.
+
+use crate::compress::lossless::{bitmap, varint};
+use crate::compress::lossy::MAX_CODE;
+
+/// Absolute-mode quantizer: `code = round_half_away(x / twoeb)`, with
+/// non-finite or over-range values escaping to the outlier table (code 0).
+pub(super) fn quant_abs(
+    data: &[f64],
+    twoeb: f64,
+    codes: &mut Vec<i64>,
+    outliers: &mut Vec<(usize, f64)>,
+) {
+    codes.clear();
+    codes.reserve(data.len());
+    outliers.clear();
+    for (i, &x) in data.iter().enumerate() {
+        let q = x / twoeb;
+        if !x.is_finite() || q.abs() > MAX_CODE {
+            outliers.push((i, x));
+            codes.push(0);
+        } else {
+            // Round-half-away via signed-0.5 + as-cast (truncation).
+            codes.push((q + 0.5f64.copysign(q)) as i64);
+        }
+    }
+}
+
+/// Absolute-mode dequantizer. Caller guarantees equal lengths.
+pub(super) fn dequant_abs(codes: &[i64], twoeb: f64, out: &mut [f64]) {
+    for (slot, &c) in out.iter_mut().zip(codes.iter()) {
+        *slot = c as f64 * twoeb;
+    }
+}
+
+/// Strict-negative sign bitmap (−0.0 and NaN-with-clear-sign excluded,
+/// negative NaN included — matches `is_sign_negative() && x != 0.0`).
+pub(super) fn pack_sign_bits(data: &[f64], words: &mut Vec<u64>) -> usize {
+    bitmap::pack_bits_into(data.iter().map(|&x| x.is_sign_negative() && x != 0.0), words)
+}
+
+/// Exact-zero bitmap (`x == 0.0`, so both zero signs; NaN excluded).
+pub(super) fn pack_zero_bits(data: &[f64], words: &mut Vec<u64>) -> usize {
+    bitmap::pack_bits_into(data.iter().map(|&x| x == 0.0), words)
+}
+
+pub(super) fn popcount_words(words: &[u64]) -> usize {
+    words.iter().map(|w| w.count_ones() as usize).sum()
+}
+
+/// Residual stage 1: `out[i] = zigzag(codes[i] - codes[i-1])`, `codes[-1] = 0`.
+pub(super) fn zigzag_deltas(codes: &[i64], out: &mut Vec<u64>) {
+    out.clear();
+    out.reserve(codes.len());
+    let mut prev = 0i64;
+    for &c in codes {
+        out.push(varint::zigzag(c.wrapping_sub(prev)));
+        prev = c;
+    }
+}
+
+/// Dense 1-qubit sweep over split planes; `bit` is the target-qubit
+/// stride (`1 << qubit`), planes are block-contiguous pairs `(i, i|bit)`.
+pub(super) fn dense_1q(m: &[f64; 8], re: &mut [f64], im: &mut [f64], bit: usize) {
+    let [m00r, m00i, m01r, m01i, m10r, m10i, m11r, m11i] = *m;
+    let len = re.len();
+    let mut base = 0usize;
+    while base < len {
+        for i0 in base..base + bit {
+            let i1 = i0 | bit;
+            let (r0, v0) = (re[i0], im[i0]);
+            let (r1, v1) = (re[i1], im[i1]);
+            re[i0] = m00r * r0 - m00i * v0 + m01r * r1 - m01i * v1;
+            im[i0] = m00r * v0 + m00i * r0 + m01r * v1 + m01i * r1;
+            re[i1] = m10r * r0 - m10i * v0 + m11r * r1 - m11i * v1;
+            im[i1] = m10r * v0 + m10i * r0 + m11r * v1 + m11i * r1;
+        }
+        base += bit << 1;
+    }
+}
+
+/// Fused k≤3 kernel over 4 consecutive subspace bases (the scalar quad:
+/// same contract as the vector tiers, one base at a time).
+pub(super) fn fused_kq_quad(
+    re: &mut [f64],
+    im: &mut [f64],
+    base: usize,
+    offs: &[usize; 8],
+    mr: &[[f64; 8]; 8],
+    mi: &[[f64; 8]; 8],
+    dim: usize,
+) {
+    for b in base..base + 4 {
+        let mut vr = [0.0f64; 8];
+        let mut vi = [0.0f64; 8];
+        for s in 0..dim {
+            let ix = b | offs[s];
+            vr[s] = re[ix];
+            vi[s] = im[ix];
+        }
+        for r in 0..dim {
+            let (mrow, irow) = (&mr[r], &mi[r]);
+            let mut ar = 0.0f64;
+            let mut ai = 0.0f64;
+            for s in 0..dim {
+                ar += mrow[s] * vr[s] - irow[s] * vi[s];
+                ai += mrow[s] * vi[s] + irow[s] * vr[s];
+            }
+            let ix = b | offs[r];
+            re[ix] = ar;
+            im[ix] = ai;
+        }
+    }
+}

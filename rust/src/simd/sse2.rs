@@ -1,0 +1,230 @@
+//! SSE2 2-lane f64 kernels, bit-identical to [`super::scalar`].
+//!
+//! SSE2 is part of the x86-64 baseline, so these functions need no
+//! runtime probe and no `#[target_feature]` — they are safe wrappers over
+//! always-available intrinsics. Kernels without a bit-exact SSE2 recipe
+//! stay on the scalar oracle in the SSE2 table: quantization needs the
+//! SSE4.1 `roundpd` truncation, and popcount the POPCNT flag (see the
+//! table construction in `super`).
+
+#![allow(unsafe_code)]
+
+use crate::compress::lossless::varint;
+use std::arch::x86_64::*;
+
+const MAGIC_LO: i64 = 0x4330000000000000;
+const MAGIC_HI32: i64 = 0x4530000080000000u64 as i64;
+const MAGIC_ALL: i64 = 0x4530000080100000u64 as i64;
+
+pub(super) fn dequant_abs(codes: &[i64], twoeb: f64, out: &mut [f64]) {
+    let n = out.len().min(codes.len());
+    // SAFETY: SSE2 is unconditionally available on x86-64; pointer
+    // arithmetic stays within the two slices.
+    unsafe {
+        let magic_lo = _mm_set1_epi64x(MAGIC_LO);
+        let magic_hi = _mm_set1_epi64x(MAGIC_HI32);
+        let magic_all = _mm_castsi128_pd(_mm_set1_epi64x(MAGIC_ALL));
+        let lo_mask = _mm_set1_epi64x(0xFFFF_FFFFi64);
+        let vtwoeb = _mm_set1_pd(twoeb);
+        let cp = codes.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let v = _mm_loadu_si128(cp.add(i) as *const __m128i);
+            let v_lo = _mm_or_si128(_mm_and_si128(v, lo_mask), magic_lo);
+            let v_hi = _mm_xor_si128(_mm_srli_epi64::<32>(v), magic_hi);
+            let f = _mm_add_pd(
+                _mm_sub_pd(_mm_castsi128_pd(v_hi), magic_all),
+                _mm_castsi128_pd(v_lo),
+            );
+            _mm_storeu_pd(op.add(i), _mm_mul_pd(f, vtwoeb));
+            i += 2;
+        }
+        while i < n {
+            *op.add(i) = *cp.add(i) as f64 * twoeb;
+            i += 1;
+        }
+    }
+}
+
+pub(super) fn pack_sign_bits(data: &[f64], words: &mut Vec<u64>) -> usize {
+    pack_bits_impl::<true>(data, words)
+}
+
+pub(super) fn pack_zero_bits(data: &[f64], words: &mut Vec<u64>) -> usize {
+    pack_bits_impl::<false>(data, words)
+}
+
+fn pack_bits_impl<const SIGN: bool>(data: &[f64], words: &mut Vec<u64>) -> usize {
+    let n = data.len();
+    words.clear();
+    words.reserve(n.div_ceil(64));
+    // SAFETY: SSE2 baseline; loads stay within `data`.
+    unsafe {
+        let zero = _mm_setzero_pd();
+        let dp = data.as_ptr();
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let mut w = 0u64;
+            for g in 0..32 {
+                let x = _mm_loadu_pd(dp.add(i + g * 2));
+                let bits = if SIGN {
+                    (_mm_movemask_pd(x) & _mm_movemask_pd(_mm_cmpneq_pd(x, zero))) as u64
+                } else {
+                    _mm_movemask_pd(_mm_cmpeq_pd(x, zero)) as u64
+                };
+                w |= (bits & 0x3) << (g * 2);
+            }
+            words.push(w);
+            i += 64;
+        }
+        if i < n {
+            let mut w = 0u64;
+            for (fill, &x) in data[i..].iter().enumerate() {
+                let bit = if SIGN { x.is_sign_negative() && x != 0.0 } else { x == 0.0 };
+                w |= (bit as u64) << fill;
+            }
+            words.push(w);
+        }
+    }
+    n
+}
+
+pub(super) fn zigzag_deltas(codes: &[i64], out: &mut Vec<u64>) {
+    let n = codes.len();
+    out.clear();
+    out.resize(n, 0);
+    if n == 0 {
+        return;
+    }
+    out[0] = varint::zigzag(codes[0]);
+    // SAFETY: SSE2 baseline; overlapping unaligned loads stay in-bounds
+    // (`j - 1 >= 0`, `j + 1 < n`).
+    unsafe {
+        let cp = codes.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut j = 1usize;
+        while j + 2 <= n {
+            let cur = _mm_loadu_si128(cp.add(j) as *const __m128i);
+            let prev = _mm_loadu_si128(cp.add(j - 1) as *const __m128i);
+            let d = _mm_sub_epi64(cur, prev);
+            // Arithmetic 63-shift per 64-bit lane: srai on the high dwords,
+            // then duplicate them across each lane.
+            let m = _mm_shuffle_epi32::<0b1111_0101>(_mm_srai_epi32::<31>(d));
+            let zz = _mm_xor_si128(_mm_slli_epi64::<1>(d), m);
+            _mm_storeu_si128(op.add(j) as *mut __m128i, zz);
+            j += 2;
+        }
+        while j < n {
+            *op.add(j) = varint::zigzag((*cp.add(j)).wrapping_sub(*cp.add(j - 1)));
+            j += 1;
+        }
+    }
+}
+
+pub(super) fn dense_1q(m: &[f64; 8], re: &mut [f64], im: &mut [f64], bit: usize) {
+    if bit < 2 {
+        return super::scalar::dense_1q(m, re, im, bit);
+    }
+    // SAFETY: SSE2 baseline; `(i, i|bit)` pair indexing matches the
+    // scalar sweep, all indices < len.
+    unsafe {
+        let m00r = _mm_set1_pd(m[0]);
+        let m00i = _mm_set1_pd(m[1]);
+        let m01r = _mm_set1_pd(m[2]);
+        let m01i = _mm_set1_pd(m[3]);
+        let m10r = _mm_set1_pd(m[4]);
+        let m10i = _mm_set1_pd(m[5]);
+        let m11r = _mm_set1_pd(m[6]);
+        let m11i = _mm_set1_pd(m[7]);
+        let len = re.len();
+        let rp = re.as_mut_ptr();
+        let ip = im.as_mut_ptr();
+        let mut base = 0usize;
+        while base < len {
+            let mut i0 = base;
+            while i0 < base + bit {
+                let i1 = i0 | bit;
+                let r0 = _mm_loadu_pd(rp.add(i0));
+                let v0 = _mm_loadu_pd(ip.add(i0));
+                let r1 = _mm_loadu_pd(rp.add(i1));
+                let v1 = _mm_loadu_pd(ip.add(i1));
+                let nr0 = _mm_sub_pd(
+                    _mm_add_pd(
+                        _mm_sub_pd(_mm_mul_pd(m00r, r0), _mm_mul_pd(m00i, v0)),
+                        _mm_mul_pd(m01r, r1),
+                    ),
+                    _mm_mul_pd(m01i, v1),
+                );
+                let ni0 = _mm_add_pd(
+                    _mm_add_pd(
+                        _mm_add_pd(_mm_mul_pd(m00r, v0), _mm_mul_pd(m00i, r0)),
+                        _mm_mul_pd(m01r, v1),
+                    ),
+                    _mm_mul_pd(m01i, r1),
+                );
+                let nr1 = _mm_sub_pd(
+                    _mm_add_pd(
+                        _mm_sub_pd(_mm_mul_pd(m10r, r0), _mm_mul_pd(m10i, v0)),
+                        _mm_mul_pd(m11r, r1),
+                    ),
+                    _mm_mul_pd(m11i, v1),
+                );
+                let ni1 = _mm_add_pd(
+                    _mm_add_pd(
+                        _mm_add_pd(_mm_mul_pd(m10r, v0), _mm_mul_pd(m10i, r0)),
+                        _mm_mul_pd(m11r, v1),
+                    ),
+                    _mm_mul_pd(m11i, r1),
+                );
+                _mm_storeu_pd(rp.add(i0), nr0);
+                _mm_storeu_pd(ip.add(i0), ni0);
+                _mm_storeu_pd(rp.add(i1), nr1);
+                _mm_storeu_pd(ip.add(i1), ni1);
+                i0 += 2;
+            }
+            base += bit << 1;
+        }
+    }
+}
+
+pub(super) fn fused_kq_quad(
+    re: &mut [f64],
+    im: &mut [f64],
+    base: usize,
+    offs: &[usize; 8],
+    mr: &[[f64; 8]; 8],
+    mi: &[[f64; 8]; 8],
+    dim: usize,
+) {
+    // The quad contract guarantees 4 consecutive bases; run them as two
+    // 2-lane halves.
+    // SAFETY: SSE2 baseline; caller guarantees in-bounds indices.
+    unsafe {
+        for half in 0..2 {
+            let b = base + half * 2;
+            let rp = re.as_mut_ptr();
+            let ip = im.as_mut_ptr();
+            let mut vr = [_mm_setzero_pd(); 8];
+            let mut vi = [_mm_setzero_pd(); 8];
+            for s in 0..dim {
+                let ix = b | offs[s];
+                vr[s] = _mm_loadu_pd(rp.add(ix));
+                vi[s] = _mm_loadu_pd(ip.add(ix));
+            }
+            for r in 0..dim {
+                let mut ar = _mm_setzero_pd();
+                let mut ai = _mm_setzero_pd();
+                for s in 0..dim {
+                    let mre = _mm_set1_pd(mr[r][s]);
+                    let mim = _mm_set1_pd(mi[r][s]);
+                    ar = _mm_add_pd(ar, _mm_sub_pd(_mm_mul_pd(mre, vr[s]), _mm_mul_pd(mim, vi[s])));
+                    ai = _mm_add_pd(ai, _mm_add_pd(_mm_mul_pd(mre, vi[s]), _mm_mul_pd(mim, vr[s])));
+                }
+                let ix = b | offs[r];
+                _mm_storeu_pd(rp.add(ix), ar);
+                _mm_storeu_pd(ip.add(ix), ai);
+            }
+        }
+    }
+}

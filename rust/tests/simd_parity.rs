@@ -1,0 +1,353 @@
+//! Differential parity suite for the vectorized kernels (`src/simd`).
+//!
+//! Every vector kernel is compared pointwise against the always-compiled
+//! scalar oracle (`simd::scalar_ops()`) across lane widths, unaligned
+//! slice offsets, tail lengths, and special values — the contract is
+//! *byte identity*, not approximate agreement, so every comparison here
+//! is on `f64::to_bits` / exact integers.
+//!
+//! Note on the global kill switch: `simd::dispatch()` honors the
+//! process-wide `disable_scope` guard, and tests in this binary run
+//! concurrently. If a `no_simd` engine run overlaps a kernel test, that
+//! test transiently compares scalar against scalar — still valid, never
+//! flaky. Counter assertions are gated on the fetched table actually
+//! being a vector tier, and no test asserts the process-wide counter is
+//! zero (other threads may bump it at any time).
+
+use bmqsim::circuit::generators;
+use bmqsim::compress::{Codec, CodecScratch};
+use bmqsim::gates::fused::subspace_bases;
+use bmqsim::sim::{BmqSim, DenseSim, SimConfig};
+use bmqsim::simd;
+use bmqsim::types::SplitMix64;
+
+/// Lengths spanning sub-lane, exact-lane, and ragged-tail cases for
+/// every lane width in play (2, 4, and the 64-wide bitmap word).
+const LENS: &[usize] =
+    &[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100, 127, 128, 129, 1023];
+
+fn special(sel: u64) -> f64 {
+    match sel % 8 {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => 0.0,
+        4 => -0.0,
+        5 => 4.9e-324, // smallest subnormal
+        6 => 1e300,
+        _ => -1e300,
+    }
+}
+
+/// Random plane; with `specials`, ~1 in 7 slots is a special value.
+fn plane(len: usize, seed: u64, specials: bool) -> Vec<f64> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len)
+        .map(|_| {
+            if specials && rng.next_below(7) == 0 {
+                special(rng.next_u64())
+            } else {
+                rng.next_gaussian()
+            }
+        })
+        .collect()
+}
+
+fn mat8(rng: &mut SplitMix64) -> [[f64; 8]; 8] {
+    std::array::from_fn(|_| std::array::from_fn(|_| rng.next_gaussian()))
+}
+
+fn assert_f64_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: index {i}: {x:?} vs {y:?}");
+    }
+}
+
+#[test]
+fn quant_dequant_parity() {
+    let v = simd::dispatch();
+    let s = simd::scalar_ops();
+    let twoeb = 2.0e-3;
+    let big = plane(1200, 0xA1, true);
+    for &len in LENS {
+        // Slice offsets 0..4 de-align the data from whatever the
+        // allocator gave us, so vector loads hit every alignment class.
+        for off in 0..4 {
+            let data = &big[off..off + len];
+            let (mut cv, mut ov) = (Vec::new(), Vec::new());
+            let (mut cs, mut os) = (Vec::new(), Vec::new());
+            v.quant_abs(data, twoeb, &mut cv, &mut ov);
+            s.quant_abs(data, twoeb, &mut cs, &mut os);
+            assert_eq!(cv, cs, "codes: len={len} off={off}");
+            assert_eq!(ov.len(), os.len(), "outlier count: len={len} off={off}");
+            for ((ia, xa), (ib, xb)) in ov.iter().zip(os.iter()) {
+                assert_eq!(ia, ib, "outlier index: len={len} off={off}");
+                assert_eq!(xa.to_bits(), xb.to_bits(), "outlier value: len={len} off={off}");
+            }
+            let mut dv = vec![0.0; len];
+            let mut ds = vec![0.0; len];
+            v.dequant_abs(&cv, twoeb, &mut dv);
+            s.dequant_abs(&cs, twoeb, &mut ds);
+            assert_f64_bits_eq(&dv, &ds, &format!("dequant len={len} off={off}"));
+        }
+    }
+}
+
+/// The MAX_CODE clamp edge (|x/twoeb| just below, at, and above 4.0e15)
+/// must pick the outlier escape vs. the rounded code identically, and
+/// round-half-away ties must round the same way.
+#[test]
+fn quant_parity_at_the_outlier_boundary() {
+    let v = simd::dispatch();
+    let s = simd::scalar_ops();
+    let twoeb = 2.0e-3;
+    let mc = 4.0e15;
+    let mut edge = Vec::new();
+    for &q in &[0.5, -0.5, 1.5, -1.5, 2.5, -2.5, 0.0] {
+        edge.push(q * twoeb);
+    }
+    for &q in &[mc * (1.0 - 1e-10), mc, mc * (1.0 + 1e-10), mc * 2.0] {
+        edge.push(q * twoeb);
+        edge.push(-q * twoeb);
+    }
+    let (mut cv, mut ov) = (Vec::new(), Vec::new());
+    let (mut cs, mut os) = (Vec::new(), Vec::new());
+    v.quant_abs(&edge, twoeb, &mut cv, &mut ov);
+    s.quant_abs(&edge, twoeb, &mut cs, &mut os);
+    assert_eq!(cv, cs, "boundary codes");
+    assert_eq!(ov, os, "boundary outliers");
+}
+
+/// Dequantization across the full contract range of codes (|code| <=
+/// 4.0e15, which is all the quantizer can ever emit).
+#[test]
+fn dequant_parity_across_code_range() {
+    let v = simd::dispatch();
+    let s = simd::scalar_ops();
+    let mut rng = SplitMix64::new(0xDE11);
+    let span = 8_000_000_000_000_001u64; // 2 * 4e15 + 1
+    let codes: Vec<i64> = (0..1037)
+        .map(|i| match i % 7 {
+            0 => 4_000_000_000_000_000,
+            1 => -4_000_000_000_000_000,
+            2 => 0,
+            _ => (rng.next_u64() % span) as i64 - 4_000_000_000_000_000,
+        })
+        .collect();
+    for &len in LENS {
+        for off in 0..4 {
+            let c = &codes[off..off + len];
+            let mut dv = vec![0.0; len];
+            let mut ds = vec![0.0; len];
+            v.dequant_abs(c, 2.0e-3, &mut dv);
+            s.dequant_abs(c, 2.0e-3, &mut ds);
+            assert_f64_bits_eq(&dv, &ds, &format!("dequant range len={len} off={off}"));
+        }
+    }
+}
+
+#[test]
+fn bitmap_and_popcount_parity() {
+    let v = simd::dispatch();
+    let s = simd::scalar_ops();
+    // Heavy on zeros and sign flips so both bitmaps get dense bit traffic.
+    let mut rng = SplitMix64::new(0xB17);
+    let big: Vec<f64> = (0..1200)
+        .map(|_| match rng.next_below(6) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f64::NAN,
+            3 => -f64::NAN,
+            _ => rng.next_gaussian(),
+        })
+        .collect();
+    for &len in LENS {
+        for off in 0..4 {
+            let data = &big[off..off + len];
+            let (mut wv, mut ws) = (Vec::new(), Vec::new());
+            let nv = v.pack_sign_bits(data, &mut wv);
+            let ns = s.pack_sign_bits(data, &mut ws);
+            assert_eq!(nv, ns, "sign count: len={len} off={off}");
+            assert_eq!(wv, ws, "sign words: len={len} off={off}");
+            let zv = v.pack_zero_bits(data, &mut wv);
+            let zs = s.pack_zero_bits(data, &mut ws);
+            assert_eq!(zv, zs, "zero count: len={len} off={off}");
+            assert_eq!(wv, ws, "zero words: len={len} off={off}");
+            let pv = v.popcount_words(&wv);
+            let ps = s.popcount_words(&ws);
+            assert_eq!(pv, ps, "popcount: len={len} off={off}");
+        }
+    }
+    // Popcount over raw random words (all bit densities).
+    let words: Vec<u64> = (0..257).map(|_| rng.next_u64()).collect();
+    for &wlen in &[0usize, 1, 2, 3, 7, 8, 9, 31, 32, 33, 255] {
+        let pv = v.popcount_words(&words[..wlen]);
+        let ps = s.popcount_words(&words[..wlen]);
+        assert_eq!(pv, ps, "popcount words len={wlen}");
+    }
+}
+
+#[test]
+fn zigzag_deltas_parity() {
+    let v = simd::dispatch();
+    let s = simd::scalar_ops();
+    let mut rng = SplitMix64::new(0x2162);
+    let big: Vec<i64> = (0..1200)
+        .map(|_| match rng.next_below(10) {
+            0 => i64::MAX,
+            1 => i64::MIN,
+            2 => 0,
+            3 => -1,
+            _ => rng.next_u64() as i64,
+        })
+        .collect();
+    for &len in LENS {
+        for off in 0..4 {
+            let codes = &big[off..off + len];
+            let (mut zv, mut zs) = (Vec::new(), Vec::new());
+            v.zigzag_deltas(codes, &mut zv);
+            s.zigzag_deltas(codes, &mut zs);
+            assert_eq!(zv, zs, "zigzag: len={len} off={off}");
+        }
+    }
+}
+
+#[test]
+fn dense_1q_parity() {
+    let v = simd::dispatch();
+    let s = simd::scalar_ops();
+    let mut rng = SplitMix64::new(0xD15E);
+    let m: [f64; 8] = std::array::from_fn(|_| rng.next_gaussian());
+    for &n in &[2usize, 4, 6, 7] {
+        let len = 1usize << n;
+        for bitpow in 0..n {
+            let bit = 1usize << bitpow;
+            let re0 = plane(len, 0xE0 + n as u64, false);
+            let im0 = plane(len, 0xF0 + n as u64, false);
+            let (mut rv, mut iv) = (re0.clone(), im0.clone());
+            let (mut rs, mut is_) = (re0, im0);
+            v.dense_1q(&m, &mut rv, &mut iv, bit);
+            s.dense_1q(&m, &mut rs, &mut is_, bit);
+            assert_f64_bits_eq(&rv, &rs, &format!("dense_1q re n={n} bit={bit}"));
+            assert_f64_bits_eq(&iv, &is_, &format!("dense_1q im n={n} bit={bit}"));
+        }
+    }
+}
+
+#[test]
+fn fused_kq_quad_parity() {
+    let v = simd::dispatch();
+    let s = simd::scalar_ops();
+    // Supports with bits[0] >= 2 — the quad-contiguity precondition the
+    // fused apply path checks before dispatching the vector kernel.
+    let cases: &[&[usize]] = &[&[2], &[5], &[2, 4], &[3, 5], &[2, 3, 6], &[3, 4, 5]];
+    let len = 1usize << 8;
+    let mut rng = SplitMix64::new(0xF0ED);
+    for (case, &bits) in cases.iter().enumerate() {
+        let dim = 1usize << bits.len();
+        let mut offs = [0usize; 8];
+        for (site, off) in offs.iter_mut().enumerate().take(dim) {
+            for (j, &b) in bits.iter().enumerate() {
+                if site & (1 << j) != 0 {
+                    *off |= 1 << b;
+                }
+            }
+        }
+        let mr = mat8(&mut rng);
+        let mi = mat8(&mut rng);
+        let re0 = plane(len, 0x100 + case as u64, false);
+        let im0 = plane(len, 0x200 + case as u64, false);
+        let (mut rv, mut iv) = (re0.clone(), im0.clone());
+        let (mut rs, mut is_) = (re0, im0);
+        let qv = v.fused_kq_quad_fn();
+        let qs = s.fused_kq_quad_fn();
+        for base in subspace_bases(len, bits).step_by(4) {
+            qv(&mut rv, &mut iv, base, &offs, &mr, &mi, dim);
+        }
+        for base in subspace_bases(len, bits).step_by(4) {
+            qs(&mut rs, &mut is_, base, &offs, &mr, &mi, dim);
+        }
+        assert_f64_bits_eq(&rv, &rs, &format!("fused quad re bits={bits:?}"));
+        assert_f64_bits_eq(&iv, &is_, &format!("fused quad im bits={bits:?}"));
+    }
+}
+
+/// End-to-end codec parity: compressing with the dispatched table and
+/// with a scalar-pinned `CodecScratch` must produce byte-identical
+/// payloads, and both decode paths must reproduce identical planes.
+/// The 4096-length case exceeds the multi-symbol Huffman threshold, so
+/// the table-driven multi decode is exercised against the same bytes.
+#[test]
+fn codec_byte_identity_vector_vs_scalar() {
+    let mut pw_no_prescan = Codec::pointwise(1e-3);
+    pw_no_prescan.prescan = false;
+    let codecs = [Codec::absolute(1e-3), Codec::pointwise(1e-3), pw_no_prescan, Codec::raw()];
+    for (ci, codec) in codecs.iter().enumerate() {
+        for &len in &[0usize, 1, 5, 63, 64, 100, 1024, 4096] {
+            // Mix smooth amplitudes with exact zeros so the pointwise
+            // zero bitmap and the residual run-length branch both fire.
+            let mut rng = SplitMix64::new(0xC0DEC ^ ((ci as u64) << 20) ^ len as u64);
+            let data: Vec<f64> = (0..len)
+                .map(|i| {
+                    if rng.next_below(5) == 0 {
+                        0.0
+                    } else {
+                        1e-2 * ((i as f64) * 0.01).sin() + 1e-4 * rng.next_gaussian()
+                    }
+                })
+                .collect();
+            let mut sv = CodecScratch::new();
+            let mut ss = CodecScratch::with_ops(simd::scalar_ops());
+            let (mut bv, mut bs) = (Vec::new(), Vec::new());
+            codec.compress_into_with(&data, &mut bv, &mut sv).unwrap();
+            codec.compress_into_with(&data, &mut bs, &mut ss).unwrap();
+            assert_eq!(bv, bs, "payload: codec={} len={len}", codec.name());
+            let mut ov = vec![0.0; len];
+            let mut os_ = vec![0.0; len];
+            codec.decompress_into_with(&bv, &mut ov, &mut sv).unwrap();
+            codec.decompress_into_with(&bs, &mut os_, &mut ss).unwrap();
+            assert_f64_bits_eq(&ov, &os_, &format!("decode: codec={} len={len}", codec.name()));
+        }
+    }
+}
+
+/// `--no-simd` (SimConfig::no_simd) must be a pure diagnostic knob: the
+/// final state of a full engine run is bit-for-bit identical with the
+/// vector kernels pinned off. (`simd_kernels_used` is not asserted to
+/// be zero here: the counter is process-wide and concurrent tests in
+/// this binary bump it.)
+#[test]
+fn no_simd_engine_run_is_byte_identical() {
+    let c = generators::qft(10);
+    let cfg = |no_simd: bool| SimConfig { block_qubits: 8, no_simd, ..SimConfig::default() };
+
+    let a = BmqSim::new(cfg(false)).run(&c, true).unwrap();
+    let b = BmqSim::new(cfg(true)).run(&c, true).unwrap();
+    let (sa, sb) = (a.state.unwrap(), b.state.unwrap());
+    assert_f64_bits_eq(&sa.re, &sb.re, "bmqsim re");
+    assert_f64_bits_eq(&sa.im, &sb.im, "bmqsim im");
+
+    let d1 = DenseSim::new(cfg(false)).run(&c).unwrap();
+    let d2 = DenseSim::new(cfg(true)).run(&c).unwrap();
+    let (sd1, sd2) = (d1.state.unwrap(), d2.state.unwrap());
+    assert_f64_bits_eq(&sd1.re, &sd2.re, "dense re");
+    assert_f64_bits_eq(&sd1.im, &sd2.im, "dense im");
+}
+
+/// On vector-capable hosts, kernel invocations through a vector table
+/// are counted. Gated on the *fetched* table being a vector tier so the
+/// test is meaningful-or-skipped, never flaky (a concurrent `no_simd`
+/// engine run can transiently pin dispatch to scalar).
+#[test]
+fn vector_tables_count_invocations() {
+    let t = simd::dispatch();
+    if !t.vectorized() {
+        return;
+    }
+    let before = simd::kernels_used();
+    let data = plane(256, 0xC0, false);
+    let (mut codes, mut outliers) = (Vec::new(), Vec::new());
+    t.quant_abs(&data, 2.0e-3, &mut codes, &mut outliers);
+    assert!(simd::kernels_used() > before, "vector quant_abs must bump the kernel counter");
+}
