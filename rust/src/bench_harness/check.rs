@@ -35,36 +35,53 @@ pub enum Direction {
 }
 
 /// One gated metric: which artifact, where in it, and which direction
-/// counts as a regression.
+/// counts as a regression. `optional` marks metrics that are legitimately
+/// absent (rendered `null`) on some runs — occupancy ratios are undefined
+/// when a run records no phase time at all — so an absent fresh value is
+/// a skip-with-note, not a regression. Non-optional metrics vanishing IS
+/// a regression.
 pub struct Rule {
     pub file: &'static str,
     pub path: &'static [&'static str],
     pub direction: Direction,
+    pub optional: bool,
 }
 
 /// The gated ratio metrics (ISSUE 5): one stable ratio per artifact.
 /// `BENCH_streams.json` is stamped and archived but not gated — its
-/// speedup geomean is too close to 1 in smoke mode to pin.
+/// speedup geomean is too close to 1 in smoke mode to pin. The two
+/// occupancy gates on `BENCH_overlap.json` pin the barrier pipeline and
+/// the cross-stage pipeline separately (ISSUE 8).
 pub const RULES: &[Rule] = &[
     Rule {
         file: "BENCH_hotpath.json",
         path: &["group_chain", "speedup"],
         direction: Direction::HigherBetter,
+        optional: false,
     },
     Rule {
         file: "BENCH_gates.json",
         path: &["speedup"],
         direction: Direction::HigherBetter,
+        optional: false,
     },
     Rule {
         file: "BENCH_memory.json",
         path: &["spill_fraction"],
         direction: Direction::HigherBetter,
+        optional: false,
     },
     Rule {
         file: "BENCH_overlap.json",
         path: &["pipeline_occupancy"],
         direction: Direction::HigherBetter,
+        optional: true,
+    },
+    Rule {
+        file: "BENCH_overlap.json",
+        path: &["cross_stage_occupancy"],
+        direction: Direction::HigherBetter,
+        optional: true,
     },
 ];
 
@@ -207,6 +224,12 @@ pub fn run(cfg: &CheckConfig) -> std::result::Result<Report, String> {
         }
         let fresh = lookup(&fresh_doc, rule.path);
         let Some(fresh) = fresh.filter(|v| v.is_finite()) else {
+            if rule.optional {
+                // Occupancy-style ratios are undefined (null) on runs that
+                // record no phase time; skip rather than flag.
+                notes.push(format!("{}: fresh {metric} absent/null; skipped", rule.file));
+                continue;
+            }
             findings.push(Finding {
                 file: rule.file.to_string(),
                 metric,
@@ -238,9 +261,10 @@ pub fn refresh(cfg: &CheckConfig) -> std::result::Result<usize, String> {
     std::fs::create_dir_all(&cfg.baseline_dir)
         .map_err(|e| format!("cannot create {}: {e}", cfg.baseline_dir.display()))?;
     let mut refreshed = 0usize;
+    let mut done = std::collections::BTreeSet::new();
     for rule in RULES {
         let fresh_path = cfg.fresh_dir.join(rule.file);
-        if !fresh_path.is_file() {
+        if !fresh_path.is_file() || !done.insert(rule.file) {
             continue;
         }
         let dst = cfg.baseline_dir.join(rule.file);
@@ -249,6 +273,61 @@ pub fn refresh(cfg: &CheckConfig) -> std::result::Result<usize, String> {
         refreshed += 1;
     }
     Ok(refreshed)
+}
+
+/// Append one schema-stamped JSONL line per fresh gated artifact to the
+/// committed history file (ISSUE 8 satellite): git sha and schema version
+/// are copied out of the artifact itself (every `BENCH_*.json` is stamped
+/// at emission), the timestamp is taken here, and only the gated ratio
+/// metrics are recorded — the noisy absolutes stay out of the history for
+/// the same reason they stay out of the gate. Returns lines appended.
+pub fn append_history(cfg: &CheckConfig, history: &Path) -> std::result::Result<usize, String> {
+    let date_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut lines = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for rule in RULES {
+        if !seen.insert(rule.file) {
+            continue; // one line per artifact, not per rule
+        }
+        let fresh_path = cfg.fresh_dir.join(rule.file);
+        if !fresh_path.is_file() {
+            continue;
+        }
+        let doc = load_json(&fresh_path)?;
+        let schema = doc.get("schema_version").and_then(Json::as_f64).unwrap_or(0.0);
+        let sha = doc.get("git_sha").and_then(Json::as_str).unwrap_or("unknown");
+        let metrics: Vec<String> = RULES
+            .iter()
+            .filter(|r| r.file == rule.file)
+            .filter_map(|r| {
+                lookup(&doc, r.path)
+                    .filter(|v| v.is_finite())
+                    .map(|v| format!("\"{}\": {v:.4}", r.path.join(".")))
+            })
+            .collect();
+        lines.push(format!(
+            "{{\"schema_version\": {schema}, \"git_sha\": \"{sha}\", \"date_unix\": \
+             {date_unix}, \"file\": \"{}\", \"metrics\": {{{}}}}}",
+            rule.file,
+            metrics.join(", ")
+        ));
+    }
+    if lines.is_empty() {
+        return Ok(0);
+    }
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(history)
+        .map_err(|e| format!("cannot open {}: {e}", history.display()))?;
+    for line in &lines {
+        writeln!(f, "{line}").map_err(|e| format!("cannot append {}: {e}", history.display()))?;
+    }
+    Ok(lines.len())
 }
 
 #[cfg(test)]
@@ -306,6 +385,48 @@ mod tests {
     }
 
     #[test]
+    fn optional_metric_null_is_skipped_but_regression_still_fires() {
+        let fresh = tmp("opt-fresh");
+        let base = tmp("opt-base");
+        write(
+            &base,
+            "BENCH_overlap.json",
+            r#"{"pipeline_occupancy": 0.8, "cross_stage_occupancy": 0.8}"#,
+        );
+        // Both occupancies null (idle run): skipped with notes, no failures.
+        write(
+            &fresh,
+            "BENCH_overlap.json",
+            r#"{"pipeline_occupancy": null, "cross_stage_occupancy": null}"#,
+        );
+        let r = run(&CheckConfig::new(&fresh, &base)).unwrap();
+        assert_eq!(r.failures(), 0);
+        assert!(r.notes.iter().any(|n| n.contains("cross_stage_occupancy")));
+        // Present-but-collapsed cross-stage occupancy still regresses.
+        write(
+            &fresh,
+            "BENCH_overlap.json",
+            r#"{"pipeline_occupancy": 0.8, "cross_stage_occupancy": 0.1}"#,
+        );
+        let r = run(&CheckConfig::new(&fresh, &base)).unwrap();
+        assert_eq!(r.failures(), 1);
+        assert!(r.findings.iter().any(|f| f.metric == "cross_stage_occupancy" && f.failed));
+    }
+
+    #[test]
+    fn refresh_copies_each_file_once_despite_multiple_rules() {
+        let fresh = tmp("once-fresh");
+        let base = tmp("once-base");
+        write(
+            &fresh,
+            "BENCH_overlap.json",
+            r#"{"pipeline_occupancy": 0.7, "cross_stage_occupancy": 0.75}"#,
+        );
+        let cfg = CheckConfig::new(&fresh, &base);
+        assert_eq!(refresh(&cfg).unwrap(), 1, "two rules, one artifact, one copy");
+    }
+
+    #[test]
     fn regressed_covers_both_directions() {
         // HigherBetter: a floor — only drops beyond tolerance fail.
         assert!(regressed(Direction::HigherBetter, 2.0, 1.4, 0.25));
@@ -346,6 +467,41 @@ mod tests {
         assert_eq!(run(&cfg).unwrap().failures(), 1);
         assert_eq!(refresh(&cfg).unwrap(), 1);
         assert_eq!(run(&cfg).unwrap().failures(), 0);
+    }
+
+    #[test]
+    fn append_history_stamps_one_parseable_line_per_artifact() {
+        let fresh = tmp("hist-fresh");
+        let base = tmp("hist-base");
+        write(
+            &fresh,
+            "BENCH_overlap.json",
+            r#"{"schema_version": 2, "git_sha": "abc1234",
+                "pipeline_occupancy": 0.7, "cross_stage_occupancy": 0.75}"#,
+        );
+        write(&fresh, "BENCH_gates.json", r#"{"schema_version": 2, "speedup": 3.0}"#);
+        let hist = fresh.join("bench_history.jsonl");
+        let cfg = CheckConfig::new(&fresh, &base);
+        assert_eq!(append_history(&cfg, &hist).unwrap(), 2);
+        assert_eq!(append_history(&cfg, &hist).unwrap(), 2, "append, not truncate");
+        let body = std::fs::read_to_string(&hist).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in lines {
+            let doc = Json::parse(line).expect("history line must be valid JSON");
+            assert!(doc.get("date_unix").and_then(Json::as_f64).is_some());
+            assert!(doc.get("file").and_then(Json::as_str).is_some());
+            assert!(doc.get("metrics").and_then(Json::as_obj).is_some());
+        }
+        let overlap_line = body.lines().find(|l| l.contains("BENCH_overlap")).unwrap();
+        let doc = Json::parse(overlap_line).unwrap();
+        assert_eq!(doc.get("git_sha").and_then(Json::as_str), Some("abc1234"));
+        let occ = doc
+            .get("metrics")
+            .and_then(|m| m.get("cross_stage_occupancy"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((occ - 0.75).abs() < 1e-9);
     }
 
     #[test]

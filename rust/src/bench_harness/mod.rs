@@ -369,7 +369,7 @@ pub fn overlap_study(
     depth: usize,
 ) -> Result<(Table, Vec<(String, String)>)> {
     let c = generators::build(name, n, SEED)?;
-    let mk = |budget: Option<usize>, overlap: bool| {
+    let mk = |budget: Option<usize>, overlap: bool, cross: bool| {
         let mut config = cfg(block_qubits, 2);
         config.pipeline = PipelineConfig::new(1, workers);
         config.memory_budget = budget;
@@ -377,38 +377,55 @@ pub fn overlap_study(
             config.spill_dir = Some(spill_dir());
         }
         config.overlap = OverlapMode::pinned(overlap);
+        config.cross_stage = OverlapMode::pinned(cross);
         config.pipeline_depth = depth;
         config.pipeline_depth_auto = false; // the study pins its geometry
         config
     };
     // Probe the unconstrained compressed peak, then squeeze the budget to
     // a quarter of it so the spill machinery is fully engaged.
-    let probe = BmqSim::new(mk(None, false)).run(&c, false)?;
+    let probe = BmqSim::new(mk(None, false, false)).run(&c, false)?;
     let budget = (probe.peak_bytes / 4).max(1 << 12);
-    let seq = BmqSim::new(mk(Some(budget), false)).run(&c, true)?;
-    let ovl = BmqSim::new(mk(Some(budget), true)).run(&c, true)?;
+    let seq = BmqSim::new(mk(Some(budget), false, false)).run(&c, true)?;
+    // Pipelined with the per-stage barrier, then with cross-stage epochs:
+    // the boundary cost the stitched schedule + shared-block gates remove.
+    let ovl = BmqSim::new(mk(Some(budget), true, false)).run(&c, true)?;
+    let xst = BmqSim::new(mk(Some(budget), true, true)).run(&c, true)?;
 
     let sa = seq.state.as_ref().unwrap();
     let oa = ovl.state.as_ref().unwrap();
-    let bitwise = sa.re == oa.re && sa.im == oa.im;
+    let xa = xst.state.as_ref().unwrap();
+    let bitwise = sa.re == oa.re && sa.im == oa.im && sa.re == xa.re && sa.im == xa.im;
     let fidelity = oa.fidelity_normalized(sa);
     let seq_thr = seq.metrics.groups_processed as f64 / seq.wall_secs;
     let ovl_thr = ovl.metrics.groups_processed as f64 / ovl.wall_secs;
+    let xst_thr = xst.metrics.groups_processed as f64 / xst.wall_secs;
+    let occ = |r: &crate::sim::SimResult| {
+        r.metrics
+            .pipeline_occupancy()
+            .map_or("-".to_string(), |v| format!("{:.0}%", 100.0 * v))
+    };
+    let occ_json = |r: &crate::sim::SimResult| {
+        r.metrics.pipeline_occupancy().map_or("null".to_string(), bench_json::num)
+    };
 
     let mut t = Table::new(&[
         "chain", "wall (s)", "groups/s", "occupancy", "decode-ahead", "overlap stall (ms)",
-        "spill stall (ms)", "reordered",
+        "boundary stall (ms)", "spill stall (ms)", "reordered",
     ]);
-    for (label, r, thr) in
-        [("sequential", &seq, seq_thr), ("pipelined", &ovl, ovl_thr)]
-    {
+    for (label, r, thr) in [
+        ("sequential", &seq, seq_thr),
+        ("pipelined", &ovl, ovl_thr),
+        ("cross-stage", &xst, xst_thr),
+    ] {
         t.row(&[
             label.to_string(),
             format!("{:.3}", r.wall_secs),
             format!("{thr:.0}"),
-            format!("{:.0}%", 100.0 * r.metrics.pipeline_occupancy()),
+            occ(r),
             r.metrics.decode_ahead_hits.to_string(),
             format!("{:.1}", r.metrics.overlap_stall_ns as f64 * 1e-6),
+            format!("{:.1}", r.metrics.boundary_stall_ns as f64 * 1e-6),
             format!("{:.1}", r.mem.spill_stall_ns as f64 * 1e-6),
             r.metrics.groups_reordered.to_string(),
         ]);
@@ -422,12 +439,28 @@ pub fn overlap_study(
         ("unconstrained_peak_bytes".to_string(), probe.peak_bytes.to_string()),
         ("seq_wall_s".to_string(), bench_json::num(seq.wall_secs)),
         ("pipelined_wall_s".to_string(), bench_json::num(ovl.wall_secs)),
+        ("cross_stage_wall_s".to_string(), bench_json::num(xst.wall_secs)),
         ("seq_groups_per_s".to_string(), bench_json::num(seq_thr)),
         ("pipelined_groups_per_s".to_string(), bench_json::num(ovl_thr)),
+        ("cross_stage_groups_per_s".to_string(), bench_json::num(xst_thr)),
         ("speedup".to_string(), bench_json::num(ovl_thr / seq_thr)),
+        ("cross_stage_speedup".to_string(), bench_json::num(xst_thr / seq_thr)),
+        // `pipeline_occupancy` stays the barrier-pipelined run for baseline
+        // continuity; `cross_stage_occupancy` is the headline the epoch
+        // window is expected to raise.
+        ("pipeline_occupancy".to_string(), occ_json(&ovl)),
+        ("cross_stage_occupancy".to_string(), occ_json(&xst)),
         (
-            "pipeline_occupancy".to_string(),
-            bench_json::num(ovl.metrics.pipeline_occupancy()),
+            "cross_stage_decodes".to_string(),
+            xst.metrics.cross_stage_decodes.to_string(),
+        ),
+        (
+            "boundary_stall_ms".to_string(),
+            bench_json::num(xst.metrics.boundary_stall_ns as f64 * 1e-6),
+        ),
+        (
+            "epoch_drain_ms".to_string(),
+            bench_json::num(xst.metrics.epoch_drain_ns as f64 * 1e-6),
         ),
         (
             "decode_ahead_hits".to_string(),
@@ -823,6 +856,7 @@ mod tests {
         let (t, fields) = overlap_study("qaoa", 10, 6, 2, 2).unwrap();
         let s = t.to_string();
         assert!(s.contains("sequential") && s.contains("pipelined"));
+        assert!(s.contains("cross-stage"));
         let get = |k: &str| {
             fields
                 .iter()
@@ -835,6 +869,12 @@ mod tests {
         assert!(get("speedup").parse::<f64>().unwrap() > 0.0);
         let occ = get("pipeline_occupancy").parse::<f64>().unwrap();
         assert!(occ > 0.0 && occ <= 1.0);
+        let xocc = get("cross_stage_occupancy").parse::<f64>().unwrap();
+        assert!(xocc > 0.0 && xocc <= 1.0);
+        assert!(get("cross_stage_speedup").parse::<f64>().unwrap() > 0.0);
+        get("boundary_stall_ms");
+        get("epoch_drain_ms");
+        get("cross_stage_decodes");
     }
 
     #[test]

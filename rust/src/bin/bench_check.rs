@@ -1,17 +1,24 @@
 //! CI bench-regression gate CLI (see `bench_harness::check`).
 //!
 //! USAGE:
-//!   bench_check [--baselines <dir>] [--fresh <dir>] [--tolerance <t>] [FILE...]
+//!   bench_check [--baselines <dir>] [--fresh <dir>] [--tolerance <t>]
+//!               [--append-history [<file>]] [FILE...]
 //!
 //! Positional FILE arguments are fresh `BENCH_*.json` artifacts that MUST
 //! exist (each CI matrix job passes the artifact its bench emits); gated
 //! files that happen to be present are always checked. Exits non-zero on
 //! any regression beyond the tolerance.
 //!
+//! `--append-history` appends one schema-stamped JSONL line per checked
+//! artifact (git sha, date, gated ratio metrics) to `bench_history.jsonl`
+//! (or the given file) after a PASSING gate run, building a committed
+//! perf trajectory across CI runs.
+//!
 //! `BENCH_BASELINE_REFRESH=1 bench_check` re-pins the committed baselines
 //! from the fresh artifacts instead of checking (run the smokes first).
 
-use bmqsim::bench_harness::check::{refresh, run, CheckConfig, DEFAULT_TOLERANCE};
+use bmqsim::bench_harness::check::{append_history, refresh, run, CheckConfig, DEFAULT_TOLERANCE};
+use std::path::PathBuf;
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
@@ -28,9 +35,24 @@ fn real_main() -> Result<ExitCode, String> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cfg = CheckConfig::new(".", "bench_baselines");
     cfg.tolerance = DEFAULT_TOLERANCE;
+    let mut history: Option<PathBuf> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--append-history" => {
+                // Optional value: a following non-flag .jsonl arg names the
+                // history file; otherwise the committed default is used.
+                match args.get(i + 1) {
+                    Some(v) if v.ends_with(".jsonl") => {
+                        history = Some(v.into());
+                        i += 2;
+                    }
+                    _ => {
+                        history = Some("bench_history.jsonl".into());
+                        i += 1;
+                    }
+                }
+            }
             "--baselines" => {
                 cfg.baseline_dir =
                     args.get(i + 1).ok_or("missing value for --baselines")?.into();
@@ -48,7 +70,8 @@ fn real_main() -> Result<ExitCode, String> {
             }
             "--help" | "-h" => {
                 println!(
-                    "bench_check [--baselines <dir>] [--fresh <dir>] [--tolerance <t>] [FILE...]"
+                    "bench_check [--baselines <dir>] [--fresh <dir>] [--tolerance <t>] \
+                     [--append-history [<file>]] [FILE...]"
                 );
                 return Ok(ExitCode::SUCCESS);
             }
@@ -93,5 +116,9 @@ fn real_main() -> Result<ExitCode, String> {
         report.findings.len(),
         100.0 * cfg.tolerance
     );
+    if let Some(path) = &history {
+        let n = append_history(&cfg, path)?;
+        println!("bench_check: appended {n} line(s) to {}", path.display());
+    }
     Ok(ExitCode::SUCCESS)
 }

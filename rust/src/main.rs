@@ -54,6 +54,12 @@ OPTIONS (run/compare/sample):
                         off. Omitting both auto-decides per stage from
                         group size x measured codec cost             [auto]
   --no-overlap          never overlap (strictly sequential worker chains)
+  --cross-stage         always let the next stage's decode start while the
+                        previous stage's encoders drain (stitched schedules
+                        + shared-block boundary gates); --no-cross-stage
+                        pins the per-stage barrier. Omitting both follows
+                        the overlap mode (on unless --no-overlap)    [auto]
+  --no-cross-stage      always drain each stage fully before the next
   --pipeline-depth <K>  scratch slots per worker ring (overlap); when
                         omitted the depth auto-adapts per stage (AIMD on
                         handshake stall imbalance, band [2, 8])     [auto]
@@ -126,7 +132,8 @@ impl Opts {
             let flag = matches!(
                 key.as_str(),
                 "no-compress" | "no-prescan" | "no-fusion" | "no-simd" | "sync-spill"
-                    | "overlap" | "no-overlap" | "no-spill-order"
+                    | "overlap" | "no-overlap" | "cross-stage" | "no-cross-stage"
+                    | "no-spill-order"
             );
             if flag {
                 map.insert(key, "true".into());
@@ -228,6 +235,15 @@ fn build_config(opts: &Opts) -> Result<SimConfig, String> {
     // per-stage auto-enable heuristic in charge (the default).
     cfg.overlap = match (opts.flag("overlap"), opts.flag("no-overlap")) {
         (true, true) => return Err("--overlap conflicts with --no-overlap".into()),
+        (true, false) => OverlapMode::On,
+        (false, true) => OverlapMode::Off,
+        (false, false) => OverlapMode::Auto,
+    };
+    // --cross-stage / --no-cross-stage pin the boundary behaviour;
+    // omitting both follows the overlap mode (on unless overlap is
+    // pinned off).
+    cfg.cross_stage = match (opts.flag("cross-stage"), opts.flag("no-cross-stage")) {
+        (true, true) => return Err("--cross-stage conflicts with --no-cross-stage".into()),
         (true, false) => OverlapMode::On,
         (false, true) => OverlapMode::Off,
         (false, false) => OverlapMode::Auto,

@@ -215,11 +215,18 @@ struct Policy {
     done_seq: u64,
 }
 
-/// Prefetcher input: the flat block order of the current stage.
+/// Prefetcher input: the flat block order of the current stage — or, in
+/// the stitched (cross-stage) form, of the still-draining previous stage
+/// followed by the next stage. The two segments may have different group
+/// geometries: the first `head_groups * head_bpg` blocks belong to the
+/// previous stage (`head_bpg` blocks per group), the rest to the next
+/// stage at `blocks_per_group`. A plain publication has `head_groups = 0`.
 #[derive(Default)]
 struct ScheduleState {
     order: Arc<Vec<usize>>,
     blocks_per_group: usize,
+    head_groups: usize,
+    head_bpg: usize,
 }
 
 /// First background-spill failure, recorded where it happened and
@@ -1326,6 +1333,8 @@ impl Shared {
             let mut s = plock(&self.sched);
             s.order = Arc::new(order.to_vec());
             s.blocks_per_group = bpg;
+            s.head_groups = 0;
+            s.head_bpg = 1;
         }
         if self.opts.auto_depth {
             self.auto_depth_step();
@@ -1342,23 +1351,95 @@ impl Shared {
                     p.rank.insert(id, (i / bpg) as u64);
                 }
             }
-            // Re-key the resident index under the new ranks, shard by
-            // shard (entries for ids that move mid-rebuild self-heal via
-            // the victim verify-and-skip loop).
-            for shard in &self.shards {
-                let sg = plock(shard);
-                let ids: Vec<usize> = sg
-                    .iter()
-                    .filter(|(_, s)| matches!(s, Slot::Primary { .. }))
-                    .map(|(&id, _)| id)
-                    .collect();
-                drop(sg);
-                for id in ids {
-                    self.policy_insert(id);
-                }
-            }
+            self.rekey_residents();
         }
         self.sched_cv.notify_all();
+    }
+
+    /// Epoch-aware (stitched) schedule publication for cross-stage
+    /// overlap: `head` is the still-draining previous stage's flat block
+    /// order (grouped at `head_bpg`), `tail` the next stage's order at
+    /// `tail_bpg`. Unlike [`Self::publish_schedule`], the group cursors
+    /// are NOT reset — they are *rebased* by `retired_groups` (the group
+    /// count of the stage that just left the window, which the caller
+    /// guarantees is fully completed), so Belady eviction ranks and the
+    /// prefetch window span the stage boundary instead of restarting from
+    /// zero while the previous stage's tail is still encoding.
+    fn publish_schedule_stitched(
+        &self,
+        head: &[usize],
+        head_bpg: usize,
+        tail: &[usize],
+        tail_bpg: usize,
+        retired_groups: usize,
+    ) {
+        let head_bpg = head_bpg.max(1);
+        let tail_bpg = tail_bpg.max(1);
+        let head_groups = head.len() / head_bpg;
+        let mut order = Vec::with_capacity(head.len() + tail.len());
+        order.extend_from_slice(head);
+        order.extend_from_slice(tail);
+        {
+            let mut s = plock(&self.sched);
+            s.order = Arc::new(order);
+            s.blocks_per_group = tail_bpg;
+            s.head_groups = head_groups;
+            s.head_bpg = head_bpg;
+        }
+        if self.opts.auto_depth {
+            self.auto_depth_step();
+        }
+        self.sched_epoch.fetch_add(1, Ordering::Relaxed);
+        // Rebase, not reset: the previous stage is still running, so its
+        // workers' concurrent `group_completed`/`group_fetched` increments
+        // must survive the publication. `fetch_update` keeps the
+        // subtraction atomic against them.
+        let rebase = |c: &AtomicUsize| {
+            let _ = c.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                Some(v.saturating_sub(retired_groups))
+            });
+        };
+        rebase(&self.progress);
+        rebase(&self.fetch_cursor);
+        if self.budget.is_some() {
+            // Groups of the head already completed keep no head rank —
+            // their next use is their tail occurrence (racy snapshot;
+            // ranks are a performance policy, not a correctness one).
+            let start = self.progress.load(Ordering::Acquire);
+            {
+                let mut p = plock(&self.policy);
+                p.rank.clear();
+                p.done_seq = 0;
+                // First-future-use wins: a block in both segments keeps
+                // its earlier (head) rank — that IS its next use.
+                for (i, &id) in head.iter().enumerate().skip(start * head_bpg) {
+                    p.rank.entry(id).or_insert((i / head_bpg) as u64);
+                }
+                for (j, &id) in tail.iter().enumerate() {
+                    p.rank.entry(id).or_insert((head_groups + j / tail_bpg) as u64);
+                }
+            }
+            self.rekey_residents();
+        }
+        self.sched_cv.notify_all();
+    }
+
+    /// Re-key the resident index under freshly rebuilt ranks, shard by
+    /// shard (entries for ids that move mid-rebuild self-heal via the
+    /// victim verify-and-skip loop).
+    fn rekey_residents(&self) {
+        for shard in &self.shards {
+            let sg = plock(shard);
+            let ids: Vec<usize> = sg
+                .iter()
+                .filter(|(_, s)| matches!(s, Slot::Primary { .. }))
+                .map(|(&id, _)| id)
+                .collect();
+            drop(sg);
+            for id in ids {
+                self.policy_insert(id);
+            }
+        }
     }
 
     fn group_completed(&self) {
@@ -1559,6 +1640,25 @@ impl BlockStore {
 
     pub fn contains(&self, id: usize) -> bool {
         plock(self.shared.shard(id)).contains_key(&id)
+    }
+
+    /// Publish a stitched two-stage schedule (cross-stage overlap): the
+    /// still-draining previous stage's flat block order (`head`, grouped
+    /// at `head_bpg`) followed by the next stage's (`tail` at `tail_bpg`).
+    /// Group cursors are rebased by `retired_groups` — the caller's
+    /// guarantee that the stage leaving the window has fully completed —
+    /// instead of reset, so Belady ranks and the prefetch window span the
+    /// boundary. See [`BlockStore::publish_schedule`] for the plain form.
+    pub fn publish_schedule_stitched(
+        &self,
+        head: &[usize],
+        head_bpg: usize,
+        tail: &[usize],
+        tail_bpg: usize,
+        retired_groups: usize,
+    ) {
+        self.shared
+            .publish_schedule_stitched(head, head_bpg, tail, tail_bpg, retired_groups);
     }
 
     /// Publish a stage's group schedule: `order` lists block ids in group
@@ -1962,6 +2062,69 @@ mod tests {
         assert_eq!(s.shared.progress.load(Ordering::Relaxed), 0);
         s.publish_schedule(&[4, 5], 1);
         assert_eq!(s.shared.fetch_cursor.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn stitched_publish_rebases_cursors_instead_of_resetting() {
+        let s = BlockStore::unbounded();
+        // Stage A: 4 single-block groups; 3 already completed when stage B
+        // arrives (one tail group still encoding).
+        s.publish_schedule(&[0, 1, 2, 3], 1);
+        for _ in 0..3 {
+            s.group_fetched();
+            s.group_completed();
+        }
+        // First boundary: nothing retired yet (rebase 0). Stage B has
+        // 2 groups of 2 blocks — a different geometry than the head.
+        s.publish_schedule_stitched(&[0, 1, 2, 3], 1, &[4, 5, 6, 7], 2, 0);
+        assert_eq!(s.shared.progress.load(Ordering::Relaxed), 3, "cursor was reset");
+        assert_eq!(s.shared.fetch_cursor.load(Ordering::Relaxed), 3);
+        // Stage A's tail completes, then stage B runs its 2 groups.
+        s.group_fetched();
+        s.group_completed();
+        for _ in 0..2 {
+            s.group_fetched();
+            s.group_completed();
+        }
+        assert_eq!(s.shared.progress.load(Ordering::Relaxed), 6);
+        // Second boundary: stage A (4 groups) has left the window.
+        s.publish_schedule_stitched(&[4, 5, 6, 7], 2, &[0, 1, 2, 3], 1, 4);
+        assert_eq!(s.shared.progress.load(Ordering::Relaxed), 2, "rebase must subtract");
+        assert_eq!(s.shared.fetch_cursor.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn stitched_belady_ranks_span_the_stage_boundary() {
+        // Budget fits 3 of 4 equal blocks. Under a per-stage reset, block
+        // 1 (unused by the rest of stage A) would be ranked NO_USE and
+        // evicted first; the stitched schedule knows stage B reuses it
+        // FIRST, so the true farthest-next-use block (3) must be the
+        // victim instead.
+        let s = BlockStore::with_options(Some(620), Some(tmpdir()), sync_opts()).unwrap();
+        s.publish_schedule(&[0, 1, 2, 3], 1);
+        // Stage A processed groups 0 and 1 already (cursor = 2), its tail
+        // (groups 2, 3) still pending; stage B will run 1, 0, 2, 3.
+        s.group_completed();
+        s.group_completed();
+        s.publish_schedule_stitched(&[0, 1, 2, 3], 1, &[1, 0, 2, 3], 1, 0);
+        for id in 0..3 {
+            s.put(id, payload(100, id as u8)).unwrap(); // 600 B primary
+        }
+        // Overflow. Next uses under the stitched ranks: 2 -> group 2
+        // (stage A tail), 3 -> group 3, 0 -> group 5 (stage B), 1 ->
+        // group 4. Block 0 is farthest -> the victim.
+        s.put(3, payload(100, 3)).unwrap();
+        assert_eq!(s.stats().evictions, 1);
+        s.take(2).unwrap();
+        s.take(3).unwrap();
+        s.take(1).unwrap();
+        assert_eq!(
+            s.stats().fetch_from_secondary,
+            0,
+            "a block the stitched window still needs was evicted"
+        );
+        s.take(0).unwrap();
+        assert_eq!(s.stats().fetch_from_secondary, 1, "block 0 was not the victim");
     }
 
     #[test]

@@ -24,13 +24,17 @@ pub(crate) fn prefetch_loop(shared: Arc<super::Shared>) {
             return;
         }
         // Snapshot the current schedule (cheap: Arc clone of the order).
-        let (order, bpg) = {
+        // A stitched (cross-stage) schedule has two segments with their
+        // own group geometries: `head_groups` groups of `head_bpg` blocks
+        // (the draining previous stage), then the next stage at `bpg`.
+        let (order, bpg, head_groups, head_bpg) = {
             let s = plock(&shared.sched);
-            (s.order.clone(), s.blocks_per_group.max(1))
+            (s.order.clone(), s.blocks_per_group.max(1), s.head_groups, s.head_bpg.max(1))
         };
         let mut did_work = false;
         if !order.is_empty() {
-            let num_groups = order.len() / bpg;
+            let head_blocks = (head_groups * head_bpg).min(order.len());
+            let num_groups = head_groups + (order.len() - head_blocks) / bpg;
             // Window base: the farther of the completion cursor and the
             // decode-phase cursor (`group_fetched`). An overlapped
             // pipeline fetches ahead of completion, so windowing off the
@@ -47,7 +51,13 @@ pub(crate) fn prefetch_loop(shared: Arc<super::Shared>) {
             // Blocks with rank < `end` are inside the window; eviction to
             // make room may only touch ranks >= `end` (strictly farther).
             for g in progress..end {
-                for &id in &order[g * bpg..(g + 1) * bpg] {
+                let range = if g < head_groups {
+                    g * head_bpg..(g + 1) * head_bpg
+                } else {
+                    let o = head_blocks + (g - head_groups) * bpg;
+                    o..o + bpg
+                };
+                for &id in &order[range] {
                     if shared.shutdown.load(Ordering::Acquire) {
                         return;
                     }

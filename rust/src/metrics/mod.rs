@@ -133,6 +133,15 @@ pub struct Metrics {
     /// 0 under `--no-simd` / `BMQSIM_NO_SIMD` or on scalar-only hosts.
     /// Best-effort: concurrent runs in one process share the counter.
     pub simd_kernels_used: AtomicU64,
+    /// Cross-stage overlap: decode items accepted into epoch s+1 while
+    /// epoch s was still encoding (0 under the per-stage barrier).
+    pub cross_stage_decodes: AtomicU64,
+    /// Cross-stage overlap: time decode threads waited at a boundary gate
+    /// for shared blocks still owned by the previous stage's encoders.
+    pub boundary_stall_ns: AtomicU64,
+    /// Cross-stage overlap: time the engine thread spent draining the
+    /// epoch window (the residual, partial stand-in for the old barrier).
+    pub epoch_drain_ns: AtomicU64,
 }
 
 impl Metrics {
@@ -198,6 +207,9 @@ impl Metrics {
             frames_recovered: self.frames_recovered.load(Ordering::Relaxed),
             enospc_fallbacks: self.enospc_fallbacks.load(Ordering::Relaxed),
             simd_kernels_used: self.simd_kernels_used.load(Ordering::Relaxed),
+            cross_stage_decodes: self.cross_stage_decodes.load(Ordering::Relaxed),
+            boundary_stall_ns: self.boundary_stall_ns.load(Ordering::Relaxed),
+            epoch_drain_ns: self.epoch_drain_ns.load(Ordering::Relaxed),
         }
     }
 
@@ -298,6 +310,13 @@ pub struct MetricsReport {
     /// Vector (SIMD) kernel invocations attributed to this run (0 when
     /// the scalar oracle was pinned or the host has no vector tier).
     pub simd_kernels_used: u64,
+    /// Decode items accepted into the next epoch while the previous stage
+    /// was still encoding (0 under the per-stage barrier).
+    pub cross_stage_decodes: u64,
+    /// Decode-thread wait at cross-stage boundary gates, in nanoseconds.
+    pub boundary_stall_ns: u64,
+    /// Engine-thread time spent draining the epoch window, in nanoseconds.
+    pub epoch_drain_ns: u64,
 }
 
 impl MetricsReport {
@@ -321,9 +340,10 @@ impl MetricsReport {
 
     /// Overlapped-pipeline occupancy: fraction of phase-thread time spent
     /// doing chain work rather than waiting on a ring handshake,
-    /// `busy / (busy + overlap_stall)`. 1.0 for non-overlapped runs
-    /// (no handshakes, so no stalls).
-    pub fn pipeline_occupancy(&self) -> f64 {
+    /// `busy / (busy + overlap_stall)`. `None` when no phase time was
+    /// recorded at all (an idle run has no occupancy to report — callers
+    /// must not read a perfect 1.0 out of a run that did nothing).
+    pub fn pipeline_occupancy(&self) -> Option<f64> {
         let busy: f64 = self
             .phase_secs
             .iter()
@@ -332,9 +352,9 @@ impl MetricsReport {
             .sum();
         let stall = self.overlap_stall_ns as f64 * 1e-9;
         if busy + stall <= 0.0 {
-            1.0
+            None
         } else {
-            busy / (busy + stall)
+            Some(busy / (busy + stall))
         }
     }
 }
@@ -351,12 +371,27 @@ impl std::fmt::Display for MetricsReport {
             writeln!(f, "{name:<17}: {secs:>10.3} s (busy, summed over workers)")?;
         }
         if self.decode_ahead_hits + self.overlap_stall_ns > 0 {
+            if let Some(occ) = self.pipeline_occupancy() {
+                writeln!(
+                    f,
+                    "pipeline overlap : {:>10.1}% occupancy ({} decode-ahead hits, {:.1} ms stalled)",
+                    100.0 * occ,
+                    self.decode_ahead_hits,
+                    self.overlap_stall_ns as f64 * 1e-6
+                )?;
+            }
+        }
+        // Gated on the two counters only the gated protocol bumps:
+        // `epoch_drain_ns` alone also accrues under the per-stage barrier
+        // (drain_all times the barrier wait), so it must not make a
+        // barrier run print a cross-stage line.
+        if self.cross_stage_decodes + self.boundary_stall_ns > 0 {
             writeln!(
                 f,
-                "pipeline overlap : {:>10.1}% occupancy ({} decode-ahead hits, {:.1} ms stalled)",
-                100.0 * self.pipeline_occupancy(),
-                self.decode_ahead_hits,
-                self.overlap_stall_ns as f64 * 1e-6
+                "cross-stage      : {:>10} early decodes, {:.1} ms gate wait, {:.1} ms epoch drain",
+                self.cross_stage_decodes,
+                self.boundary_stall_ns as f64 * 1e-6,
+                self.epoch_drain_ns as f64 * 1e-6
             )?;
         }
         if self.pool_stage_handoffs > 0 {
@@ -520,15 +555,16 @@ mod tests {
     #[test]
     fn occupancy_is_busy_over_busy_plus_stall() {
         let m = Metrics::new();
-        assert_eq!(m.snapshot(0.0).pipeline_occupancy(), 1.0); // idle run
+        // An idle run has no phase time: no occupancy, not a perfect 1.0.
+        assert_eq!(m.snapshot(0.0).pipeline_occupancy(), None);
         m.add_nanos(Phase::Apply, 3_000_000_000);
         m.overlap_stall_ns.store(1_000_000_000, Ordering::Relaxed);
         let r = m.snapshot(1.0);
-        assert!((r.pipeline_occupancy() - 0.75).abs() < 1e-9);
+        assert!((r.pipeline_occupancy().unwrap() - 0.75).abs() < 1e-9);
         // Partition time is offline planning, not a pipeline phase.
         m.add_nanos(Phase::Partition, 9_000_000_000);
         let r = m.snapshot(1.0);
-        assert!((r.pipeline_occupancy() - 0.75).abs() < 1e-9);
+        assert!((r.pipeline_occupancy().unwrap() - 0.75).abs() < 1e-9);
     }
 
     #[test]

@@ -31,8 +31,8 @@ use std::time::{Duration, Instant};
 
 mod phase_pool;
 pub use phase_pool::{
-    PhasePool, RingDepthController, RING_AIMD_IDLE_NS, RING_AIMD_STALL_STEP_NS, RING_DEPTH_MAX,
-    RING_DEPTH_MIN,
+    PhasePool, RingDepthController, MAX_EPOCHS_IN_FLIGHT, RING_AIMD_IDLE_NS,
+    RING_AIMD_STALL_STEP_NS, RING_DEPTH_MAX, RING_DEPTH_MIN,
 };
 
 /// Counting semaphore (Mutex + Condvar; no external deps).

@@ -18,13 +18,32 @@
 //! ## Lifetime erasure
 //!
 //! Stage closures borrow stage-local state (the group schedule, the fused
-//! plan, the store, metrics). Persistent threads are `'static`, so
-//! [`PhasePool::run_stage`] erases the closure lifetimes behind raw trait
-//! object pointers — the same trick scoped-thread libraries use — and
-//! makes it sound by **blocking until every phase thread has finished the
-//! stage** before returning: the pointers are never dereferenced after the
-//! borrows they came from end. The `unsafe` is confined to two small,
-//! documented sites (`erase` and the dereference in `run_phase`).
+//! plan, the store, metrics). Persistent threads are `'static`, so the
+//! pool erases the closure lifetimes behind raw trait object pointers —
+//! the same trick scoped-thread libraries use. [`PhasePool::run_stage`]
+//! makes that sound by **blocking until every phase thread has finished
+//! the stage** before returning; the epoch-drained form
+//! ([`PhasePool::submit_stage`] / [`PhasePool::drain_oldest`]) extends the
+//! argument to **two in-flight epochs**: the caller contractually keeps
+//! both epochs' closures alive until the drain call that retires them
+//! returns (`submit_stage` is `unsafe` for exactly this reason; the
+//! engine-side `PoolDriver` owns the boxed closures and drains before
+//! dropping them, including on unwind). The pointers are never
+//! dereferenced after the borrows they came from end. The `unsafe` is
+//! confined to small, documented sites (`erase`, `submit_stage`, and the
+//! dereference in `run_phase`).
+//!
+//! ## Epoch drain (cross-stage overlap)
+//!
+//! The classic `run_stage` barrier drains all three phase rings at every
+//! stage boundary, so decode threads idle while the previous stage's tail
+//! groups encode. With `submit_stage`, up to [`MAX_EPOCHS_IN_FLIGHT`]
+//! stages coexist: each epoch gets its own ring **bank** (control block +
+//! scratch ring + work queue), so epoch `s+1`'s decode handshake shares
+//! nothing with epoch `s`'s encode handshake, and each thread simply
+//! processes epochs in order. Whether a given `s+1` group may *semantically*
+//! begin (its input blocks re-encoded by stage `s`) is the engine's
+//! business — see `sim::BoundaryGate`.
 //!
 //! ## Unwind safety
 //!
@@ -144,15 +163,17 @@ type Phase<'a> = dyn Fn(&mut super::WorkerCtx<'_>, usize) -> Result<(), Error> +
 
 /// Lifetime-erased pointer to a phase closure.
 ///
-/// SAFETY invariant (maintained by `run_stage`): the pointee outlives the
-/// stage — `run_stage` does not return until every phase thread has
-/// reported the stage done, and threads never touch a spec after that.
+/// SAFETY invariant: the pointee outlives the epoch it was submitted for —
+/// `run_stage` does not return until every phase thread has reported the
+/// stage done, and `submit_stage`'s contract makes the caller keep the
+/// closures alive until the drain call that retires the epoch returns.
+/// Threads never touch a spec after its epoch is retired.
 #[derive(Clone, Copy)]
 struct RawPhase(*const Phase<'static>);
 
 // SAFETY: the pointee is `Sync` (required by `Phase`) and the RawPhase is
 // only dereferenced while the originating borrow is provably live (the
-// stage barrier in `run_stage`).
+// stage barrier in `run_stage`, or the submit/drain contract).
 unsafe impl Send for RawPhase {}
 unsafe impl Sync for RawPhase {}
 
@@ -170,21 +191,39 @@ struct StageSpec {
     encode: RawPhase,
 }
 
-/// Epoch-stamped control state. `epoch` increments once per stage;
-/// threads run the stage whose epoch exceeds the last one they completed,
-/// then bump `done`. `run_stage` waits for `done == 3 × workers`.
-struct PoolCtl {
-    epoch: u64,
-    shutdown: bool,
-    spec: Option<StageSpec>,
+/// Most epochs (stages) that may be in flight at once. Two is the whole
+/// point of the drain protocol — stage `s`'s encode tail and stage
+/// `s+1`'s decode head — and it bounds the ring-bank allocation.
+pub const MAX_EPOCHS_IN_FLIGHT: usize = 2;
+
+/// One in-flight epoch: the stage's work descriptor, the ring bank it
+/// runs on, and how many of the `3 × workers` threads finished it.
+struct EpochSlot {
+    id: u64,
+    bank: usize,
+    spec: StageSpec,
     done: usize,
+}
+
+/// Epoch-stamped control state. `next_epoch` increments once per
+/// submitted stage; each thread runs the oldest epoch it has not yet
+/// completed (in id order), then bumps that epoch's `done`. Drain calls
+/// wait for the front slot's `done == 3 × workers` and pop it.
+struct PoolCtl {
+    next_epoch: u64,
+    shutdown: bool,
+    epochs: VecDeque<EpochSlot>,
 }
 
 struct PoolInner {
     ctl: Mutex<PoolCtl>,
     cv: Condvar,
-    queue: Mutex<VecDeque<usize>>,
+    /// Per-bank work queues: epoch item indices for the epoch currently
+    /// occupying that bank.
+    queues: [Mutex<VecDeque<usize>>; MAX_EPOCHS_IN_FLIGHT],
+    /// Bank-major ring controls: `ctrls[bank * workers + w]`.
     ctrls: Vec<RingCtrl>,
+    /// Bank-major scratch rings, same indexing as `ctrls`.
     rings: RingPool,
     transfer: Semaphore,
     abort: AtomicBool,
@@ -192,6 +231,7 @@ struct PoolInner {
     panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
     stats: OverlapStats,
     devices: usize,
+    workers: usize,
 }
 
 #[derive(Clone, Copy)]
@@ -228,18 +268,27 @@ impl PhasePool {
     pub fn new(cfg: PipelineConfig, depth_cap: usize) -> Self {
         let workers = cfg.workers().max(1);
         let depth_cap = depth_cap.max(1);
+        // One ring bank per in-flight epoch: bank 1's slots stay empty
+        // `Scratch` arenas until a cross-stage submission actually warms
+        // them, so the second bank costs nothing on the barrier path.
+        let banked = MAX_EPOCHS_IN_FLIGHT * workers;
         let inner = Arc::new(PoolInner {
-            ctl: Mutex::new(PoolCtl { epoch: 0, shutdown: false, spec: None, done: 0 }),
+            ctl: Mutex::new(PoolCtl {
+                next_epoch: 0,
+                shutdown: false,
+                epochs: VecDeque::with_capacity(MAX_EPOCHS_IN_FLIGHT),
+            }),
             cv: Condvar::new(),
-            queue: Mutex::new(VecDeque::new()),
-            ctrls: (0..workers).map(|_| RingCtrl::new(depth_cap)).collect(),
-            rings: RingPool::new(workers, depth_cap),
+            queues: [Mutex::new(VecDeque::new()), Mutex::new(VecDeque::new())],
+            ctrls: (0..banked).map(|_| RingCtrl::new(depth_cap)).collect(),
+            rings: RingPool::new(banked, depth_cap),
             transfer: Semaphore::new(cfg.transfer_slots),
             abort: AtomicBool::new(false),
             failed: Mutex::new(None),
             panic_payload: Mutex::new(None),
             stats: OverlapStats::default(),
             devices: cfg.devices.max(1),
+            workers,
         });
         let mut handles = Vec::with_capacity(3 * workers);
         for w in 0..workers {
@@ -284,6 +333,147 @@ impl PhasePool {
         self.inner.rings.total_plane_grows()
     }
 
+    /// Number of submitted epochs not yet retired by a drain call.
+    pub fn in_flight(&self) -> usize {
+        self.inner.ctl.lock().unwrap().epochs.len()
+    }
+
+    /// Raise the pool-wide abort flag so in-flight epochs skim their
+    /// remaining items instead of doing work. Used by owners tearing a
+    /// window down early (e.g. on an unwind between submit and drain).
+    pub fn abort(&self) {
+        self.inner.abort.store(true, Ordering::Release);
+    }
+
+    /// Submit items `0..n` as one epoch on the persistent threads at ring
+    /// depth `depth` (clamped to `1..=depth_cap`), without waiting for it
+    /// to finish. If [`MAX_EPOCHS_IN_FLIGHT`] epochs are already in
+    /// flight, the oldest is drained first (returning its error, if any).
+    ///
+    /// Takes `&mut self` deliberately: exclusivity guarantees no second
+    /// caller can re-arm a bank (queue, rings) while this window's
+    /// lifetime-erased closures are still running.
+    ///
+    /// # Safety
+    ///
+    /// The three closures (and everything they borrow) must remain live
+    /// until the drain call ([`Self::drain_oldest`] / [`Self::drain_all`])
+    /// that retires this epoch returns — including on the unwind path.
+    /// The pool stores lifetime-erased pointers to them and dereferences
+    /// those from its phase threads until the epoch is drained.
+    pub unsafe fn submit_stage(
+        &mut self,
+        n: usize,
+        depth: usize,
+        decode: &Phase<'_>,
+        apply: &Phase<'_>,
+        encode: &Phase<'_>,
+    ) -> Result<(), Error> {
+        if self.in_flight() >= MAX_EPOCHS_IN_FLIGHT {
+            self.drain_oldest()?;
+        }
+        let inner = &*self.inner;
+        let depth = depth.clamp(1, self.depth_cap);
+        let workers = self.workers;
+        let mut ctl = inner.ctl.lock().unwrap();
+        // Reuse bank 0 whenever the window is empty (the serialized /
+        // barrier path then warms exactly one bank, like the pre-epoch
+        // pool); alternate banks only for a genuinely overlapped submit.
+        let bank = match ctl.epochs.back() {
+            Some(e) => 1 - e.bank,
+            None => 0,
+        };
+        if ctl.epochs.is_empty() {
+            // Re-arm pool-global failure state. No phase thread is inside
+            // any epoch (window empty), so plain stores are race-free.
+            inner.abort.store(false, Ordering::Release);
+            *inner.failed.lock().unwrap() = None;
+        }
+        {
+            let mut q = inner.queues[bank].lock().unwrap();
+            q.clear();
+            q.extend(0..n);
+        }
+        // The bank's previous epoch (if any) was at least two submits ago,
+        // hence fully drained: no phase thread touches this ring.
+        for ctrl in &inner.ctrls[bank * workers..(bank + 1) * workers] {
+            ctrl.reset(depth);
+        }
+        inner.stats.stage_handoffs.fetch_add(1, Ordering::Relaxed);
+        ctl.next_epoch += 1;
+        let id = ctl.next_epoch;
+        ctl.epochs.push_back(EpochSlot {
+            id,
+            bank,
+            spec: StageSpec {
+                depth,
+                decode: erase(decode),
+                apply: erase(apply),
+                encode: erase(encode),
+            },
+            done: 0,
+        });
+        drop(ctl);
+        inner.cv.notify_all();
+        Ok(())
+    }
+
+    /// Wait for the oldest in-flight epoch to finish and retire it,
+    /// returning `true` if one was retired.
+    fn wait_front_drained(&self) -> bool {
+        let inner = &*self.inner;
+        let threads = 3 * self.workers;
+        let mut ctl = inner.ctl.lock().unwrap();
+        if ctl.epochs.is_empty() {
+            return false;
+        }
+        while ctl.epochs.front().is_some_and(|e| e.done < threads) {
+            ctl = inner.cv.wait(ctl).unwrap();
+        }
+        // Drop the epoch's raw pointers before the caller releases the
+        // borrows they came from.
+        ctl.epochs.pop_front();
+        true
+    }
+
+    /// Surface a recorded panic or first phase error once the window is
+    /// empty.
+    fn resolve(&self) -> Result<(), Error> {
+        if let Some(payload) = self.inner.panic_payload.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+        match self.inner.failed.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Drain the oldest in-flight epoch. On failure anywhere in the
+    /// window the *whole* window is drained (the abort flag makes the
+    /// remaining epochs skim) before the panic is re-raised / the first
+    /// error is returned — no erased borrow survives the error path.
+    /// Errors and panics only surface once the window is empty, so a
+    /// clean `drain_oldest` with a second epoch still in flight returns
+    /// `Ok(())` immediately after the front epoch retires.
+    pub fn drain_oldest(&mut self) -> Result<(), Error> {
+        self.wait_front_drained();
+        if self.inner.abort.load(Ordering::Acquire) {
+            while self.wait_front_drained() {}
+        }
+        if self.in_flight() == 0 {
+            self.resolve()
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Drain every in-flight epoch, then surface a recorded panic or the
+    /// first phase error.
+    pub fn drain_all(&mut self) -> Result<(), Error> {
+        while self.wait_front_drained() {}
+        self.resolve()
+    }
+
     /// Run items `0..n` through the three-phase pipeline on the persistent
     /// threads at ring depth `depth` (clamped to `1..=depth_cap`). Blocks
     /// until the stage fully completes. The first phase error aborts the
@@ -292,11 +482,9 @@ impl PhasePool {
     /// next call); after a re-raised panic the scratch slot the panic
     /// poisoned makes further stages unusable — drop the pool.
     ///
-    /// Takes `&mut self` deliberately: exclusivity is what guarantees no
-    /// second `run_stage` can re-arm the per-stage state (queue, rings,
-    /// done counter) while this stage's lifetime-erased closures are still
-    /// running — a concurrent caller through `&self` could otherwise
-    /// release the barrier early and dangle the erased borrows.
+    /// This is the full-barrier composition of `submit_stage` +
+    /// `drain_all`: the drain before return is what makes the lifetime
+    /// erasure sound without any caller-side contract.
     pub fn run_stage(
         &mut self,
         n: usize,
@@ -305,60 +493,19 @@ impl PhasePool {
         apply: &Phase<'_>,
         encode: &Phase<'_>,
     ) -> Result<(), Error> {
-        let inner = &*self.inner;
-        let depth = depth.clamp(1, self.depth_cap);
-        // Re-arm per-stage state. No phase thread is running (previous
-        // stage's barrier completed), so plain stores are race-free.
-        inner.abort.store(false, Ordering::Release);
-        *inner.failed.lock().unwrap() = None;
-        {
-            let mut q = inner.queue.lock().unwrap();
-            q.clear();
-            q.extend(0..n);
-        }
-        for ctrl in &inner.ctrls {
-            ctrl.reset(depth);
-        }
-        inner.stats.stage_handoffs.fetch_add(1, Ordering::Relaxed);
-
-        // Publish the stage and wake everyone.
-        let threads = 3 * self.workers;
-        {
-            let mut ctl = inner.ctl.lock().unwrap();
-            ctl.spec = Some(StageSpec {
-                depth,
-                decode: erase(decode),
-                apply: erase(apply),
-                encode: erase(encode),
-            });
-            ctl.done = 0;
-            ctl.epoch += 1;
-        }
-        inner.cv.notify_all();
-
-        // Stage barrier: wait until every phase thread finished this
-        // epoch. This is what makes the lifetime erasure sound — the
-        // closure borrows are live until this loop exits.
-        {
-            let mut ctl = inner.ctl.lock().unwrap();
-            while ctl.done < threads {
-                ctl = inner.cv.wait(ctl).unwrap();
-            }
-            ctl.spec = None; // drop the raw pointers before borrows end
-        }
-
-        if let Some(payload) = inner.panic_payload.lock().unwrap().take() {
-            std::panic::resume_unwind(payload);
-        }
-        match inner.failed.lock().unwrap().take() {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
+        // SAFETY: the closure borrows are live across the immediate
+        // `drain_all` below; no erased pointer survives this call.
+        unsafe { self.submit_stage(n, depth, decode, apply, encode)? };
+        self.drain_all()
     }
 }
 
 impl Drop for PhasePool {
     fn drop(&mut self) {
+        // Owners (PoolDriver, run_stage) drain before dropping; if epochs
+        // are somehow still pending, abort so the threads skim them
+        // instead of doing work on the way out.
+        self.inner.abort.store(true, Ordering::Release);
         {
             let mut ctl = self.inner.ctl.lock().unwrap();
             ctl.shutdown = true;
@@ -370,31 +517,31 @@ impl Drop for PhasePool {
     }
 }
 
-/// Long-lived phase-thread main: park on the control condvar until a new
-/// epoch (or shutdown), run this thread's phase loop for the stage,
-/// report done, repeat.
+/// Long-lived phase-thread main: park on the control condvar until an
+/// epoch this thread has not run yet exists (or shutdown), run this
+/// thread's phase loop for the *oldest* such epoch, report it done,
+/// repeat. Pending epochs are processed before a shutdown is honoured.
 fn phase_main(inner: Arc<PoolInner>, w: usize, role: Role) {
     let mut seen = 0u64;
     loop {
-        let spec = {
+        let (id, bank, spec) = {
             let mut ctl = inner.ctl.lock().unwrap();
             loop {
+                if let Some(e) = ctl.epochs.iter().find(|e| e.id > seen) {
+                    break (e.id, e.bank, e.spec);
+                }
                 if ctl.shutdown {
                     return;
                 }
-                if ctl.epoch > seen {
-                    break;
-                }
                 ctl = inner.cv.wait(ctl).unwrap();
             }
-            seen = ctl.epoch;
-            ctl.spec.expect("epoch advanced without a stage spec")
         };
+        seen = id;
         // Catch a phase-closure panic so the thread survives for the next
         // stage teardown path; the in-loop PhaseExit guard already ran
         // during the unwind (abort + done flags), so siblings drain.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_phase(&inner, w, role, &spec);
+            run_phase(&inner, w, bank, role, &spec);
         }));
         if let Err(payload) = outcome {
             let mut slot = inner.panic_payload.lock().unwrap();
@@ -403,28 +550,32 @@ fn phase_main(inner: Arc<PoolInner>, w: usize, role: Role) {
             }
         }
         let mut ctl = inner.ctl.lock().unwrap();
-        ctl.done += 1;
+        if let Some(e) = ctl.epochs.iter_mut().find(|e| e.id == id) {
+            e.done += 1;
+        }
         drop(ctl);
         inner.cv.notify_all();
     }
 }
 
-fn run_phase(inner: &PoolInner, w: usize, role: Role, spec: &StageSpec) {
+fn run_phase(inner: &PoolInner, w: usize, bank: usize, role: Role, spec: &StageSpec) {
+    let lane = bank * inner.workers + w;
     let env = PhaseEnv {
-        ctrl: &inner.ctrls[w],
-        slots: &inner.rings.rings[w][..spec.depth],
+        ctrl: &inner.ctrls[lane],
+        slots: &inner.rings.rings[lane][..spec.depth],
         stats: &inner.stats,
         abort: &inner.abort,
         transfer: &inner.transfer,
         worker: w,
         device: w % inner.devices,
     };
-    // SAFETY: `run_stage` holds the stage barrier open until this thread
-    // reports done, so the erased closure borrows are live here.
+    // SAFETY: the epoch stays in the control window until this thread
+    // reports done (and the caller's drain retires it), so the erased
+    // closure borrows are live here.
     match role {
         Role::Decode => {
             let f = unsafe { &*spec.decode.0 };
-            decode_phase_loop(&env, &inner.queue, &inner.failed, f);
+            decode_phase_loop(&env, &inner.queues[bank], &inner.failed, f);
         }
         Role::Apply => {
             let f = unsafe { &*spec.apply.0 };
@@ -600,6 +751,121 @@ mod tests {
             assert!(caught.is_err(), "phase {phase} panic was swallowed or hung");
             drop(pool); // must join, not hang, after a panicked stage
         }
+    }
+
+    #[test]
+    fn pool_two_epochs_overlap_across_the_boundary() {
+        // Epoch 0's encode of its LAST item blocks until epoch 1's decode
+        // has run: only possible if the second epoch starts while the
+        // first is still draining. (The last item, so epoch 0's decode can
+        // retire its whole queue and move on to epoch 1.) A full-barrier
+        // pool would wedge here and surface the bounded-wait error below
+        // instead of hanging.
+        let mut pool = PhasePool::new(PipelineConfig::new(1, 1), 2);
+        let crossed = AtomicBool::new(false);
+        let d0 = ok_phase();
+        let a0 = ok_phase();
+        let e0 = |_c: &mut super::super::WorkerCtx<'_>, i: usize| {
+            if i == 3 {
+                let t0 = std::time::Instant::now();
+                while !crossed.load(Ordering::Acquire) {
+                    if t0.elapsed() > std::time::Duration::from_secs(10) {
+                        return Err(Error::Codec("epoch 1 never overlapped epoch 0".into()));
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+            }
+            Ok(())
+        };
+        let d1 = |_c: &mut super::super::WorkerCtx<'_>, _i: usize| {
+            crossed.store(true, Ordering::Release);
+            Ok(())
+        };
+        let a1 = ok_phase();
+        let e1 = ok_phase();
+        // SAFETY: all six closures outlive the drain_all below.
+        unsafe {
+            pool.submit_stage(4, 2, &d0, &a0, &e0).unwrap();
+            pool.submit_stage(4, 2, &d1, &a1, &e1).unwrap();
+        }
+        assert_eq!(pool.in_flight(), 2);
+        pool.drain_all().unwrap();
+        assert_eq!(pool.in_flight(), 0);
+        assert!(crossed.load(Ordering::Acquire));
+        assert_eq!(pool.stats().stage_handoffs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn pool_mid_drain_error_drains_both_epochs_and_stays_usable() {
+        // An `Err` in the OLD epoch's encode while the new epoch is
+        // already in flight: the whole window must drain (no wedge, no
+        // dangling spec) and the typed error surface from the drain.
+        let mut pool = PhasePool::new(PipelineConfig::new(1, 2), 3);
+        let d0 = ok_phase();
+        let a0 = ok_phase();
+        let e0 = |_c: &mut super::super::WorkerCtx<'_>, i: usize| {
+            if i == 3 {
+                Err(Error::spill_io(
+                    "put(3): mid-drain fault",
+                    std::io::Error::from_raw_os_error(5),
+                ))
+            } else {
+                Ok(())
+            }
+        };
+        let d1 = ok_phase();
+        let a1 = ok_phase();
+        let e1 = ok_phase();
+        // SAFETY: all six closures outlive the drain calls below.
+        let r = unsafe {
+            pool.submit_stage(32, 3, &d0, &a0, &e0).unwrap();
+            pool.submit_stage(32, 3, &d1, &a1, &e1).unwrap();
+            pool.drain_oldest().and_then(|()| pool.drain_all())
+        };
+        assert!(matches!(r, Err(Error::Spill { .. })), "typed error lost: {r:?}");
+        assert_eq!(pool.in_flight(), 0, "error path left epochs in flight");
+        // Same threads, clean barrier stage: the pool recovered.
+        let done = AtomicUsize::new(0);
+        pool.run_stage(
+            16,
+            2,
+            &ok_phase(),
+            &ok_phase(),
+            &|_c, _i| {
+                done.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(done.load(Ordering::Relaxed), 16);
+        assert_eq!(pool.threads_spawned(), 6, "recovery must not respawn threads");
+    }
+
+    #[test]
+    fn pool_mid_drain_panic_in_second_epoch_tears_down_and_joins() {
+        // A panic in the NEW epoch while the old one drains: the drain
+        // must re-raise on the caller and `drop` must join, not hang.
+        let mut pool = PhasePool::new(PipelineConfig::new(1, 1), 2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let d0 = ok_phase();
+            let a0 = ok_phase();
+            let e0 = ok_phase();
+            let d1 = |_c: &mut super::super::WorkerCtx<'_>, i: usize| {
+                assert!(i != 2, "kaboom-cross-stage-decode");
+                Ok(())
+            };
+            let a1 = ok_phase();
+            let e1 = ok_phase();
+            // SAFETY: the closures outlive drain_all, which either
+            // returns or re-raises after the window is empty.
+            unsafe {
+                pool.submit_stage(8, 2, &d0, &a0, &e0).unwrap();
+                pool.submit_stage(8, 2, &d1, &a1, &e1).unwrap();
+            }
+            let _ = pool.drain_all();
+        }));
+        assert!(caught.is_err(), "mid-drain panic was swallowed or hung");
+        drop(pool); // must join, not hang, after a panicked window
     }
 
     #[test]

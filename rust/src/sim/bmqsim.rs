@@ -15,7 +15,10 @@
 //! 4. Blocks live in the two-level [`BlockStore`] (§4.4): primary budget +
 //!    disk spill.
 
-use super::{plan_group_order, GateApplier, NativeApplier, PoolDriver, SimConfig, SimResult};
+use super::{
+    noting_failure, plan_group_order, BoundaryGate, BoxedPhase, GateApplier, NativeApplier,
+    OverlapMode, PoolDriver, SimConfig, SimResult, StageBatch,
+};
 use crate::circuit::fusion::{fuse_remapped, FusedGate};
 use crate::circuit::{partition_circuit, Circuit};
 use crate::compress::{Codec, CodecScratch};
@@ -23,9 +26,11 @@ use crate::gates::fused;
 use crate::memory::{BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
 use crate::pipeline::{Scratch, WorkerCtx};
-use crate::state::{BlockLayout, StateVector};
+use crate::state::{BlockLayout, GroupSchedule, StateVector};
 use crate::types::{Error, Result};
-use std::sync::atomic::Ordering;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// The compressed, staged engine.
@@ -42,6 +47,59 @@ fn block_err(e: Error, block: usize, plane: &str) -> Error {
         other => other.to_string(),
     };
     Error::Codec(format!("block {block} ({plane}): {msg}"))
+}
+
+/// Everything a stage's three phase closures need, owned and shared
+/// behind one `Arc` so the closures can be boxed into the cross-stage
+/// epoch window (two stages' contexts coexist while epochs overlap).
+struct StageCtx {
+    schedule: GroupSchedule,
+    /// Group indices in processing order (spill-aware plan); item `i` of
+    /// the stage runs group `group_order[i]`.
+    group_order: Vec<usize>,
+    /// Stage gates with targets remapped into the gathered group buffer.
+    remapped: Vec<(crate::circuit::Gate, Vec<usize>)>,
+    fused_plan: Option<(Vec<FusedGate>, Vec<fused::Segment>)>,
+    /// This stage's encode-completion gate: item `i` is marked once its
+    /// group's blocks are back in the store.
+    gate: Arc<BoundaryGate>,
+    /// The previous stage's gate (cross-stage runs only): decode of item
+    /// `i` first waits for `deps[i]` on it.
+    prev_gate: Option<Arc<BoundaryGate>>,
+    /// Shared-block dependencies: previous-stage item indices whose
+    /// groups own any of item `i`'s blocks. Empty when no gating applies.
+    deps: Vec<Vec<u32>>,
+}
+
+impl StageCtx {
+    fn fused(&self) -> Option<(&[FusedGate], &[fused::Segment])> {
+        self.fused_plan.as_ref().map(|(ops, segs)| (ops.as_slice(), segs.as_slice()))
+    }
+}
+
+/// What the next stage needs to stitch onto a still-draining stage:
+/// its published order, geometry, block→item ownership, and gate.
+struct PrevStage {
+    /// Block ids in processing order (what `publish_schedule` saw).
+    flat: Vec<usize>,
+    bpg: usize,
+    num_groups: usize,
+    /// block id → the item index whose chain encodes it.
+    owner: HashMap<usize, u32>,
+    gate: Arc<BoundaryGate>,
+}
+
+/// Raises the run-abort flag on every scope exit. Declared *after* the
+/// `PoolDriver` so it drops first: any unwind or early return sets the
+/// flag before the driver's `Drop` aborts the pool, so decode threads
+/// blocked in [`BoundaryGate::wait_for`] on marks that will never come
+/// (their producers were skimmed by the abort) observe it and escape.
+struct AbortOnDrop<'x>(&'x AtomicBool);
+
+impl Drop for AbortOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::Release);
+    }
 }
 
 impl<'a> BmqSim<'a> {
@@ -111,10 +169,31 @@ impl<'a> BmqSim<'a> {
         // and fed per-stage work descriptors, each worker holding up to
         // ring-depth group chains in flight; `PoolDriver` owns both chain
         // drivers and the per-stage overlap/ring-depth decisions.
+        //
+        // Cross-stage overlap (on by default whenever overlap itself is
+        // not pinned off): stages are *submitted* to the pool's two-epoch
+        // window instead of run to a barrier, so stage k+1's decode
+        // threads start while stage k's encoders drain. Correctness at
+        // the boundary is per-block: decode of a group that shares blocks
+        // with the previous stage's unfinished tail waits on that stage's
+        // `BoundaryGate` for exactly the items owning those blocks;
+        // disjoint groups flow immediately.
+        let cross = match self.config.cross_stage {
+            OverlapMode::On => true,
+            OverlapMode::Off => false,
+            OverlapMode::Auto => !matches!(self.config.overlap, OverlapMode::Off),
+        };
+        let run_abort = AtomicBool::new(false);
         let mut pools = PoolDriver::new(&self.config, self.config.pipeline, codec_ns_per_amp);
+        let _abort_guard = AbortOnDrop(&run_abort);
         let use_fusion = self.config.fusion && self.applier.supports_fusion();
-        let mut order: Vec<usize> = Vec::with_capacity(layout.num_blocks());
         let mut group_ids: Vec<usize> = Vec::new();
+        let mut prev: Option<PrevStage> = None;
+        // Groups rebased away at the *next* stitched publish: the head
+        // segment of the previous publish, fully retired by then (the
+        // pre-publish `drain_to_one` guarantees it).
+        let mut next_rebase = 0usize;
+        let block_len = layout.block_len();
         for stage in &plan.stages {
             let schedule = layout.group_schedule(&stage.inner)?;
             // Spill-aware scheduling: ask the store which groups are
@@ -123,15 +202,36 @@ impl<'a> BmqSim<'a> {
             let (group_order, moved) =
                 plan_group_order(&schedule, &store, self.config.spill_aware, &mut group_ids);
             metrics.groups_reordered.fetch_add(moved, Ordering::Relaxed);
-            // Publish the stage's group schedule to the store — in
-            // *processing* order, so Belady eviction ranks and the
-            // prefetch window track what the workers actually do.
-            order.clear();
-            for &g in &group_order {
+            // The stage's block ids in *processing* order (what the store
+            // schedule sees), plus — for cross-stage gating — which item
+            // of this stage owns each block.
+            let mut flat: Vec<usize> = Vec::with_capacity(layout.num_blocks());
+            let mut owner: HashMap<usize, u32> = HashMap::new();
+            for (i, &g) in group_order.iter().enumerate() {
                 schedule.group_blocks_into(g, &mut group_ids);
-                order.extend_from_slice(&group_ids);
+                flat.extend_from_slice(&group_ids);
+                if cross {
+                    for &id in &group_ids {
+                        owner.insert(id, i as u32);
+                    }
+                }
             }
-            store.publish_schedule(&order, schedule.blocks_per_group());
+            // Publish the schedule so Belady eviction ranks and the
+            // prefetch window track what the workers actually do. With a
+            // draining previous stage the publish is *stitched*: its tail
+            // plus this stage's head form one ranked order, so eviction
+            // ranks and the prefetch window span the boundary instead of
+            // resetting. The stage before it must be fully retired first
+            // (its `group_completed` calls back the cursor rebase).
+            let bpg = schedule.blocks_per_group();
+            match prev.as_ref().filter(|_| cross) {
+                Some(p) => {
+                    pools.drain_to_one(&metrics)?;
+                    store.publish_schedule_stitched(&p.flat, p.bpg, &flat, bpg, next_rebase);
+                    next_rebase = p.num_groups;
+                }
+                None => store.publish_schedule(&flat, bpg),
+            }
             // Precompute buffer-bit remaps for every gate of the stage.
             let remapped: Vec<(crate::circuit::Gate, Vec<usize>)> = stage
                 .gates
@@ -164,45 +264,137 @@ impl<'a> BmqSim<'a> {
             };
             metrics.plane_sweeps.fetch_add(stage_sweeps, Ordering::Relaxed);
 
-            let block_len = layout.block_len();
-            let fused = fused_plan.as_ref().map(|(ops, segs)| (ops.as_slice(), segs.as_slice()));
+            // Shared-block decode gating: item i of this stage may decode
+            // once the previous-stage items owning its blocks have
+            // encoded. Groups tile the block set, so ownership is total
+            // and each dep list is the (sorted, deduped) set of previous
+            // items its blocks map to — usually a small fraction of the
+            // stage.
+            let prev_gate = prev.as_ref().filter(|_| cross).map(|p| p.gate.clone());
+            let deps: Vec<Vec<u32>> = match prev.as_ref().filter(|_| cross) {
+                Some(p) => group_order
+                    .iter()
+                    .map(|&g| {
+                        schedule.group_blocks_into(g, &mut group_ids);
+                        let mut d: Vec<u32> = group_ids
+                            .iter()
+                            .filter_map(|id| p.owner.get(id).copied())
+                            .collect();
+                        d.sort_unstable();
+                        d.dedup();
+                        d
+                    })
+                    .collect(),
+                None => Vec::new(),
+            };
+            let ctx = Arc::new(StageCtx {
+                schedule,
+                group_order,
+                remapped,
+                fused_plan,
+                gate: Arc::new(BoundaryGate::new(flat.len() / bpg.max(1))),
+                prev_gate,
+                deps,
+            });
 
-            // The chain's three phases; the driver decides per stage
-            // (overlap auto-enable + adaptive ring depth) whether they run
-            // on the persistent phase pool — while a worker applies gates
-            // to group g, its decode thread is already
+            // The chain's three phases, boxed so the driver can keep them
+            // alive across the epoch window; the driver decides per stage
+            // (overlap auto-enable + adaptive ring depth) whether they
+            // run on the persistent phase pool — while a worker applies
+            // gates to group g, its decode thread is already
             // fetching/decompressing g+1 and its encode thread
             // compressing/storing g−1 — or composed sequentially per
-            // worker.
-            let decode_fn = |ctx: &mut WorkerCtx<'_>, i: usize| -> Result<()> {
-                self.decode_group(
-                    ctx,
-                    &schedule,
-                    group_order[i],
-                    block_len,
-                    &codec,
-                    &store,
-                    &metrics,
-                )
+            // worker. `noting_failure` raises the run-abort flag on any
+            // Err or panic so boundary-gate waiters in the *next* stage's
+            // epoch never wedge on marks that will no longer come.
+            let metrics_ref = &metrics;
+            let store_ref = &store;
+            let abort_ref = &run_abort;
+            let decode: BoxedPhase<'_> = {
+                let ctx = ctx.clone();
+                Box::new(move |w, i| {
+                    if let Some(pg) = &ctx.prev_gate {
+                        if !pg.complete() {
+                            // The previous stage is still encoding: this
+                            // is a cross-stage decode. Wait only for the
+                            // items owning this group's blocks.
+                            metrics_ref.cross_stage_decodes.fetch_add(1, Ordering::Relaxed);
+                            let stall = pg.wait_for(&ctx.deps[i], abort_ref);
+                            if stall > 0 {
+                                metrics_ref
+                                    .boundary_stall_ns
+                                    .fetch_add(stall, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    noting_failure(abort_ref, || {
+                        self.decode_group(
+                            w,
+                            &ctx.schedule,
+                            ctx.group_order[i],
+                            block_len,
+                            &codec,
+                            store_ref,
+                            metrics_ref,
+                        )
+                    })
+                })
             };
-            let apply_fn = |ctx: &mut WorkerCtx<'_>, _i: usize| -> Result<()> {
-                self.apply_group(ctx, &remapped, fused, &metrics)
+            let apply: BoxedPhase<'_> = {
+                let ctx = ctx.clone();
+                Box::new(move |w, _i| {
+                    noting_failure(abort_ref, || {
+                        self.apply_group(w, &ctx.remapped, ctx.fused(), metrics_ref)
+                    })
+                })
             };
-            let encode_fn = |ctx: &mut WorkerCtx<'_>, _i: usize| -> Result<()> {
-                self.encode_group(ctx, block_len, &codec, &store, &metrics)
+            let encode: BoxedPhase<'_> = {
+                let ctx = ctx.clone();
+                Box::new(move |w, i| {
+                    // Mark the item done on every exit of a *started*
+                    // encode — after `store.put` on success, and on
+                    // Err/panic too (the run-abort flag is raised first,
+                    // so waiters discard whatever they read). Items
+                    // skimmed by an abort never run this closure; their
+                    // waiters escape via the run-abort poll instead.
+                    struct MarkOnDrop<'g> {
+                        gate: &'g BoundaryGate,
+                        item: usize,
+                    }
+                    impl Drop for MarkOnDrop<'_> {
+                        fn drop(&mut self) {
+                            self.gate.mark_done(self.item);
+                        }
+                    }
+                    let _mark = MarkOnDrop { gate: &ctx.gate, item: i };
+                    noting_failure(abort_ref, || {
+                        self.encode_group(w, block_len, &codec, store_ref, metrics_ref)
+                    })
+                })
             };
-            pools.run_stage(
-                schedule.group_len(),
-                schedule.num_groups(),
+            pools.submit_stage(
+                ctx.schedule.group_len(),
+                ctx.schedule.num_groups(),
                 &metrics,
-                &decode_fn,
-                &apply_fn,
-                &encode_fn,
+                StageBatch { decode, apply, encode },
             )?;
+            if !cross {
+                // Per-stage barrier semantics: close the epoch before the
+                // next stage publishes its schedule.
+                pools.drain_all(&metrics)?;
+            }
             metrics
                 .groups_processed
-                .fetch_add(schedule.num_groups() as u64, Ordering::Relaxed);
+                .fetch_add(ctx.schedule.num_groups() as u64, Ordering::Relaxed);
+            prev = cross.then(|| PrevStage {
+                flat,
+                bpg,
+                num_groups: ctx.schedule.num_groups(),
+                owner,
+                gate: ctx.gate.clone(),
+            });
         }
+        pools.drain_all(&metrics)?;
         pools.finish(&metrics);
 
         // ---- Wrap up ----
@@ -558,13 +750,116 @@ mod tests {
         // handoff per stage.
         assert_eq!(r.metrics.phase_threads_spawned, 3);
         assert_eq!(r.metrics.pool_stage_handoffs, r.stages as u64);
+        // Two epoch banks under cross-stage overlap → up to twice the
+        // ring arenas of the old single-bank pool, each warming once.
         assert!(
-            r.metrics.scratch_grows <= 2 * r.stages as u64,
+            r.metrics.scratch_grows <= 4 * r.stages as u64,
             "ring scratch grew {} times over {} stages",
             r.metrics.scratch_grows,
             r.stages
         );
-        assert!(r.metrics.groups_processed >= 2 * r.metrics.scratch_grows);
+        assert!(r.metrics.groups_processed >= r.metrics.scratch_grows);
+    }
+
+    #[test]
+    fn cross_stage_overlap_is_deterministic_and_instrumented() {
+        // Cross-stage epochs move *when* chains run, never what they
+        // compute: the state must match the barrier run exactly, and on a
+        // multi-stage pinned-overlap run the boundary instrumentation
+        // must actually engage (decodes accepted while the previous
+        // stage drains).
+        let c = generators::build("qaoa", 10, 7).unwrap();
+        let barrier = {
+            let mut config = cfg(5, 2);
+            config.overlap = OverlapMode::On;
+            config.cross_stage = OverlapMode::Off;
+            config.pipeline = PipelineConfig::new(1, 2);
+            config.pipeline_depth = 2;
+            config.pipeline_depth_auto = false;
+            BmqSim::new(config).run(&c, true).unwrap()
+        };
+        assert_eq!(
+            barrier.metrics.cross_stage_decodes, 0,
+            "barrier runs must never record cross-stage decodes"
+        );
+        assert_eq!(barrier.metrics.boundary_stall_ns, 0);
+        let mut config = cfg(5, 2);
+        config.overlap = OverlapMode::On;
+        config.cross_stage = OverlapMode::On;
+        config.pipeline = PipelineConfig::new(1, 2);
+        config.pipeline_depth = 2;
+        config.pipeline_depth_auto = false;
+        let r = BmqSim::new(config).run(&c, true).unwrap();
+        let f = r.state.as_ref().unwrap().fidelity(barrier.state.as_ref().unwrap());
+        assert!(f > 1.0 - 1e-12, "cross-stage changed the state: {f}");
+        assert_eq!(r.metrics.groups_processed, barrier.metrics.groups_processed);
+        assert_eq!(r.metrics.decompressions, barrier.metrics.decompressions);
+        assert!(r.stages > 1, "need a stage boundary to cross");
+        // The epoch window engaged: either decode crossed a boundary or
+        // the engine timed an end-of-run epoch drain (whether a decode
+        // beats the previous stage's encoders is a scheduling race, so
+        // the two counters are asserted jointly).
+        assert!(
+            r.metrics.cross_stage_decodes > 0 || r.metrics.epoch_drain_ns > 0,
+            "cross-stage run recorded no boundary activity at all"
+        );
+    }
+
+    #[test]
+    fn cross_stage_with_spill_and_faults_matches_barrier() {
+        // The full stack at once: tight budget, async spill, recoverable
+        // injected faults, spill-aware reordering, and cross-stage
+        // epochs. State must stay byte-identical to the fault-free
+        // barrier run — and nothing may hang or panic mid-drain.
+        let dir = std::env::temp_dir().join("bmqsim-engine-cross-fault");
+        let c = generators::build("qaoa", 12, 5).unwrap();
+        let base = {
+            let mut config = cfg(6, 2);
+            config.codec = Codec::raw();
+            config.memory_budget = Some(10 * 1024);
+            config.spill_dir = Some(dir.clone());
+            config.cross_stage = OverlapMode::Off;
+            config.pipeline = PipelineConfig::sequential();
+            BmqSim::new(config).run(&c, true).unwrap()
+        };
+        assert!(base.mem.spill_events > 0, "budget never engaged");
+        let mut config = cfg(6, 2);
+        config.codec = Codec::raw();
+        config.memory_budget = Some(10 * 1024);
+        config.spill_dir = Some(dir);
+        config.overlap = OverlapMode::On;
+        config.cross_stage = OverlapMode::On;
+        config.pipeline = PipelineConfig::new(1, 4);
+        config.pipeline_depth = 2;
+        config.pipeline_depth_auto = false;
+        config.fault_plan = Some(
+            crate::memory::FaultPlan::parse("seed=3,eio@write:1,eio=0.02").unwrap(),
+        );
+        let r = BmqSim::new(config).run(&c, true).unwrap();
+        let f = r.state.as_ref().unwrap().fidelity(base.state.as_ref().unwrap());
+        assert!(f > 1.0 - 1e-12, "cross-stage + faults changed the state: {f}");
+        assert!(r.mem.io_retries > 0, "fault plan never engaged");
+    }
+
+    #[test]
+    fn fatal_fault_under_cross_stage_fails_without_hanging() {
+        // A persistent spill failure mid-run with two epochs in flight:
+        // the run must surface a typed error — decode waiters at the
+        // boundary gate have to escape via the run-abort flag, not wedge.
+        let dir = std::env::temp_dir().join("bmqsim-engine-cross-fatal");
+        let c = generators::build("ising", 10, 3).unwrap();
+        let mut config = cfg(6, 2);
+        config.memory_budget = Some(2048);
+        config.spill_dir = Some(dir);
+        config.sync_spill = true; // fail on the evicting put, deterministically
+        config.overlap = OverlapMode::On;
+        config.cross_stage = OverlapMode::On;
+        config.pipeline_depth = 2;
+        config.pipeline_depth_auto = false;
+        config.fault_plan =
+            Some(crate::memory::FaultPlan::parse("seed=4,eio=1.0").unwrap());
+        let err = BmqSim::new(config).run(&c, false);
+        assert!(err.is_err(), "total-EIO plan must fail, got {err:?}");
     }
 
     #[test]

@@ -186,6 +186,17 @@ pub struct SimConfig {
     /// process-wide). Vector and scalar kernels are byte-identical, so
     /// this is a diagnostic/benchmark knob, never a correctness one.
     pub no_simd: bool,
+    /// Cross-stage pipeline overlap: let the next stage's decode phase
+    /// start while the previous stage's encoders drain, instead of a full
+    /// per-stage barrier. Decode of a group that shares blocks with the
+    /// previous stage's unfinished tail waits on a per-item boundary gate
+    /// (`sim::BoundaryGate`); disjoint groups flow immediately. `Auto`
+    /// (default) follows the overlap pipeline itself: cross-stage engages
+    /// whenever `overlap` is not pinned `Off`. CLI `--cross-stage` /
+    /// `--no-cross-stage` pin it. Per-gate engines (`Sc19Sim`) ignore it:
+    /// each gate's groups tile every block, so no group is ever disjoint
+    /// from the previous stage and the barrier is optimal there.
+    pub cross_stage: OverlapMode,
 }
 
 impl Default for SimConfig {
@@ -215,6 +226,7 @@ impl Default for SimConfig {
             fault_plan: None,
             spill_fallback_dir: None,
             no_simd: false,
+            cross_stage: OverlapMode::Auto,
         }
     }
 }
@@ -280,6 +292,7 @@ mod tests {
         assert!(c.fault_plan.is_none(), "no fault injection by default");
         assert!(c.spill_fallback_dir.is_none());
         assert!(!c.no_simd, "vector kernels on by default");
+        assert_eq!(c.cross_stage, OverlapMode::Auto, "cross-stage follows overlap");
         let opts = c.store_options();
         assert_eq!(opts.shards, 8);
         assert!(opts.async_spill);

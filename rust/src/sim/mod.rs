@@ -24,23 +24,41 @@ use crate::memory::{BlockStore, MemStats};
 use crate::metrics::{Metrics, MetricsReport};
 use crate::pipeline::{
     run_items, PhasePool, PipelineConfig, RingDepthController, ScratchPool, WorkerCtx,
-    RING_DEPTH_MAX,
+    MAX_EPOCHS_IN_FLIGHT, RING_DEPTH_MAX,
 };
 use crate::state::{GroupSchedule, StateVector};
 use crate::types::{Error, Result};
-use std::sync::atomic::Ordering;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// A borrowed phase closure as the engines hand it to [`PoolDriver`]:
 /// one third of a group chain (decode / apply / encode), callable on any
 /// worker.
 pub(crate) type PhaseFn<'a> = &'a (dyn Fn(&mut WorkerCtx<'_>, usize) -> Result<()> + Sync);
 
+/// An owned phase closure for cross-stage submission. The driver keeps
+/// the box alive (its pointee is heap-stable) until the epoch running it
+/// is drained — that ownership is what discharges
+/// [`PhasePool::submit_stage`]'s safety contract.
+pub(crate) type BoxedPhase<'a> = Box<dyn Fn(&mut WorkerCtx<'_>, usize) -> Result<()> + Sync + 'a>;
+
+/// One stage's three owned phase closures, submitted as a unit to
+/// [`PoolDriver::submit_stage`].
+pub(crate) struct StageBatch<'a> {
+    pub decode: BoxedPhase<'a>,
+    pub apply: BoxedPhase<'a>,
+    pub encode: BoxedPhase<'a>,
+}
+
 /// Shared chain-driver plumbing for both engines: the lazily-built
 /// sequential [`ScratchPool`] and persistent [`PhasePool`], the adaptive
 /// ring-depth controller, and the per-stage overlap auto-enable decision.
-/// One instance lives per engine run; `run_stage` is called once per
-/// stage (per gate in SC19), `finish` once before the metrics snapshot.
-pub(crate) struct PoolDriver {
+/// One instance lives per engine run; `run_stage` (barrier) or
+/// `submit_stage` (cross-stage window) is called once per stage (per gate
+/// in SC19), `finish` once before the metrics snapshot.
+pub(crate) struct PoolDriver<'a> {
     pipe: PipelineConfig,
     overlap: OverlapMode,
     depth_cap: usize,
@@ -48,9 +66,14 @@ pub(crate) struct PoolDriver {
     seq_pool: Option<ScratchPool>,
     phase_pool: Option<PhasePool>,
     depth_ctl: RingDepthController,
+    /// Batches whose epochs are still in flight on the phase pool, oldest
+    /// first. The pool's lifetime-erased pointers point into these boxes;
+    /// [`Self::sync_inflight`] pops a batch only after the pool retired
+    /// its epoch, and `Drop` drains the pool before the boxes free.
+    inflight: VecDeque<StageBatch<'a>>,
 }
 
-impl PoolDriver {
+impl<'a> PoolDriver<'a> {
     /// `codec_ns_per_amp` is the engine's init-time codec calibration (see
     /// [`auto_overlap`]); `pipe` is the worker shape the engine actually
     /// drives (BMQSIM: `config.pipeline`; SC19: one device × its workers).
@@ -72,24 +95,13 @@ impl PoolDriver {
                 config.pipeline_depth_auto,
                 depth_cap,
             ),
+            inflight: VecDeque::new(),
         }
     }
 
-    /// Run one stage of `num_groups` disjoint group chains, deciding per
-    /// stage (unless pinned) whether to overlap: engaged stages go to the
-    /// persistent phase pool at the controller's ring depth, declined
-    /// stages run the same three closures composed sequentially per
-    /// worker. Both pools are built on first use, so a run whose stages
-    /// all resolve one way never pays for the other.
-    pub(crate) fn run_stage(
-        &mut self,
-        group_len: usize,
-        num_groups: usize,
-        metrics: &Metrics,
-        decode: PhaseFn<'_>,
-        apply: PhaseFn<'_>,
-        encode: PhaseFn<'_>,
-    ) -> Result<()> {
+    /// The per-stage overlap decision (auto-enable heuristic unless
+    /// pinned), with the auto counters recorded.
+    fn decide_overlap(&self, group_len: usize, num_groups: usize, metrics: &Metrics) -> bool {
         let heuristic = auto_overlap(group_len, num_groups, self.codec_ns_per_amp);
         let use_overlap = self.overlap.engaged(heuristic);
         if self.overlap.is_auto() {
@@ -99,6 +111,127 @@ impl PoolDriver {
                 metrics.auto_overlap_off.fetch_add(1, Ordering::Relaxed);
             }
         }
+        use_overlap
+    }
+
+    /// Retire batches whose epochs the pool has drained. The pool's
+    /// window length is authoritative: a batch is popped only once its
+    /// epoch is gone, so no erased pointer ever outlives its closures.
+    fn sync_inflight(&mut self) {
+        let live = self.phase_pool.as_ref().map_or(0, |p| p.in_flight());
+        while self.inflight.len() > live {
+            self.inflight.pop_front();
+        }
+    }
+
+    /// Drain pool epochs until at most `window` remain, timing the wait
+    /// as `Metrics::epoch_drain_ns` — the boundary cost the cross-stage
+    /// overlap exists to shrink. On `Err` the pool has already drained
+    /// its whole window (errors only surface once it is empty).
+    fn drain_to_window(&mut self, window: usize, metrics: &Metrics) -> Result<()> {
+        let r = match self.phase_pool.as_mut() {
+            Some(pool) if pool.in_flight() > window => {
+                let t0 = Instant::now();
+                let r = if window == 0 { pool.drain_all() } else { pool.drain_oldest() };
+                metrics
+                    .epoch_drain_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                r
+            }
+            _ => Ok(()),
+        };
+        self.sync_inflight();
+        r
+    }
+
+    /// Drain every in-flight epoch and surface any recorded failure. The
+    /// engine calls this once after submitting its last stage, before the
+    /// metrics snapshot / readout.
+    pub(crate) fn drain_all(&mut self, metrics: &Metrics) -> Result<()> {
+        self.drain_to_window(0, metrics)
+    }
+
+    /// Drain until at most one epoch is in flight — the engine's
+    /// pre-publish step. Before stitching stage k+1's schedule onto stage
+    /// k's tail, stage k-1 must have fully retired: its `group_completed`
+    /// calls advanced the store's progress cursor past every group the
+    /// stitched publish is about to rebase away.
+    pub(crate) fn drain_to_one(&mut self, metrics: &Metrics) -> Result<()> {
+        self.drain_to_window(1, metrics)
+    }
+
+    /// Submit one stage of `num_groups` disjoint group chains without
+    /// waiting for it to finish. Overlap-engaged stages join the phase
+    /// pool's epoch window (up to [`MAX_EPOCHS_IN_FLIGHT`] coexist, so
+    /// the previous stage's encode tail runs under this stage's decode
+    /// head); declined stages drain the window first and run the batch
+    /// sequentially. The driver owns the batch's boxed closures until the
+    /// epoch retires — including on unwind (see `Drop`) — which is what
+    /// makes the pool's lifetime-erased submission sound.
+    pub(crate) fn submit_stage(
+        &mut self,
+        group_len: usize,
+        num_groups: usize,
+        metrics: &Metrics,
+        batch: StageBatch<'a>,
+    ) -> Result<()> {
+        let use_overlap = self.decide_overlap(group_len, num_groups, metrics);
+        let pipe = self.pipe;
+        if use_overlap {
+            self.drain_to_window(MAX_EPOCHS_IN_FLIGHT - 1, metrics)?;
+            let depth_cap = self.depth_cap;
+            let stall = self
+                .phase_pool
+                .get_or_insert_with(|| PhasePool::new(pipe, depth_cap))
+                .stats()
+                .total_stall_ns();
+            let depth = self.depth_ctl.stage_depth(stall);
+            self.inflight.push_back(batch);
+            let r = {
+                let b = self.inflight.back().expect("batch just pushed");
+                let pool = self.phase_pool.as_mut().expect("phase pool built above");
+                // SAFETY: the boxed closures live in `self.inflight`
+                // (heap-stable behind their boxes) until `sync_inflight`
+                // pops the batch, which happens only after the pool
+                // retired the epoch — via `drain_to_window` on every
+                // normal path and `Drop` on unwind. The pre-drain above
+                // freed an epoch slot, so this submit does not drain
+                // (and therefore cannot fail) internally.
+                unsafe { pool.submit_stage(num_groups, depth, &*b.decode, &*b.apply, &*b.encode) }
+            };
+            self.sync_inflight();
+            r
+        } else {
+            self.drain_to_window(0, metrics)?;
+            let pool =
+                self.seq_pool.get_or_insert_with(|| ScratchPool::new(pipe.workers()));
+            run_items::<Error, _>(pipe, num_groups, pool, |ctx, i| {
+                (batch.decode)(&mut *ctx, i)?;
+                (batch.apply)(&mut *ctx, i)?;
+                (batch.encode)(&mut *ctx, i)
+            })
+        }
+    }
+
+    /// Run one stage of `num_groups` disjoint group chains to a full
+    /// barrier, deciding per stage (unless pinned) whether to overlap:
+    /// engaged stages go to the persistent phase pool at the controller's
+    /// ring depth, declined stages run the same three closures composed
+    /// sequentially per worker. Both pools are built on first use, so a
+    /// run whose stages all resolve one way never pays for the other.
+    pub(crate) fn run_stage(
+        &mut self,
+        group_len: usize,
+        num_groups: usize,
+        metrics: &Metrics,
+        decode: PhaseFn<'_>,
+        apply: PhaseFn<'_>,
+        encode: PhaseFn<'_>,
+    ) -> Result<()> {
+        // Barrier semantics: any cross-stage window still open must close
+        // before these borrowed (non-boxed) closures may run.
+        self.drain_all(metrics)?;
+        let use_overlap = self.decide_overlap(group_len, num_groups, metrics);
         let pipe = self.pipe;
         if use_overlap {
             let depth_cap = self.depth_cap;
@@ -139,6 +272,27 @@ impl PoolDriver {
     }
 }
 
+impl Drop for PoolDriver<'_> {
+    fn drop(&mut self) {
+        // Unwind / early-return guard for `submit_stage`'s safety
+        // contract: the boxed closures in `inflight` must outlive their
+        // epochs, so abort and drain the pool BEFORE the batches free.
+        // A panic payload re-raised by the drain is swallowed here — if
+        // the driver is dropping on a panic path the caller already
+        // carries the original payload, and a second unwind out of `drop`
+        // would abort the process.
+        if let Some(pool) = self.phase_pool.as_mut() {
+            if pool.in_flight() > 0 {
+                pool.abort();
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let _ = pool.drain_all();
+                }));
+            }
+        }
+        self.inflight.clear();
+    }
+}
+
 /// Spill-aware scheduling (ROADMAP): order a stage's groups so the ones
 /// whose blocks are already primary-resident run first, deferring groups
 /// that would pay synchronous disk reads until the prefetcher has had
@@ -174,6 +328,97 @@ pub(crate) fn plan_group_order(
     // groups are the mirror image; counting both would double-report.)
     let moved = order.iter().enumerate().filter(|&(i, &g)| g > i).count() as u64;
     (order, moved)
+}
+
+/// Cross-stage decode gating (shared-block barriers): one gate per stage,
+/// one slot per *item* (group chain) in that stage's processing order.
+/// The stage's encode marks items done; the NEXT stage's decode waits
+/// only for the specific previous-stage items that own its input blocks —
+/// disjoint groups flow into the new epoch immediately, shared-block
+/// groups hold until their producers have re-encoded.
+///
+/// Determinism: a stage-`s+1` group reads exactly the blocks written by
+/// its owner groups in stage `s`, and every block has exactly one owner
+/// per stage (groups tile the block set) — so waiting for those owners is
+/// sufficient. The gate is a correctness mechanism, not a heuristic.
+pub(crate) struct BoundaryGate {
+    done: Vec<AtomicBool>,
+    remaining: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl BoundaryGate {
+    pub(crate) fn new(items: usize) -> Self {
+        BoundaryGate {
+            done: (0..items).map(|_| AtomicBool::new(false)).collect(),
+            remaining: AtomicUsize::new(items),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Mark one item's blocks re-encoded and stored. Idempotent (the
+    /// engine's unwind guard and happy path may both call it).
+    pub(crate) fn mark_done(&self, item: usize) {
+        if !self.done[item].swap(true, Ordering::AcqRel) {
+            self.remaining.fetch_sub(1, Ordering::AcqRel);
+            // Serialize against a waiter between its readiness check and
+            // its wait — classic lost-wakeup fence.
+            drop(self.lock.lock());
+            self.cv.notify_all();
+        }
+    }
+
+    /// True once every item of the stage has encoded.
+    pub(crate) fn complete(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+
+    fn ready(&self, deps: &[u32]) -> bool {
+        self.complete() || deps.iter().all(|&d| self.done[d as usize].load(Ordering::Acquire))
+    }
+
+    /// Block until every dep item is done, or `abort` rises (the run is
+    /// failing; its results are discarded). Returns the stall in ns
+    /// (`Metrics::boundary_stall_ns`). The wait re-polls the abort flag
+    /// every millisecond, so a producer that died without marking
+    /// (items skimmed on an aborted epoch) cannot wedge a waiter.
+    pub(crate) fn wait_for(&self, deps: &[u32], abort: &AtomicBool) -> u64 {
+        if self.ready(deps) {
+            return 0;
+        }
+        let t0 = Instant::now();
+        let mut guard = self.lock.lock().unwrap();
+        while !self.ready(deps) && !abort.load(Ordering::Acquire) {
+            let (g, _) = self.cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+            guard = g;
+        }
+        drop(guard);
+        t0.elapsed().as_nanos() as u64
+    }
+}
+
+/// Phase-closure wrapper for the engines under cross-stage overlap: an
+/// `Err` OR a panic raises the run-level fail flag, so gate waiters in
+/// the next epoch stop waiting for producers that will never mark
+/// ([`BoundaryGate::wait_for`] polls the flag).
+pub(crate) fn noting_failure<R>(flag: &AtomicBool, f: impl FnOnce() -> Result<R>) -> Result<R> {
+    struct RaiseOnUnwind<'a>(&'a AtomicBool);
+    impl Drop for RaiseOnUnwind<'_> {
+        fn drop(&mut self) {
+            if std::thread::panicking() {
+                self.0.store(true, Ordering::Release);
+            }
+        }
+    }
+    let guard = RaiseOnUnwind(flag);
+    let r = f();
+    drop(guard);
+    if r.is_err() {
+        flag.store(true, Ordering::Release);
+    }
+    r
 }
 
 /// Pluggable gate-application backend: native rust kernels or the AOT'd
@@ -296,5 +541,48 @@ mod tests {
         let (nat, m0) = plan_group_order(&schedule, &un, true, &mut ids);
         assert_eq!(nat, (0..8).collect::<Vec<_>>());
         assert_eq!(m0, 0);
+    }
+
+    #[test]
+    fn boundary_gate_releases_on_deps_and_escapes_on_abort() {
+        let gate = BoundaryGate::new(4);
+        let abort = AtomicBool::new(false);
+        assert!(!gate.complete());
+        gate.mark_done(1);
+        gate.mark_done(1); // idempotent: must not double-count remaining
+        assert_eq!(gate.wait_for(&[1], &abort), 0, "satisfied deps must not wait");
+        // A dep marked from another thread releases the waiter.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(5));
+                gate.mark_done(0);
+            });
+            assert!(gate.wait_for(&[0, 1], &abort) > 0, "waiter never stalled");
+        });
+        // An unmarked dep + abort: the waiter escapes instead of wedging.
+        abort.store(true, Ordering::Release);
+        gate.wait_for(&[3], &abort);
+        assert!(!gate.complete());
+        gate.mark_done(2);
+        gate.mark_done(3);
+        assert!(gate.complete(), "all items marked but gate not complete");
+        // A complete gate satisfies any dep list with zero stall.
+        assert_eq!(gate.wait_for(&[0, 1, 2, 3], &AtomicBool::new(false)), 0);
+    }
+
+    #[test]
+    fn noting_failure_raises_on_err_and_panic() {
+        let flag = AtomicBool::new(false);
+        assert!(noting_failure(&flag, || Ok(7usize)).is_ok());
+        assert!(!flag.load(Ordering::Acquire), "clean call must not raise");
+        let r = noting_failure(&flag, || Err::<(), _>(Error::Codec("x".into())));
+        assert!(r.is_err());
+        assert!(flag.load(Ordering::Acquire), "Err must raise the flag");
+        let flag = AtomicBool::new(false);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = noting_failure(&flag, || -> Result<()> { panic!("boom") });
+        }));
+        assert!(caught.is_err());
+        assert!(flag.load(Ordering::Acquire), "panic must raise the flag");
     }
 }

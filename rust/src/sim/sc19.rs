@@ -12,6 +12,14 @@
 //! reproduces SC19-Sim (CPU); `workers > 1` is the SC19-Sim (GPU) analogue
 //! (parallel block updates, still per-gate compression, no pipelining —
 //! the paper notes its GPU version doesn't overlap transfers either).
+//!
+//! **Cross-stage overlap is deliberately not wired in** (the engine
+//! ignores `SimConfig::cross_stage` and drives `PoolDriver::run_stage`'s
+//! per-stage barrier): the schedule horizon here is ONE gate, and every
+//! gate's groups tile the entire block set — so no next-"stage" group is
+//! ever disjoint from the previous one, every decode would wait on the
+//! full previous gate anyway, and the barrier is already optimal. See
+//! `barrier_only_even_with_cross_stage_pinned_on` for the pinned proof.
 
 use super::{plan_group_order, GateApplier, NativeApplier, PoolDriver, SimConfig, SimResult};
 use crate::circuit::Circuit;
@@ -354,6 +362,28 @@ mod tests {
             assert_eq!(r.metrics.pool_stage_handoffs, c.len() as u64);
             assert_eq!(r.metrics.phase_threads_spawned, 3 * workers as u64);
         }
+    }
+
+    #[test]
+    fn barrier_only_even_with_cross_stage_pinned_on() {
+        // SC19 documents itself as barrier-only: per-gate "stages" tile
+        // every block, so cross-stage gating could never release a decode
+        // early. Pinning cross_stage On must change nothing — and the
+        // boundary instrumentation must stay silent.
+        let c = generators::qft(8);
+        let mut config = SimConfig { block_qubits: 4, ..SimConfig::default() };
+        config.codec = Codec::raw();
+        config.overlap = crate::sim::OverlapMode::On;
+        config.cross_stage = crate::sim::OverlapMode::On;
+        config.pipeline_depth = 2;
+        config.pipeline_depth_auto = false;
+        let r = Sc19Sim::new(config.clone(), 2).run(&c, true).unwrap();
+        assert_eq!(r.metrics.cross_stage_decodes, 0, "sc19 must never cross a boundary");
+        assert_eq!(r.metrics.boundary_stall_ns, 0);
+        config.cross_stage = crate::sim::OverlapMode::Off;
+        let base = Sc19Sim::new(config, 2).run(&c, true).unwrap();
+        let f = r.state.as_ref().unwrap().fidelity(base.state.as_ref().unwrap());
+        assert!(f > 1.0 - 1e-12, "cross_stage knob leaked into sc19: {f}");
     }
 
     #[test]

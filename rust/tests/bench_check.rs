@@ -88,6 +88,26 @@ fn refresh_env_repins_then_gate_passes() {
 }
 
 #[test]
+fn append_history_flag_records_passing_runs_only() {
+    let dir = setup("history");
+    write(&dir, "bench_baselines/BENCH_gates.json", r#"{"speedup": 3.0}"#);
+    write(&dir, "BENCH_gates.json", r#"{"speedup": 2.9, "git_sha": "e2e1234"}"#);
+    let out = run_in(&dir, &["--append-history", "BENCH_gates.json"]);
+    assert!(out.status.success());
+    let body = std::fs::read_to_string(dir.join("bench_history.jsonl")).unwrap();
+    assert_eq!(body.lines().count(), 1);
+    assert!(body.contains("e2e1234"), "history line lacks git sha: {body}");
+    assert!(body.contains("\"speedup\""), "history line lacks gated metric: {body}");
+    // A regressed run fails the gate BEFORE appending — the trajectory
+    // only records accepted states.
+    write(&dir, "BENCH_gates.json", r#"{"speedup": 1.0, "git_sha": "bad"}"#);
+    let out = run_in(&dir, &["--append-history", "BENCH_gates.json"]);
+    assert!(!out.status.success());
+    let body = std::fs::read_to_string(dir.join("bench_history.jsonl")).unwrap();
+    assert_eq!(body.lines().count(), 1, "regressed run must not be recorded");
+}
+
+#[test]
 fn committed_baselines_cover_every_gated_artifact() {
     // The real bench_baselines/ directory ships a pin for each gated file,
     // so CI never hits the missing-baseline error on a fresh clone.

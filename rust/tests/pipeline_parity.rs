@@ -14,7 +14,7 @@
 //! oversubscription.
 
 use bmqsim::circuit::{generators, Circuit};
-use bmqsim::memory::BlockPayload;
+use bmqsim::memory::{BlockPayload, FaultPlan};
 use bmqsim::pipeline::PipelineConfig;
 use bmqsim::sim::{BmqSim, OverlapMode, SimConfig};
 use std::path::PathBuf;
@@ -94,6 +94,105 @@ fn pipelined_chain_is_byte_identical_across_depths_workers_and_spill_modes() {
         assert_eq!(r.metrics.phase_threads_spawned, 3 * 2);
         assert_eq!(r.metrics.pool_stage_handoffs, r.stages as u64);
     }
+}
+
+#[test]
+fn cross_stage_overlap_is_byte_identical_across_the_full_axis() {
+    // ISSUE 8: the cross-stage drain protocol replaces the per-stage
+    // barrier with shared-block boundary gates. Whatever the epoch window
+    // reorders, terminal compressed blocks must stay byte-identical across
+    // {cross on/off} × {depth auto/2/3} × {workers 1/4} × {sync/async
+    // spill} — the gate is a correctness mechanism, never a semantic one.
+    let c = generators::build("qaoa", 10, 3).unwrap();
+    let mut seq = base_cfg(5);
+    seq.pipeline = PipelineConfig::sequential();
+    seq.overlap = OverlapMode::Off;
+    seq.cross_stage = OverlapMode::Off;
+    let reference = terminal_blocks(seq, &c);
+
+    let probe = BmqSim::new(base_cfg(5)).run(&c, false).unwrap();
+    let budget = (probe.peak_bytes / 4).max(512);
+
+    for cross in [OverlapMode::Off, OverlapMode::On] {
+        for depth in [None, Some(2usize), Some(3)] {
+            for workers in [1usize, 4] {
+                for sync_spill in [false, true] {
+                    let mut config = base_cfg(5);
+                    config.pipeline = PipelineConfig::new(1, workers);
+                    config.overlap = OverlapMode::On;
+                    config.cross_stage = cross;
+                    match depth {
+                        Some(d) => {
+                            config.pipeline_depth = d;
+                            config.pipeline_depth_auto = false;
+                        }
+                        None => config.pipeline_depth_auto = true,
+                    }
+                    config.sync_spill = sync_spill;
+                    config.memory_budget = Some(budget);
+                    config.spill_dir = Some(tmpdir("cross"));
+                    let got = terminal_blocks(config, &c);
+                    assert_eq!(got.len(), reference.len());
+                    for (id, (a, b)) in reference.iter().zip(&got).enumerate() {
+                        assert!(
+                            a.re == b.re && a.im == b.im,
+                            "block {id} bytes differ (cross={cross:?} depth={depth:?} \
+                             workers={workers} sync_spill={sync_spill})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // The axis above is vacuous if cross-stage never actually engaged:
+    // a multi-stage run with the window open must either decode across
+    // the boundary or time an epoch drain.
+    let mut engaged = base_cfg(5);
+    engaged.pipeline = PipelineConfig::new(1, 4);
+    engaged.overlap = OverlapMode::On;
+    engaged.cross_stage = OverlapMode::On;
+    engaged.pipeline_depth = 2;
+    engaged.pipeline_depth_auto = false;
+    engaged.memory_budget = Some(budget);
+    engaged.spill_dir = Some(tmpdir("cross"));
+    let r = BmqSim::new(engaged).run(&c, false).unwrap();
+    assert!(r.stages > 1, "need a multi-stage plan to cross a boundary");
+    assert!(
+        r.metrics.cross_stage_decodes > 0 || r.metrics.epoch_drain_ns > 0,
+        "cross-stage pinned On but neither early decodes nor epoch drains recorded"
+    );
+}
+
+#[test]
+fn cross_stage_with_transient_faults_stays_byte_identical() {
+    // Mid-drain fault tolerance: recoverable spill EIOs fire while two
+    // epochs are in flight. Retries must absorb every fault without
+    // wedging a boundary-gate waiter or perturbing terminal bytes.
+    let c = generators::build("qaoa", 10, 3).unwrap();
+    let mut seq = base_cfg(5);
+    seq.pipeline = PipelineConfig::sequential();
+    seq.overlap = OverlapMode::Off;
+    seq.cross_stage = OverlapMode::Off;
+    let reference = terminal_blocks(seq, &c);
+
+    let probe = BmqSim::new(base_cfg(5)).run(&c, false).unwrap();
+    let budget = (probe.peak_bytes / 4).max(512);
+    let mut config = base_cfg(5);
+    config.pipeline = PipelineConfig::new(1, 4);
+    config.overlap = OverlapMode::On;
+    config.cross_stage = OverlapMode::On;
+    config.pipeline_depth = 2;
+    config.pipeline_depth_auto = false;
+    config.memory_budget = Some(budget);
+    config.spill_dir = Some(tmpdir("cross-fault"));
+    config.fault_plan = Some(FaultPlan::parse("seed=9,eio=0.05").unwrap());
+    let got = terminal_blocks(config.clone(), &c);
+    for (id, (a, b)) in reference.iter().zip(&got).enumerate() {
+        assert!(a.re == b.re && a.im == b.im, "block {id} differs under transient faults");
+    }
+    let r = BmqSim::new(config).run(&c, false).unwrap();
+    assert!(r.mem.io_retries > 0, "fault plan never engaged; test is vacuous");
 }
 
 #[test]
