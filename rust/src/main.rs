@@ -15,12 +15,12 @@ use bmqsim::bench_harness as bench;
 use bmqsim::circuit::{generators, partition_circuit, qasm, Circuit};
 use bmqsim::compress::Codec;
 use bmqsim::gates::measure;
+use bmqsim::memory::xxh64;
 use bmqsim::pipeline::PipelineConfig;
 use bmqsim::runtime::XlaApplier;
 use bmqsim::sim::{Backend, BmqSim, DenseSim, OverlapMode, Sc19Sim, SimConfig, SimResult};
-use bmqsim::types::{fmt_bytes, standard_memory_bytes, Precision, SplitMix64};
+use bmqsim::types::{fmt_bytes, standard_memory_bytes, Error, Precision, SplitMix64};
 use std::collections::HashMap;
-use std::process::ExitCode;
 
 const USAGE: &str = r#"bmqsim — memory-constrained state-vector quantum simulation
 
@@ -76,25 +76,90 @@ OPTIONS (run/compare/sample):
                         degradation (ideally a different filesystem)
   --fault-plan <spec>   inject spill-layer I/O faults for resilience
                         testing, e.g. "seed=7,eio=0.05,bitflip=0.02" or
-                        scripted "eio@write:1" (env: BMQSIM_FAULT_PLAN)
+                        scripted "eio@write:1" / "kill@manifest"
+                        (env: BMQSIM_FAULT_PLAN)
+  --checkpoint-dir <d>  write crash-consistent snapshots under <d> at stage
+                        boundaries (bmqsim) / gate boundaries (sc19):
+                        compressed blocks + an atomically-renamed manifest
+  --checkpoint-every <N>  snapshot cadence in completed stages      [1]
+  --checkpoint-keep <N>   most-recent checkpoints retained          [2]
+  --resume <dir>        rehydrate the newest intact checkpoint under <dir>
+                        and continue from its stage cursor; the run config
+                        must fingerprint-match the checkpoint (exit 4)
+  --stall-timeout-ms <ms>  watchdog on pipeline boundary/drain waits: a
+                        hang with no progress for <ms> becomes a typed
+                        error instead of a wedge                [off]
   --artifacts <dir>     AOT artifact directory                     [artifacts]
   --seed <s>            circuit/sampling seed                      [42]
 
 BENCHMARK ALGORITHMS: cat_state cc ising qft bv qsvm ghz_state qaoa
+
+EXIT CODES: 0 ok | 2 config/usage | 3 storage tier (spill I/O, corruption,
+            OOM) | 4 checkpoint/restore | 1 everything else
 "#;
 
-fn main() -> ExitCode {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    match run_cli(&args) {
-        Ok(()) => ExitCode::SUCCESS,
-        Err(e) => {
-            eprintln!("error: {e}");
-            ExitCode::FAILURE
+/// A CLI failure: either a usage/argument problem or a typed simulation
+/// error. The distinction drives the process exit code, so wrapping
+/// scripts (CI chaos jobs, schedulers) can tell "fix the command line"
+/// (2) from "the storage tier is unhealthy" (3) from "this checkpoint
+/// cannot drive this run" (4) without parsing stderr.
+enum CliError {
+    Usage(String),
+    Sim(Error),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Usage(m) => write!(f, "{m}"),
+            CliError::Sim(e) => write!(f, "{e}"),
         }
     }
 }
 
-fn run_cli(args: &[String]) -> Result<(), String> {
+impl From<String> for CliError {
+    fn from(m: String) -> Self {
+        CliError::Usage(m)
+    }
+}
+
+impl From<&str> for CliError {
+    fn from(m: &str) -> Self {
+        CliError::Usage(m.into())
+    }
+}
+
+impl From<Error> for CliError {
+    fn from(e: Error) -> Self {
+        CliError::Sim(e)
+    }
+}
+
+impl CliError {
+    fn exit_code(&self) -> i32 {
+        match self {
+            CliError::Usage(_) => 2,
+            CliError::Sim(e) => i32::from(e.exit_class()),
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // `process::exit` on both paths: destructors are deliberately skipped
+    // so a run that failed with phase threads wedged (stall watchdog)
+    // still terminates instead of hanging in a pool join. Normal runs
+    // have already flushed and drained everything they own by here.
+    match run_cli(&args) {
+        Ok(()) => std::process::exit(0),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(e.exit_code());
+        }
+    }
+}
+
+fn run_cli(args: &[String]) -> Result<(), CliError> {
     let Some(cmd) = args.first() else {
         println!("{USAGE}");
         return Ok(());
@@ -110,7 +175,7 @@ fn run_cli(args: &[String]) -> Result<(), String> {
             println!("{USAGE}");
             Ok(())
         }
-        other => Err(format!("unknown subcommand {other:?}; try `bmqsim help`")),
+        other => Err(format!("unknown subcommand {other:?}; try `bmqsim help`").into()),
     }
 }
 
@@ -120,13 +185,13 @@ struct Opts {
 }
 
 impl Opts {
-    fn parse(args: &[String]) -> Result<Self, String> {
+    fn parse(args: &[String]) -> Result<Self, CliError> {
         let mut map = HashMap::new();
         let mut i = 0;
         while i < args.len() {
             let a = &args[i];
             if !a.starts_with("--") {
-                return Err(format!("unexpected argument {a:?}"));
+                return Err(format!("unexpected argument {a:?}").into());
             }
             let key = a.trim_start_matches("--").to_string();
             let flag = matches!(
@@ -165,20 +230,20 @@ impl Opts {
     }
 }
 
-fn load_circuit(opts: &Opts) -> Result<Circuit, String> {
+fn load_circuit(opts: &Opts) -> Result<Circuit, CliError> {
     let seed: u64 = opts.parse_num("seed", 42u64)?;
     if let Some(path) = opts.get("qasm") {
-        return qasm::parse_file(std::path::Path::new(path)).map_err(|e| e.to_string());
+        return Ok(qasm::parse_file(std::path::Path::new(path))?);
     }
     let algo = opts.get("algo").ok_or("need --algo <name> or --qasm <file>")?;
     let n: usize = opts.parse_num("qubits", 0usize)?;
     if n == 0 {
         return Err("need --qubits <n>".into());
     }
-    generators::build(algo, n, seed).map_err(|e| e.to_string())
+    Ok(generators::build(algo, n, seed)?)
 }
 
-fn build_config(opts: &Opts) -> Result<SimConfig, String> {
+fn build_config(opts: &Opts) -> Result<SimConfig, CliError> {
     let mut cfg = SimConfig {
         block_qubits: opts.parse_num("block-qubits", 14usize)?,
         inner_size: opts.parse_num("inner-size", 2usize)?,
@@ -216,7 +281,19 @@ fn build_config(opts: &Opts) -> Result<SimConfig, String> {
         cfg.spill_fallback_dir = Some(dir.into());
     }
     if let Some(spec) = opts.get("fault-plan") {
-        cfg.fault_plan = Some(bmqsim::memory::FaultPlan::parse(spec).map_err(|e| e.to_string())?);
+        cfg.fault_plan = Some(bmqsim::memory::FaultPlan::parse(spec)?);
+    }
+    if let Some(dir) = opts.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(dir.into());
+    }
+    cfg.checkpoint_every = opts.parse_num("checkpoint-every", cfg.checkpoint_every)?;
+    cfg.checkpoint_keep = opts.parse_num("checkpoint-keep", cfg.checkpoint_keep)?;
+    if let Some(dir) = opts.get("resume") {
+        cfg.resume_from = Some(dir.into());
+    }
+    if let Some(ms) = opts.get("stall-timeout-ms") {
+        let ms: u64 = ms.parse().map_err(|_| format!("bad --stall-timeout-ms: {ms:?}"))?;
+        cfg.stall_timeout_ms = Some(ms);
     }
     cfg.store_shards = opts.parse_num("store-shards", cfg.store_shards)?;
     // Explicit --prefetch-depth pins the depth; omitting it engages the
@@ -277,28 +354,52 @@ fn run_engine(
     circuit: &Circuit,
     cfg: &SimConfig,
     materialize: bool,
-) -> Result<SimResult, String> {
+) -> Result<SimResult, CliError> {
+    run_engine_with_digest(opts, circuit, cfg, materialize).map(|(r, _)| r)
+}
+
+/// [`run_engine`], additionally computing — for the bmqsim engine, whose
+/// terminal state stays compressed in the store — an xxh64 digest over
+/// every terminal block payload in id order. Byte-identical runs (e.g. an
+/// uninterrupted run vs a killed-and-resumed one) print the same digest,
+/// which is what the CI resume-chaos job diffs.
+fn run_engine_with_digest(
+    opts: &Opts,
+    circuit: &Circuit,
+    cfg: &SimConfig,
+    materialize: bool,
+) -> Result<(SimResult, Option<u64>), CliError> {
     let engine = opts.get("engine").unwrap_or("bmqsim");
     let xla = match cfg.backend {
-        Backend::Xla => {
-            Some(XlaApplier::new(cfg.artifacts_dir.clone()).map_err(|e| e.to_string())?)
-        }
+        Backend::Xla => Some(XlaApplier::new(cfg.artifacts_dir.clone())?),
         Backend::Native => None,
     };
+    if engine == "bmqsim" {
+        let sim = match &xla {
+            None => BmqSim::new(cfg.clone()),
+            Some(x) => BmqSim::with_applier(cfg.clone(), x),
+        };
+        let (r, store, layout) = sim.run_with_store(circuit, materialize)?;
+        let mut digest = 0u64;
+        for id in 0..layout.num_blocks() {
+            let p = store.get(id)?;
+            digest = xxh64(&p.re, digest);
+            digest = xxh64(&p.im, digest);
+        }
+        return Ok((r, Some(digest)));
+    }
     let r = match (engine, &xla) {
-        ("bmqsim", None) => BmqSim::new(cfg.clone()).run(circuit, materialize),
-        ("bmqsim", Some(x)) => BmqSim::with_applier(cfg.clone(), x).run(circuit, materialize),
         ("dense", None) => DenseSim::new(cfg.clone()).run(circuit),
         ("dense", Some(x)) => DenseSim::with_applier(cfg.clone(), x).run(circuit),
         ("sc19-cpu", None) => Sc19Sim::new(cfg.clone(), 1).run(circuit, materialize),
         ("sc19-gpu", None) => Sc19Sim::new(cfg.clone(), 4).run(circuit, materialize),
-        (e, Some(_)) => return Err(format!("engine {e:?} has no xla backend")),
-        (e, None) => return Err(format!("unknown engine {e:?}")),
+        (e, Some(_)) => return Err(format!("engine {e:?} has no xla backend").into()),
+        (e, None) => return Err(format!("unknown engine {e:?}").into()),
     };
-    r.map_err(|e| e.to_string())
+    Ok((r?, None))
 }
 
-fn cmd_run(opts: &Opts) -> Result<(), String> {
+fn cmd_run(opts: &Opts) -> Result<(), CliError> {
     let circuit = load_circuit(opts)?;
     let cfg = build_config(opts)?;
     println!(
@@ -309,8 +410,14 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
         opts.get("engine").unwrap_or("bmqsim"),
         cfg.backend,
     );
-    let r = run_engine(opts, &circuit, &cfg, false)?;
+    let (r, digest) = run_engine_with_digest(opts, &circuit, &cfg, false)?;
     println!("\n{}", r.metrics);
+    if let Some(d) = digest {
+        // Terminal compressed state, one line, machine-diffable: the
+        // resume-chaos CI job compares this between an uninterrupted run
+        // and a SIGKILLed + resumed one.
+        println!("state digest     : {d:016x}");
+    }
     println!("stages           : {:>10}", r.stages);
     println!(
         "standard memory  : {:>10}",
@@ -354,12 +461,12 @@ fn cmd_run(opts: &Opts) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_partition(opts: &Opts) -> Result<(), String> {
+fn cmd_partition(opts: &Opts) -> Result<(), CliError> {
     let circuit = load_circuit(opts)?;
     let b: usize = opts.parse_num("block-qubits", 14usize)?;
     let inner: usize = opts.parse_num("inner-size", 2usize)?;
     let b = b.min(circuit.n_qubits);
-    let plan = partition_circuit(&circuit, b, inner).map_err(|e| e.to_string())?;
+    let plan = partition_circuit(&circuit, b, inner)?;
     println!(
         "{}: {} gates -> {} stages (block_qubits={b}, inner_size={}, {} blocks)",
         circuit.name,
@@ -385,14 +492,10 @@ fn cmd_partition(opts: &Opts) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_compare(opts: &Opts) -> Result<(), String> {
+fn cmd_compare(opts: &Opts) -> Result<(), CliError> {
     let circuit = load_circuit(opts)?;
     let cfg = build_config(opts)?;
-    let ideal = DenseSim::new(SimConfig::default())
-        .run(&circuit)
-        .map_err(|e| e.to_string())?
-        .state
-        .unwrap();
+    let ideal = DenseSim::new(SimConfig::default()).run(&circuit)?.state.unwrap();
     let r = run_engine(opts, &circuit, &cfg, true)?;
     let st = r.state.as_ref().ok_or("engine did not materialize state")?;
     println!("engine           : {}", r.engine);
@@ -403,7 +506,7 @@ fn cmd_compare(opts: &Opts) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_sample(opts: &Opts) -> Result<(), String> {
+fn cmd_sample(opts: &Opts) -> Result<(), CliError> {
     let circuit = load_circuit(opts)?;
     let cfg = build_config(opts)?;
     let shots: usize = opts.parse_num("shots", 1024usize)?;
@@ -425,12 +528,12 @@ fn cmd_sample(opts: &Opts) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_report(opts: &Opts) -> Result<(), String> {
+fn cmd_report(opts: &Opts) -> Result<(), CliError> {
     let scale = opts.get("scale").unwrap_or("small");
     let (ns, n_mid, budget) = match scale {
         "small" => (vec![12usize, 14], 14usize, 1usize << 22),
         "full" => (vec![16usize, 18, 20], 20usize, 1usize << 26),
-        other => return Err(format!("unknown --scale {other:?}")),
+        other => return Err(format!("unknown --scale {other:?}").into()),
     };
     let algos: Vec<&str> = generators::ALL.to_vec();
     let short: Vec<&str> = vec!["qft", "qaoa", "ising", "ghz_state"];

@@ -1,0 +1,662 @@
+//! Crash-consistent checkpoint/restore for the block store
+//! (DESIGN.md "Checkpoint & resume").
+//!
+//! A checkpoint is one directory `ckpt-<cursor>` under the configured
+//! checkpoint root, holding exactly two files:
+//!
+//! * `blocks.bin` — every live block's serialized payload wrapped in the
+//!   same checksummed `[BQSF]` frame format the spill tier uses
+//!   ([`super::spill::frame_encode`]), concatenated in block-id order.
+//! * `MANIFEST.bqm` — a one-line integrity header (`BMQCKPT <xxh64>`)
+//!   followed by a schema-versioned JSON body: stage cursor, config
+//!   fingerprint, carried metric counters, and a block table with one
+//!   `[id, offset, len, xxh64]` row per frame.
+//!
+//! **Atomicity argument.** The manifest is the *commit record*: a
+//! checkpoint exists iff `MANIFEST.bqm` is present and verifies. The
+//! writer orders `blocks.bin` write → fsync → manifest written to a temp
+//! name → fsync → `rename` → directory fsync, so a kill at any instant
+//! leaves either no manifest (the directory is invisible to resume — the
+//! previous checkpoint is still the newest valid one) or a fully
+//! consistent manifest whose referenced frames were already durable
+//! before the rename. POSIX `rename` within one directory is atomic;
+//! there is no window in which a torn manifest can be observed under its
+//! final name. Every corruption mode below the rename (truncated or
+//! bit-flipped manifest body, damaged frame bytes, a resized blocks
+//! file) is caught by the header checksum, the per-frame checksums, or
+//! the manifest block table, and surfaces as a typed
+//! [`Error::Checkpoint`] / [`Error::Corruption`] — resume then falls
+//! back to the next-older retained checkpoint instead of panicking or
+//! silently continuing from damaged state.
+//!
+//! Fault hooks: when the store carries a [`FaultInjector`], every frame
+//! write consults the `checkpoint` op site and the manifest temp-write
+//! and rename consult the `manifest` op site (attempts 1 and 2), so
+//! scripted plans like `kill@manifest` / `kill@checkpoint:3` can abort
+//! the process at exact boundaries to prove the argument above.
+
+use super::faults::{xxh64, CkptFault, FaultInjector, FaultOp};
+use super::spill::{frame_check, frame_encode, HEADER_BYTES};
+use super::BlockPayload;
+use crate::runtime::Json;
+use crate::types::{Error, Result};
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Manifest JSON schema version; bumped on any incompatible change.
+pub const MANIFEST_SCHEMA: u32 = 1;
+/// The commit record's file name (presence == checkpoint committed).
+pub const MANIFEST_NAME: &str = "MANIFEST.bqm";
+/// Concatenated checksummed block frames.
+pub const BLOCKS_NAME: &str = "blocks.bin";
+const MANIFEST_MAGIC: &str = "BMQCKPT";
+const TMP_NAME: &str = "MANIFEST.tmp";
+
+/// One row of the manifest block table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockEntry {
+    pub id: usize,
+    /// Byte offset of the frame inside `blocks.bin`.
+    pub offset: u64,
+    /// Whole-frame length (header + payload).
+    pub len: usize,
+    /// xxh64 over the whole frame bytes (seed 0) — a manifest-side
+    /// double-check on top of the frame's own embedded payload checksum.
+    pub checksum: u64,
+}
+
+/// Everything the engine needs to persist besides the blocks themselves.
+#[derive(Debug, Clone)]
+pub struct CheckpointMeta<'a> {
+    /// Engine identifier (`"bmqsim"`, `"sc19-cpu"`, ...): a checkpoint
+    /// may only resume the engine that wrote it.
+    pub engine: &'a str,
+    /// Stages fully completed when the snapshot was taken — resume
+    /// republishes the schedule starting at this stage index.
+    pub stage_cursor: usize,
+    /// Total stages of the run (sanity display; not load-bearing).
+    pub total_stages: usize,
+    /// xxh64 fingerprint of the semantic run configuration + circuit
+    /// (see `sim::checkpoint_fingerprint`). Mismatch → typed error.
+    pub fingerprint: u64,
+    /// Cumulative metric counters carried across the resume so reports
+    /// stay monotonic (compressions, gates applied, ...).
+    pub counters: &'a [(&'a str, u64)],
+}
+
+/// A parsed, checksum-verified manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub schema: u32,
+    pub engine: String,
+    pub stage_cursor: usize,
+    pub total_stages: usize,
+    pub fingerprint: u64,
+    pub blocks_len: u64,
+    pub counters: Vec<(String, u64)>,
+    pub blocks: Vec<BlockEntry>,
+}
+
+/// A fully verified checkpoint: manifest plus every rehydrated payload.
+#[derive(Debug)]
+pub struct LoadedCheckpoint {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub blocks: Vec<(usize, BlockPayload)>,
+}
+
+fn ckio(what: &str, path: &Path, e: &std::io::Error) -> Error {
+    Error::checkpoint(format!("{what} {}: {e}", path.display()))
+}
+
+/// fsync a directory so a completed rename survives power loss.
+fn fsync_dir(dir: &Path) -> Result<()> {
+    File::open(dir)
+        .and_then(|f| f.sync_all())
+        .map_err(|e| ckio("fsync of", dir, &e))
+}
+
+/// Minimal JSON string escaping (engine names are identifiers, but the
+/// emitter must not be able to produce an unparseable manifest).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Emit the manifest JSON body. 64-bit checksums/fingerprints are hex
+/// *strings* — `Json::Num` is an `f64`, lossy above 2^53.
+fn emit_manifest(meta: &CheckpointMeta<'_>, entries: &[BlockEntry], blocks_len: u64) -> String {
+    let mut s = String::with_capacity(128 + entries.len() * 48);
+    s.push_str(&format!(
+        "{{\"schema\":{},\"engine\":\"{}\",\"stage_cursor\":{},\"total_stages\":{},\
+         \"fingerprint\":\"{:016x}\",\"blocks_file\":\"{}\",\"blocks_len\":{},",
+        MANIFEST_SCHEMA,
+        json_escape(meta.engine),
+        meta.stage_cursor,
+        meta.total_stages,
+        meta.fingerprint,
+        BLOCKS_NAME,
+        blocks_len,
+    ));
+    s.push_str("\"counters\":{");
+    for (i, (name, val)) in meta.counters.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("\"{}\":{}", json_escape(name), val));
+    }
+    s.push_str("},\"blocks\":[");
+    for (i, e) in entries.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("[{},{},{},\"{:016x}\"]", e.id, e.offset, e.len, e.checksum));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Consult the injector at a checkpoint fault site. `Kill` aborts the
+/// process on the spot (the SIGKILL / power-loss model — no unwinding,
+/// no destructors); recoverable faults surface as [`Error::Checkpoint`]
+/// after optionally tearing the file under `partial`.
+fn fault_gate(
+    injector: Option<&FaultInjector>,
+    op: FaultOp,
+    len: usize,
+    what: &str,
+    mut partial: Option<(&mut File, &[u8])>,
+) -> Result<()> {
+    let Some(inj) = injector else { return Ok(()) };
+    match inj.on_checkpoint_io(op, len) {
+        None => Ok(()),
+        Some(CkptFault::Kill) => std::process::abort(),
+        Some(CkptFault::Transient(e)) => {
+            Err(Error::checkpoint(format!("{what}: injected fault: {e}")))
+        }
+        Some(CkptFault::Short(n)) => {
+            if let Some((f, bytes)) = partial.take() {
+                let _ = f.write_all(&bytes[..n.min(bytes.len())]);
+            }
+            Err(Error::checkpoint(format!("{what}: injected torn write")))
+        }
+    }
+}
+
+/// Persist one checkpoint under `root` and prune retained checkpoints
+/// down to the `keep` most recent. `blocks` must be the quiesced store's
+/// complete live set (engines drain the epoch window and flush the
+/// write-back queue first). Returns the bytes written (frames +
+/// manifest) for the `checkpoint_bytes` metric.
+pub fn write_checkpoint(
+    root: &Path,
+    meta: &CheckpointMeta<'_>,
+    blocks: &[(usize, BlockPayload)],
+    keep: usize,
+) -> Result<u64> {
+    write_checkpoint_with(root, meta, blocks, None, keep)
+}
+
+/// [`write_checkpoint`] with the store's fault injector threaded through
+/// so scripted `kill@manifest` / `eio@checkpoint:N` plans fire at the
+/// exact I/O boundaries (crate-internal: [`FaultInjector`] is not public
+/// API).
+pub(crate) fn write_checkpoint_with(
+    root: &Path,
+    meta: &CheckpointMeta<'_>,
+    blocks: &[(usize, BlockPayload)],
+    injector: Option<&FaultInjector>,
+    keep: usize,
+) -> Result<u64> {
+    std::fs::create_dir_all(root).map_err(|e| ckio("create of checkpoint root", root, &e))?;
+    let dir = root.join(format!("ckpt-{:06}", meta.stage_cursor));
+    // A torn previous attempt at this cursor (kill before its manifest
+    // landed) may linger; it is never the checkpoint a resume came from
+    // (resume only runs stages past its source cursor), so clearing it
+    // is safe.
+    if dir.exists() {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    std::fs::create_dir_all(&dir).map_err(|e| ckio("create of checkpoint dir", &dir, &e))?;
+
+    // Frames first: durable before the manifest can reference them.
+    let blocks_path = dir.join(BLOCKS_NAME);
+    let mut file = File::create(&blocks_path).map_err(|e| ckio("create of", &blocks_path, &e))?;
+    let mut entries = Vec::with_capacity(blocks.len());
+    let mut offset = 0u64;
+    for (id, payload) in blocks {
+        let frame = frame_encode(&payload.to_bytes());
+        fault_gate(
+            injector,
+            FaultOp::Checkpoint,
+            frame.len(),
+            &format!("checkpoint frame for block {id}"),
+            Some((&mut file, &frame)),
+        )?;
+        file.write_all(&frame)
+            .map_err(|e| ckio(&format!("frame write for block {id} to"), &blocks_path, &e))?;
+        entries
+            .push(BlockEntry { id: *id, offset, len: frame.len(), checksum: xxh64(&frame, 0) });
+        offset += frame.len() as u64;
+    }
+    file.sync_all().map_err(|e| ckio("fsync of", &blocks_path, &e))?;
+    drop(file);
+
+    // Manifest: temp write (manifest-site attempt 1) → fsync → atomic
+    // rename (attempt 2) → directory fsyncs.
+    let body = emit_manifest(meta, &entries, offset);
+    let text = format!("{MANIFEST_MAGIC} {:016x}\n{body}", xxh64(body.as_bytes(), 0));
+    let tmp = dir.join(TMP_NAME);
+    {
+        let mut tf = File::create(&tmp).map_err(|e| ckio("create of", &tmp, &e))?;
+        fault_gate(
+            injector,
+            FaultOp::Manifest,
+            text.len(),
+            "manifest temp write",
+            Some((&mut tf, text.as_bytes())),
+        )?;
+        tf.write_all(text.as_bytes()).map_err(|e| ckio("write of", &tmp, &e))?;
+        tf.sync_all().map_err(|e| ckio("fsync of", &tmp, &e))?;
+    }
+    fault_gate(injector, FaultOp::Manifest, text.len(), "manifest rename", None)?;
+    let final_path = dir.join(MANIFEST_NAME);
+    std::fs::rename(&tmp, &final_path).map_err(|e| ckio("rename to", &final_path, &e))?;
+    fsync_dir(&dir)?;
+    fsync_dir(root)?;
+
+    prune(root, keep);
+    Ok(offset + text.len() as u64)
+}
+
+/// Remove all but the `keep` (min 1) most recent checkpoint directories.
+/// Only called after a successful commit, so the newest retained entry
+/// is always a valid checkpoint.
+fn prune(root: &Path, keep: usize) {
+    for (_, dir) in list_checkpoints(root).into_iter().skip(keep.max(1)) {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Checkpoint directories under `root`, newest (highest cursor) first.
+/// Lists every `ckpt-<N>` directory, committed or torn — validation
+/// happens at load time.
+pub fn list_checkpoints(root: &Path) -> Vec<(usize, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(rd) = std::fs::read_dir(root) else { return out };
+    for ent in rd.flatten() {
+        if let Some(name) = ent.file_name().to_str() {
+            if let Some(n) = name.strip_prefix("ckpt-") {
+                if let Ok(cursor) = n.parse::<usize>() {
+                    out.push((cursor, ent.path()));
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    out
+}
+
+/// Read and verify a checkpoint's manifest: integrity header first (any
+/// torn or bit-flipped byte in the file fails the xxh64 before the JSON
+/// is even parsed), then schema-checked field extraction. Every failure
+/// is a typed [`Error::Checkpoint`].
+pub fn load_manifest(dir: &Path) -> Result<Manifest> {
+    let path = dir.join(MANIFEST_NAME);
+    let raw =
+        std::fs::read(&path).map_err(|e| ckio("read of", &path, &e))?;
+    let text = std::str::from_utf8(&raw)
+        .map_err(|_| Error::checkpoint(format!("{}: not valid utf-8", path.display())))?;
+    let (header, body) = text
+        .split_once('\n')
+        .ok_or_else(|| Error::checkpoint(format!("{}: missing header line", path.display())))?;
+    let sum = header
+        .strip_prefix(MANIFEST_MAGIC)
+        .map(str::trim)
+        .ok_or_else(|| Error::checkpoint(format!("{}: bad magic", path.display())))?;
+    let want = u64::from_str_radix(sum, 16)
+        .map_err(|_| Error::checkpoint(format!("{}: bad header checksum field", path.display())))?;
+    let got = xxh64(body.as_bytes(), 0);
+    if want != got {
+        return Err(Error::checkpoint(format!(
+            "{}: checksum mismatch (stored {want:016x}, computed {got:016x}) — torn or corrupt",
+            path.display()
+        )));
+    }
+    let j = Json::parse(body)
+        .map_err(|e| Error::checkpoint(format!("{}: {e}", path.display())))?;
+    let field_u64 = |k: &str| -> Result<u64> {
+        j.get(k)
+            .and_then(Json::as_f64)
+            .map(|n| n as u64)
+            .ok_or_else(|| Error::checkpoint(format!("{}: missing field {k:?}", path.display())))
+    };
+    let schema = field_u64("schema")? as u32;
+    if schema != MANIFEST_SCHEMA {
+        return Err(Error::checkpoint(format!(
+            "{}: manifest schema {schema} unsupported (this build reads {MANIFEST_SCHEMA})",
+            path.display()
+        )));
+    }
+    let engine = j
+        .get("engine")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::checkpoint(format!("{}: missing field \"engine\"", path.display())))?
+        .to_string();
+    let fingerprint = j
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| {
+            Error::checkpoint(format!("{}: missing/bad field \"fingerprint\"", path.display()))
+        })?;
+    let mut counters = Vec::new();
+    if let Some(obj) = j.get("counters").and_then(Json::as_obj) {
+        for (k, v) in obj {
+            let val = v.as_f64().ok_or_else(|| {
+                Error::checkpoint(format!("{}: non-numeric counter {k:?}", path.display()))
+            })?;
+            counters.push((k.clone(), val as u64));
+        }
+    }
+    let mut blocks = Vec::new();
+    match j.get("blocks") {
+        Some(Json::Arr(rows)) => {
+            for row in rows {
+                let bad = || {
+                    Error::checkpoint(format!("{}: malformed block-table row", path.display()))
+                };
+                let Json::Arr(cells) = row else { return Err(bad()) };
+                if cells.len() != 4 {
+                    return Err(bad());
+                }
+                let id = cells[0].as_usize().ok_or_else(bad)?;
+                let offset = cells[1].as_f64().ok_or_else(bad)? as u64;
+                let len = cells[2].as_usize().ok_or_else(bad)?;
+                let checksum = cells[3]
+                    .as_str()
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+                    .ok_or_else(bad)?;
+                blocks.push(BlockEntry { id, offset, len, checksum });
+            }
+        }
+        _ => {
+            return Err(Error::checkpoint(format!(
+                "{}: missing field \"blocks\"",
+                path.display()
+            )))
+        }
+    }
+    Ok(Manifest {
+        schema,
+        engine,
+        stage_cursor: field_u64("stage_cursor")? as usize,
+        total_stages: field_u64("total_stages")? as usize,
+        fingerprint,
+        blocks_len: field_u64("blocks_len")?,
+        counters,
+        blocks,
+    })
+}
+
+/// Load and fully verify one checkpoint directory: manifest, blocks-file
+/// size, and every frame (manifest checksum + embedded frame checksum +
+/// payload framing). Frame damage surfaces as [`Error::Corruption`];
+/// manifest damage as [`Error::Checkpoint`].
+pub fn load_checkpoint(dir: &Path) -> Result<LoadedCheckpoint> {
+    let manifest = load_manifest(dir)?;
+    let blocks_path = dir.join(BLOCKS_NAME);
+    let bytes = std::fs::read(&blocks_path).map_err(|e| ckio("read of", &blocks_path, &e))?;
+    if bytes.len() as u64 != manifest.blocks_len {
+        return Err(Error::Corruption(format!(
+            "{}: {} B on disk, manifest says {}",
+            blocks_path.display(),
+            bytes.len(),
+            manifest.blocks_len
+        )));
+    }
+    let mut blocks = Vec::with_capacity(manifest.blocks.len());
+    for e in &manifest.blocks {
+        let end = e.offset.checked_add(e.len as u64).filter(|&end| end <= bytes.len() as u64);
+        let Some(end) = end else {
+            return Err(Error::Corruption(format!(
+                "{}: block {} frame [{}, +{}) exceeds the blocks file",
+                blocks_path.display(),
+                e.id,
+                e.offset,
+                e.len
+            )));
+        };
+        let frame = &bytes[e.offset as usize..end as usize];
+        let got = xxh64(frame, 0);
+        if got != e.checksum {
+            return Err(Error::Corruption(format!(
+                "{}: block {} frame checksum mismatch (manifest {:016x}, computed {got:016x})",
+                blocks_path.display(),
+                e.id,
+                e.checksum
+            )));
+        }
+        let plen = frame_check(frame, e.offset)?;
+        let payload =
+            BlockPayload::from_bytes(&frame[HEADER_BYTES..HEADER_BYTES + plen]).map_err(|_| {
+                Error::Corruption(format!(
+                    "{}: block {} payload framing is corrupt",
+                    blocks_path.display(),
+                    e.id
+                ))
+            })?;
+        blocks.push((e.id, payload));
+    }
+    Ok(LoadedCheckpoint { dir: dir.to_path_buf(), manifest, blocks })
+}
+
+/// Resume entry point: walk the retained checkpoints newest-first and
+/// return the first that fully verifies. A torn or corrupt newer
+/// checkpoint falls back to the previous retained one; an intact
+/// checkpoint written by a different engine or run configuration is a
+/// hard typed error (no fallback — every checkpoint in a directory
+/// shares one config, so older ones cannot match either).
+pub fn load_latest(root: &Path, engine: &str, fingerprint: u64) -> Result<LoadedCheckpoint> {
+    let cands = list_checkpoints(root);
+    if cands.is_empty() {
+        return Err(Error::checkpoint(format!(
+            "no checkpoints under {} (expected ckpt-* directories)",
+            root.display()
+        )));
+    }
+    let mut last_err: Option<Error> = None;
+    for (_, dir) in cands {
+        match load_checkpoint(&dir) {
+            Ok(l) => {
+                if l.manifest.engine != engine {
+                    return Err(Error::checkpoint(format!(
+                        "{} was written by engine {:?}; this run uses {engine:?}",
+                        dir.display(),
+                        l.manifest.engine
+                    )));
+                }
+                if l.manifest.fingerprint != fingerprint {
+                    return Err(Error::checkpoint(format!(
+                        "config fingerprint mismatch: {} has {:016x}, this run computes \
+                         {fingerprint:016x} (circuit or semantic config differs)",
+                        dir.display(),
+                        l.manifest.fingerprint
+                    )));
+                }
+                return Ok(l);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| {
+        Error::checkpoint(format!("no loadable checkpoint under {}", root.display()))
+    }))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+    fn tmproot() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "bmqsim-ckpt-{}-{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn payloads(n: usize) -> Vec<(usize, BlockPayload)> {
+        (0..n)
+            .map(|i| {
+                (i, BlockPayload { re: vec![i as u8; 20 + i], im: vec![(i as u8) ^ 0xFF; 8 + i] })
+            })
+            .collect()
+    }
+
+    fn meta(cursor: usize, fp: u64) -> CheckpointMeta<'static> {
+        CheckpointMeta {
+            engine: "bmqsim",
+            stage_cursor: cursor,
+            total_stages: 9,
+            fingerprint: fp,
+            counters: &[("compressions", 42), ("gates_applied", 7)],
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let root = tmproot();
+        let blocks = payloads(5);
+        let bytes = write_checkpoint(&root, &meta(3, 0xABCD), &blocks, 2).unwrap();
+        assert!(bytes > 0);
+        let l = load_latest(&root, "bmqsim", 0xABCD).unwrap();
+        assert_eq!(l.manifest.stage_cursor, 3);
+        assert_eq!(l.manifest.total_stages, 9);
+        assert_eq!(l.manifest.schema, MANIFEST_SCHEMA);
+        assert_eq!(l.manifest.counters.len(), 2);
+        assert!(l.manifest.counters.contains(&("compressions".to_string(), 42)));
+        assert_eq!(l.blocks.len(), 5);
+        for ((id, p), (eid, ep)) in l.blocks.iter().zip(blocks.iter()) {
+            assert_eq!(id, eid);
+            assert_eq!(p.re, ep.re);
+            assert_eq!(p.im, ep.im);
+        }
+    }
+
+    #[test]
+    fn fingerprint_and_engine_mismatch_are_typed() {
+        let root = tmproot();
+        write_checkpoint(&root, &meta(1, 0x1111), &payloads(2), 2).unwrap();
+        match load_latest(&root, "bmqsim", 0x2222) {
+            Err(Error::Checkpoint(m)) => assert!(m.contains("fingerprint"), "{m}"),
+            other => panic!("expected Checkpoint error, got {:?}", other.map(|_| ())),
+        }
+        match load_latest(&root, "sc19-cpu", 0x1111) {
+            Err(Error::Checkpoint(m)) => assert!(m.contains("engine"), "{m}"),
+            other => panic!("expected Checkpoint error, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn newest_wins_and_retention_prunes() {
+        let root = tmproot();
+        for cursor in [1usize, 2, 3, 4] {
+            write_checkpoint(&root, &meta(cursor, 7), &payloads(cursor), 2).unwrap();
+        }
+        let listed = list_checkpoints(&root);
+        assert_eq!(listed.len(), 2, "keep=2 must prune to the two newest");
+        assert_eq!(listed[0].0, 4);
+        assert_eq!(listed[1].0, 3);
+        assert_eq!(load_latest(&root, "bmqsim", 7).unwrap().manifest.stage_cursor, 4);
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous() {
+        let root = tmproot();
+        write_checkpoint(&root, &meta(2, 9), &payloads(3), 2).unwrap();
+        write_checkpoint(&root, &meta(4, 9), &payloads(3), 2).unwrap();
+        // Damage the newest manifest (single byte in the JSON body).
+        let man = root.join("ckpt-000004").join(MANIFEST_NAME);
+        let mut raw = std::fs::read(&man).unwrap();
+        let n = raw.len();
+        raw[n - 3] ^= 0x01;
+        std::fs::write(&man, &raw).unwrap();
+        let l = load_latest(&root, "bmqsim", 9).unwrap();
+        assert_eq!(l.manifest.stage_cursor, 2, "must fall back to the intact checkpoint");
+        // A manifest-less (torn) directory is skipped the same way.
+        std::fs::remove_file(&man).unwrap();
+        assert_eq!(load_latest(&root, "bmqsim", 9).unwrap().manifest.stage_cursor, 2);
+    }
+
+    #[test]
+    fn no_checkpoints_is_typed() {
+        let root = tmproot();
+        assert!(matches!(load_latest(&root, "bmqsim", 0), Err(Error::Checkpoint(_))));
+    }
+
+    #[test]
+    fn every_manifest_byte_is_load_bearing() {
+        // The satellite property test at the unit level: flipping ANY
+        // byte of the manifest yields a typed error, never a panic or a
+        // silently wrong manifest.
+        let root = tmproot();
+        write_checkpoint(&root, &meta(5, 0xFEED), &payloads(2), 2).unwrap();
+        let man = root.join("ckpt-000005").join(MANIFEST_NAME);
+        let good = std::fs::read(&man).unwrap();
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x01;
+            std::fs::write(&man, &bad).unwrap();
+            match load_checkpoint(root.join("ckpt-000005").as_path()) {
+                Err(Error::Checkpoint(_)) | Err(Error::Corruption(_)) => {}
+                Ok(_) => panic!("flip at byte {i} loaded successfully"),
+                Err(other) => panic!("flip at byte {i}: unexpected error {other:?}"),
+            }
+        }
+        std::fs::write(&man, &good).unwrap();
+        assert!(load_checkpoint(root.join("ckpt-000005").as_path()).is_ok());
+    }
+
+    #[test]
+    fn frame_damage_is_corruption() {
+        let root = tmproot();
+        write_checkpoint(&root, &meta(1, 1), &payloads(3), 2).unwrap();
+        let bp = root.join("ckpt-000001").join(BLOCKS_NAME);
+        let good = std::fs::read(&bp).unwrap();
+        // Bit-flip in the middle of the file (some frame's payload).
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        std::fs::write(&bp, &bad).unwrap();
+        assert!(matches!(
+            load_checkpoint(root.join("ckpt-000001").as_path()),
+            Err(Error::Corruption(_))
+        ));
+        // Truncation.
+        std::fs::write(&bp, &good[..good.len() - 1]).unwrap();
+        assert!(matches!(
+            load_checkpoint(root.join("ckpt-000001").as_path()),
+            Err(Error::Corruption(_))
+        ));
+    }
+}

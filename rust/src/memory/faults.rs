@@ -136,6 +136,12 @@ pub enum FaultKind {
     Stall,
     /// The writer thread exits ("dies") after requeueing its current job.
     WriterDeath,
+    /// The process aborts on the spot (raw `abort()`, no unwinding, no
+    /// destructors) — models SIGKILL / power loss at an exact checkpoint
+    /// or manifest I/O boundary, so atomicity tests can prove a torn
+    /// write is impossible to observe. Only valid at the `manifest` /
+    /// `checkpoint` op sites.
+    Kill,
 }
 
 /// Which I/O site a scripted fault intercepts.
@@ -143,6 +149,10 @@ pub enum FaultKind {
 pub enum FaultOp {
     Read,
     Write,
+    /// Checkpoint manifest writes (temp-file write + the atomic rename).
+    Manifest,
+    /// Checkpoint block-frame writes (`blocks.bin` payload frames).
+    Checkpoint,
 }
 
 /// A scripted fault point: the `nth` (1-based) op of type `op` fails with
@@ -164,6 +174,13 @@ pub struct ScriptedFault {
 /// `writer_death_after=3`) or scripted points `KIND@OP:N`
 /// (`eio@write:3`, `short@read:2`, `bitflip@read:1`,
 /// `stickyflip@read:4`, `enospc@write:5`, `stall@write:2`).
+///
+/// Checkpoint sites: `OP` may also be `manifest` (manifest temp-write /
+/// atomic rename) or `checkpoint` (block-frame writes), where `:N` is
+/// optional and defaults to 1 — `kill@manifest` aborts the process at
+/// the first manifest write, `kill@checkpoint:3` at the third frame,
+/// `eio@manifest:1` / `short@checkpoint:2` inject recoverable I/O
+/// failures at the same sites.
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
     /// Seed for the probabilistic draws (fully deterministic per seed).
@@ -200,27 +217,38 @@ impl FaultPlan {
         for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
             any = true;
             if let Some((kind, rest)) = tok.split_once('@') {
-                // Scripted: KIND@OP:N
-                let Some((op, nth)) = rest.split_once(':') else {
-                    return bad(tok, "expected KIND@OP:N");
+                // Scripted: KIND@OP:N (:N optional at checkpoint sites).
+                let (op_str, nth_str) = match rest.split_once(':') {
+                    Some((o, n)) => (o, Some(n)),
+                    None => (rest, None),
                 };
-                let op = match op {
+                let op = match op_str {
                     "read" => FaultOp::Read,
                     "write" => FaultOp::Write,
-                    _ => return bad(tok, "op must be read|write"),
+                    "manifest" => FaultOp::Manifest,
+                    "checkpoint" => FaultOp::Checkpoint,
+                    _ => return bad(tok, "op must be read|write|manifest|checkpoint"),
                 };
                 let kind = match (kind, op) {
                     ("eio", _) => FaultKind::Eio,
                     ("short", FaultOp::Read) => FaultKind::ShortRead,
-                    ("short", FaultOp::Write) => FaultKind::ShortWrite,
+                    ("short", _) => FaultKind::ShortWrite,
                     ("bitflip", FaultOp::Read) => FaultKind::BitFlip,
                     ("stickyflip", FaultOp::Read) => FaultKind::StickyFlip,
                     ("enospc", FaultOp::Write) => FaultKind::Enospc,
                     ("stall", FaultOp::Write) => FaultKind::Stall,
+                    ("kill", FaultOp::Manifest | FaultOp::Checkpoint) => FaultKind::Kill,
                     _ => return bad(tok, "unknown kind or kind/op mismatch"),
                 };
-                let Ok(nth) = nth.parse::<u64>() else {
-                    return bad(tok, "N must be a positive integer");
+                let nth = match nth_str {
+                    Some(n) => match n.parse::<u64>() {
+                        Ok(n) => n,
+                        Err(_) => return bad(tok, "N must be a positive integer"),
+                    },
+                    // `kill@manifest` ≡ `kill@manifest:1`; read/write sites
+                    // keep the explicit-N requirement (hides typos).
+                    None if matches!(op, FaultOp::Manifest | FaultOp::Checkpoint) => 1,
+                    None => return bad(tok, "expected KIND@OP:N"),
                 };
                 if nth == 0 {
                     return bad(tok, "N is 1-based");
@@ -327,6 +355,18 @@ pub(crate) enum WriterFault {
     Die,
 }
 
+/// Injected outcome for one checkpoint-site I/O op (manifest or frame).
+pub(crate) enum CkptFault {
+    /// Fail with an io::Error (surfaced as `Error::Checkpoint` by the
+    /// writer and carried out of the run — a snapshot the operator asked
+    /// for but that cannot be persisted is a fatal, typed condition).
+    Transient(std::io::Error),
+    /// Write only the first `n` bytes, then fail (torn-file modeling).
+    Short(usize),
+    /// Abort the process on the spot (SIGKILL / power-loss model).
+    Kill,
+}
+
 pub(crate) fn eio() -> std::io::Error {
     std::io::Error::from_raw_os_error(5) // EIO
 }
@@ -343,6 +383,8 @@ pub(crate) struct FaultInjector {
     reads: AtomicU64,
     writes: AtomicU64,
     jobs: AtomicU64,
+    manifest_ops: AtomicU64,
+    ckpt_ops: AtomicU64,
     /// Bytes successfully written to the primary tier (ENOSPC trigger).
     primary_written: AtomicU64,
     /// Offsets whose extents are persistently corrupt (StickyFlip).
@@ -360,6 +402,8 @@ impl FaultInjector {
             reads: AtomicU64::new(0),
             writes: AtomicU64::new(0),
             jobs: AtomicU64::new(0),
+            manifest_ops: AtomicU64::new(0),
+            ckpt_ops: AtomicU64::new(0),
             primary_written: AtomicU64::new(0),
             sticky: Mutex::new(Vec::new()),
             injected: AtomicU64::new(0),
@@ -478,6 +522,31 @@ impl FaultInjector {
         None
     }
 
+    /// Decide the fate of one checkpoint-site I/O op of `len` bytes.
+    /// `op` must be [`FaultOp::Manifest`] or [`FaultOp::Checkpoint`]
+    /// (each site counts its own 1-based attempt sequence). Scripted
+    /// points only — the probabilistic rates model a flaky *spill* disk,
+    /// not the checkpoint destination, and checkpoint atomicity tests
+    /// need exact fault placement.
+    pub(crate) fn on_checkpoint_io(&self, op: FaultOp, len: usize) -> Option<CkptFault> {
+        let ctr = match op {
+            FaultOp::Manifest => &self.manifest_ops,
+            FaultOp::Checkpoint => &self.ckpt_ops,
+            FaultOp::Read | FaultOp::Write => return None,
+        };
+        let nth = ctr.fetch_add(1, Ordering::Relaxed) + 1;
+        let fault = match self.scripted(op, nth) {
+            Some(FaultKind::Kill) => Some(CkptFault::Kill),
+            Some(FaultKind::Eio) => Some(CkptFault::Transient(eio())),
+            Some(FaultKind::ShortWrite) => Some(CkptFault::Short(len / 2)),
+            _ => None,
+        };
+        if fault.is_some() {
+            self.hit();
+        }
+        fault
+    }
+
     /// Apply a bit flip to `buf` (deterministic position: middle byte).
     pub(crate) fn flip_bit(buf: &mut [u8]) {
         if !buf.is_empty() {
@@ -581,6 +650,53 @@ mod tests {
         // Same offset: corrupt forever. Different offset: clean.
         assert!(matches!(inj.on_read(128, 64), Some(ReadFault::BitFlip)));
         assert!(inj.on_read(256, 64).is_none());
+    }
+
+    #[test]
+    fn checkpoint_sites_parse_and_fire() {
+        let p = FaultPlan::parse("kill@manifest,kill@checkpoint:3,eio@manifest:2").unwrap();
+        assert!(p.scripted.contains(&ScriptedFault {
+            op: FaultOp::Manifest,
+            nth: 1,
+            kind: FaultKind::Kill
+        }));
+        assert!(p.scripted.contains(&ScriptedFault {
+            op: FaultOp::Checkpoint,
+            nth: 3,
+            kind: FaultKind::Kill
+        }));
+        let inj = FaultInjector::new(p);
+        // Manifest site: kill on attempt 1, eio on attempt 2.
+        assert!(matches!(inj.on_checkpoint_io(FaultOp::Manifest, 64), Some(CkptFault::Kill)));
+        assert!(matches!(
+            inj.on_checkpoint_io(FaultOp::Manifest, 64),
+            Some(CkptFault::Transient(_))
+        ));
+        // Checkpoint-frame site counts independently: clean, clean, kill.
+        assert!(inj.on_checkpoint_io(FaultOp::Checkpoint, 64).is_none());
+        assert!(inj.on_checkpoint_io(FaultOp::Checkpoint, 64).is_none());
+        assert!(matches!(inj.on_checkpoint_io(FaultOp::Checkpoint, 64), Some(CkptFault::Kill)));
+        assert_eq!(inj.injected.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn checkpoint_sites_do_not_leak_into_spill_ops() {
+        // A manifest-site script must never fire at the spill read/write
+        // sites, and the checkpoint hook injects nothing without a script.
+        let inj = FaultInjector::new(FaultPlan::parse("kill@manifest:1").unwrap());
+        assert!(inj.on_write(SpillTier::Primary, 64).is_none());
+        assert!(inj.on_read(0, 64).is_none());
+        let clean = FaultInjector::new(FaultPlan::parse("eio@write:1").unwrap());
+        assert!(clean.on_checkpoint_io(FaultOp::Manifest, 64).is_none());
+        assert!(clean.on_checkpoint_io(FaultOp::Checkpoint, 64).is_none());
+    }
+
+    #[test]
+    fn kill_rejected_at_spill_sites_and_bare_n_still_required_there() {
+        assert!(FaultPlan::parse("kill@write:1").is_err());
+        assert!(FaultPlan::parse("kill@read:1").is_err());
+        assert!(FaultPlan::parse("eio@write").is_err(), ":N stays mandatory at spill sites");
+        assert!(FaultPlan::parse("kill@manifest:0").is_err());
     }
 
     #[test]

@@ -39,6 +39,7 @@
 //! [`FaultPlan`] makes every one of those paths deterministically
 //! testable.
 
+pub mod checkpoint;
 mod faults;
 mod prefetch;
 mod spill;
@@ -83,7 +84,7 @@ pub(crate) fn pwait_timeout<'a, T>(
 /// `compress_into` outputs for the updated planes and handed straight
 /// back to [`BlockStore::put`], so in steady state block bytes cycle
 /// store → worker → store without fresh allocations (§Perf, DESIGN.md).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BlockPayload {
     pub re: Vec<u8>,
     pub im: Vec<u8>,
@@ -1726,6 +1727,43 @@ impl BlockStore {
     /// bounds file growth under extent reuse.
     pub fn spill_tail_bytes(&self) -> u64 {
         self.shared.spill.as_ref().map_or(0, |s| s.tail())
+    }
+
+    /// Snapshot every live block for a checkpoint, in id order. Collects
+    /// the full id set across shards, then reads each block through the
+    /// hardened [`BlockStore::get`] path — which waits out in-flight
+    /// evictions, checksum-verifies spilled frames (healing from the
+    /// retention ring where possible), and never evicts other blocks.
+    /// Callers must quiesce the engine first (drain the epoch window and
+    /// [`BlockStore::flush`] the write-back queue) so the id set is
+    /// stable and no payload is in flight.
+    pub fn export_blocks(&self) -> Result<Vec<(usize, BlockPayload)>> {
+        let mut ids = BTreeSet::new();
+        for shard in &self.shared.shards {
+            ids.extend(plock(shard).keys().copied());
+        }
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            out.push((id, self.shared.get(id)?));
+        }
+        Ok(out)
+    }
+
+    /// Rebuild the store's contents from a checkpoint snapshot. Each
+    /// payload goes through the normal [`BlockStore::put`] path so budget
+    /// accounting, Belady eviction, and spilling behave exactly as they
+    /// would have in the uninterrupted run.
+    pub fn rehydrate(&self, blocks: Vec<(usize, BlockPayload)>) -> Result<()> {
+        for (id, payload) in blocks {
+            self.put(id, payload)?;
+        }
+        Ok(())
+    }
+
+    /// The active fault injector, if a [`FaultPlan`] was configured —
+    /// checkpoint writers consult it at the manifest/frame op sites.
+    pub(crate) fn injector(&self) -> Option<&FaultInjector> {
+        self.shared.injector.as_deref()
     }
 }
 

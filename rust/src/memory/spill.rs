@@ -107,7 +107,10 @@ pub(crate) struct RecoveryCounters {
     pub(crate) enospc_fallbacks: AtomicU64,
 }
 
-fn frame_encode(payload: &[u8]) -> Vec<u8> {
+/// Wrap `payload` in a checksummed `[BQSF]` frame. Shared by the spill
+/// tier and the checkpoint writer (`memory::checkpoint`), so checkpointed
+/// blocks carry the exact same integrity envelope as spilled ones.
+pub(crate) fn frame_encode(payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
     out.extend_from_slice(&FRAME_MAGIC);
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -117,8 +120,9 @@ fn frame_encode(payload: &[u8]) -> Vec<u8> {
 }
 
 /// Verify a frame's header against its payload; returns the payload
-/// length on success.
-fn frame_check(frame: &[u8], offset: u64) -> Result<usize> {
+/// length on success. Shared with `memory::checkpoint` (resume-side
+/// verification of checkpoint frames).
+pub(crate) fn frame_check(frame: &[u8], offset: u64) -> Result<usize> {
     if frame.len() < HEADER_BYTES {
         return Err(Error::Corruption(format!(
             "frame at {offset}: {} B is shorter than the {HEADER_BYTES} B header",

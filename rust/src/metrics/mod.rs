@@ -142,6 +142,17 @@ pub struct Metrics {
     /// Cross-stage overlap: time the engine thread spent draining the
     /// epoch window (the residual, partial stand-in for the old barrier).
     pub epoch_drain_ns: AtomicU64,
+    /// Checkpointing: stage-boundary snapshots committed this run.
+    pub checkpoints: AtomicU64,
+    /// Checkpointing: total bytes persisted (frames + manifests).
+    pub checkpoint_bytes: AtomicU64,
+    /// Checkpointing: engine-thread time spent quiescing + writing
+    /// snapshots (the checkpoint overhead the cadence knob trades off).
+    pub checkpoint_ns: AtomicU64,
+    /// Times this run's state was rehydrated from a checkpoint (1 for a
+    /// `--resume` run; carried across resumes via the manifest, so a
+    /// twice-interrupted run reports 2).
+    pub resumes: AtomicU64,
 }
 
 impl Metrics {
@@ -210,7 +221,46 @@ impl Metrics {
             cross_stage_decodes: self.cross_stage_decodes.load(Ordering::Relaxed),
             boundary_stall_ns: self.boundary_stall_ns.load(Ordering::Relaxed),
             epoch_drain_ns: self.epoch_drain_ns.load(Ordering::Relaxed),
+            checkpoints: self.checkpoints.load(Ordering::Relaxed),
+            checkpoint_bytes: self.checkpoint_bytes.load(Ordering::Relaxed),
+            checkpoint_ns: self.checkpoint_ns.load(Ordering::Relaxed),
+            resumes: self.resumes.load(Ordering::Relaxed),
         }
+    }
+
+    /// The cumulative counters a checkpoint manifest carries across a
+    /// resume (`memory::checkpoint`): the work-done counters that must
+    /// stay monotonic over kills so a resumed run's report covers the
+    /// whole logical run, not just the post-resume tail.
+    pub fn checkpoint_counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("compressions", self.compressions.load(Ordering::Relaxed)),
+            ("decompressions", self.decompressions.load(Ordering::Relaxed)),
+            ("gates_applied", self.gates_applied.load(Ordering::Relaxed)),
+            ("gates_fused", self.gates_fused.load(Ordering::Relaxed)),
+            ("plane_sweeps", self.plane_sweeps.load(Ordering::Relaxed)),
+            ("fused_ops_applied", self.fused_ops_applied.load(Ordering::Relaxed)),
+            ("groups_processed", self.groups_processed.load(Ordering::Relaxed)),
+            ("resumes", self.resumes.load(Ordering::Relaxed)),
+        ]
+    }
+
+    /// Restore one manifest counter by name (the inverse of
+    /// [`Self::checkpoint_counters`]). Unknown names are ignored so newer
+    /// manifests resume under older binaries within the same schema.
+    pub fn restore_counter(&self, name: &str, value: u64) {
+        let field = match name {
+            "compressions" => &self.compressions,
+            "decompressions" => &self.decompressions,
+            "gates_applied" => &self.gates_applied,
+            "gates_fused" => &self.gates_fused,
+            "plane_sweeps" => &self.plane_sweeps,
+            "fused_ops_applied" => &self.fused_ops_applied,
+            "groups_processed" => &self.groups_processed,
+            "resumes" => &self.resumes,
+            _ => return,
+        };
+        field.store(value, Ordering::Relaxed);
     }
 
     /// Copy the memory-subsystem counters out of a [`crate::memory::MemStats`]
@@ -317,6 +367,15 @@ pub struct MetricsReport {
     pub boundary_stall_ns: u64,
     /// Engine-thread time spent draining the epoch window, in nanoseconds.
     pub epoch_drain_ns: u64,
+    /// Stage-boundary snapshots committed this run.
+    pub checkpoints: u64,
+    /// Total checkpoint bytes persisted (frames + manifests).
+    pub checkpoint_bytes: u64,
+    /// Engine-thread time spent quiescing + writing snapshots, in ns.
+    pub checkpoint_ns: u64,
+    /// Checkpoint rehydrations in this run's lineage (carried across
+    /// resumes via the manifest counters).
+    pub resumes: u64,
 }
 
 impl MetricsReport {
@@ -442,6 +501,16 @@ impl std::fmt::Display for MetricsReport {
                 self.checksum_failures,
                 self.frames_recovered,
                 self.enospc_fallbacks
+            )?;
+        }
+        if self.checkpoints + self.resumes > 0 {
+            writeln!(
+                f,
+                "checkpoints      : {:>10} written ({:.1} MiB, {:.1} ms), {} resumes",
+                self.checkpoints,
+                self.checkpoint_bytes as f64 / (1 << 20) as f64,
+                self.checkpoint_ns as f64 * 1e-6,
+                self.resumes
             )?;
         }
         if self.simd_kernels_used > 0 {

@@ -259,6 +259,12 @@ pub struct PhasePool {
     handles: Vec<JoinHandle<()>>,
     workers: usize,
     depth_cap: usize,
+    /// Epoch-drain watchdog (CLI `--stall-timeout-ms`; `None` = off): a
+    /// drain that observes no phase-thread progress for this long gives
+    /// up with a typed error and a progress dump instead of waiting
+    /// forever on a wedged phase (e.g. a spill writer pinned by a
+    /// `stall@write` fault plan).
+    stall_timeout: Option<std::time::Duration>,
 }
 
 impl PhasePool {
@@ -301,7 +307,13 @@ impl PhasePool {
                 handles.push(handle);
             }
         }
-        PhasePool { inner, handles, workers, depth_cap }
+        PhasePool { inner, handles, workers, depth_cap, stall_timeout: None }
+    }
+
+    /// Arm (or disarm with `None`) the epoch-drain watchdog. Engines set
+    /// this from `SimConfig::stall_timeout_ms` right after construction.
+    pub fn set_stall_timeout(&mut self, timeout: Option<std::time::Duration>) {
+        self.stall_timeout = timeout;
     }
 
     pub fn workers(&self) -> usize {
@@ -419,21 +431,49 @@ impl PhasePool {
     }
 
     /// Wait for the oldest in-flight epoch to finish and retire it,
-    /// returning `true` if one was retired.
-    fn wait_front_drained(&self) -> bool {
+    /// returning `true` if one was retired. With a stall timeout armed,
+    /// the wait is bounded: the watchdog timer re-arms every time any
+    /// phase thread reports an epoch done (progress), and fires a typed
+    /// error with a progress dump once the window sits idle past the
+    /// deadline. The wedged epoch is NOT retired on the error path — its
+    /// erased closure pointers may still be dereferenced by phase
+    /// threads, so the owner must leak the closures rather than free
+    /// them (`sim::PoolDriver::drop` does).
+    fn wait_front_drained(&self) -> Result<bool, Error> {
+        const WATCHDOG_POLL: std::time::Duration = std::time::Duration::from_millis(5);
         let inner = &*self.inner;
         let threads = 3 * self.workers;
         let mut ctl = inner.ctl.lock().unwrap();
         if ctl.epochs.is_empty() {
-            return false;
+            return Ok(false);
         }
+        let mut last_done = ctl.epochs.front().map_or(0, |e| e.done);
+        let mut idle_since = std::time::Instant::now();
         while ctl.epochs.front().is_some_and(|e| e.done < threads) {
-            ctl = inner.cv.wait(ctl).unwrap();
+            match self.stall_timeout {
+                None => ctl = inner.cv.wait(ctl).unwrap(),
+                Some(limit) => {
+                    ctl = inner.cv.wait_timeout(ctl, WATCHDOG_POLL).unwrap().0;
+                    let done = ctl.epochs.front().map_or(threads, |e| e.done);
+                    if done != last_done {
+                        last_done = done;
+                        idle_since = std::time::Instant::now();
+                    } else if idle_since.elapsed() >= limit {
+                        return Err(Error::spill(format!(
+                            "epoch-drain watchdog: no phase-thread progress for \
+                             {} ms ({} epochs in flight, front epoch {done}/{threads} \
+                             phase threads done)",
+                            limit.as_millis(),
+                            ctl.epochs.len(),
+                        )));
+                    }
+                }
+            }
         }
         // Drop the epoch's raw pointers before the caller releases the
         // borrows they came from.
         ctl.epochs.pop_front();
-        true
+        Ok(true)
     }
 
     /// Surface a recorded panic or first phase error once the window is
@@ -456,9 +496,9 @@ impl PhasePool {
     /// clean `drain_oldest` with a second epoch still in flight returns
     /// `Ok(())` immediately after the front epoch retires.
     pub fn drain_oldest(&mut self) -> Result<(), Error> {
-        self.wait_front_drained();
+        self.wait_front_drained()?;
         if self.inner.abort.load(Ordering::Acquire) {
-            while self.wait_front_drained() {}
+            while self.wait_front_drained()? {}
         }
         if self.in_flight() == 0 {
             self.resolve()
@@ -470,7 +510,7 @@ impl PhasePool {
     /// Drain every in-flight epoch, then surface a recorded panic or the
     /// first phase error.
     pub fn drain_all(&mut self) -> Result<(), Error> {
-        while self.wait_front_drained() {}
+        while self.wait_front_drained()? {}
         self.resolve()
     }
 

@@ -16,14 +16,14 @@
 //!    disk spill.
 
 use super::{
-    noting_failure, plan_group_order, BoundaryGate, BoxedPhase, GateApplier, NativeApplier,
-    OverlapMode, PoolDriver, SimConfig, SimResult, StageBatch,
+    checkpoint_fingerprint, noting_failure, plan_group_order, BoundaryGate, BoxedPhase,
+    GateApplier, NativeApplier, OverlapMode, PoolDriver, SimConfig, SimResult, StageBatch,
 };
 use crate::circuit::fusion::{fuse_remapped, FusedGate};
 use crate::circuit::{partition_circuit, Circuit};
 use crate::compress::{Codec, CodecScratch};
 use crate::gates::fused;
-use crate::memory::{BlockPayload, BlockStore};
+use crate::memory::{checkpoint, BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
 use crate::pipeline::{Scratch, WorkerCtx};
 use crate::state::{BlockLayout, GroupSchedule, StateVector};
@@ -31,7 +31,7 @@ use crate::types::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// The compressed, staged engine.
 pub struct BmqSim<'a> {
@@ -123,6 +123,18 @@ impl<'a> BmqSim<'a> {
         Ok((store, layout))
     }
 
+    /// Run the circuit and hand back the result *and* the terminal
+    /// compressed store + layout — what the CLI uses to print a terminal
+    /// state digest (xxh64 over the compressed payloads in block order)
+    /// without materializing the dense state.
+    pub fn run_with_store(
+        &self,
+        circuit: &Circuit,
+        materialize: bool,
+    ) -> Result<(SimResult, crate::memory::BlockStore, BlockLayout)> {
+        self.run_inner(circuit, materialize)
+    }
+
     /// Run the circuit. `materialize` controls whether the final dense
     /// state is assembled (needed for fidelity; skip it at large `n`).
     pub fn run(&self, circuit: &Circuit, materialize: bool) -> Result<SimResult> {
@@ -156,9 +168,41 @@ impl<'a> BmqSim<'a> {
             self.config.spill_dir.clone(),
             self.config.store_options(),
         )?;
-        // Initialization also calibrates the codec (ns per amplitude) for
-        // the per-stage overlap auto-enable heuristic.
-        let codec_ns_per_amp = self.init_blocks(&layout, &codec, &store, &metrics)?;
+        // The semantic compatibility key every checkpoint embeds; a
+        // resume from a run with different stage-plan or state-affecting
+        // parameters fails typed instead of silently diverging.
+        let fingerprint = checkpoint_fingerprint("bmqsim", &self.config, circuit);
+        // Either initialize |0...0> fresh, or rehydrate a checkpoint and
+        // continue from its stage cursor. Both paths also calibrate the
+        // codec (ns per amplitude) for the overlap auto-enable heuristic.
+        let mut start_stage = 0usize;
+        let codec_ns_per_amp = match &self.config.resume_from {
+            None => self.init_blocks(&layout, &codec, &store, &metrics)?,
+            Some(root) => {
+                let loaded = checkpoint::load_latest(root, "bmqsim", fingerprint)?;
+                if loaded.blocks.len() != layout.num_blocks() {
+                    return Err(Error::checkpoint(format!(
+                        "{}: {} blocks in checkpoint, layout expects {}",
+                        loaded.dir.display(),
+                        loaded.blocks.len(),
+                        layout.num_blocks()
+                    )));
+                }
+                for (name, v) in &loaded.manifest.counters {
+                    metrics.restore_counter(name, *v);
+                }
+                metrics.resumes.fetch_add(1, Ordering::Relaxed);
+                start_stage = loaded.manifest.stage_cursor;
+                store.rehydrate(loaded.blocks)?;
+                // Calibrate on one zero plane (uncounted: the restored
+                // manifest counters already cover all prior work).
+                let len = layout.block_len();
+                let zero_plane = vec![0.0f64; len];
+                let t0 = Instant::now();
+                codec.compress(&zero_plane)?;
+                t0.elapsed().as_nanos() as f64 / len as f64
+            }
+        };
 
         // ---- Staged, pipelined execution ----
         // Scratch arenas persist per worker for the WHOLE run: plane
@@ -194,7 +238,14 @@ impl<'a> BmqSim<'a> {
         // pre-publish `drain_to_one` guarantees it).
         let mut next_rebase = 0usize;
         let block_len = layout.block_len();
-        for stage in &plan.stages {
+        let stall_timeout = self.config.stall_timeout_ms.map(Duration::from_millis);
+        let checkpoint_every = self.config.checkpoint_every.max(1);
+        for (stage_idx, stage) in plan.stages.iter().enumerate() {
+            // Resume: stages up to the checkpoint cursor are already
+            // reflected in the rehydrated blocks.
+            if stage_idx < start_stage {
+                continue;
+            }
             let schedule = layout.group_schedule(&stage.inner)?;
             // Spill-aware scheduling: ask the store which groups are
             // already resident and run those first (the prefetcher then
@@ -313,21 +364,25 @@ impl<'a> BmqSim<'a> {
             let decode: BoxedPhase<'_> = {
                 let ctx = ctx.clone();
                 Box::new(move |w, i| {
-                    if let Some(pg) = &ctx.prev_gate {
-                        if !pg.complete() {
-                            // The previous stage is still encoding: this
-                            // is a cross-stage decode. Wait only for the
-                            // items owning this group's blocks.
-                            metrics_ref.cross_stage_decodes.fetch_add(1, Ordering::Relaxed);
-                            let stall = pg.wait_for(&ctx.deps[i], abort_ref);
-                            if stall > 0 {
-                                metrics_ref
-                                    .boundary_stall_ns
-                                    .fetch_add(stall, Ordering::Relaxed);
+                    noting_failure(abort_ref, || {
+                        if let Some(pg) = &ctx.prev_gate {
+                            if !pg.complete() {
+                                // The previous stage is still encoding:
+                                // this is a cross-stage decode. Wait only
+                                // for the items owning this group's
+                                // blocks; a tripped stall watchdog
+                                // surfaces here as a typed error (and
+                                // `noting_failure` raises the run-abort
+                                // flag for the other waiters).
+                                metrics_ref.cross_stage_decodes.fetch_add(1, Ordering::Relaxed);
+                                let stall = pg.wait_for(&ctx.deps[i], abort_ref, stall_timeout)?;
+                                if stall > 0 {
+                                    metrics_ref
+                                        .boundary_stall_ns
+                                        .fetch_add(stall, Ordering::Relaxed);
+                                }
                             }
                         }
-                    }
-                    noting_failure(abort_ref, || {
                         self.decode_group(
                             w,
                             &ctx.schedule,
@@ -393,6 +448,42 @@ impl<'a> BmqSim<'a> {
                 owner,
                 gate: ctx.gate.clone(),
             });
+            // ---- Stage-boundary checkpoint ----
+            // Quiesce (drain the epoch window, flush the write-back
+            // queue) so every live block is at its post-stage value, then
+            // persist blocks + manifest atomically. The epoch window is
+            // empty afterwards, so the next stage publishes plain, not
+            // stitched.
+            if let Some(ckpt_root) = &self.config.checkpoint_dir {
+                if (stage_idx + 1 - start_stage) % checkpoint_every == 0 {
+                    pools.drain_all(&metrics)?;
+                    store.flush()?;
+                    let t_ck = Instant::now();
+                    let blocks = store.export_blocks()?;
+                    let counters = metrics.checkpoint_counters();
+                    let meta = checkpoint::CheckpointMeta {
+                        engine: "bmqsim",
+                        stage_cursor: stage_idx + 1,
+                        total_stages: plan.stages.len(),
+                        fingerprint,
+                        counters: &counters,
+                    };
+                    let bytes = checkpoint::write_checkpoint_with(
+                        ckpt_root,
+                        &meta,
+                        &blocks,
+                        store.injector(),
+                        self.config.checkpoint_keep,
+                    )?;
+                    metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
+                    metrics.checkpoint_bytes.fetch_add(bytes, Ordering::Relaxed);
+                    metrics
+                        .checkpoint_ns
+                        .fetch_add(t_ck.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    prev = None;
+                    next_rebase = 0;
+                }
+            }
         }
         pools.drain_all(&metrics)?;
         pools.finish(&metrics);

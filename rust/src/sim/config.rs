@@ -197,6 +197,34 @@ pub struct SimConfig {
     /// each gate's groups tile every block, so no group is ever disjoint
     /// from the previous stage and the barrier is optimal there.
     pub cross_stage: OverlapMode,
+    /// Checkpoint root directory (CLI `--checkpoint-dir`). `Some` enables
+    /// crash-consistent stage-boundary snapshots: every
+    /// `checkpoint_every` completed stages the engine quiesces the
+    /// pipeline window, flushes the write-back queue, and persists all
+    /// live blocks plus an atomically renamed manifest
+    /// ([`crate::memory::checkpoint`]). `None` = no checkpointing.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Stage-boundary snapshot cadence (CLI `--checkpoint-every N`, min
+    /// 1): checkpoint after every N completed stages (per-gate engines
+    /// count gates). Ignored without `checkpoint_dir`.
+    pub checkpoint_every: usize,
+    /// Resume from the newest intact checkpoint under this directory
+    /// (CLI `--resume DIR`): validate the manifest's config fingerprint,
+    /// rehydrate the block store, and continue from the saved stage
+    /// cursor to a terminal state byte-identical to the uninterrupted
+    /// run. A fingerprint mismatch is a typed [`Error::Checkpoint`].
+    pub resume_from: Option<PathBuf>,
+    /// Retained checkpoints (CLI `--checkpoint-keep`, min 1): after each
+    /// commit, older `ckpt-*` directories beyond the N most recent are
+    /// pruned. Two (default) guarantees a fallback snapshot survives a
+    /// kill during the next checkpoint's write.
+    pub checkpoint_keep: usize,
+    /// Watchdog on stage-boundary waits (CLI `--stall-timeout-ms`;
+    /// `None` = off, the default): epoch-drain and cross-stage boundary
+    /// waiters give up after this long without progress and surface a
+    /// typed error with a progress-counter dump instead of hanging the
+    /// run forever (e.g. under a `stall@write` fault plan).
+    pub stall_timeout_ms: Option<u64>,
 }
 
 impl Default for SimConfig {
@@ -227,6 +255,11 @@ impl Default for SimConfig {
             spill_fallback_dir: None,
             no_simd: false,
             cross_stage: OverlapMode::Auto,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            resume_from: None,
+            checkpoint_keep: 2,
+            stall_timeout_ms: None,
         }
     }
 }
@@ -293,6 +326,11 @@ mod tests {
         assert!(c.spill_fallback_dir.is_none());
         assert!(!c.no_simd, "vector kernels on by default");
         assert_eq!(c.cross_stage, OverlapMode::Auto, "cross-stage follows overlap");
+        assert!(c.checkpoint_dir.is_none(), "no checkpointing by default");
+        assert_eq!(c.checkpoint_every, 1);
+        assert!(c.resume_from.is_none());
+        assert_eq!(c.checkpoint_keep, 2, "one fallback snapshot is always retained");
+        assert!(c.stall_timeout_ms.is_none(), "watchdog off by default");
         let opts = c.store_options();
         assert_eq!(opts.shards, 8);
         assert!(opts.async_spill);

@@ -63,6 +63,9 @@ pub(crate) struct PoolDriver<'a> {
     overlap: OverlapMode,
     depth_cap: usize,
     codec_ns_per_amp: f64,
+    /// Epoch-drain watchdog deadline (`SimConfig::stall_timeout_ms`);
+    /// armed on the phase pool at construction.
+    stall_timeout: Option<Duration>,
     seq_pool: Option<ScratchPool>,
     phase_pool: Option<PhasePool>,
     depth_ctl: RingDepthController,
@@ -88,6 +91,7 @@ impl<'a> PoolDriver<'a> {
             overlap: config.overlap,
             depth_cap,
             codec_ns_per_amp,
+            stall_timeout: config.stall_timeout_ms.map(Duration::from_millis),
             seq_pool: None,
             phase_pool: None,
             depth_ctl: RingDepthController::new(
@@ -97,6 +101,20 @@ impl<'a> PoolDriver<'a> {
             ),
             inflight: VecDeque::new(),
         }
+    }
+
+    /// The phase pool, built on first use with the watchdog deadline
+    /// armed (both overlap paths construct through here so no pool can
+    /// exist without its configured stall timeout).
+    fn pool(&mut self) -> &mut PhasePool {
+        let pipe = self.pipe;
+        let depth_cap = self.depth_cap;
+        let stall_timeout = self.stall_timeout;
+        self.phase_pool.get_or_insert_with(|| {
+            let mut p = PhasePool::new(pipe, depth_cap);
+            p.set_stall_timeout(stall_timeout);
+            p
+        })
     }
 
     /// The per-stage overlap decision (auto-enable heuristic unless
@@ -179,12 +197,7 @@ impl<'a> PoolDriver<'a> {
         let pipe = self.pipe;
         if use_overlap {
             self.drain_to_window(MAX_EPOCHS_IN_FLIGHT - 1, metrics)?;
-            let depth_cap = self.depth_cap;
-            let stall = self
-                .phase_pool
-                .get_or_insert_with(|| PhasePool::new(pipe, depth_cap))
-                .stats()
-                .total_stall_ns();
+            let stall = self.pool().stats().total_stall_ns();
             let depth = self.depth_ctl.stage_depth(stall);
             self.inflight.push_back(batch);
             let r = {
@@ -234,11 +247,9 @@ impl<'a> PoolDriver<'a> {
         let use_overlap = self.decide_overlap(group_len, num_groups, metrics);
         let pipe = self.pipe;
         if use_overlap {
-            let depth_cap = self.depth_cap;
-            let pool =
-                self.phase_pool.get_or_insert_with(|| PhasePool::new(pipe, depth_cap));
-            let depth = self.depth_ctl.stage_depth(pool.stats().total_stall_ns());
-            pool.run_stage(num_groups, depth, decode, apply, encode)
+            let stall = self.pool().stats().total_stall_ns();
+            let depth = self.depth_ctl.stage_depth(stall);
+            self.pool().run_stage(num_groups, depth, decode, apply, encode)
         } else {
             let pool =
                 self.seq_pool.get_or_insert_with(|| ScratchPool::new(pipe.workers()));
@@ -281,13 +292,27 @@ impl Drop for PoolDriver<'_> {
         // the driver is dropping on a panic path the caller already
         // carries the original payload, and a second unwind out of `drop`
         // would abort the process.
-        if let Some(pool) = self.phase_pool.as_mut() {
-            if pool.in_flight() > 0 {
+        let wedged = match self.phase_pool.as_mut() {
+            Some(pool) if pool.in_flight() > 0 => {
                 pool.abort();
                 let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let _ = pool.drain_all();
                 }));
+                pool.in_flight() > 0
             }
+            _ => false,
+        };
+        if wedged {
+            // The stall watchdog gave up mid-drain: phase threads may
+            // still hold erased pointers into the inflight boxes, and the
+            // pool's Drop would join those wedged threads forever. Leak
+            // both — soundness over cleanliness on this failure path (the
+            // run is already surfacing a typed stall error).
+            std::mem::forget(std::mem::take(&mut self.inflight));
+            if let Some(pool) = self.phase_pool.take() {
+                std::mem::forget(pool);
+            }
+            return;
         }
         self.inflight.clear();
     }
@@ -384,18 +409,53 @@ impl BoundaryGate {
     /// (`Metrics::boundary_stall_ns`). The wait re-polls the abort flag
     /// every millisecond, so a producer that died without marking
     /// (items skimmed on an aborted epoch) cannot wedge a waiter.
-    pub(crate) fn wait_for(&self, deps: &[u32], abort: &AtomicBool) -> u64 {
+    ///
+    /// With `stall_timeout` armed (CLI `--stall-timeout-ms`), a wait
+    /// that observes no producer progress for that long gives up with a
+    /// typed error carrying a progress dump (which dep items never
+    /// encoded, how far the previous stage got) instead of polling
+    /// forever — the watchdog the chaos harness leans on when a fault
+    /// plan wedges an encoder.
+    pub(crate) fn wait_for(
+        &self,
+        deps: &[u32],
+        abort: &AtomicBool,
+        stall_timeout: Option<Duration>,
+    ) -> Result<u64> {
         if self.ready(deps) {
-            return 0;
+            return Ok(0);
         }
         let t0 = Instant::now();
+        let mut last_remaining = self.remaining.load(Ordering::Acquire);
+        let mut idle_since = Instant::now();
         let mut guard = self.lock.lock().unwrap();
         while !self.ready(deps) && !abort.load(Ordering::Acquire) {
+            if let Some(limit) = stall_timeout {
+                let remaining = self.remaining.load(Ordering::Acquire);
+                if remaining != last_remaining {
+                    last_remaining = remaining;
+                    idle_since = Instant::now();
+                } else if idle_since.elapsed() >= limit {
+                    drop(guard);
+                    let total = self.done.len();
+                    let missing: Vec<u32> = deps
+                        .iter()
+                        .copied()
+                        .filter(|&d| !self.done[d as usize].load(Ordering::Acquire))
+                        .collect();
+                    return Err(Error::spill(format!(
+                        "boundary-gate watchdog: no producer progress for {} ms waiting \
+                         on previous-stage items {missing:?} ({}/{total} items encoded)",
+                        limit.as_millis(),
+                        total - remaining,
+                    )));
+                }
+            }
             let (g, _) = self.cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
             guard = g;
         }
         drop(guard);
-        t0.elapsed().as_nanos() as u64
+        Ok(t0.elapsed().as_nanos() as u64)
     }
 }
 
@@ -419,6 +479,35 @@ pub(crate) fn noting_failure<R>(flag: &AtomicBool, f: impl FnOnce() -> Result<R>
         flag.store(true, Ordering::Release);
     }
     r
+}
+
+/// xxh64 fingerprint of the *semantic* run configuration + circuit: the
+/// compatibility key a checkpoint embeds and a resume must match. It
+/// covers everything that determines the terminal state and the stage
+/// plan (engine, qubit count, gate list, block geometry, partition inner
+/// size, codec, precision, fusion knobs) and deliberately *excludes* the
+/// execution-shape knobs (workers, pipeline depth, overlap, spill budget,
+/// shards) — byte-identity across those is pinned by the engine parity
+/// tests, so a checkpoint taken under async spill may resume under sync
+/// spill and still land on the same terminal state.
+pub(crate) fn checkpoint_fingerprint(
+    engine: &str,
+    config: &SimConfig,
+    circuit: &crate::circuit::Circuit,
+) -> u64 {
+    let canon = format!(
+        "{engine}|n={}|b={}|inner={}|codec={:?}|precision={:?}|fusion={}|max_fuse={}|tile={}|gates={:?}",
+        circuit.n_qubits,
+        config.effective_block_qubits(circuit.n_qubits),
+        config.inner_size,
+        config.codec,
+        config.precision,
+        config.fusion,
+        config.max_fuse_qubits,
+        config.tile_bits,
+        circuit.gates,
+    );
+    crate::memory::xxh64(canon.as_bytes(), 0)
 }
 
 /// Pluggable gate-application backend: native rust kernels or the AOT'd
@@ -550,24 +639,56 @@ mod tests {
         assert!(!gate.complete());
         gate.mark_done(1);
         gate.mark_done(1); // idempotent: must not double-count remaining
-        assert_eq!(gate.wait_for(&[1], &abort), 0, "satisfied deps must not wait");
+        assert_eq!(gate.wait_for(&[1], &abort, None).unwrap(), 0, "satisfied deps must not wait");
         // A dep marked from another thread releases the waiter.
         std::thread::scope(|s| {
             s.spawn(|| {
                 std::thread::sleep(Duration::from_millis(5));
                 gate.mark_done(0);
             });
-            assert!(gate.wait_for(&[0, 1], &abort) > 0, "waiter never stalled");
+            assert!(gate.wait_for(&[0, 1], &abort, None).unwrap() > 0, "waiter never stalled");
         });
         // An unmarked dep + abort: the waiter escapes instead of wedging.
         abort.store(true, Ordering::Release);
-        gate.wait_for(&[3], &abort);
+        gate.wait_for(&[3], &abort, None).unwrap();
         assert!(!gate.complete());
         gate.mark_done(2);
         gate.mark_done(3);
         assert!(gate.complete(), "all items marked but gate not complete");
         // A complete gate satisfies any dep list with zero stall.
-        assert_eq!(gate.wait_for(&[0, 1, 2, 3], &AtomicBool::new(false)), 0);
+        assert_eq!(gate.wait_for(&[0, 1, 2, 3], &AtomicBool::new(false), None).unwrap(), 0);
+    }
+
+    #[test]
+    fn boundary_gate_watchdog_converts_a_hang_into_a_typed_error() {
+        let gate = BoundaryGate::new(3);
+        let abort = AtomicBool::new(false);
+        gate.mark_done(0);
+        // Item 2's producer never marks: without a timeout this wait
+        // would poll until abort; with one it must surface a typed error
+        // naming the missing item and the progress so far.
+        let err = gate
+            .wait_for(&[2], &abort, Some(Duration::from_millis(20)))
+            .expect_err("watchdog must fire on a dead producer");
+        let msg = err.to_string();
+        assert!(msg.contains("watchdog"), "{msg}");
+        assert!(msg.contains("[2]"), "dump must name the missing item: {msg}");
+        assert!(msg.contains("1/3"), "dump must show progress: {msg}");
+        // Progress re-arms the timer: a producer marking while another
+        // waits keeps the watchdog quiet until the deps resolve.
+        let gate = BoundaryGate::new(2);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(5));
+                gate.mark_done(0);
+                std::thread::sleep(Duration::from_millis(5));
+                gate.mark_done(1);
+            });
+            let stalled = gate
+                .wait_for(&[0, 1], &abort, Some(Duration::from_millis(1000)))
+                .expect("live producers must not trip the watchdog");
+            assert!(stalled > 0);
+        });
     }
 
     #[test]

@@ -21,14 +21,17 @@
 //! full previous gate anyway, and the barrier is already optimal. See
 //! `barrier_only_even_with_cross_stage_pinned_on` for the pinned proof.
 
-use super::{plan_group_order, GateApplier, NativeApplier, PoolDriver, SimConfig, SimResult};
+use super::{
+    checkpoint_fingerprint, plan_group_order, GateApplier, NativeApplier, PoolDriver, SimConfig,
+    SimResult,
+};
 use crate::circuit::Circuit;
 use crate::compress::CodecScratch;
-use crate::memory::{BlockPayload, BlockStore};
+use crate::memory::{checkpoint, BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
 use crate::pipeline::{PipelineConfig, Scratch, WorkerCtx};
 use crate::state::{BlockLayout, StateVector};
-use crate::types::Result;
+use crate::types::{Error, Result};
 use std::sync::atomic::Ordering;
 use std::time::Instant;
 
@@ -65,25 +68,56 @@ impl<'a> Sc19Sim<'a> {
             self.config.store_options(),
         )?;
 
+        let engine = if self.workers == 1 { "sc19-cpu" } else { "sc19-gpu" };
+        let fingerprint = checkpoint_fingerprint(engine, &self.config, circuit);
+        let checkpoint_every = self.config.checkpoint_every.max(1);
+        let mut start_gate = 0usize;
+
         // Initial compression of every block (SC19 compresses the whole
-        // initial state; we reuse the zero-clone trick for fairness). The
-        // two timed compressions also calibrate the codec cost (ns/amp)
-        // for the per-gate overlap auto-enable heuristic.
-        let codec_ns_per_amp = {
-            let len = layout.block_len();
-            let zero = vec![0.0f64; len];
-            let mut first = vec![0.0f64; len];
-            first[0] = 1.0;
-            let t0 = Instant::now();
-            let z = metrics.time(Phase::Compress, || codec.compress(&zero))?;
-            let f = metrics.time(Phase::Compress, || codec.compress(&first))?;
-            let per_amp = t0.elapsed().as_nanos() as f64 / (2.0 * len as f64);
-            metrics.compressions.fetch_add(2, Ordering::Relaxed);
-            store.put(0, BlockPayload { re: f, im: z.clone() })?;
-            for id in 1..layout.num_blocks() {
-                store.put(id, BlockPayload { re: z.clone(), im: z.clone() })?;
+        // initial state; we reuse the zero-clone trick for fairness) — or,
+        // on `--resume`, rehydration of a checkpoint taken at some gate
+        // cursor (SC19's stage horizon is one gate). Either path also
+        // calibrates the codec cost (ns/amp) for the per-gate overlap
+        // auto-enable heuristic.
+        let codec_ns_per_amp = match &self.config.resume_from {
+            None => {
+                let len = layout.block_len();
+                let zero = vec![0.0f64; len];
+                let mut first = vec![0.0f64; len];
+                first[0] = 1.0;
+                let t0 = Instant::now();
+                let z = metrics.time(Phase::Compress, || codec.compress(&zero))?;
+                let f = metrics.time(Phase::Compress, || codec.compress(&first))?;
+                let per_amp = t0.elapsed().as_nanos() as f64 / (2.0 * len as f64);
+                metrics.compressions.fetch_add(2, Ordering::Relaxed);
+                store.put(0, BlockPayload { re: f, im: z.clone() })?;
+                for id in 1..layout.num_blocks() {
+                    store.put(id, BlockPayload { re: z.clone(), im: z.clone() })?;
+                }
+                per_amp
             }
-            per_amp
+            Some(root) => {
+                let loaded = checkpoint::load_latest(root, engine, fingerprint)?;
+                if loaded.blocks.len() != layout.num_blocks() {
+                    return Err(Error::checkpoint(format!(
+                        "{}: {} blocks in checkpoint, layout expects {}",
+                        loaded.dir.display(),
+                        loaded.blocks.len(),
+                        layout.num_blocks()
+                    )));
+                }
+                for (name, v) in &loaded.manifest.counters {
+                    metrics.restore_counter(name, *v);
+                }
+                metrics.resumes.fetch_add(1, Ordering::Relaxed);
+                start_gate = loaded.manifest.stage_cursor;
+                store.rehydrate(loaded.blocks)?;
+                let len = layout.block_len();
+                let zero = vec![0.0f64; len];
+                let t0 = Instant::now();
+                codec.compress(&zero)?;
+                t0.elapsed().as_nanos() as f64 / len as f64
+            }
         };
 
         // Per-gate sweep: the defining behaviour of the basic solution.
@@ -102,7 +136,12 @@ impl<'a> Sc19Sim<'a> {
         let sweep_workers =
             if self.applier.supports_fusion() { self.config.apply_workers.max(1) } else { 1 };
         let mut ids: Vec<usize> = Vec::new();
-        for gate in &circuit.gates {
+        for (gate_idx, gate) in circuit.gates.iter().enumerate() {
+            // Resume: gates up to the checkpoint cursor are already
+            // reflected in the rehydrated blocks.
+            if gate_idx < start_gate {
+                continue;
+            }
             let mut globals: Vec<usize> =
                 gate.targets().iter().copied().filter(|&q| q >= b).collect();
             globals.sort_unstable();
@@ -214,6 +253,36 @@ impl<'a> Sc19Sim<'a> {
             metrics.gates_applied.fetch_add(1, Ordering::Relaxed);
             // One full state sweep per gate — the frequency problem.
             metrics.plane_sweeps.fetch_add(1, Ordering::Relaxed);
+            // ---- Gate-boundary checkpoint ----
+            // `run_stage` is a full barrier, so after flushing the
+            // write-back queue every block holds its post-gate value.
+            if let Some(ckpt_root) = &self.config.checkpoint_dir {
+                if (gate_idx + 1 - start_gate) % checkpoint_every == 0 {
+                    store.flush()?;
+                    let t_ck = Instant::now();
+                    let blocks = store.export_blocks()?;
+                    let counters = metrics.checkpoint_counters();
+                    let meta = checkpoint::CheckpointMeta {
+                        engine,
+                        stage_cursor: gate_idx + 1,
+                        total_stages: circuit.len(),
+                        fingerprint,
+                        counters: &counters,
+                    };
+                    let bytes = checkpoint::write_checkpoint_with(
+                        ckpt_root,
+                        &meta,
+                        &blocks,
+                        store.injector(),
+                        self.config.checkpoint_keep,
+                    )?;
+                    metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
+                    metrics.checkpoint_bytes.fetch_add(bytes, Ordering::Relaxed);
+                    metrics
+                        .checkpoint_ns
+                        .fetch_add(t_ck.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+            }
         }
         pools.finish(&metrics);
         store.flush()?;

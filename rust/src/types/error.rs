@@ -42,6 +42,14 @@ pub enum Error {
 
     /// AOT artifact set is missing or inconsistent with the manifest.
     Artifact(String),
+
+    /// Checkpoint/restore failure: an unreadable or schema-mismatched
+    /// manifest, a config fingerprint that does not match the resuming
+    /// run, or a checkpoint directory with no intact snapshot. Distinct
+    /// from [`Error::Corruption`] (torn frame *bytes*) so orchestrators
+    /// can tell "this checkpoint cannot drive this run" apart from
+    /// "the data on disk rotted".
+    Checkpoint(String),
 }
 
 impl std::fmt::Display for Error {
@@ -60,6 +68,7 @@ impl std::fmt::Display for Error {
             Error::Io(e) => write!(f, "spill i/o error: {e}"),
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
         }
     }
 }
@@ -75,6 +84,35 @@ impl Error {
     /// [`std::error::Error::source`]).
     pub fn spill_io(msg: impl Into<String>, source: std::io::Error) -> Self {
         Error::Spill { msg: msg.into(), source: Some(source) }
+    }
+
+    /// Checkpoint/restore failure.
+    pub fn checkpoint(msg: impl Into<String>) -> Self {
+        Error::Checkpoint(msg.into())
+    }
+
+    /// Process exit class for this error, so CI chaos jobs and
+    /// orchestrators can dispatch on the failure *kind* without parsing
+    /// stderr:
+    ///
+    /// - `2` — configuration / usage (bad flags, invalid circuit/QASM):
+    ///   retrying will not help; fix the invocation.
+    /// - `3` — storage-tier failure (spill I/O, corruption, OOM): the
+    ///   host or disk is unhealthy; retry elsewhere.
+    /// - `4` — checkpoint/restore: the snapshot cannot drive this run
+    ///   (fingerprint mismatch, torn manifest with no fallback);
+    ///   restart from scratch or point at a different checkpoint.
+    /// - `1` — everything else.
+    pub fn exit_class(&self) -> u8 {
+        match self {
+            Error::Config(_) | Error::Circuit(_) | Error::Qasm { .. } => 2,
+            Error::OutOfMemory(_)
+            | Error::Spill { .. }
+            | Error::Corruption(_)
+            | Error::Io(_) => 3,
+            Error::Checkpoint(_) => 4,
+            Error::Codec(_) | Error::Xla(_) | Error::Artifact(_) => 1,
+        }
     }
 }
 
@@ -141,5 +179,28 @@ mod tests {
         let e = Error::Corruption("frame at 128: xxh64 mismatch".into());
         assert!(e.to_string().contains("corruption"));
         assert!(e.to_string().contains("xxh64"));
+    }
+
+    #[test]
+    fn checkpoint_displays() {
+        let e = Error::checkpoint("manifest schema 99 unsupported");
+        assert_eq!(e.to_string(), "checkpoint error: manifest schema 99 unsupported");
+        assert!(matches!(e, Error::Checkpoint(_)));
+    }
+
+    #[test]
+    fn exit_classes_partition_the_taxonomy() {
+        assert_eq!(Error::Config("x".into()).exit_class(), 2);
+        assert_eq!(Error::Circuit("x".into()).exit_class(), 2);
+        assert_eq!(Error::Qasm { line: 1, msg: "x".into() }.exit_class(), 2);
+        assert_eq!(Error::OutOfMemory("x".into()).exit_class(), 3);
+        assert_eq!(Error::spill("x").exit_class(), 3);
+        assert_eq!(Error::Corruption("x".into()).exit_class(), 3);
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "x");
+        assert_eq!(Error::Io(io).exit_class(), 3);
+        assert_eq!(Error::checkpoint("x").exit_class(), 4);
+        assert_eq!(Error::Codec("x".into()).exit_class(), 1);
+        assert_eq!(Error::Xla("x".into()).exit_class(), 1);
+        assert_eq!(Error::Artifact("x".into()).exit_class(), 1);
     }
 }
