@@ -83,6 +83,24 @@ pub const RULES: &[Rule] = &[
         direction: Direction::HigherBetter,
         optional: true,
     },
+    // Adaptive error control (ISSUE 10): the amplitude policy's whole-run
+    // compression ratio at the fidelity target, and its normalized margin
+    // above the target ((fidelity − target)/(1 − target)). The ratio
+    // collapsing means the budget controller stopped converting refunds
+    // into looser bounds; the margin collapsing means it is eating into
+    // the guarantee.
+    Rule {
+        file: "BENCH_frontier.json",
+        path: &["compression_ratio_at_target"],
+        direction: Direction::HigherBetter,
+        optional: false,
+    },
+    Rule {
+        file: "BENCH_frontier.json",
+        path: &["fidelity_margin"],
+        direction: Direction::HigherBetter,
+        optional: false,
+    },
 ];
 
 /// Outcome for one gated metric.

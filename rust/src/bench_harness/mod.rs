@@ -224,6 +224,120 @@ pub fn fig08_fidelity(algos: &[&str], ns: &[usize]) -> Result<Table> {
     Ok(t)
 }
 
+/// Fig. 8 frontier — adaptive error control on the deep-random workload.
+///
+/// Three runs of the same circuit against the dense ideal:
+///
+/// 1. **fixed** — the *equivalent fixed global bound* `ε_total/(S+1)`
+///    (with `ε_total = (1-target)/2` over `S` stages + init): the bound a
+///    target-naive run must hard-pin to guarantee the target, with no
+///    refunds and no per-block shaping.
+/// 2. **global** — the budget controller with [`ErrorPolicy::Global`].
+/// 3. **amplitude** — the controller with [`ErrorPolicy::Amplitude`].
+///
+/// Returns the printable table plus the machine-readable fields for
+/// `BENCH_frontier.json`. `bench_check` gates `compression_ratio_at_target`
+/// (the amplitude run's whole-run ratio) and `fidelity_margin`
+/// (`(fidelity - target)/(1 - target)`, i.e. 0 at the target and 1 at
+/// ideal — it must stay well above 0).
+///
+/// [`ErrorPolicy::Global`]: crate::compress::budget::ErrorPolicy::Global
+/// [`ErrorPolicy::Amplitude`]: crate::compress::budget::ErrorPolicy::Amplitude
+pub fn fig08_frontier(
+    n: usize,
+    block_qubits: usize,
+    target: f64,
+) -> Result<(Table, Vec<(String, String)>)> {
+    use crate::compress::budget::ErrorPolicy;
+    let c = generators::build("random", n, SEED)?;
+    let ideal = DenseSim::new(SimConfig::default()).run(&c)?.state.unwrap();
+    // The stage count this workload partitions into at this geometry —
+    // the S of the naive equivalent bound.
+    let plan =
+        crate::circuit::partition_circuit(&c, block_qubits.min(n), 2)?;
+    let stages = plan.stages.len();
+    let eps_total = (1.0 - target) / 2.0;
+    let fixed_bound = eps_total / (stages + 1) as f64;
+
+    let run = |ft: Option<f64>, policy: ErrorPolicy, pin: Option<f64>| -> Result<SimResult> {
+        let mut config = cfg(block_qubits, 2);
+        if let Some(b) = pin {
+            // Same codec kind/prescan as the budget runs' base codec;
+            // only the bound is pinned.
+            config.codec = config.codec.with_bound(b);
+        }
+        config.fidelity_target = ft;
+        config.error_policy = policy;
+        BmqSim::new(config).run(&c, true)
+    };
+    let fixed = run(None, ErrorPolicy::Global, Some(fixed_bound))?;
+    let global = run(Some(target), ErrorPolicy::Global, None)?;
+    let amp = run(Some(target), ErrorPolicy::Amplitude, None)?;
+
+    let fid = |r: &SimResult| r.state.as_ref().unwrap().fidelity(&ideal);
+    let (f_fixed, f_global, f_amp) = (fid(&fixed), fid(&global), fid(&amp));
+    let ratio = |r: &SimResult| r.metrics.compression_ratio();
+    let (r_fixed, r_global, r_amp) = (ratio(&fixed), ratio(&global), ratio(&amp));
+
+    let mut t = Table::new(&[
+        "config", "fidelity", "margin", "comp. ratio", "budget spent", "bounds [min, max]",
+        "recompressions",
+    ]);
+    for (label, r, f) in
+        [("fixed bound", &fixed, f_fixed), ("global", &global, f_global), ("amplitude", &amp, f_amp)]
+    {
+        t.row(&[
+            label.to_string(),
+            format!("{f:.7}"),
+            format!("{:+.2e}", f - target),
+            format!("{:.2}x", r.metrics.compression_ratio()),
+            format!("{:.2e}", r.metrics.error_budget_spent),
+            format!(
+                "[{:.1e}, {:.1e}]",
+                r.metrics.per_block_bound_min, r.metrics.per_block_bound_max
+            ),
+            r.metrics.recompressions.to_string(),
+        ]);
+    }
+    let fields = vec![
+        ("n".to_string(), n.to_string()),
+        ("block_qubits".to_string(), block_qubits.to_string()),
+        ("stages".to_string(), stages.to_string()),
+        ("fidelity_target".to_string(), bench_json::num(target)),
+        ("equivalent_fixed_bound".to_string(), format!("{fixed_bound:e}")),
+        // Gated: the amplitude policy's whole-run compression ratio at the
+        // target, and its normalized fidelity margin above the target.
+        ("compression_ratio_at_target".to_string(), bench_json::num(r_amp)),
+        (
+            "fidelity_margin".to_string(),
+            bench_json::num((f_amp - target) / (1.0 - target)),
+        ),
+        // The headline comparison (informational): ratio gain over the
+        // equivalent fixed bound at no fidelity deficit.
+        ("ratio_gain_vs_fixed".to_string(), bench_json::num(r_amp / r_fixed)),
+        ("ratio_gain_global_vs_fixed".to_string(), bench_json::num(r_global / r_fixed)),
+        ("fixed_fidelity".to_string(), format!("{f_fixed:.9}")),
+        ("global_fidelity".to_string(), format!("{f_global:.9}")),
+        ("amplitude_fidelity".to_string(), format!("{f_amp:.9}")),
+        ("fixed_ratio".to_string(), bench_json::num(r_fixed)),
+        ("global_ratio".to_string(), bench_json::num(r_global)),
+        (
+            "amplitude_budget_spent".to_string(),
+            format!("{:e}", amp.metrics.error_budget_spent),
+        ),
+        (
+            "amplitude_bound_min".to_string(),
+            format!("{:e}", amp.metrics.per_block_bound_min),
+        ),
+        (
+            "amplitude_bound_max".to_string(),
+            format!("{:e}", amp.metrics.per_block_bound_max),
+        ),
+        ("recompressions".to_string(), amp.metrics.recompressions.to_string()),
+    ];
+    Ok((t, fields))
+}
+
 /// Fig. 9 — memory consumption vs the standard `2^(n+4)` bytes, plus §5.4
 /// spill behaviour under a restricted budget (the X1 row set).
 pub fn fig09_memory(algos: &[&str], ns: &[usize], restricted_budget: usize) -> Result<(Table, Table)> {
@@ -875,6 +989,31 @@ mod tests {
         get("boundary_stall_ms");
         get("epoch_drain_ms");
         get("cross_stage_decodes");
+    }
+
+    #[test]
+    fn fig08_frontier_meets_target_at_tiny_scale() {
+        let target = 0.999;
+        let (t, fields) = fig08_frontier(9, 4, target).unwrap();
+        let s = t.to_string();
+        assert!(s.contains("fixed bound") && s.contains("amplitude"));
+        let get = |k: &str| {
+            fields
+                .iter()
+                .find(|(key, _)| key.as_str() == k)
+                .map(|(_, v)| v.clone())
+                .unwrap_or_else(|| panic!("missing field {k}"))
+        };
+        // The acceptance property, at tiny scale: both budget policies
+        // land at or above the target…
+        for k in ["global_fidelity", "amplitude_fidelity"] {
+            let f = get(k).parse::<f64>().unwrap();
+            assert!(f >= target, "{k} = {f} < {target}");
+        }
+        // …and the gated metrics are present and sane.
+        assert!(get("compression_ratio_at_target").parse::<f64>().unwrap() >= 1.0);
+        assert!(get("fidelity_margin").parse::<f64>().unwrap() > 0.0);
+        assert!(get("ratio_gain_vs_fixed").parse::<f64>().unwrap() > 0.0);
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub fn build(name: &str, n_qubits: usize, seed: u64) -> Result<Circuit> {
         "qsvm" => Ok(qsvm(n_qubits, seed)),
         "ghz_state" => Ok(ghz_state(n_qubits)),
         "qaoa" => Ok(qaoa(n_qubits, seed)),
+        // Not in `ALL` (it is not one of the paper's eight NWQBench
+        // families): the deep-random workload used by the error-control
+        // frontier bench and available for ad-hoc runs.
+        "random" => Ok(random(n_qubits, seed)),
         other => Err(Error::Circuit(format!("unknown benchmark {other:?}"))),
     }
 }
@@ -223,6 +227,47 @@ pub fn qaoa(n: usize, seed: u64) -> Circuit {
     c
 }
 
+/// Deep random circuit (the error-control stress workload): `n` brickwork
+/// layers, each a seeded single-qubit rotation per qubit (`RX`/`P`/`H`)
+/// followed by alternating-offset nearest-neighbour entanglers
+/// (`CX`/`CP`). Gate count is `Θ(n²)`, so the staged partitioner yields a
+/// genuinely deep stage sequence.
+///
+/// Deliberately no initial `H` wall: support spreads gradually and the
+/// per-block amplitude mass stays nonuniform for the whole run, which is
+/// the regime where amplitude-aware budget control pays off — early
+/// near-empty blocks earn refunds that loosen every later stage's bounds.
+pub fn random(n: usize, seed: u64) -> Circuit {
+    let mut rng = SplitMix64::new(seed);
+    let mut c = Circuit::new(n, "random");
+    let layers = n.max(4);
+    for layer in 0..layers {
+        for q in 0..n {
+            match rng.next_below(3) {
+                0 => {
+                    c.rx(rng.next_f64() * PI, q);
+                }
+                1 => {
+                    c.p(rng.next_f64() * 2.0 * PI, q);
+                }
+                _ => {
+                    c.h(q);
+                }
+            }
+        }
+        let mut q = layer % 2;
+        while q + 1 < n {
+            if rng.next_f64() < 0.5 {
+                c.cx(q, q + 1);
+            } else {
+                c.cp(rng.next_f64() * PI, q + 1, q);
+            }
+            q += 2;
+        }
+    }
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +326,22 @@ mod tests {
                 .filter(|c| c.gates != base.gates)
                 .count();
             assert!(distinct > 0, "{name} ignored seed");
+        }
+    }
+
+    #[test]
+    fn random_is_deep_deterministic_and_buildable_by_name() {
+        let a = random(10, 5);
+        let b = build("random", 10, 5).unwrap();
+        assert_eq!(a.gates, b.gates);
+        // Θ(n²): n rotation layers of n gates plus ~n/2 entanglers each.
+        assert!(a.len() >= 10 * 10, "only {} gates", a.len());
+        assert!(random(10, 6).gates != a.gates, "seed ignored");
+        assert!(!ALL.contains(&"random"), "random must stay out of the paper's table order");
+        for g in &a.gates {
+            for &q in g.targets() {
+                assert!(q < 10);
+            }
         }
     }
 

@@ -1,0 +1,511 @@
+//! Amplitude-aware adaptive error control (ROADMAP "fidelity as an
+//! input"): a per-block error-budget controller that turns a whole-run
+//! fidelity target into per-encode point-wise bounds.
+//!
+//! ## Budget ledger math
+//!
+//! For a normalized state and the point-wise relative codec, an encode of
+//! block `k` at bound `b_k` perturbs each amplitude by at most `b_k·|x|`,
+//! so the stage-wide L2 error is bounded by
+//!
+//! ```text
+//! err_s <= sqrt( Σ_k m_k · b_k² )      m_k = Σ_{i in block k} |x_i|²
+//! ```
+//!
+//! (`m_k` is the block's *amplitude mass* — its share of the state's L2
+//! norm). Stage errors compose additively under unitary evolution (gates
+//! never amplify an error vector's norm), so a run of `S` encode stages
+//! satisfies `‖ψ̂-ψ‖ <= Σ_s err_s`, and a terminal L2 error of `ε` keeps
+//! fidelity `|⟨ψ|ψ̂⟩|² >= 1 - 2ε` (first order). The controller therefore
+//! works in linear ε units with total budget
+//!
+//! ```text
+//! ε_total = (1 - fidelity_target) / 2
+//! ```
+//!
+//! and runs a headroom ledger: each stage draws
+//! `ε_s = headroom / stages_remaining`; each encode of block `k` charges
+//! `m_k·b_k²` against `ε_s²`; when the stage's last encode lands, the
+//! *unspent* remainder `ε_s - sqrt(Σ m_k b_k²)` flows back into the
+//! headroom for later stages. Bounds are allocated so the stage charge
+//! can never exceed its draw:
+//!
+//! * [`ErrorPolicy::Amplitude`] — `b_k = ε_s / sqrt(K·max(m_k, tiny))`
+//!   (K = block count): heavy blocks get tight bounds, near-zero blocks
+//!   loose ones, and `Σ_k m_k·b_k² <= ε_s²` by construction.
+//! * [`ErrorPolicy::Global`] — one uniform `b = ε_s` per stage (the mass
+//!   fractions sum to 1, so the stage charge is again `<= ε_s²`); still
+//!   target-driven and still refunding, just not amplitude-shaped.
+//!
+//! Every allocated bound is clamped to [`B_CAP`], which only lowers the
+//! applied bound — the ledger is *conservative by construction*: at every
+//! instant `spent + headroom <= ε_total` (pinned by the unit tests below
+//! and by `tests/error_control.rs`).
+//!
+//! ## Interaction with the compressed-primary tier
+//!
+//! The memory layer may ask permission to *recompress* a cold
+//! primary-resident block at a looser bound instead of spilling it
+//! ([`BudgetController::approve_recompress`]). The controller treats that
+//! as an extra encode: it draws a small fraction of the current headroom,
+//! converts it to a bound via the block's recorded mass, and declines when
+//! the headroom is exhausted, when the block was already recompressed
+//! since its last encode (loop safety), or when the achievable bound is
+//! not meaningfully looser than the payload's current one.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::{Codec, CodecKind};
+use crate::types::{Error, Result};
+
+/// Hard cap on any allocated point-wise bound. Beyond ~0.1 the codec's
+/// log2-domain quantization has little left to gain and relative error
+/// stops being "small"; the cap only ever tightens an allocation, so it
+/// cannot break the budget invariant.
+pub const B_CAP: f64 = 0.1;
+
+/// Mass floor used when converting budget to a bound for a (near-)zero
+/// mass block, so the division stays finite.
+const TINY_MASS: f64 = 1e-12;
+
+/// Fraction of the current headroom a single recompression may draw.
+const RECOMPRESS_DRAW: f64 = 0.125;
+
+/// A recompression must loosen the bound by at least this factor to be
+/// worth re-encoding the block.
+const RECOMPRESS_MIN_GAIN: f64 = 2.0;
+
+/// How the error budget is distributed across blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorPolicy {
+    /// One uniform bound per stage, derived from the fidelity target.
+    Global,
+    /// Per-block bounds shaped by amplitude mass (tight where the
+    /// amplitudes live, loose where they don't).
+    Amplitude,
+}
+
+impl Default for ErrorPolicy {
+    fn default() -> Self {
+        ErrorPolicy::Global
+    }
+}
+
+impl std::str::FromStr for ErrorPolicy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "global" => Ok(ErrorPolicy::Global),
+            "amplitude" => Ok(ErrorPolicy::Amplitude),
+            other => Err(Error::Config(format!(
+                "unknown error policy '{other}' (expected global|amplitude)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ErrorPolicy::Global => write!(f, "global"),
+            ErrorPolicy::Amplitude => write!(f, "amplitude"),
+        }
+    }
+}
+
+/// Point-in-time controller accounting, absorbed into `Metrics` by the
+/// engines at the end of a run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BudgetStats {
+    /// Committed L2 error (linear ε units) across finalized stages and
+    /// approved recompressions.
+    pub spent: f64,
+    /// The whole-run budget `(1 - target) / 2` (after any resume scaling).
+    pub eps_total: f64,
+    /// Tightest bound handed out (`0.0` when none were issued).
+    pub bound_min: f64,
+    /// Loosest bound handed out.
+    pub bound_max: f64,
+    /// Recompressions the controller approved.
+    pub recompressions: u64,
+}
+
+#[derive(Debug)]
+struct StageLedger {
+    /// This stage's ε draw.
+    eps: f64,
+    /// Σ m_k·b_k² charged so far (squared-ε units).
+    spent_sq: f64,
+    /// Encodes still outstanding; the stage finalizes (refunds) at zero.
+    pending: usize,
+}
+
+#[derive(Debug)]
+struct Ledger {
+    /// Unallocated ε.
+    headroom: f64,
+    /// Stages that have not yet drawn from the headroom.
+    stages_remaining: usize,
+    /// In-flight stage ledgers by stage key (cross-stage overlap keeps up
+    /// to two alive at once).
+    stages: HashMap<usize, StageLedger>,
+    /// Last observed amplitude mass per block (refreshed at every encode).
+    mass: Vec<f64>,
+    /// Loop-safety latch: set by an approved recompression, cleared by the
+    /// block's next regular encode.
+    recompressed: Vec<bool>,
+    /// Committed ε across finalized stages + recompressions.
+    spent: f64,
+    bound_min: f64,
+    bound_max: f64,
+    recompressions: u64,
+}
+
+/// The fidelity-target controller. One per engine run, shared (behind an
+/// `Arc`) between the encode phases and the memory tier's recompression
+/// hook; all state sits behind one short-critical-section mutex.
+///
+/// ```
+/// use bmqsim::compress::budget::{BudgetController, ErrorPolicy};
+/// use bmqsim::compress::Codec;
+///
+/// // 4 blocks, 3 encode stages, fidelity target 0.999.
+/// let ctl = BudgetController::new(
+///     ErrorPolicy::Amplitude, Codec::paper_default(), 0.999, 4, 3);
+/// ctl.begin_stage(0, 4);
+/// // A block holding all the mass gets a tight bound…
+/// let tight = ctl.bound_for(0, 0, 1.0);
+/// // …an empty block gets a loose one.
+/// let loose = ctl.bound_for(0, 1, 0.0);
+/// assert!(tight < loose);
+/// ```
+#[derive(Debug)]
+pub struct BudgetController {
+    policy: ErrorPolicy,
+    base: Codec,
+    eps_total: f64,
+    num_blocks: usize,
+    inner: Mutex<Ledger>,
+}
+
+impl BudgetController {
+    /// Build a controller for `num_blocks` blocks and `total_stages`
+    /// encode stages (count the initial state compression as a stage).
+    ///
+    /// `fidelity_target` must be in `(0, 1)` and `base.kind` must be
+    /// [`CodecKind::PointwiseRel`] — the ledger math is written for the
+    /// point-wise relative bound (`SimConfig::validate` enforces both
+    /// before an engine ever constructs one).
+    pub fn new(
+        policy: ErrorPolicy,
+        base: Codec,
+        fidelity_target: f64,
+        num_blocks: usize,
+        total_stages: usize,
+    ) -> Self {
+        debug_assert!(fidelity_target > 0.0 && fidelity_target < 1.0);
+        debug_assert_eq!(base.kind, CodecKind::PointwiseRel);
+        let eps_total = (1.0 - fidelity_target) / 2.0;
+        BudgetController {
+            policy,
+            base,
+            eps_total,
+            num_blocks: num_blocks.max(1),
+            inner: Mutex::new(Ledger {
+                headroom: eps_total,
+                stages_remaining: total_stages.max(1),
+                stages: HashMap::new(),
+                mass: vec![0.0; num_blocks.max(1)],
+                recompressed: vec![false; num_blocks.max(1)],
+                spent: 0.0,
+                bound_min: f64::INFINITY,
+                bound_max: 0.0,
+                recompressions: 0,
+            }),
+        }
+    }
+
+    /// Scale the remaining budget by `frac` (a resumed run grants itself
+    /// only the fraction of ε proportional to the stages it still has to
+    /// run — conservative, since the pre-crash lineage spent at most the
+    /// complementary share; see DESIGN.md "Adaptive error control").
+    pub fn scale_budget(&self, frac: f64) {
+        let mut g = self.lock();
+        let frac = frac.clamp(0.0, 1.0);
+        g.headroom *= frac;
+    }
+
+    /// The codec bounds are derived from, with the stock global bound.
+    pub fn base_codec(&self) -> Codec {
+        self.base
+    }
+
+    /// The configured distribution policy.
+    pub fn policy(&self) -> ErrorPolicy {
+        self.policy
+    }
+
+    /// The whole-run linear error budget.
+    pub fn eps_total(&self) -> f64 {
+        self.eps_total
+    }
+
+    /// Currently unallocated budget (test/report hook).
+    pub fn headroom(&self) -> f64 {
+        self.lock().headroom
+    }
+
+    /// Committed error so far (test/report hook).
+    pub fn spent(&self) -> f64 {
+        self.lock().spent
+    }
+
+    /// Open stage `key`'s ledger: draw `headroom / stages_remaining` and
+    /// expect exactly `expected_encodes` calls to
+    /// [`BudgetController::bound_for`] with this key. Called from the
+    /// engine's (sequential) submission thread, so two overlapped stages
+    /// draw in order.
+    pub fn begin_stage(&self, key: usize, expected_encodes: usize) {
+        let mut g = self.lock();
+        let remaining = g.stages_remaining.max(1);
+        let eps = (g.headroom / remaining as f64).max(0.0);
+        g.headroom -= eps;
+        g.stages_remaining = g.stages_remaining.saturating_sub(1);
+        g.stages.insert(
+            key,
+            StageLedger { eps, spent_sq: 0.0, pending: expected_encodes.max(1) },
+        );
+    }
+
+    /// Allocate the point-wise bound for encoding `block` (with fresh
+    /// amplitude mass `mass`) in stage `key`, charge the ledger, and
+    /// finalize the stage (refunding unspent ε) when this was its last
+    /// outstanding encode.
+    pub fn bound_for(&self, key: usize, block: usize, mass: f64) -> f64 {
+        let mut g = self.lock();
+        if block < g.mass.len() {
+            g.mass[block] = mass;
+            g.recompressed[block] = false;
+        }
+        let k = self.num_blocks as f64;
+        let stage = match g.stages.get_mut(&key) {
+            Some(s) => s,
+            // Defensive: an encode for a never-opened stage gets the base
+            // bound and charges nothing (cannot happen via the engines).
+            None => return self.base.error_bound,
+        };
+        let bound = match self.policy {
+            ErrorPolicy::Global => stage.eps.min(B_CAP),
+            ErrorPolicy::Amplitude => {
+                (stage.eps / (k * mass.max(TINY_MASS)).sqrt()).min(B_CAP)
+            }
+        };
+        stage.spent_sq += mass * bound * bound;
+        stage.pending -= 1;
+        if stage.pending == 0 {
+            let used = stage.spent_sq.max(0.0).sqrt().min(stage.eps);
+            let eps = stage.eps;
+            g.stages.remove(&key);
+            g.headroom += eps - used;
+            g.spent += used;
+        }
+        g.bound_min = g.bound_min.min(bound);
+        g.bound_max = g.bound_max.max(bound);
+        bound
+    }
+
+    /// Ask permission to recompress primary-resident `block` at a looser
+    /// bound instead of spilling it. `current_bound` is the bound embedded
+    /// in the block's present payload. Returns the approved bound, or
+    /// `None` when the controller declines (exhausted headroom, a repeat
+    /// request since the block's last encode, or too little to gain).
+    pub fn approve_recompress(&self, block: usize, current_bound: f64) -> Option<f64> {
+        let mut g = self.lock();
+        if block >= g.mass.len() || g.recompressed[block] {
+            return None;
+        }
+        let draw = g.headroom * RECOMPRESS_DRAW;
+        if draw <= 0.0 {
+            return None;
+        }
+        let m_eff = g.mass[block].max(TINY_MASS);
+        let bound = (draw / m_eff.sqrt()).min(B_CAP);
+        if bound < current_bound * RECOMPRESS_MIN_GAIN {
+            return None;
+        }
+        let cost = m_eff.sqrt() * bound; // <= draw <= headroom by construction
+        g.headroom -= cost;
+        g.spent += cost;
+        g.recompressed[block] = true;
+        g.recompressions += 1;
+        g.bound_min = g.bound_min.min(bound);
+        g.bound_max = g.bound_max.max(bound);
+        Some(bound)
+    }
+
+    /// Snapshot the accounting for the metrics report.
+    pub fn stats(&self) -> BudgetStats {
+        let g = self.lock();
+        BudgetStats {
+            spent: g.spent,
+            eps_total: self.eps_total,
+            bound_min: if g.bound_min.is_finite() { g.bound_min } else { 0.0 },
+            bound_max: g.bound_max,
+            recompressions: g.recompressions,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ledger> {
+        // Same poison policy as the store: a panicking encode thread must
+        // not wedge its siblings; the ledger is valid at every step.
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SplitMix64;
+
+    fn ctl(policy: ErrorPolicy, blocks: usize, stages: usize) -> BudgetController {
+        BudgetController::new(policy, Codec::paper_default(), 0.999, blocks, stages)
+    }
+
+    /// The required conservativeness invariant: at every instant the
+    /// committed error plus the unallocated headroom never exceeds the
+    /// whole-run budget — i.e. the sum of per-block allocations can never
+    /// outgrow what the fidelity target permits.
+    #[test]
+    fn ledger_is_conservative_at_every_stage() {
+        for policy in [ErrorPolicy::Global, ErrorPolicy::Amplitude] {
+            let blocks = 8;
+            let stages = 12;
+            let c = ctl(policy, blocks, stages);
+            let eps = c.eps_total();
+            let mut rng = SplitMix64::new(42);
+            for s in 0..stages {
+                c.begin_stage(s, blocks);
+                let mut masses: Vec<f64> =
+                    (0..blocks).map(|_| rng.next_f64()).collect();
+                let tot: f64 = masses.iter().sum();
+                for m in &mut masses {
+                    *m /= tot; // normalized state
+                }
+                for (b, &m) in masses.iter().enumerate() {
+                    let bound = c.bound_for(s, b, m);
+                    assert!(bound > 0.0 && bound <= B_CAP, "{policy:?}");
+                    // Mid-stage: spent tracks finalized work only, but
+                    // spent + headroom can never exceed the total.
+                    assert!(
+                        c.spent() + c.headroom() <= eps + 1e-15,
+                        "{policy:?} stage {s} block {b}"
+                    );
+                }
+                assert!(c.spent() <= eps + 1e-15, "{policy:?} stage {s}");
+            }
+            assert!(c.spent() <= eps + 1e-15, "{policy:?} terminal");
+        }
+    }
+
+    /// Unspent stage budget flows back: a stage of zero-mass blocks
+    /// refunds (almost) its whole draw, so later stages draw more than a
+    /// naive equal split would give them.
+    #[test]
+    fn unspent_budget_is_redistributed() {
+        let c = ctl(ErrorPolicy::Amplitude, 4, 2);
+        let eps = c.eps_total();
+        c.begin_stage(0, 4);
+        let naive_second_draw = eps / 2.0;
+        for b in 0..4 {
+            c.bound_for(0, b, 0.0); // near-zero mass: tiny charge
+        }
+        // After the refund nearly the whole budget is available again.
+        assert!(c.headroom() > naive_second_draw * 1.9);
+        c.begin_stage(1, 4);
+        for b in 0..4 {
+            c.bound_for(1, b, 0.25);
+        }
+        assert!(c.spent() + c.headroom() <= eps + 1e-15);
+    }
+
+    #[test]
+    fn amplitude_policy_shapes_bounds_by_mass() {
+        let c = ctl(ErrorPolicy::Amplitude, 4, 1);
+        c.begin_stage(0, 4);
+        let heavy = c.bound_for(0, 0, 0.97);
+        let light = c.bound_for(0, 1, 0.01);
+        let zero = c.bound_for(0, 2, 0.0);
+        assert!(heavy < light, "heavy {heavy} light {light}");
+        assert!(light <= zero, "light {light} zero {zero}");
+        let s = c.stats();
+        assert_eq!(s.bound_min, heavy);
+        assert_eq!(s.bound_max, zero.min(B_CAP));
+    }
+
+    #[test]
+    fn global_policy_is_uniform_within_a_stage() {
+        let c = ctl(ErrorPolicy::Global, 4, 2);
+        c.begin_stage(0, 4);
+        let bounds: Vec<f64> =
+            (0..4).map(|b| c.bound_for(0, b, 0.25)).collect();
+        assert!(bounds.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn recompress_is_latched_and_budgeted() {
+        let c = ctl(ErrorPolicy::Amplitude, 4, 4);
+        c.begin_stage(0, 4);
+        for b in 0..4 {
+            // Near-zero mass: the stage charges ~nothing and refunds its
+            // whole draw, leaving ample headroom for recompressions.
+            c.bound_for(0, b, 0.0);
+        }
+        let before = c.headroom();
+        assert!(before > 0.0);
+        let approved = c.approve_recompress(1, 1e-3).expect("first request approved");
+        assert!(approved > 2e-3 && approved <= B_CAP);
+        assert!(c.headroom() < before);
+        // Loop safety: a second request before the block is re-encoded is
+        // refused…
+        assert!(c.approve_recompress(1, approved).is_none());
+        // …and the latch clears at the next regular encode.
+        c.begin_stage(1, 4);
+        c.bound_for(1, 1, 0.0);
+        assert!(c.approve_recompress(1, 1e-3).is_some());
+        assert_eq!(c.stats().recompressions, 2);
+        assert!(c.spent() + c.headroom() <= c.eps_total() + 1e-15);
+    }
+
+    #[test]
+    fn recompress_declines_marginal_gains() {
+        let c = ctl(ErrorPolicy::Amplitude, 2, 2);
+        c.begin_stage(0, 2);
+        c.bound_for(0, 0, 1.0);
+        // Headroom remains (stage 1's share), but the achievable bound
+        // for a full-mass block is ~eps-scale: asking to "loosen" a
+        // payload already at the cap is declined on the gain check.
+        assert!(c.headroom() > 0.0);
+        assert!(c.approve_recompress(0, B_CAP).is_none());
+    }
+
+    #[test]
+    fn resume_scaling_shrinks_the_budget() {
+        let c = ctl(ErrorPolicy::Global, 4, 10);
+        let full = c.headroom();
+        c.scale_budget(0.25);
+        assert!((c.headroom() - full * 0.25).abs() < 1e-18);
+    }
+
+    #[test]
+    fn policy_parses_and_prints() {
+        assert_eq!("global".parse::<ErrorPolicy>().unwrap(), ErrorPolicy::Global);
+        assert_eq!("amplitude".parse::<ErrorPolicy>().unwrap(), ErrorPolicy::Amplitude);
+        assert!("belady".parse::<ErrorPolicy>().is_err());
+        assert_eq!(ErrorPolicy::Amplitude.to_string(), "amplitude");
+        assert_eq!(ErrorPolicy::default(), ErrorPolicy::Global);
+    }
+}

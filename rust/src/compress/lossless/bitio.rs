@@ -12,6 +12,7 @@ pub struct BitWriter {
 }
 
 impl BitWriter {
+    /// Fresh, empty writer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -36,6 +37,7 @@ impl BitWriter {
         }
     }
 
+    /// Write a single bit.
     pub fn write_bit(&mut self, bit: bool) {
         self.write_bits(bit as u64, 1);
     }
@@ -63,6 +65,7 @@ pub struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
+    /// Reader over `buf`, cursor at bit 0.
     pub fn new(buf: &'a [u8]) -> Self {
         BitReader { buf, pos: 0 }
     }
@@ -88,6 +91,7 @@ impl<'a> BitReader<'a> {
         Ok(v)
     }
 
+    /// Read a single bit.
     pub fn read_bit(&mut self) -> Result<bool> {
         Ok(self.read_bits(1)? != 0)
     }

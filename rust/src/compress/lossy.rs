@@ -20,6 +20,7 @@ use crate::types::{Error, Result};
 /// codes staying below 2^52.
 pub(crate) const MAX_CODE: f64 = 4.0e15;
 
+/// Compress `data` under absolute error bound `eb` into a fresh buffer.
 pub fn compress(data: &[f64], eb: f64) -> Result<Vec<u8>> {
     let mut out = Vec::new();
     compress_into_with(data, eb, &mut out, &mut CodecScratch::new())?;
@@ -66,6 +67,7 @@ pub fn decoded_len(bytes: &[u8]) -> Result<usize> {
     residual::encoded_count(&bytes[pos..])
 }
 
+/// Decompress an absolute-bound stream into a fresh vector.
 pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
     let mut data = vec![0.0f64; decoded_len(bytes)?];
     decompress_into_with(bytes, &mut data, &mut CodecScratch::new())?;

@@ -34,6 +34,7 @@
 //! `decompress_into` requires `out.len()` to equal the encoded element
 //! count exactly and fully overwrites `out` (dirty buffers are fine).
 
+pub mod budget;
 pub mod lossless;
 pub mod lossy;
 pub mod pointwise;
@@ -84,6 +85,7 @@ impl Default for CodecScratch {
 }
 
 impl CodecScratch {
+    /// Scratch bound to the runtime-dispatched SIMD table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -109,6 +111,7 @@ impl CodecScratch {
 /// A configured plane compressor. Cheap to clone/share.
 #[derive(Debug, Clone, Copy)]
 pub struct Codec {
+    /// Which wire format / quantizer to use.
     pub kind: CodecKind,
     /// `b_r` for `PointwiseRel`, `eb` for `Absolute`; ignored for `Raw`.
     pub error_bound: f64,
@@ -122,16 +125,27 @@ impl Codec {
         Codec { kind: CodecKind::PointwiseRel, error_bound: 1e-3, prescan: true }
     }
 
+    /// Lossless pass-through (no quantization).
     pub fn raw() -> Self {
         Codec { kind: CodecKind::Raw, error_bound: 0.0, prescan: false }
     }
 
+    /// Absolute error bound `eb` (uniform quantizer).
     pub fn absolute(eb: f64) -> Self {
         Codec { kind: CodecKind::Absolute, error_bound: eb, prescan: false }
     }
 
+    /// Point-wise relative bound `b_r` (log-magnitude quantizer).
     pub fn pointwise(b_r: f64) -> Self {
         Codec { kind: CodecKind::PointwiseRel, error_bound: b_r, prescan: true }
+    }
+
+    /// This codec with a different error bound — the per-encode form the
+    /// [`budget::BudgetController`] hands to the engines (`Codec` is
+    /// `Copy`; the wire format embeds the bound, so per-block bounds need
+    /// no decode-side plumbing).
+    pub fn with_bound(&self, bound: f64) -> Self {
+        Codec { error_bound: bound, ..*self }
     }
 
     /// Compress one plane into a fresh buffer.
@@ -192,6 +206,7 @@ impl Codec {
         decompress_any_into_with(bytes, out, scratch)
     }
 
+    /// Short human-readable codec name for reports.
     pub fn name(&self) -> &'static str {
         match self.kind {
             CodecKind::PointwiseRel => "bmz-pointwise",
@@ -317,6 +332,18 @@ fn raw_decompress_into(bytes: &[u8], out: &mut [f64]) -> Result<()> {
         *slot = f64::from_le_bytes(c.try_into().unwrap());
     }
     Ok(())
+}
+
+/// The error bound embedded in a compressed plane's header — a cheap peek
+/// used by the memory tier's recompression hook to judge whether a looser
+/// controller-approved bound is worth a re-encode. `None` for raw planes
+/// (no bound to compare).
+pub fn plane_bound(bytes: &[u8]) -> Result<Option<f64>> {
+    match parse_prefix(bytes)? {
+        PlanePrefix::Raw { .. } => Ok(None),
+        PlanePrefix::Abs { eb, .. } => Ok(Some(eb)),
+        PlanePrefix::Pointwise { b_r, .. } => Ok(Some(b_r)),
+    }
 }
 
 /// Number of `f64` elements a compressed plane decodes to — a cheap header

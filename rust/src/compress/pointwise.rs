@@ -28,6 +28,7 @@ use crate::types::{Error, Result};
 /// codes stay well inside i64 for any sane `b_r`).
 const MAX_CODE: f64 = 4.0e15;
 
+/// Compress `data` under point-wise relative bound `b_r` into a fresh buffer.
 pub fn compress(data: &[f64], b_r: f64, prescan: bool) -> Result<Vec<u8>> {
     let mut out = Vec::new();
     compress_into_with(data, b_r, prescan, &mut out, &mut CodecScratch::new())?;
@@ -119,6 +120,7 @@ pub fn decoded_len(bytes: &[u8]) -> Result<usize> {
     Ok(varint::read_u64(bytes, &mut pos)? as usize)
 }
 
+/// Decompress a point-wise-relative stream into a fresh vector.
 pub fn decompress(bytes: &[u8]) -> Result<Vec<f64>> {
     let mut data = vec![0.0f64; decoded_len(bytes)?];
     decompress_into_with(bytes, &mut data, &mut CodecScratch::new())?;

@@ -11,16 +11,22 @@
 
 pub mod bench_harness;
 pub mod circuit;
+// The user-facing core — compress, memory, sim — keeps rustdoc complete:
+// every public item in these subtrees must carry a doc comment, and the
+// CI `docs` job runs `cargo doc` with `-D warnings` to enforce it.
+#[warn(missing_docs)]
 pub mod compress;
 pub mod gates;
 // The store's locking/recovery layer bans bare `unwrap()` (a panicking
 // worker must never wedge siblings): CI runs clippy with this lint as an
 // error for the whole `memory` subtree. Tests opt back in locally.
 #[deny(clippy::unwrap_used)]
+#[warn(missing_docs)]
 pub mod memory;
 pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod sim;
 pub mod simd;
 pub mod state;

@@ -38,6 +38,14 @@ OPTIONS (run/compare/sample):
   --block-qubits <B>    log2 SV block length                       [14]
   --inner-size <I>      Algorithm-1 inner threshold                [2]
   --error-bound <e>     point-wise relative bound                  [1e-3]
+  --fidelity-target <f> whole-run fidelity floor in (0,1): derive every
+                        block's bound from a shared error budget instead
+                        of the fixed --error-bound (requires the
+                        point-wise codec, i.e. not --no-compress)   [off]
+  --error-policy <p>    how the budget is split per encode round:
+                        "global" (uniform bound) or "amplitude"
+                        (per-block, shaped by amplitude mass; heavy
+                        blocks tighten, near-zero blocks relax)   [global]
   --no-compress         disable compression (raw blocks)
   --no-prescan          disable the sign-bitmap pre-scan
   --no-fusion           disable gate fusion (per-gate application)
@@ -93,6 +101,7 @@ OPTIONS (run/compare/sample):
   --seed <s>            circuit/sampling seed                      [42]
 
 BENCHMARK ALGORITHMS: cat_state cc ising qft bv qsvm ghz_state qaoa
+                      random (deep seeded random circuit; error-control workload)
 
 EXIT CODES: 0 ok | 2 config/usage | 3 storage tier (spill I/O, corruption,
             OOM) | 4 checkpoint/restore | 1 everything else
@@ -257,6 +266,15 @@ fn build_config(opts: &Opts) -> Result<SimConfig, CliError> {
         c.prescan = !opts.flag("no-prescan");
         c
     };
+    if let Some(t) = opts.get("fidelity-target") {
+        let t: f64 = t.parse().map_err(|_| format!("bad --fidelity-target: {t:?}"))?;
+        cfg.fidelity_target = Some(t);
+    }
+    if let Some(p) = opts.get("error-policy") {
+        cfg.error_policy = p
+            .parse::<bmqsim::compress::budget::ErrorPolicy>()
+            .map_err(|e| e.to_string())?;
+    }
     cfg.pipeline = PipelineConfig::new(
         opts.parse_num("devices", 1usize)?,
         opts.parse_num("streams", 2usize)?,
@@ -546,6 +564,10 @@ fn cmd_report(opts: &Opts) -> Result<(), CliError> {
     });
     bench::print_experiment("Fig 8: fidelity", || {
         Ok(vec![bench::fig08_fidelity(&short, &ns[..1])?])
+    });
+    bench::print_experiment("Fig 8b: adaptive error-control frontier", || {
+        let (n, b) = if scale == "full" { (12, 6) } else { (10, 5) };
+        Ok(vec![bench::fig08_frontier(n, b, 0.999)?.0])
     });
     bench::print_experiment("Fig 9: memory consumption (+ §5.4 spill)", || {
         let (a, b) = bench::fig09_memory(&algos, &ns, budget / 64)?;

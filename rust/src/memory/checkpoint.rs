@@ -56,6 +56,7 @@ const TMP_NAME: &str = "MANIFEST.tmp";
 /// One row of the manifest block table.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BlockEntry {
+    /// Block id this frame belongs to.
     pub id: usize,
     /// Byte offset of the frame inside `blocks.bin`.
     pub offset: u64,
@@ -88,21 +89,32 @@ pub struct CheckpointMeta<'a> {
 /// A parsed, checksum-verified manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// On-disk schema version (see `SCHEMA`).
     pub schema: u32,
+    /// Engine that wrote the checkpoint.
     pub engine: String,
+    /// Stages fully completed at snapshot time.
     pub stage_cursor: usize,
+    /// Total stages of the run that wrote the snapshot.
     pub total_stages: usize,
+    /// Semantic run-configuration fingerprint (must match to resume).
     pub fingerprint: u64,
+    /// Expected byte length of `blocks.bin`.
     pub blocks_len: u64,
+    /// Carried-over cumulative metric counters.
     pub counters: Vec<(String, u64)>,
+    /// Block table (one row per persisted frame).
     pub blocks: Vec<BlockEntry>,
 }
 
 /// A fully verified checkpoint: manifest plus every rehydrated payload.
 #[derive(Debug)]
 pub struct LoadedCheckpoint {
+    /// Directory the checkpoint was loaded from.
     pub dir: PathBuf,
+    /// The verified manifest.
     pub manifest: Manifest,
+    /// `(block id, payload)` pairs, checksum-verified.
     pub blocks: Vec<(usize, BlockPayload)>,
 }
 

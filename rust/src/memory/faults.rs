@@ -147,7 +147,9 @@ pub enum FaultKind {
 /// Which I/O site a scripted fault intercepts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultOp {
+    /// Secondary-tier (spill file) reads.
     Read,
+    /// Secondary-tier (spill file) writes.
     Write,
     /// Checkpoint manifest writes (temp-file write + the atomic rename).
     Manifest,
@@ -160,8 +162,11 @@ pub enum FaultOp {
 /// indices — `eio@write:3` faults exactly one attempt.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ScriptedFault {
+    /// Which store operation the fault targets.
     pub op: FaultOp,
+    /// 1-based attempt index at which the fault fires.
     pub nth: u64,
+    /// The failure injected at that point.
     pub kind: FaultKind,
 }
 

@@ -86,15 +86,19 @@ pub(crate) fn pwait_timeout<'a, T>(
 /// store → worker → store without fresh allocations (§Perf, DESIGN.md).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BlockPayload {
+    /// Compressed real plane.
     pub re: Vec<u8>,
+    /// Compressed imaginary plane.
     pub im: Vec<u8>,
 }
 
 impl BlockPayload {
+    /// Total compressed bytes across both planes.
     pub fn len(&self) -> usize {
         self.re.len() + self.im.len()
     }
 
+    /// True when both planes are empty.
     pub fn is_empty(&self) -> bool {
         self.re.is_empty() && self.im.is_empty()
     }
@@ -238,6 +242,25 @@ struct FailureRecord {
     io: Option<(std::io::ErrorKind, Option<i32>, String)>,
 }
 
+/// Controller-approved recompression hook (the compressed-primary third
+/// tier): given a block id and its current payload, re-encode it at a
+/// looser bound and return the smaller payload, or `None` to decline (no
+/// budget left, nothing to gain). Installed by the engines when a
+/// fidelity target is set; the store calls it from [`Shared::evict_one`]
+/// with no locks held.
+pub type RecompressFn = dyn Fn(usize, &BlockPayload) -> Option<BlockPayload> + Send + Sync;
+
+/// Shareable [`RecompressFn`] wrapper so [`StoreOptions`] keeps its
+/// `Debug`/`Clone` derives.
+#[derive(Clone)]
+pub struct Recompressor(pub Arc<RecompressFn>);
+
+impl std::fmt::Debug for Recompressor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Recompressor(..)")
+    }
+}
+
 /// Store tuning knobs (see `SimConfig::{store_shards, prefetch_depth,
 /// sync_spill}` and the corresponding CLI flags).
 #[derive(Debug, Clone)]
@@ -262,6 +285,11 @@ pub struct StoreOptions {
     /// Second spill stripe used when the primary spill device reports
     /// ENOSPC (the degradation ladder's middle rung).
     pub fallback_dir: Option<PathBuf>,
+    /// Compressed-primary third tier: under budget pressure, offer an
+    /// eviction victim to this hook first — a controller-approved harder
+    /// recompression keeps the block resident (smaller) instead of
+    /// spilling it. `None` (default) = classic two-tier behaviour.
+    pub recompressor: Option<Recompressor>,
 }
 
 impl Default for StoreOptions {
@@ -274,6 +302,7 @@ impl Default for StoreOptions {
             auto_depth: false,
             fault_plan: None,
             fallback_dir: None,
+            recompressor: None,
         }
     }
 }
@@ -298,16 +327,25 @@ struct AutoDepthState {
 /// Cumulative statistics, readable at any time.
 #[derive(Debug, Default, Clone)]
 pub struct MemStats {
+    /// Compressed bytes currently resident in the primary (RAM) tier.
     pub primary_bytes: usize,
+    /// High-water mark of `primary_bytes`.
     pub peak_primary_bytes: usize,
+    /// Bytes currently spilled to the secondary (disk) tier.
     pub secondary_bytes: usize,
+    /// High-water mark of `secondary_bytes`.
     pub peak_secondary_bytes: usize,
     /// Bytes currently staged in the write-back queue (RAM, leaving).
     pub write_back_bytes: usize,
+    /// Blocks written to the secondary tier (spills).
     pub spill_events: u64,
+    /// Blocks read back from the secondary tier.
     pub fetch_from_secondary: u64,
+    /// Blocks currently resident in primary.
     pub blocks_primary: usize,
+    /// Blocks currently in the secondary tier.
     pub blocks_secondary: usize,
+    /// Blocks currently staged in the write-back queue.
     pub blocks_write_back: usize,
     /// Budget-driven evictions of a resident victim (policy decisions;
     /// `spill_events` additionally counts budget-bypass direct spills).
@@ -332,6 +370,10 @@ pub struct MemStats {
     /// ENOSPC degradations: fallback-stripe writes + budget
     /// renegotiations (the store kept running instead of erroring).
     pub enospc_fallbacks: u64,
+    /// Eviction victims kept resident by a controller-approved harder
+    /// recompression (the compressed-primary third tier) instead of
+    /// being spilled.
+    pub recompressions: u64,
 }
 
 impl MemStats {
@@ -448,6 +490,8 @@ pub(crate) struct Shared {
     prefetch_hits: AtomicU64,
     prefetch_misses: AtomicU64,
     spill_stall_ns: AtomicU64,
+    /// Victims kept resident by the recompression hook instead of spilled.
+    recompressions: AtomicU64,
 }
 
 impl Shared {
@@ -680,6 +724,27 @@ impl Shared {
             };
             let Some(payload) = payload else { continue };
             let len = payload.len();
+            // Compressed-primary third tier: before paying a spill, offer
+            // the victim to the recompression hook. Runs with no locks
+            // held; concurrent `take`s of the victim spin on the
+            // `Evicting` slot and observe the reinstalled `Primary`.
+            // Primary accounting stays charged until the decision, so the
+            // budget reservation protocol (`peak <= budget`) is untouched:
+            // on success the footprint only shrinks, on decline the
+            // classic spill flow below takes over.
+            if let Some(rc) = &self.opts.recompressor {
+                if let Some(smaller) = (rc.0)(victim, &payload) {
+                    if smaller.len() < len {
+                        let slen = smaller.len();
+                        plock(self.shard(victim))
+                            .insert(victim, Slot::Primary { payload: smaller, prefetched: false });
+                        self.primary_bytes.fetch_sub(len - slen, Ordering::Relaxed);
+                        self.policy_insert(victim);
+                        self.recompressions.fetch_add(1, Ordering::Relaxed);
+                        return Ok(true);
+                    }
+                }
+            }
             self.primary_bytes.fetch_sub(len, Ordering::Relaxed);
             self.blocks_primary.fetch_sub(1, Ordering::Relaxed);
             self.wb_bytes.fetch_add(len, Ordering::Relaxed);
@@ -1494,6 +1559,7 @@ impl Shared {
             checksum_failures: self.counters.checksum_failures.load(Ordering::Relaxed),
             frames_recovered: self.counters.frames_recovered.load(Ordering::Relaxed),
             enospc_fallbacks: self.counters.enospc_fallbacks.load(Ordering::Relaxed),
+            recompressions: self.recompressions.load(Ordering::Relaxed),
         }
     }
 }
@@ -1588,6 +1654,7 @@ impl BlockStore {
             prefetch_hits: AtomicU64::new(0),
             prefetch_misses: AtomicU64::new(0),
             spill_stall_ns: AtomicU64::new(0),
+            recompressions: AtomicU64::new(0),
         });
         let mut store = BlockStore { shared, prefetcher: None, writer: None };
         if store.shared.spill.is_some() {
@@ -1639,6 +1706,7 @@ impl BlockStore {
         self.shared.get(id)
     }
 
+    /// True if the store currently holds block `id` (any tier).
     pub fn contains(&self, id: usize) -> bool {
         plock(self.shared.shard(id)).contains_key(&id)
     }
@@ -1713,6 +1781,7 @@ impl BlockStore {
         self.shared.flush()
     }
 
+    /// Snapshot of the cumulative memory statistics.
     pub fn stats(&self) -> MemStats {
         self.shared.stats()
     }
@@ -1858,6 +1927,58 @@ mod tests {
         assert_eq!(p0.re, vec![1u8; 100]);
         assert_eq!(p0.im, vec![2u8; 100]);
         assert_eq!(s.stats().fetch_from_secondary, 1);
+    }
+
+    #[test]
+    fn recompressor_keeps_victim_resident() {
+        // Budget fits one 200 B block; the second put must evict — but the
+        // hook shrinks the victim 4x, so it stays primary and nothing
+        // reaches the spill tier.
+        let opts = StoreOptions {
+            recompressor: Some(Recompressor(Arc::new(|_id, p: &BlockPayload| {
+                Some(BlockPayload { re: p.re[..p.re.len() / 4].to_vec(), im: p.im[..p.im.len() / 4].to_vec() })
+            }))),
+            ..sync_opts()
+        };
+        let s = BlockStore::with_options(Some(300), Some(tmpdir()), opts).unwrap();
+        s.put(0, payload(100, 1)).unwrap();
+        s.put(1, payload(50, 2)).unwrap();
+        let st = s.stats();
+        assert_eq!(st.recompressions, 1);
+        assert_eq!(st.spill_events, 0, "recompression is not a spill");
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.blocks_primary, 2);
+        assert!(st.primary_bytes <= 300, "budget holds: {}", st.primary_bytes);
+        // The recompressed payload is what readers observe.
+        assert_eq!(s.take(0).unwrap().re, vec![1u8; 25]);
+        assert_eq!(s.take(1).unwrap().re, vec![2u8; 50]);
+    }
+
+    #[test]
+    fn recompressor_decline_falls_back_to_spill() {
+        // A hook that declines (None) or fails to shrink must leave the
+        // classic spill path untouched.
+        for grow in [false, true] {
+            let opts = StoreOptions {
+                recompressor: Some(Recompressor(Arc::new(move |_id, p: &BlockPayload| {
+                    if grow {
+                        Some(BlockPayload { re: p.re.clone(), im: p.im.clone() })
+                    } else {
+                        None
+                    }
+                }))),
+                ..sync_opts()
+            };
+            let s = BlockStore::with_options(Some(250), Some(tmpdir()), opts).unwrap();
+            s.put(0, payload(100, 1)).unwrap();
+            s.put(1, payload(100, 2)).unwrap();
+            let st = s.stats();
+            assert_eq!(st.recompressions, 0, "grow={grow}");
+            assert_eq!(st.spill_events, 1, "grow={grow}");
+            assert_eq!(st.blocks_secondary, 1, "grow={grow}");
+            // The spilled victim reads back byte-identical.
+            assert_eq!(s.take(0).unwrap().re, vec![1u8; 100], "grow={grow}");
+        }
     }
 
     #[test]

@@ -153,6 +153,17 @@ pub struct Metrics {
     /// `--resume` run; carried across resumes via the manifest, so a
     /// twice-interrupted run reports 2).
     pub resumes: AtomicU64,
+    /// Adaptive error control: eviction victims the memory tier kept
+    /// resident by recompressing at a controller-approved looser bound
+    /// (the compressed-primary third tier). Copied from `MemStats`.
+    pub recompressions: AtomicU64,
+    /// Adaptive error control: committed L2 error in linear ε units, as
+    /// f64 bits ([`f64::to_bits`]) — 0 without a fidelity target.
+    pub error_budget_spent: AtomicU64,
+    /// Adaptive error control: tightest per-encode bound issued, f64 bits.
+    pub per_block_bound_min: AtomicU64,
+    /// Adaptive error control: loosest per-encode bound issued, f64 bits.
+    pub per_block_bound_max: AtomicU64,
 }
 
 impl Metrics {
@@ -225,6 +236,16 @@ impl Metrics {
             checkpoint_bytes: self.checkpoint_bytes.load(Ordering::Relaxed),
             checkpoint_ns: self.checkpoint_ns.load(Ordering::Relaxed),
             resumes: self.resumes.load(Ordering::Relaxed),
+            recompressions: self.recompressions.load(Ordering::Relaxed),
+            error_budget_spent: f64::from_bits(
+                self.error_budget_spent.load(Ordering::Relaxed),
+            ),
+            per_block_bound_min: f64::from_bits(
+                self.per_block_bound_min.load(Ordering::Relaxed),
+            ),
+            per_block_bound_max: f64::from_bits(
+                self.per_block_bound_max.load(Ordering::Relaxed),
+            ),
         }
     }
 
@@ -274,6 +295,16 @@ impl Metrics {
         self.checksum_failures.store(mem.checksum_failures, Ordering::Relaxed);
         self.frames_recovered.store(mem.frames_recovered, Ordering::Relaxed);
         self.enospc_fallbacks.store(mem.enospc_fallbacks, Ordering::Relaxed);
+        self.recompressions.store(mem.recompressions, Ordering::Relaxed);
+    }
+
+    /// Copy the error-budget ledger out of the run's
+    /// [`crate::compress::budget::BudgetController`] (engines call this
+    /// once, at end of run, when a fidelity target was set).
+    pub fn absorb_budget(&self, b: &crate::compress::budget::BudgetStats) {
+        self.error_budget_spent.store(b.spent.to_bits(), Ordering::Relaxed);
+        self.per_block_bound_min.store(b.bound_min.to_bits(), Ordering::Relaxed);
+        self.per_block_bound_max.store(b.bound_max.to_bits(), Ordering::Relaxed);
     }
 
     /// Copy the overlapped-pipeline counters out of a run's accumulated
@@ -376,6 +407,17 @@ pub struct MetricsReport {
     /// Checkpoint rehydrations in this run's lineage (carried across
     /// resumes via the manifest counters).
     pub resumes: u64,
+    /// Adaptive error control: victims kept primary-resident by a
+    /// controller-approved harder recompression instead of being spilled.
+    pub recompressions: u64,
+    /// Adaptive error control: committed L2 error in linear ε units
+    /// (0.0 without a fidelity target).
+    pub error_budget_spent: f64,
+    /// Tightest per-encode bound the controller issued (0.0 = no
+    /// controller ran).
+    pub per_block_bound_min: f64,
+    /// Loosest per-encode bound the controller issued.
+    pub per_block_bound_max: f64,
 }
 
 impl MetricsReport {
@@ -511,6 +553,16 @@ impl std::fmt::Display for MetricsReport {
                 self.checkpoint_bytes as f64 / (1 << 20) as f64,
                 self.checkpoint_ns as f64 * 1e-6,
                 self.resumes
+            )?;
+        }
+        if self.per_block_bound_max > 0.0 || self.recompressions > 0 {
+            writeln!(
+                f,
+                "error control    : {:>10.2e} budget spent, bounds [{:.2e}, {:.2e}], {} recompressions",
+                self.error_budget_spent,
+                self.per_block_bound_min,
+                self.per_block_bound_max,
+                self.recompressions
             )?;
         }
         if self.simd_kernels_used > 0 {

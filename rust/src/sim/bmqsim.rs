@@ -16,11 +16,13 @@
 //!    disk spill.
 
 use super::{
-    checkpoint_fingerprint, noting_failure, plan_group_order, BoundaryGate, BoxedPhase,
-    GateApplier, NativeApplier, OverlapMode, PoolDriver, SimConfig, SimResult, StageBatch,
+    budget_recompressor, checkpoint_fingerprint, l2_mass, noting_failure, plan_group_order,
+    BoundaryGate, BoxedPhase, GateApplier, NativeApplier, OverlapMode, PoolDriver, SimConfig,
+    SimResult, StageBatch,
 };
 use crate::circuit::fusion::{fuse_remapped, FusedGate};
 use crate::circuit::{partition_circuit, Circuit};
+use crate::compress::budget::BudgetController;
 use crate::compress::{Codec, CodecScratch};
 use crate::gates::fused;
 use crate::memory::{checkpoint, BlockPayload, BlockStore};
@@ -35,6 +37,7 @@ use std::time::{Duration, Instant};
 
 /// The compressed, staged engine.
 pub struct BmqSim<'a> {
+    /// Run configuration (validated at `run` time).
     pub config: SimConfig,
     applier: &'a dyn GateApplier,
 }
@@ -103,10 +106,12 @@ impl Drop for AbortOnDrop<'_> {
 }
 
 impl<'a> BmqSim<'a> {
+    /// Engine with the native (CPU reference) gate applier.
     pub fn new(config: SimConfig) -> BmqSim<'static> {
         BmqSim { config, applier: &NativeApplier }
     }
 
+    /// Engine with a caller-supplied gate applier (e.g. an accelerator).
     pub fn with_applier(config: SimConfig, applier: &'a dyn GateApplier) -> Self {
         BmqSim { config, applier }
     }
@@ -162,11 +167,33 @@ impl<'a> BmqSim<'a> {
             partition_circuit(circuit, b, self.config.inner_size)
         })?;
 
+        // ---- Adaptive error control (DESIGN.md §Adaptive error control) ----
+        // One ledger for the whole run: the init compression counts as
+        // stage 0, so a run with S circuit stages pays for S + 1 encode
+        // rounds. Without a fidelity target the engine encodes at the
+        // fixed global bound exactly as before.
+        let controller: Option<Arc<BudgetController>> = self.config.fidelity_target.map(|t| {
+            Arc::new(BudgetController::new(
+                self.config.error_policy,
+                codec,
+                t,
+                layout.num_blocks(),
+                plan.stages.len() + 1,
+            ))
+        });
+        let mut store_opts = self.config.store_options();
+        if let Some(c) = &controller {
+            // Compressed-primary third tier: under budget pressure the
+            // store may recompress a cold resident block harder (at a
+            // controller-approved looser bound) instead of spilling it.
+            store_opts.recompressor = Some(budget_recompressor(c.clone(), codec));
+        }
+
         // ---- Initial compressed state (§4.2 init optimization) ----
         let store = BlockStore::with_options(
             self.config.memory_budget,
             self.config.spill_dir.clone(),
-            self.config.store_options(),
+            store_opts,
         )?;
         // The semantic compatibility key every checkpoint embeds; a
         // resume from a run with different stage-plan or state-affecting
@@ -177,7 +204,7 @@ impl<'a> BmqSim<'a> {
         // codec (ns per amplitude) for the overlap auto-enable heuristic.
         let mut start_stage = 0usize;
         let codec_ns_per_amp = match &self.config.resume_from {
-            None => self.init_blocks(&layout, &codec, &store, &metrics)?,
+            None => self.init_blocks(&layout, &codec, controller.as_deref(), &store, &metrics)?,
             Some(root) => {
                 let loaded = checkpoint::load_latest(root, "bmqsim", fingerprint)?;
                 if loaded.blocks.len() != layout.num_blocks() {
@@ -203,6 +230,17 @@ impl<'a> BmqSim<'a> {
                 t0.elapsed().as_nanos() as f64 / len as f64
             }
         };
+        if start_stage > 0 {
+            if let Some(c) = &controller {
+                // A resumed run grants itself only the share of ε
+                // proportional to the stages it still has to pay for (out
+                // of the S + 1 rounds a fresh run funds) — the pre-crash
+                // lineage spent at most the complement, so the combined
+                // history stays under ε_total.
+                let remaining = plan.stages.len().saturating_sub(start_stage);
+                c.scale_budget(remaining as f64 / (plan.stages.len() + 1) as f64);
+            }
+        }
 
         // ---- Staged, pipelined execution ----
         // Scratch arenas persist per worker for the WHOLE run: plane
@@ -240,6 +278,7 @@ impl<'a> BmqSim<'a> {
         let block_len = layout.block_len();
         let stall_timeout = self.config.stall_timeout_ms.map(Duration::from_millis);
         let checkpoint_every = self.config.checkpoint_every.max(1);
+        let ctrl_ref: Option<&BudgetController> = controller.as_deref();
         for (stage_idx, stage) in plan.stages.iter().enumerate() {
             // Resume: stages up to the checkpoint cursor are already
             // reflected in the rehydrated blocks.
@@ -423,10 +462,25 @@ impl<'a> BmqSim<'a> {
                     }
                     let _mark = MarkOnDrop { gate: &ctx.gate, item: i };
                     noting_failure(abort_ref, || {
-                        self.encode_group(w, block_len, &codec, store_ref, metrics_ref)
+                        self.encode_group(
+                            w,
+                            block_len,
+                            &codec,
+                            ctrl_ref,
+                            stage_idx + 1,
+                            store_ref,
+                            metrics_ref,
+                        )
                     })
                 })
             };
+            // Open this stage's error-budget ledger *before* its encoders
+            // can run; on this (sequential) submission thread, so two
+            // overlapped stages draw headroom in order. Stage keys are
+            // 1-based — key 0 is the init compression.
+            if let Some(c) = ctrl_ref {
+                c.begin_stage(stage_idx + 1, flat.len());
+            }
             pools.submit_stage(
                 ctx.schedule.group_len(),
                 ctx.schedule.num_groups(),
@@ -500,6 +554,9 @@ impl<'a> BmqSim<'a> {
         };
         let mem = store.stats();
         metrics.absorb_mem(&mem);
+        if let Some(c) = &controller {
+            metrics.absorb_budget(&c.stats());
+        }
         metrics.simd_kernels_used.store(
             crate::simd::kernels_used().saturating_sub(simd_kernels_at_start),
             Ordering::Relaxed,
@@ -530,6 +587,7 @@ impl<'a> BmqSim<'a> {
         &self,
         layout: &BlockLayout,
         codec: &Codec,
+        controller: Option<&BudgetController>,
         store: &BlockStore,
         metrics: &Metrics,
     ) -> Result<f64> {
@@ -538,7 +596,7 @@ impl<'a> BmqSim<'a> {
         let mut first_re = vec![0.0f64; len];
         first_re[0] = 1.0;
 
-        let compress_plane = |plane: &[f64]| -> Result<Vec<u8>> {
+        let compress_plane = |codec: &Codec, plane: &[f64]| -> Result<Vec<u8>> {
             let out = metrics.time(Phase::Compress, || codec.compress(plane))?;
             metrics.compressions.fetch_add(1, Ordering::Relaxed);
             metrics
@@ -548,13 +606,28 @@ impl<'a> BmqSim<'a> {
             Ok(out)
         };
 
+        // Budget stage 0 is the init itself: block 0 carries the whole
+        // amplitude mass; every other block is exactly zero (zero planes
+        // encode as a bitmap regardless of bound, but their zero-mass
+        // ledger entries release stage 0's refund).
+        if let Some(c) = controller {
+            c.begin_stage(0, layout.num_blocks());
+        }
+        let first_codec = match controller {
+            Some(c) => codec.with_bound(c.bound_for(0, 0, 1.0)),
+            None => *codec,
+        };
         let t0 = Instant::now();
-        let zero_bytes = compress_plane(&zero_plane)?;
-        let first = BlockPayload { re: compress_plane(&first_re)?, im: zero_bytes.clone() };
+        let zero_bytes = compress_plane(codec, &zero_plane)?;
+        let first =
+            BlockPayload { re: compress_plane(&first_codec, &first_re)?, im: zero_bytes.clone() };
         let codec_ns_per_amp = t0.elapsed().as_nanos() as f64 / (2.0 * len as f64);
         store.put(0, first)?;
         // §4.2: "copy the compressed SV block with all zeros multiple times".
         for id in 1..layout.num_blocks() {
+            if let Some(c) = controller {
+                c.bound_for(0, id, 0.0);
+            }
             store.put(id, BlockPayload { re: zero_bytes.clone(), im: zero_bytes.clone() })?;
         }
         Ok(codec_ns_per_amp)
@@ -662,11 +735,14 @@ impl<'a> BmqSim<'a> {
     /// payloads back to the store (transfer section). Under a budget, any
     /// eviction this triggers lands in the store's *asynchronous*
     /// write-back queue, so spill-file I/O overlaps the chain too.
+    #[allow(clippy::too_many_arguments)]
     fn encode_group(
         &self,
         ctx: &mut WorkerCtx<'_>,
         block_len: usize,
         codec: &Codec,
+        controller: Option<&BudgetController>,
+        stage_key: usize,
         store: &BlockStore,
         metrics: &Metrics,
     ) -> Result<()> {
@@ -678,6 +754,17 @@ impl<'a> BmqSim<'a> {
         metrics.time(Phase::Compress, || -> Result<()> {
             for (slot, p) in payloads.iter_mut().enumerate() {
                 let src = slot * block_len..(slot + 1) * block_len;
+                // Under a fidelity target the bound is per-block: charge
+                // the stage ledger with this block's fresh amplitude mass
+                // and encode at whatever the controller hands back. The
+                // wire format embeds the bound, so decode needs nothing.
+                let codec = match controller {
+                    Some(c) => {
+                        let mass = l2_mass(&re[src.clone()], &im[src.clone()]);
+                        codec.with_bound(c.bound_for(stage_key, block_ids[slot], mass))
+                    }
+                    None => *codec,
+                };
                 codec.compress_into_with(&re[src.clone()], &mut p.re, cs)?;
                 codec.compress_into_with(&im[src], &mut p.im, cs)?;
                 metrics.compressions.fetch_add(2, Ordering::Relaxed);

@@ -1,6 +1,7 @@
 //! Simulation configuration shared by all engines.
 
-use crate::compress::Codec;
+use crate::compress::budget::ErrorPolicy;
+use crate::compress::{Codec, CodecKind};
 use crate::memory::FaultPlan;
 use crate::pipeline::PipelineConfig;
 use crate::types::{Error, Precision, Result};
@@ -64,6 +65,7 @@ impl OverlapMode {
         }
     }
 
+    /// True for [`OverlapMode::Auto`].
     pub fn is_auto(self) -> bool {
         matches!(self, OverlapMode::Auto)
     }
@@ -225,6 +227,22 @@ pub struct SimConfig {
     /// typed error with a progress-counter dump instead of hanging the
     /// run forever (e.g. under a `stall@write` fault plan).
     pub stall_timeout_ms: Option<u64>,
+    /// Whole-run fidelity target (CLI `--fidelity-target`, e.g. `0.999`):
+    /// turn fidelity from an observed output into a controlled input.
+    /// `Some` engages the [`crate::compress::budget::BudgetController`] —
+    /// per-encode bounds are derived from an error-budget ledger instead
+    /// of the fixed `codec.error_bound`, and the memory tier may
+    /// recompress cold blocks at controller-approved looser bounds
+    /// instead of spilling them. Requires the point-wise relative codec
+    /// ([`SimConfig::validate`] rejects other kinds). `None` (default) =
+    /// the fixed global bound, exactly the pre-controller behaviour.
+    pub fidelity_target: Option<f64>,
+    /// How the error budget is split across blocks when a fidelity target
+    /// is set (CLI `--error-policy {global,amplitude}`): `Global` = one
+    /// uniform target-derived bound per stage; `Amplitude` = per-block
+    /// bounds shaped by amplitude mass (tight on heavy blocks, loose on
+    /// near-zero ones). Ignored without `fidelity_target`.
+    pub error_policy: ErrorPolicy,
 }
 
 impl Default for SimConfig {
@@ -260,6 +278,8 @@ impl Default for SimConfig {
             resume_from: None,
             checkpoint_keep: 2,
             stall_timeout_ms: None,
+            fidelity_target: None,
+            error_policy: ErrorPolicy::Global,
         }
     }
 }
@@ -294,6 +314,21 @@ impl SimConfig {
         }
         if self.memory_budget.is_some() && self.spill_dir.is_none() {
             // Allowed: it means hard-OOM semantics (Table 2 probing).
+        }
+        if let Some(target) = self.fidelity_target {
+            if !(target > 0.0 && target < 1.0) {
+                return Err(Error::Config(format!(
+                    "fidelity target {target} outside (0, 1)"
+                )));
+            }
+            if self.codec.kind != CodecKind::PointwiseRel {
+                return Err(Error::Config(
+                    "fidelity target requires the point-wise relative codec \
+                     (the budget ledger is written for per-amplitude relative \
+                     bounds; use --codec pointwise)"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -331,6 +366,8 @@ mod tests {
         assert!(c.resume_from.is_none());
         assert_eq!(c.checkpoint_keep, 2, "one fallback snapshot is always retained");
         assert!(c.stall_timeout_ms.is_none(), "watchdog off by default");
+        assert!(c.fidelity_target.is_none(), "fixed global bound by default");
+        assert_eq!(c.error_policy, ErrorPolicy::Global);
         let opts = c.store_options();
         assert_eq!(opts.shards, 8);
         assert!(opts.async_spill);
@@ -359,6 +396,25 @@ mod tests {
         assert!(c.validate(20).is_ok());
         assert!(c.validate(0).is_err());
         assert!(c.validate(99).is_err());
+    }
+
+    #[test]
+    fn validate_fidelity_target() {
+        let ok = SimConfig { fidelity_target: Some(0.999), ..SimConfig::default() };
+        assert!(ok.validate(10).is_ok());
+        for bad in [0.0, 1.0, -0.5, 1.5] {
+            let c = SimConfig { fidelity_target: Some(bad), ..SimConfig::default() };
+            assert!(c.validate(10).is_err(), "target {bad} must be rejected");
+        }
+        // The ledger math is pointwise-relative only.
+        for codec in [Codec::raw(), Codec::absolute(1e-4)] {
+            let c = SimConfig {
+                fidelity_target: Some(0.999),
+                codec,
+                ..SimConfig::default()
+            };
+            assert!(c.validate(10).is_err(), "{} must be rejected", codec.name());
+        }
     }
 
     #[test]

@@ -13,15 +13,18 @@ use std::time::Instant;
 
 /// Dense engine, parameterized by the gate-application backend.
 pub struct DenseSim<'a> {
+    /// Run configuration (validated at `run` time).
     pub config: SimConfig,
     applier: &'a dyn GateApplier,
 }
 
 impl<'a> DenseSim<'a> {
+    /// Engine with the native (CPU reference) gate applier.
     pub fn new(config: SimConfig) -> DenseSim<'static> {
         DenseSim { config, applier: &NativeApplier }
     }
 
+    /// Engine with a caller-supplied gate applier (e.g. an accelerator).
     pub fn with_applier(config: SimConfig, applier: &'a dyn GateApplier) -> Self {
         DenseSim { config, applier }
     }

@@ -19,8 +19,9 @@ pub use dense::DenseSim;
 pub use sc19::Sc19Sim;
 
 use crate::circuit::Gate;
+use crate::compress::budget::BudgetController;
 use crate::gates::apply_gate_remapped;
-use crate::memory::{BlockStore, MemStats};
+use crate::memory::{BlockPayload, BlockStore, MemStats, Recompressor};
 use crate::metrics::{Metrics, MetricsReport};
 use crate::pipeline::{
     run_items, PhasePool, PipelineConfig, RingDepthController, ScratchPool, WorkerCtx,
@@ -30,7 +31,7 @@ use crate::state::{GroupSchedule, StateVector};
 use crate::types::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// A borrowed phase closure as the engines hand it to [`PoolDriver`]:
@@ -481,11 +482,62 @@ pub(crate) fn noting_failure<R>(flag: &AtomicBool, f: impl FnOnce() -> Result<R>
     r
 }
 
+/// L2 mass of one block's planes. The engines keep the state normalized,
+/// so this is the block's fraction of the whole state's probability —
+/// the `m_k` weight the [`BudgetController`] ledger charges per encode.
+pub(crate) fn l2_mass(re: &[f64], im: &[f64]) -> f64 {
+    let mut s = 0.0f64;
+    for &x in re {
+        s += x * x;
+    }
+    for &x in im {
+        s += x * x;
+    }
+    s
+}
+
+/// The compressed-primary third tier, as a store callback: when the
+/// store is about to evict `block`, ask the controller for a looser
+/// bound and — if approved AND the re-encode shrinks the payload by at
+/// least 25% — hand back the harder-compressed payload so the block
+/// stays primary-resident instead of spilling. Any `None` (declined,
+/// undecodable, or not enough shrink) falls back to the normal spill
+/// path. Shared by both engines.
+///
+/// The closure runs on whichever thread drives the eviction (an encode
+/// worker inside `store.put`, or the write-back thread), so it only
+/// touches the controller's own lock and fresh allocations — never a
+/// store shard lock.
+pub(crate) fn budget_recompressor(ctrl: Arc<BudgetController>, codec: crate::compress::Codec) -> Recompressor {
+    Recompressor(Arc::new(move |block, payload: &BlockPayload| {
+        // How lossy the resident payload already is: the wire format
+        // embeds the bound each plane was encoded with (raw planes are
+        // lossless, i.e. bound 0).
+        let b_re = crate::compress::plane_bound(&payload.re).ok()?.unwrap_or(0.0);
+        let b_im = crate::compress::plane_bound(&payload.im).ok()?.unwrap_or(0.0);
+        let approved = ctrl.approve_recompress(block, b_re.max(b_im))?;
+        let re = crate::compress::decompress_any(&payload.re).ok()?;
+        let im = crate::compress::decompress_any(&payload.im).ok()?;
+        let loose = codec.with_bound(approved);
+        let nre = loose.compress(&re).ok()?;
+        let nim = loose.compress(&im).ok()?;
+        // Only worth the decode/encode CPU when the shrink is
+        // substantial; the budget drawn by the approval stays spent
+        // either way (the per-block latch keeps that waste bounded).
+        if (nre.len() + nim.len()) * 4 <= (payload.re.len() + payload.im.len()) * 3 {
+            Some(BlockPayload { re: nre, im: nim })
+        } else {
+            None
+        }
+    }))
+}
+
 /// xxh64 fingerprint of the *semantic* run configuration + circuit: the
 /// compatibility key a checkpoint embeds and a resume must match. It
 /// covers everything that determines the terminal state and the stage
 /// plan (engine, qubit count, gate list, block geometry, partition inner
-/// size, codec, precision, fusion knobs) and deliberately *excludes* the
+/// size, codec, precision, fusion knobs, error-control policy/target) and
+/// deliberately *excludes* the
 /// execution-shape knobs (workers, pipeline depth, overlap, spill budget,
 /// shards) — byte-identity across those is pinned by the engine parity
 /// tests, so a checkpoint taken under async spill may resume under sync
@@ -495,8 +547,12 @@ pub(crate) fn checkpoint_fingerprint(
     config: &SimConfig,
     circuit: &crate::circuit::Circuit,
 ) -> u64 {
+    // The error-control policy shapes every encoded payload (per-block
+    // bounds, recompression approvals), so a resume that changed
+    // `--fidelity-target`/`--error-policy` would silently mix bounds —
+    // it must mismatch here (pinned by `fingerprint_covers_error_policy`).
     let canon = format!(
-        "{engine}|n={}|b={}|inner={}|codec={:?}|precision={:?}|fusion={}|max_fuse={}|tile={}|gates={:?}",
+        "{engine}|n={}|b={}|inner={}|codec={:?}|precision={:?}|fusion={}|max_fuse={}|tile={}|epolicy={:?}|ftarget={:?}|gates={:?}",
         circuit.n_qubits,
         config.effective_block_qubits(circuit.n_qubits),
         config.inner_size,
@@ -505,6 +561,8 @@ pub(crate) fn checkpoint_fingerprint(
         config.fusion,
         config.max_fuse_qubits,
         config.tile_bits,
+        config.error_policy,
+        config.fidelity_target,
         circuit.gates,
     );
     crate::memory::xxh64(canon.as_bytes(), 0)
@@ -548,17 +606,24 @@ impl GateApplier for NativeApplier {
 /// and memory statistics.
 #[derive(Debug)]
 pub struct SimResult {
+    /// Engine identifier (`"bmqsim"`, `"dense"`, `"sc19-cpu"`, ...).
     pub engine: &'static str,
+    /// Circuit name the run executed.
     pub circuit_name: String,
+    /// Number of qubits simulated.
     pub n_qubits: usize,
+    /// End-to-end wall time in seconds.
     pub wall_secs: f64,
+    /// Aggregated pipeline/codec/error-control metrics.
     pub metrics: MetricsReport,
+    /// Terminal memory-tier statistics.
     pub mem: MemStats,
     /// Peak compressed footprint in bytes (Fig. 9's "practical memory");
     /// for the dense engine this is the full state size.
     pub peak_bytes: usize,
     /// Number of Algorithm-1 stages (1 per gate for sc19, 1 for dense).
     pub stages: usize,
+    /// Final dense state, when materialization was requested.
     pub state: Option<StateVector>,
 }
 

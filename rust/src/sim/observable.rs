@@ -17,11 +17,14 @@ use std::collections::BTreeMap;
 /// Streamed view over a compressed state: the terminal block store plus
 /// its layout (produced by a BMQSIM run; see [`super::BmqSim`]).
 pub struct CompressedState<'a> {
+    /// Block partition of the state vector.
     pub layout: BlockLayout,
+    /// The terminal compressed block store.
     pub store: &'a BlockStore,
 }
 
 impl<'a> CompressedState<'a> {
+    /// View over `store` partitioned by `layout`.
     pub fn new(layout: BlockLayout, store: &'a BlockStore) -> Self {
         CompressedState { layout, store }
     }

@@ -22,10 +22,11 @@
 //! `barrier_only_even_with_cross_stage_pinned_on` for the pinned proof.
 
 use super::{
-    checkpoint_fingerprint, plan_group_order, GateApplier, NativeApplier, PoolDriver, SimConfig,
-    SimResult,
+    budget_recompressor, checkpoint_fingerprint, l2_mass, plan_group_order, GateApplier,
+    NativeApplier, PoolDriver, SimConfig, SimResult,
 };
 use crate::circuit::Circuit;
+use crate::compress::budget::BudgetController;
 use crate::compress::CodecScratch;
 use crate::memory::{checkpoint, BlockPayload, BlockStore};
 use crate::metrics::{Metrics, Phase};
@@ -33,10 +34,12 @@ use crate::pipeline::{PipelineConfig, Scratch, WorkerCtx};
 use crate::state::{BlockLayout, StateVector};
 use crate::types::{Error, Result};
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// The per-gate compressed engine.
 pub struct Sc19Sim<'a> {
+    /// Run configuration (validated at `run` time).
     pub config: SimConfig,
     /// Parallel block-update width (1 = CPU variant, >1 = GPU variant).
     pub workers: usize,
@@ -44,14 +47,18 @@ pub struct Sc19Sim<'a> {
 }
 
 impl<'a> Sc19Sim<'a> {
+    /// Engine with the native (CPU reference) gate applier.
     pub fn new(config: SimConfig, workers: usize) -> Sc19Sim<'static> {
         Sc19Sim { config, workers: workers.max(1), applier: &NativeApplier }
     }
 
+    /// Engine with a caller-supplied gate applier (e.g. an accelerator).
     pub fn with_applier(config: SimConfig, workers: usize, applier: &'a dyn GateApplier) -> Self {
         Sc19Sim { config, workers: workers.max(1), applier }
     }
 
+    /// Run the circuit gate-by-gate; `materialize` requests the dense
+    /// terminal state in the result.
     pub fn run(&self, circuit: &Circuit, materialize: bool) -> Result<SimResult> {
         self.config.validate(circuit.n_qubits)?;
         let _simd_guard = crate::simd::disable_scope(self.config.no_simd);
@@ -62,10 +69,28 @@ impl<'a> Sc19Sim<'a> {
         let b = self.config.effective_block_qubits(circuit.n_qubits);
         let layout = BlockLayout::new(circuit.n_qubits, b)?;
         let codec = self.config.codec;
+        // Adaptive error control: SC19's encode round is one *gate*, so a
+        // run over G gates pays for G + 1 rounds (init is round 0). The
+        // per-gate frequency problem is exactly why the budget matters
+        // here — each round's slice is small, and the amplitude policy's
+        // refunds are what keeps deep circuits above the target.
+        let controller: Option<Arc<BudgetController>> = self.config.fidelity_target.map(|t| {
+            Arc::new(BudgetController::new(
+                self.config.error_policy,
+                codec,
+                t,
+                layout.num_blocks(),
+                circuit.len() + 1,
+            ))
+        });
+        let mut store_opts = self.config.store_options();
+        if let Some(c) = &controller {
+            store_opts.recompressor = Some(budget_recompressor(c.clone(), codec));
+        }
         let store = BlockStore::with_options(
             self.config.memory_budget,
             self.config.spill_dir.clone(),
-            self.config.store_options(),
+            store_opts,
         )?;
 
         let engine = if self.workers == 1 { "sc19-cpu" } else { "sc19-gpu" };
@@ -85,13 +110,25 @@ impl<'a> Sc19Sim<'a> {
                 let zero = vec![0.0f64; len];
                 let mut first = vec![0.0f64; len];
                 first[0] = 1.0;
+                // Budget round 0: block 0 carries all the mass, the rest
+                // are exact zeros (bitmap-encoded whatever the bound).
+                let first_codec = match controller.as_deref() {
+                    Some(c) => {
+                        c.begin_stage(0, layout.num_blocks());
+                        codec.with_bound(c.bound_for(0, 0, 1.0))
+                    }
+                    None => codec,
+                };
                 let t0 = Instant::now();
                 let z = metrics.time(Phase::Compress, || codec.compress(&zero))?;
-                let f = metrics.time(Phase::Compress, || codec.compress(&first))?;
+                let f = metrics.time(Phase::Compress, || first_codec.compress(&first))?;
                 let per_amp = t0.elapsed().as_nanos() as f64 / (2.0 * len as f64);
                 metrics.compressions.fetch_add(2, Ordering::Relaxed);
                 store.put(0, BlockPayload { re: f, im: z.clone() })?;
                 for id in 1..layout.num_blocks() {
+                    if let Some(c) = controller.as_deref() {
+                        c.bound_for(0, id, 0.0);
+                    }
                     store.put(id, BlockPayload { re: z.clone(), im: z.clone() })?;
                 }
                 per_amp
@@ -119,6 +156,14 @@ impl<'a> Sc19Sim<'a> {
                 t0.elapsed().as_nanos() as f64 / len as f64
             }
         };
+        if start_gate > 0 {
+            if let Some(c) = &controller {
+                // Same rule as BMQSIM: a resumed run only funds the gates
+                // it still has to run, out of the G + 1 rounds total.
+                let remaining = circuit.len().saturating_sub(start_gate);
+                c.scale_budget(remaining as f64 / (circuit.len() + 1) as f64);
+            }
+        }
 
         // Per-gate sweep: the defining behaviour of the basic solution.
         // (The scratch arenas persist across gates, so even this engine's
@@ -217,6 +262,19 @@ impl<'a> Sc19Sim<'a> {
                 metrics.time(Phase::Compress, || -> Result<()> {
                     for (slot, p) in payloads.iter_mut().enumerate() {
                         let src = slot * block_len..(slot + 1) * block_len;
+                        // Per-block bound under a fidelity target (round
+                        // key is 1-based; 0 is init).
+                        let codec = match controller.as_deref() {
+                            Some(c) => {
+                                let mass = l2_mass(&re[src.clone()], &im[src.clone()]);
+                                codec.with_bound(c.bound_for(
+                                    gate_idx + 1,
+                                    block_ids[slot],
+                                    mass,
+                                ))
+                            }
+                            None => codec,
+                        };
                         codec.compress_into_with(&re[src.clone()], &mut p.re, cs)?;
                         codec.compress_into_with(&im[src], &mut p.im, cs)?;
                         metrics.compressions.fetch_add(2, Ordering::Relaxed);
@@ -239,6 +297,11 @@ impl<'a> Sc19Sim<'a> {
                 Ok(())
             };
 
+            // Open this gate's budget round before its encoders can run
+            // (`run_stage` is a barrier, so rounds never interleave here).
+            if let Some(c) = controller.as_deref() {
+                c.begin_stage(gate_idx + 1, schedule.num_groups() * schedule.blocks_per_group());
+            }
             // The driver decides per gate (the SC19 "stage" horizon)
             // whether the chain overlaps on the persistent pool or runs
             // sequentially — same heuristic as the staged engine.
@@ -313,6 +376,9 @@ impl<'a> Sc19Sim<'a> {
         };
         let mem = store.stats();
         metrics.absorb_mem(&mem);
+        if let Some(c) = &controller {
+            metrics.absorb_budget(&c.stats());
+        }
         metrics.simd_kernels_used.store(
             crate::simd::kernels_used().saturating_sub(simd_kernels_at_start),
             Ordering::Relaxed,

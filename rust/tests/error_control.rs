@@ -1,0 +1,209 @@
+//! Adaptive error-control integration tests (ISSUE 10): the whole-run
+//! fidelity guarantee must hold across `{global, amplitude}` policies ×
+//! `{no spill, sync spill, async spill}` × `{cross-stage on, off}`, the
+//! budget ledger must never spend past its allocation, the checkpoint
+//! fingerprint must pin the error policy and fidelity target (resuming
+//! under a different error contract is rejected typed), and the CLI
+//! flags must round-trip end to end.
+
+use bmqsim::circuit::generators;
+use bmqsim::compress::budget::ErrorPolicy;
+use bmqsim::memory::checkpoint;
+use bmqsim::sim::{BmqSim, DenseSim, OverlapMode, SimConfig};
+use bmqsim::state::StateVector;
+use bmqsim::types::Error;
+use std::path::PathBuf;
+use std::process::Command;
+
+const TARGET: f64 = 0.999;
+
+fn tdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bmq-ec-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn base_cfg(policy: ErrorPolicy) -> SimConfig {
+    SimConfig {
+        block_qubits: 5,
+        inner_size: 2,
+        fidelity_target: Some(TARGET),
+        error_policy: policy,
+        ..SimConfig::default()
+    }
+}
+
+/// The deep random circuit is the workload the controller exists for:
+/// nonuniform per-block amplitude mass, every stage lossy.
+fn workload() -> (bmqsim::circuit::Circuit, StateVector) {
+    let c = generators::build("random", 10, 7).unwrap();
+    let ideal = DenseSim::new(SimConfig::default()).run(&c).unwrap().state.unwrap();
+    (c, ideal)
+}
+
+// ---------------------------------------------------------------------
+// The acceptance matrix: terminal fidelity >= target everywhere.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fidelity_meets_target_across_policy_spill_and_overlap_matrix() {
+    let (c, ideal) = workload();
+    let eps_total = (1.0 - TARGET) / 2.0;
+
+    for policy in [ErrorPolicy::Global, ErrorPolicy::Amplitude] {
+        // (spill tier active, synchronous spill, cross-stage overlap)
+        for (spill, sync, cross) in [
+            (false, false, false),
+            (false, false, true),
+            (true, true, false),
+            (true, true, true),
+            (true, false, false),
+            (true, false, true),
+        ] {
+            let tag = format!("{policy}-sp{}-sy{}-x{}", spill as u8, sync as u8, cross as u8);
+            let mut cfg = base_cfg(policy);
+            cfg.cross_stage = if cross { OverlapMode::On } else { OverlapMode::Off };
+            if spill {
+                cfg.memory_budget = Some(1024);
+                cfg.spill_dir = Some(tdir(&tag).join("spill"));
+                cfg.sync_spill = sync;
+            }
+            let r = BmqSim::new(cfg).run(&c, true).unwrap();
+            let f = r.state.as_ref().unwrap().fidelity(&ideal);
+            assert!(f >= TARGET, "{tag}: fidelity {f} < target {TARGET}");
+
+            // The ledger is conservative: spent L2 error never exceeds
+            // the whole-run allocation, and every handed-out bound was
+            // recorded.
+            assert!(
+                r.metrics.error_budget_spent <= eps_total + 1e-15,
+                "{tag}: spent {} > budget {eps_total}",
+                r.metrics.error_budget_spent
+            );
+            assert!(r.metrics.per_block_bound_max > 0.0, "{tag}: no bounds recorded");
+            assert!(
+                r.metrics.per_block_bound_min <= r.metrics.per_block_bound_max,
+                "{tag}: bound span inverted"
+            );
+            if spill {
+                // Under a 1 KiB budget the tier machinery must have
+                // engaged: blocks either spilled or were recompressed
+                // in place (the compressed-primary third tier).
+                assert!(
+                    r.mem.spill_events > 0 || r.mem.recompressions > 0,
+                    "{tag}: tight budget but no spills and no recompressions"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn amplitude_policy_spreads_bounds_wider_than_global() {
+    let (c, ideal) = workload();
+
+    let rg = BmqSim::new(base_cfg(ErrorPolicy::Global)).run(&c, true).unwrap();
+    let ra = BmqSim::new(base_cfg(ErrorPolicy::Amplitude)).run(&c, true).unwrap();
+    assert!(rg.state.as_ref().unwrap().fidelity(&ideal) >= TARGET);
+    assert!(ra.state.as_ref().unwrap().fidelity(&ideal) >= TARGET);
+
+    // Amplitude-aware splitting is the point: heavy blocks get tighter
+    // bounds than near-zero blocks, so the per-block span is strictly
+    // wider than the global policy's (which hands every block in a
+    // round the same bound, min == max only differing across rounds).
+    let ga = rg.metrics.per_block_bound_max / rg.metrics.per_block_bound_min;
+    let aa = ra.metrics.per_block_bound_max / ra.metrics.per_block_bound_min;
+    assert!(
+        aa > ga,
+        "amplitude span ratio {aa} not wider than global {ga}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint fingerprint pins the error contract.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fingerprint_covers_error_policy() {
+    let (c, ideal) = workload();
+    let root = tdir("fp");
+
+    let mut cfg = base_cfg(ErrorPolicy::Amplitude);
+    cfg.checkpoint_dir = Some(root.clone());
+    cfg.checkpoint_every = 1;
+    cfg.checkpoint_keep = 64;
+    let r = BmqSim::new(cfg).run(&c, true).unwrap();
+    assert!(r.metrics.checkpoints >= 2);
+    assert!(r.state.as_ref().unwrap().fidelity(&ideal) >= TARGET);
+
+    let resume = |mutate: &dyn Fn(&mut SimConfig)| {
+        let mut rc = base_cfg(ErrorPolicy::Amplitude);
+        rc.resume_from = Some(root.clone());
+        mutate(&mut rc);
+        BmqSim::new(rc).run(&c, true)
+    };
+
+    // A checkpoint written under one error contract must not resume
+    // under another: the budget already spent cannot be re-audited.
+    for mutate in [
+        (&|rc: &mut SimConfig| rc.error_policy = ErrorPolicy::Global) as &dyn Fn(&mut SimConfig),
+        &|rc: &mut SimConfig| rc.fidelity_target = Some(0.99),
+        &|rc: &mut SimConfig| rc.fidelity_target = None,
+    ] {
+        match resume(mutate) {
+            Err(Error::Checkpoint(m)) => {
+                assert!(m.contains("fingerprint"), "unexpected message: {m}")
+            }
+            other => panic!("expected Error::Checkpoint, got {other:?}"),
+        }
+    }
+
+    // Keep only the OLDEST retained checkpoint so the resume restarts
+    // from a genuinely intermediate cursor: the rescaled budget (the
+    // resumed process only owns the remaining stages' share) must still
+    // land the whole-run guarantee.
+    let mut ckpts = checkpoint::list_checkpoints(&root); // newest-first
+    assert!(ckpts.len() >= 2);
+    let (oldest_cursor, _) = *ckpts.last().unwrap();
+    assert!(oldest_cursor < r.stages, "oldest checkpoint is terminal");
+    ckpts.truncate(ckpts.len() - 1);
+    for (_, dir) in ckpts {
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+    let rr = resume(&|_| {}).unwrap();
+    assert_eq!(rr.metrics.resumes, 1);
+    let f = rr.state.as_ref().unwrap().fidelity(&ideal);
+    assert!(f >= TARGET, "resumed run broke the guarantee: {f}");
+}
+
+// ---------------------------------------------------------------------
+// CLI round-trip: flags parse, the report shows the controller, bad
+// values exit with the config code.
+// ---------------------------------------------------------------------
+
+#[test]
+fn cli_flags_round_trip_and_reject_bad_values() {
+    let run = |args: &[&str]| {
+        Command::new(env!("CARGO_BIN_EXE_bmqsim")).args(args).output().expect("spawn bmqsim")
+    };
+    let base: &[&str] = &["run", "--algo", "random", "--qubits", "8", "--block-qubits", "4"];
+
+    let mut ok: Vec<&str> = base.to_vec();
+    ok.extend_from_slice(&["--fidelity-target", "0.999", "--error-policy", "amplitude"]);
+    let out = run(&ok);
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("error control"), "no error-control report line:\n{stdout}");
+
+    // Bad values are usage/config errors (exit 2), not crashes.
+    let mut bad: Vec<&str> = base.to_vec();
+    bad.extend_from_slice(&["--error-policy", "frobnicate"]);
+    assert_eq!(run(&bad).status.code(), Some(2));
+    let mut bad: Vec<&str> = base.to_vec();
+    bad.extend_from_slice(&["--fidelity-target", "1.5"]);
+    assert_eq!(run(&bad).status.code(), Some(2));
+    let mut bad: Vec<&str> = base.to_vec();
+    bad.extend_from_slice(&["--fidelity-target", "nope"]);
+    assert_eq!(run(&bad).status.code(), Some(2));
+}
